@@ -1,0 +1,59 @@
+//! Migration-interval anatomy (Figs. 7 & 8): sweep MI for ResNet_v1-32
+//! with 1 GB of fast memory, print the throughput curve, the sweet spot,
+//! the per-step Case 1/2/3 counts, and the Eq. 1/2 constraint values the
+//! solver prunes with.
+//!
+//! Run: `cargo run --release --example mi_tuning`
+
+use sentinel_hm::coordinator::interval::{candidate_intervals, estimate};
+use sentinel_hm::dnn::zoo::Model;
+use sentinel_hm::figures::{fig7_mi_sweep, fig8_cases};
+use sentinel_hm::sim::MachineSpec;
+use sentinel_hm::util::table::{fmt_bytes, Table};
+
+fn main() {
+    let fast = 1u64 << 30; // the paper's Fig. 7 configuration
+    let model = Model::ResNetV1 { depth: 32 };
+    let g = model.build(0x5E17);
+    let spec = MachineSpec::paper_testbed(fast);
+
+    println!("== Eq. 1/2 constraint values (S = {}) ==\n", fmt_bytes(fast));
+    let mut t = Table::new(vec![
+        "MI", "Data(MI)", "RS(MI)", "T(MI)", "space ok", "time ok",
+    ]);
+    for mi in 1..=16 {
+        let e = estimate(&g, mi, &spec, fast);
+        t.row(vec![
+            mi.to_string(),
+            fmt_bytes(e.data_bytes),
+            fmt_bytes(e.rs_bytes),
+            format!("{:.1} ms", e.time_ns / 1e6),
+            e.space_ok.to_string(),
+            e.time_ok.to_string(),
+        ]);
+    }
+    t.print();
+    let candidates = candidate_intervals(&g, &spec, fast, 5);
+    println!("\nonline candidates (≤5, evenly sampled): {candidates:?}");
+
+    let mis: Vec<u32> = (1..=16).collect();
+    println!("\n== Fig 7 — throughput vs MI ==\n");
+    let (rows, sp) = fig7_mi_sweep(fast, &mis);
+    let max_thr = rows.iter().map(|r| r.1).fold(0.0, f64::max);
+    for (mi, thr) in &rows {
+        let bar = "#".repeat((thr / max_thr * 50.0) as usize);
+        let mark = if *mi == sp { "  <- SP" } else { "" };
+        println!("MI={mi:2} {thr:6.3} steps/s {bar}{mark}");
+    }
+
+    println!("\n== Fig 8 — migration cases per training step ==\n");
+    let mut t = Table::new(vec!["MI", "Case 1", "Case 2", "Case 3"]);
+    for (mi, c1, c2, c3) in fig8_cases(fast, &mis) {
+        t.row(vec![mi.to_string(), c1.to_string(), c2.to_string(), c3.to_string()]);
+    }
+    t.print();
+    println!(
+        "\nexpected shape (paper §4.4): Case 3 grows as MI shrinks, \
+         Case 2 grows as MI grows, sweet spot in between (SP={sp})."
+    );
+}

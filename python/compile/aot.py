@@ -1,0 +1,119 @@
+"""AOT compilation: lower every per-layer piece of the L2 model to HLO
+text artifacts the Rust runtime loads via the `xla` crate.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the pinned
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage::
+
+    python -m compile.aot --outdir ../artifacts \
+        [--batch 128] [--dim 256] [--hidden 256] [--classes 10] [--layers 4]
+
+Emits ``<name>.hlo.txt`` per piece plus ``manifest.txt`` describing the
+configuration and artifact inventory (plain ``key=value`` lines — the
+Rust side has no JSON dependency).
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(fn, *args):
+    """Lower a jitted function to XLA HLO text (return_tuple=True)."""
+    lowered = jax.jit(fn).lower(*args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*dims, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(dims, dtype)
+
+
+def build_artifacts(batch, dim, hidden, classes, layers):
+    """(name, fn, arg specs) for every exported piece."""
+    f32 = jnp.float32
+    arts = [
+        # Forward.
+        ("fwd_in", model.fwd_hidden,
+         [spec(batch, dim), spec(dim, hidden), spec(hidden)]),
+        ("fwd_hidden", model.fwd_hidden,
+         [spec(batch, hidden), spec(hidden, hidden), spec(hidden)]),
+        ("fwd_out", model.fwd_out,
+         [spec(batch, hidden), spec(hidden, classes), spec(classes)]),
+        # Loss.
+        ("loss_grad", model.loss_grad,
+         [spec(batch, classes), spec(batch, dtype=jnp.int32)]),
+        # Backward.
+        ("bwd_in", model.bwd_layer,
+         [spec(batch, dim), spec(dim, hidden), spec(batch, hidden),
+          spec(batch, hidden)]),
+        ("bwd_hidden", model.bwd_layer,
+         [spec(batch, hidden), spec(hidden, hidden), spec(batch, hidden),
+          spec(batch, hidden)]),
+        ("bwd_out", model.bwd_layer,
+         [spec(batch, hidden), spec(hidden, classes), spec(batch, classes),
+          spec(batch, classes)]),
+        # Optimizer, one per parameter shape.
+        ("sgd_w_in", model.sgd,
+         [spec(dim, hidden), spec(dim, hidden), spec(dtype=f32)]),
+        ("sgd_w_hidden", model.sgd,
+         [spec(hidden, hidden), spec(hidden, hidden), spec(dtype=f32)]),
+        ("sgd_w_out", model.sgd,
+         [spec(hidden, classes), spec(hidden, classes), spec(dtype=f32)]),
+        ("sgd_b_hidden", model.sgd,
+         [spec(hidden), spec(hidden), spec(dtype=f32)]),
+        ("sgd_b_out", model.sgd,
+         [spec(classes), spec(classes), spec(dtype=f32)]),
+    ]
+    return arts
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--out", default=None,
+                    help="compat: single-file target; its directory is used")
+    ap.add_argument("--batch", type=int, default=128)
+    ap.add_argument("--dim", type=int, default=256)
+    ap.add_argument("--hidden", type=int, default=256)
+    ap.add_argument("--classes", type=int, default=10)
+    ap.add_argument("--layers", type=int, default=6,
+                    help="total layers incl. output (>= 2)")
+    args = ap.parse_args()
+    outdir = os.path.dirname(args.out) if args.out else args.outdir
+    os.makedirs(outdir, exist_ok=True)
+
+    arts = build_artifacts(args.batch, args.dim, args.hidden, args.classes,
+                           args.layers)
+    manifest = [
+        f"batch={args.batch}",
+        f"dim={args.dim}",
+        f"hidden={args.hidden}",
+        f"classes={args.classes}",
+        f"layers={args.layers}",
+    ]
+    for name, fn, specs in arts:
+        text = to_hlo_text(fn, *specs)
+        path = os.path.join(outdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(f"artifact={name}")
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(outdir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {os.path.join(outdir, 'manifest.txt')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,110 @@
+"""Layer-1 Pallas kernel: VMEM-tiled blocked matmul.
+
+HARDWARE ADAPTATION (DESIGN.md §4). Sentinel's workload is CPU DNN
+training, so there is no CUDA kernel to port; the training hot-spot —
+the dense matmul inside every fc/conv-as-GEMM layer — is expressed the
+TPU-native way instead:
+
+* the grid tiles ``(M, N, K)`` into MXU-aligned ``128×128`` blocks;
+* each step keeps one A-block, one B-block and the f32 accumulator
+  block resident in VMEM (3 × 128×128×4 B = 192 KiB ≪ 16 MiB VMEM,
+  leaving room for double-buffered pipelining of the HBM→VMEM streams);
+* the K-axis is the innermost (fastest-moving) grid dimension so the
+  accumulator block stays in place while A/B blocks stream through —
+  the BlockSpec equivalent of the threadblock-resident accumulator
+  tiling a CUDA GEMM does in shared memory.
+
+``interpret=True`` always: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered to plain HLO for execution and
+validated numerically against ``ref.matmul_ref``. Real-TPU efficiency is
+estimated from the BlockSpec in EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-aligned default tile. 128 is the systolic array edge; keeping all
+# three operands at 128×128 f32 uses 192 KiB of VMEM per grid step.
+BLOCK_M = 128
+BLOCK_N = 128
+BLOCK_K = 128
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """One (m, n, k) grid step: o[m,n] += a[m,k] @ b[k,n].
+
+    The accumulator block ``o_ref`` is revisited across the K grid axis
+    (index_map ignores k), so initialize it on the first K step and
+    accumulate in f32 thereafter.
+    """
+    @pl.when(pl.program_id(axis=2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pad_to(x, multiple, axis):
+    size = x.shape[axis]
+    rem = size % multiple
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, multiple - rem)
+    return jnp.pad(x, pad)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(a, b, *, bm=BLOCK_M, bn=BLOCK_N, bk=BLOCK_K):
+    """Blocked matmul ``a @ b`` via Pallas (interpret mode).
+
+    Arbitrary ``(M, K) x (K, N)`` f32/bf16 inputs; internally pads every
+    axis to the block multiple (the BlockSpec schedule requires whole
+    blocks) and slices the result back. Accumulation is always f32.
+    """
+    if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
+        raise ValueError(f"matmul shape mismatch: {a.shape} @ {b.shape}")
+    m, k = a.shape
+    n = b.shape[1]
+    a_p = _pad_to(_pad_to(a, bm, 0), bk, 1)
+    b_p = _pad_to(_pad_to(b, bk, 0), bn, 1)
+    mp, kp = a_p.shape
+    np_ = b_p.shape[1]
+
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            # A block depends on (m, k); B block on (k, n); the output
+            # block on (m, n) only — it persists across the K axis.
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(a_p, b_p)
+    return out[:m, :n]
+
+
+def linear_relu(x, w, bias):
+    """Fused layer forward: ``relu(x @ w + bias)`` on the Pallas matmul."""
+    return jnp.maximum(matmul(x, w) + bias, 0.0)
+
+
+def vmem_footprint_bytes(bm=BLOCK_M, bn=BLOCK_N, bk=BLOCK_K, dtype_bytes=4):
+    """Static VMEM footprint of one grid step (A + B + accumulator).
+
+    Used by the §Perf roofline estimate: with double buffering the
+    pipelined footprint is twice the A/B streams plus one accumulator.
+    """
+    a = bm * bk * dtype_bytes
+    b = bk * bn * dtype_bytes
+    o = bm * bn * 4  # accumulator is always f32
+    return {"single": a + b + o, "double_buffered": 2 * (a + b) + o}

@@ -1,0 +1,18 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness references: pytest (and the hypothesis
+sweeps in ``python/tests``) assert the Pallas kernels match these within
+dtype-appropriate tolerances.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(a, b):
+    """Reference for :func:`kernels.matmul.matmul`: plain f32 matmul."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32)
+
+
+def linear_relu_ref(x, w, bias):
+    """Reference for the fused linear+bias+relu layer."""
+    return jnp.maximum(matmul_ref(x, w) + bias, 0.0)

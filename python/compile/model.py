@@ -1,0 +1,152 @@
+"""Layer-2 JAX model: the per-layer training step of an MLP classifier.
+
+The paper manages memory for TensorFlow training at *layer* granularity:
+Sentinel's coordinator interleaves per-layer execution with migration.
+To let the Rust coordinator own that loop, the training step is exported
+as per-layer pieces instead of one monolithic function:
+
+* :func:`fwd_hidden`  — ``h = relu(x @ w + b)`` (Pallas matmul inside);
+* :func:`fwd_out`     — ``logits = x @ w + b``;
+* :func:`loss_grad`   — softmax cross-entropy value + dlogits;
+* :func:`bwd_layer`   — one layer's backward: dx, dw, db from the saved
+  activation (the tensors Sentinel prefetches back for the bwd pass);
+* :func:`sgd`         — in-place SGD update.
+
+Each is AOT-lowered to its own HLO artifact by ``aot.py``; Rust chains
+them: fwd layer 0..L → loss → bwd layer L..0 → updates, managing every
+intermediate tensor itself. Python never runs at training time.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.matmul import matmul
+
+
+# ---------------------------------------------------------------------
+# Per-layer forward
+# ---------------------------------------------------------------------
+
+def fwd_hidden(x, w, b):
+    """Hidden-layer forward: ``relu(x @ w + b)`` (uses the L1 kernel)."""
+    return (jnp.maximum(matmul(x, w) + b, 0.0),)
+
+
+def fwd_out(x, w, b):
+    """Output-layer forward: raw logits (no activation)."""
+    return (matmul(x, w) + b,)
+
+
+# ---------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------
+
+def loss_grad(logits, y):
+    """Mean softmax cross-entropy and its gradient w.r.t. logits.
+
+    ``y`` is int32 class indices. Returns ``(loss, dlogits)`` so the
+    backward pass starts from data already on the Rust side.
+    """
+    b, c = logits.shape
+    onehot = jax.nn.one_hot(y, c, dtype=logits.dtype)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    loss = -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+    dlogits = (jax.nn.softmax(logits, axis=-1) - onehot) / b
+    return (loss, dlogits)
+
+
+# ---------------------------------------------------------------------
+# Per-layer backward
+# ---------------------------------------------------------------------
+
+def bwd_layer(x, w, h, dh):
+    """One layer's backward step.
+
+    ``x``: layer input (previous activation — prefetched by Sentinel for
+    exactly this moment); ``w``: weights; ``h``: the layer's forward
+    output (``relu`` mask source — pass all-ones for the output layer);
+    ``dh``: gradient w.r.t. the layer output.
+
+    Returns ``(dx, dw, db)``. The three matmuls run on the L1 kernel.
+    """
+    dz = dh * (h > 0.0).astype(dh.dtype)
+    dw = matmul(x.T, dz)
+    db = jnp.sum(dz, axis=0)
+    dx = matmul(dz, w.T)
+    return (dx, dw, db)
+
+
+# ---------------------------------------------------------------------
+# Optimizer
+# ---------------------------------------------------------------------
+
+def sgd(w, g, lr):
+    """Plain SGD: ``w - lr * g`` (lr is a scalar tensor)."""
+    return (w - lr * g,)
+
+
+# ---------------------------------------------------------------------
+# Whole-step reference (for tests and parity with the Rust loop)
+# ---------------------------------------------------------------------
+
+def init_params(key, dims):
+    """He-initialized MLP params for layer dims [D, H, ..., C]."""
+    params = []
+    for i in range(len(dims) - 1):
+        key, k1 = jax.random.split(key)
+        scale = jnp.sqrt(2.0 / dims[i])
+        params.append(
+            (
+                jax.random.normal(k1, (dims[i], dims[i + 1]), jnp.float32) * scale,
+                jnp.zeros((dims[i + 1],), jnp.float32),
+            )
+        )
+    return params
+
+
+def train_step_reference(params, x, y, lr):
+    """One full training step in plain JAX (autodiff) — the oracle the
+    artifact-chained Rust loop must match."""
+
+    def loss_fn(ps):
+        h = x
+        for w, b in ps[:-1]:
+            h = jnp.maximum(h @ w + b, 0.0)
+        w, b = ps[-1]
+        logits = h @ w + b
+        onehot = jax.nn.one_hot(y, logits.shape[-1], dtype=logits.dtype)
+        return -jnp.mean(jnp.sum(onehot * jax.nn.log_softmax(logits), axis=-1))
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    new_params = [
+        (w - lr * gw, b - lr * gb) for (w, b), (gw, gb) in zip(params, grads)
+    ]
+    return loss, new_params
+
+
+def train_step_composed(params, x, y, lr):
+    """The same step composed from the per-layer pieces (what Rust runs).
+
+    Used by pytest to prove the decomposition is exact.
+    """
+    acts = [x]
+    h = x
+    for w, b in params[:-1]:
+        (h,) = fwd_hidden(h, w, b)
+        acts.append(h)
+    w_out, b_out = params[-1]
+    (logits,) = fwd_out(h, w_out, b_out)
+    loss, dlogits = loss_grad(logits, y)
+
+    new_params = [None] * len(params)
+    # Output layer: no relu mask.
+    dh = dlogits
+    dx, dw, db = bwd_layer(acts[-1], w_out, jnp.ones_like(logits), dh)
+    new_params[-1] = (sgd(w_out, dw, lr)[0], sgd(b_out, db, lr)[0])
+    dh = dx
+    for li in range(len(params) - 2, -1, -1):
+        w, b = params[li]
+        dx, dw, db = bwd_layer(acts[li], w, acts[li + 1], dh)
+        new_params[li] = (sgd(w, dw, lr)[0], sgd(b, db, lr)[0])
+        dh = dx
+    return loss, new_params

@@ -1,0 +1,155 @@
+"""L1 correctness: the Pallas matmul against the pure-jnp oracle.
+
+This is the CORE numeric signal of the build path: hypothesis sweeps
+shapes and dtypes, asserting allclose against ``ref.py``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.matmul import matmul, linear_relu, vmem_footprint_bytes
+from compile.kernels.ref import linear_relu_ref, matmul_ref
+
+
+def _rand(shape, seed, dtype=np.float32):
+    return jnp.asarray(
+        np.random.RandomState(seed).standard_normal(shape), dtype=dtype
+    )
+
+
+# ----------------------------------------------------------------------
+# Directed cases
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (128, 128, 128),   # exactly one block
+        (256, 256, 256),   # multi-block on every axis
+        (128, 384, 128),   # K-axis accumulation across 3 blocks
+        (1, 1, 1),         # degenerate, exercises padding
+        (130, 70, 50),     # nothing divides the block size
+        (128, 256, 10),    # the model's output layer shape
+    ],
+)
+def test_matmul_matches_ref(m, k, n):
+    a = _rand((m, k), seed=m + k)
+    b = _rand((k, n), seed=k + n + 1)
+    # K-blocked accumulation reorders float sums: tolerance scales with K.
+    np.testing.assert_allclose(
+        matmul(a, b), matmul_ref(a, b), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_matmul_small_blocks():
+    # Non-default block shapes must not change results.
+    a, b = _rand((96, 96), 0), _rand((96, 96), 1)
+    out = matmul(a, b, bm=32, bn=32, bk=32)
+    np.testing.assert_allclose(out, matmul_ref(a, b), rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        matmul(_rand((4, 5), 0), _rand((6, 7), 1))
+
+
+def test_linear_relu_fused():
+    x, w = _rand((64, 32), 2), _rand((32, 16), 3)
+    bias = _rand((16,), 4)
+    np.testing.assert_allclose(
+        linear_relu(x, w, bias), linear_relu_ref(x, w, bias),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+def test_bf16_inputs_accumulate_f32():
+    a = _rand((64, 64), 5).astype(jnp.bfloat16)
+    b = _rand((64, 64), 6).astype(jnp.bfloat16)
+    out = matmul(a, b)
+    assert out.dtype == jnp.float32
+    ref = matmul_ref(a.astype(jnp.float32), b.astype(jnp.float32))
+    np.testing.assert_allclose(out, ref, rtol=2e-2, atol=2e-2)
+
+
+def test_vmem_footprint_within_budget():
+    # DESIGN.md §Hardware-Adaptation: double-buffered footprint must fit
+    # comfortably inside a 16 MiB VMEM.
+    fp = vmem_footprint_bytes()
+    assert fp["single"] == 3 * 128 * 128 * 4
+    assert fp["double_buffered"] < 16 * 1024 * 1024 // 4
+
+
+# ----------------------------------------------------------------------
+# Hypothesis sweeps
+# ----------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 160),
+    k=st.integers(1, 160),
+    n=st.integers(1, 160),
+    seed=st.integers(0, 2**16),
+)
+def test_matmul_shape_sweep(m, k, n, seed):
+    a = _rand((m, k), seed)
+    b = _rand((k, n), seed + 1)
+    np.testing.assert_allclose(
+        matmul(a, b), matmul_ref(a, b), rtol=1e-4, atol=1e-4
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    mkn=st.tuples(st.integers(1, 64), st.integers(1, 64), st.integers(1, 64)),
+    bm=st.sampled_from([16, 32, 64]),
+    seed=st.integers(0, 2**16),
+)
+def test_matmul_block_shape_sweep(mkn, bm, seed):
+    m, k, n = mkn
+    a = _rand((m, k), seed)
+    b = _rand((k, n), seed + 1)
+    out = matmul(a, b, bm=bm, bn=bm, bk=bm)
+    np.testing.assert_allclose(out, matmul_ref(a, b), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(scale=st.floats(1e-3, 1e3), seed=st.integers(0, 2**16))
+def test_matmul_scale_invariance(scale, seed):
+    # Numerics stay stable across magnitudes (f32 accumulate).
+    a = _rand((32, 48), seed) * scale
+    b = _rand((48, 24), seed + 1)
+    np.testing.assert_allclose(
+        matmul(a, b), matmul_ref(a, b), rtol=1e-4, atol=1e-4 * scale
+    )
+
+
+def test_zero_inputs():
+    a = jnp.zeros((32, 32), jnp.float32)
+    b = jnp.zeros((32, 32), jnp.float32)
+    assert float(jnp.max(jnp.abs(matmul(a, b)))) == 0.0
+
+
+def test_identity():
+    a = _rand((64, 64), 9)
+    eye = jnp.eye(64, dtype=jnp.float32)
+    np.testing.assert_allclose(matmul(a, eye), a, rtol=1e-5, atol=1e-6)
+
+
+def test_deterministic():
+    a, b = _rand((40, 40), 10), _rand((40, 40), 11)
+    o1, o2 = matmul(a, b), matmul(a, b)
+    np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+
+
+def test_lowering_contains_no_custom_call():
+    # interpret=True must lower to plain HLO (no Mosaic custom-call),
+    # otherwise the Rust CPU client cannot execute the artifact.
+    lowered = jax.jit(lambda a, b: matmul(a, b)).lower(
+        jax.ShapeDtypeStruct((128, 128), jnp.float32),
+        jax.ShapeDtypeStruct((128, 128), jnp.float32),
+    )
+    hlo = lowered.compiler_ir("stablehlo")
+    assert "tpu_custom_call" not in str(hlo).lower()

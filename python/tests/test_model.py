@@ -1,0 +1,111 @@
+"""L2 correctness: the per-layer decomposition against jax autodiff.
+
+The Rust runtime chains the exported pieces (fwd → loss → bwd → sgd); if
+``train_step_composed`` equals ``train_step_reference`` here, the Rust
+loop is exact by construction (it runs the same HLO).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+
+def _data(batch=32, dim=16, classes=10, seed=0):
+    rs = np.random.RandomState(seed)
+    x = jnp.asarray(rs.standard_normal((batch, dim)), jnp.float32)
+    y = jnp.asarray(rs.randint(0, classes, batch), jnp.int32)
+    return x, y
+
+
+def test_composed_step_matches_autodiff():
+    key = jax.random.PRNGKey(0)
+    params = model.init_params(key, [16, 32, 32, 10])
+    x, y = _data(dim=16)
+    lr = jnp.float32(0.1)
+    loss_ref, ps_ref = model.train_step_reference(params, x, y, lr)
+    loss_cmp, ps_cmp = model.train_step_composed(params, x, y, lr)
+    np.testing.assert_allclose(loss_ref, loss_cmp, rtol=1e-5, atol=1e-6)
+    for (wr, br), (wc, bc) in zip(ps_ref, ps_cmp):
+        np.testing.assert_allclose(wr, wc, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(br, bc, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    batch=st.integers(2, 48),
+    dim=st.integers(2, 48),
+    hidden=st.integers(2, 48),
+    layers=st.integers(2, 4),
+    seed=st.integers(0, 1000),
+)
+def test_composed_step_sweep(batch, dim, hidden, layers, seed):
+    key = jax.random.PRNGKey(seed)
+    dims = [dim] + [hidden] * (layers - 1) + [10]
+    params = model.init_params(key, dims)
+    x, y = _data(batch=batch, dim=dim, seed=seed)
+    lr = jnp.float32(0.05)
+    loss_ref, ps_ref = model.train_step_reference(params, x, y, lr)
+    loss_cmp, ps_cmp = model.train_step_composed(params, x, y, lr)
+    np.testing.assert_allclose(loss_ref, loss_cmp, rtol=1e-4, atol=1e-5)
+    for (wr, _), (wc, _) in zip(ps_ref, ps_cmp):
+        np.testing.assert_allclose(wr, wc, rtol=1e-3, atol=1e-4)
+
+
+def test_loss_decreases_over_steps():
+    key = jax.random.PRNGKey(1)
+    params = model.init_params(key, [16, 32, 10])
+    x, y = _data(dim=16, seed=3)
+    lr = jnp.float32(0.5)
+    losses = []
+    for _ in range(30):
+        loss, params = model.train_step_composed(params, x, y, lr)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.5, f"no learning: {losses[0]} → {losses[-1]}"
+
+
+def test_loss_grad_is_valid_gradient():
+    # dlogits from loss_grad must equal autodiff of the loss.
+    x, y = _data(batch=8, dim=5, seed=7)
+    logits = jnp.asarray(
+        np.random.RandomState(2).standard_normal((8, 10)), jnp.float32
+    )
+
+    def f(lg):
+        onehot = jax.nn.one_hot(y, 10, dtype=lg.dtype)
+        return -jnp.mean(jnp.sum(onehot * jax.nn.log_softmax(lg), axis=-1))
+
+    loss, dlogits = model.loss_grad(logits, y)
+    np.testing.assert_allclose(loss, f(logits), rtol=1e-6)
+    np.testing.assert_allclose(dlogits, jax.grad(f)(logits), rtol=1e-5, atol=1e-6)
+    _ = x
+
+
+def test_fwd_hidden_is_nonnegative():
+    x, _ = _data(batch=8, dim=5)
+    w = jnp.asarray(np.random.RandomState(1).standard_normal((5, 7)), jnp.float32)
+    b = jnp.zeros((7,), jnp.float32)
+    (h,) = model.fwd_hidden(x, w, b)
+    assert float(jnp.min(h)) >= 0.0
+
+
+def test_sgd_moves_against_gradient():
+    w = jnp.ones((4, 4), jnp.float32)
+    g = jnp.ones((4, 4), jnp.float32)
+    (w2,) = model.sgd(w, g, jnp.float32(0.25))
+    np.testing.assert_allclose(w2, 0.75 * jnp.ones((4, 4)))
+
+
+@pytest.mark.parametrize("classes", [2, 10, 100])
+def test_loss_grad_sums_to_zero(classes):
+    # Softmax CE gradient rows sum to zero (probability simplex).
+    rs = np.random.RandomState(classes)
+    logits = jnp.asarray(rs.standard_normal((16, classes)), jnp.float32)
+    y = jnp.asarray(rs.randint(0, classes, 16), jnp.int32)
+    _, dlogits = model.loss_grad(logits, y)
+    np.testing.assert_allclose(
+        jnp.sum(dlogits, axis=-1), jnp.zeros(16), atol=1e-6
+    )

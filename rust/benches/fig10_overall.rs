@@ -1,0 +1,34 @@
+//! Bench: Fig. 10 — overall performance of Sentinel vs IAL vs the
+//! fast-memory-only system at fast = 20% of peak, on all five models.
+//!
+//! Expected shape (paper): Sentinel within 8% of fast-only everywhere;
+//! IAL loses 17% on average (up to 32%); Sentinel beats IAL by ~18%.
+//!
+//! Run: `cargo bench --bench fig10_overall`
+
+use sentinel_hm::figures::{fig10_overall, fig10_table, RUN_STEPS};
+use sentinel_hm::util::bench::time_it;
+
+fn main() {
+    let t = time_it(3, || fig10_overall(RUN_STEPS));
+    t.report("fig10 (5 models x 3 policies)");
+
+    let rows = fig10_overall(RUN_STEPS);
+    println!("\n=== Fig 10 — normalized training throughput (fast = 20% of peak) ===");
+    fig10_table(&rows).print();
+
+    let sent_worst = rows.iter().map(|r| r.sentinel_norm).fold(f64::INFINITY, f64::min);
+    let ial_avg = rows.iter().map(|r| r.ial_norm).sum::<f64>() / rows.len() as f64;
+    let adv = rows
+        .iter()
+        .map(|r| r.sentinel_norm / r.ial_norm)
+        .sum::<f64>()
+        / rows.len() as f64;
+    println!(
+        "\npaper: Sentinel ≥ 0.92 everywhere; IAL avg 0.83; Sentinel/IAL ≈ 1.18\n\
+         measured: Sentinel worst {sent_worst:.3}; IAL avg {ial_avg:.3}; \
+         Sentinel/IAL avg {adv:.3}"
+    );
+    assert!(sent_worst > 0.85, "Fig 10 regression: Sentinel worst {sent_worst}");
+    assert!(adv > 1.05, "Fig 10 regression: advantage {adv}");
+}

@@ -1,0 +1,37 @@
+//! Bench: Fig. 12 — sensitivity of Sentinel to the fast-memory size
+//! (10%–60% of peak memory consumption, all five models).
+//!
+//! Expected shape (paper): at 60% no model loses anything; between 20%
+//! and 40% at most ~8% variance; larger fast memory never hurts.
+//!
+//! Run: `cargo bench --bench fig12_sensitivity`
+
+use sentinel_hm::figures::{fig12_sensitivity, RUN_STEPS};
+use sentinel_hm::util::bench::time_it;
+use sentinel_hm::util::table::Table;
+
+fn main() {
+    let pcts = [10u32, 20, 30, 40, 60];
+    let t = time_it(2, || fig12_sensitivity(&pcts, RUN_STEPS));
+    t.report("fig12 (5 models x 5 sizes)");
+
+    let rows = fig12_sensitivity(&pcts, RUN_STEPS);
+    println!("\n=== Fig 12 — normalized throughput vs fast-memory size ===");
+    let mut table = Table::new(vec!["model", "10%", "20%", "30%", "40%", "60%"]);
+    for (m, series) in &rows {
+        let mut row = vec![m.clone()];
+        for (_, v) in series {
+            row.push(format!("{v:.3}"));
+        }
+        table.row(row);
+    }
+    table.print();
+
+    // Shape assertions: 60% column ≈ 1.0; 20→40% variance small.
+    for (m, series) in &rows {
+        let at = |p: u32| series.iter().find(|(pc, _)| *pc == p).unwrap().1;
+        assert!(at(60) > 0.95, "{m}: 60% must be ≈ fast-only, got {}", at(60));
+        let var = (at(40) - at(20)).abs();
+        println!("{m}: |perf(40%) - perf(20%)| = {var:.3} (paper: ≤ 0.08)");
+    }
+}

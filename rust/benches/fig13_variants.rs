@@ -1,0 +1,43 @@
+//! Bench: Fig. 13 — peak memory consumption vs the minimum fast-memory
+//! size with which Sentinel matches the fast-memory-only system, across
+//! ResNet_v1 depth variants (20/32/44/56/110).
+//!
+//! Expected shape (paper): peak memory grows quickly with depth; the
+//! required fast size grows much more slowly.
+//!
+//! Run: `cargo bench --bench fig13_variants`
+
+use sentinel_hm::figures::fig13_variants;
+use sentinel_hm::util::bench::time_it;
+use sentinel_hm::util::table::{fmt_bytes, Table};
+
+fn main() {
+    let t = time_it(1, || fig13_variants(12));
+    t.report("fig13 (5 variants x fast-size search)");
+
+    let rows = fig13_variants(12);
+    println!("\n=== Fig 13 — peak memory vs min fast size (ResNet variants) ===");
+    let mut table = Table::new(vec!["model", "peak memory", "min fast size", "fast/peak"]);
+    for (m, peak, fast) in &rows {
+        table.row(vec![
+            m.clone(),
+            fmt_bytes(*peak),
+            fmt_bytes(*fast),
+            format!("{:.0}%", 100.0 * *fast as f64 / *peak as f64),
+        ]);
+    }
+    table.print();
+
+    // Shape: peak grows monotonically; fast/peak ratio does not grow.
+    let first_ratio = rows[0].2 as f64 / rows[0].1 as f64;
+    let last_ratio = rows.last().unwrap().2 as f64 / rows.last().unwrap().1 as f64;
+    println!(
+        "\npaper: fast size grows much more slowly than peak memory\n\
+         measured: fast/peak {:.2} (ResNet-20) → {:.2} (ResNet-110)",
+        first_ratio, last_ratio
+    );
+    assert!(
+        last_ratio <= first_ratio + 0.05,
+        "required fast share must not grow with depth"
+    );
+}

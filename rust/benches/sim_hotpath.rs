@@ -1,0 +1,86 @@
+//! Bench: the L3 hot paths themselves — trace replay rate, migration-lane
+//! throughput, plan construction, and the end-to-end figure-suite cost.
+//! This is the §Perf driver: EXPERIMENTS.md records the before/after of
+//! each optimization against these numbers.
+//!
+//! Run: `cargo bench --bench sim_hotpath`
+
+use sentinel_hm::coordinator::plan::MigrationPlan;
+use sentinel_hm::coordinator::sentinel::{run_sentinel, SentinelConfig};
+use sentinel_hm::dnn::zoo::Model;
+use sentinel_hm::dnn::StepTrace;
+use sentinel_hm::mem::ObjectId;
+use sentinel_hm::sim::{Engine, EngineConfig, Machine, MachineSpec, Tier};
+use sentinel_hm::util::bench::time_it;
+
+fn main() {
+    // --- workload generation -----------------------------------------
+    let t = time_it(5, || (Model::ResNetV1 { depth: 32 }).build(1));
+    t.report("zoo build (ResNet_v1-32, ~2.4k objects)");
+    let t = time_it(3, || Model::ResNetV2_152.build(1));
+    t.report("zoo build (ResNet_v2-152, ~12k objects)");
+
+    let g = (Model::ResNetV1 { depth: 32 }).build(1);
+    let trace = StepTrace::from_graph(&g);
+    let n_events = trace.n_events();
+
+    let t = time_it(5, || StepTrace::from_graph(&g));
+    t.report("trace build");
+
+    // --- engine replay rate (events/s) -------------------------------
+    let steps = 10u32;
+    let t = time_it(5, || {
+        let mut m = Machine::new(MachineSpec::fast_only());
+        let e = Engine::new(EngineConfig { steps, ..Default::default() });
+        e.run(
+            &g,
+            &trace,
+            &mut m,
+            &mut sentinel_hm::sim::engine::StaticPolicy { tier: Tier::Fast },
+        )
+    });
+    t.report("engine replay (10 steps, static policy)");
+    let events_per_s = (n_events as f64 * steps as f64) / (t.median_ns as f64 / 1e9);
+    println!("  → {:.1} M events/s (target ≥ 10 M/s)", events_per_s / 1e6);
+
+    // --- full Sentinel run --------------------------------------------
+    let fast = (Model::ResNetV1 { depth: 32 }).peak_memory_target() / 5;
+    let t = time_it(5, || run_sentinel(&g, fast, 14, SentinelConfig::default()));
+    t.report("sentinel end-to-end (14 steps incl. tuning)");
+
+    // --- plan construction --------------------------------------------
+    let spec = MachineSpec::paper_testbed(fast);
+    let t = time_it(5, || MigrationPlan::build(&g, 8, &spec));
+    t.report("migration-plan build (MI=8)");
+
+    // --- machine microbench: lane throughput ---------------------------
+    let t = time_it(5, || {
+        let mut m = Machine::new(MachineSpec::paper_testbed(1 << 30));
+        for i in 0..1000u32 {
+            m.alloc(ObjectId(i), 32, Tier::Slow);
+        }
+        for i in 0..1000u32 {
+            m.request_promote(ObjectId(i), 32);
+        }
+        let npp = m.ns_per_page();
+        for _ in 0..64 {
+            m.exec(500.0 * npp);
+        }
+        m.stats.pages_in
+    });
+    t.report("migration lane (32k pages through promote)");
+
+    let t = time_it(5, || {
+        let mut m = Machine::new(MachineSpec::fast_only());
+        for i in 0..10_000u32 {
+            m.alloc(ObjectId(i), 4, Tier::Fast);
+        }
+        for i in 0..10_000u32 {
+            std::hint::black_box(m.access_time_ns(ObjectId(i), 16384, 4));
+        }
+        for i in 0..10_000u32 {
+            m.free(ObjectId(i));
+        }
+    });
+    t.report("machine alloc/access/free (10k objects)");
+}

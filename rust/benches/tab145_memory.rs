@@ -1,0 +1,51 @@
+//! Bench: Tables 1, 4 and 5 — profiling memory inflation, page-migration
+//! counts (Sentinel vs IAL), and peak memory with/without Sentinel.
+//!
+//! Expected shapes (paper): Table 1 — small-object footprint inflates
+//! enormously during the one profiling step while the total grows ~25%;
+//! Table 4 — Sentinel migrates MORE than IAL (≈ +88% on average: frequent
+//! well-overlapped migration is the point); Table 5 — peak memory with
+//! Sentinel grows ≤ ~2–3%.
+//!
+//! Run: `cargo bench --bench tab145_memory`
+
+use sentinel_hm::dnn::zoo::Model;
+use sentinel_hm::figures::{fig10_overall, table1_memory, table4_migrations, table5_peak_memory, RUN_STEPS};
+use sentinel_hm::metrics::peak_memory_table;
+use sentinel_hm::util::bench::time_it;
+
+fn main() {
+    println!("=== Table 1 — memory consumption in profiling vs original ===");
+    table1_memory(Model::ResNetV1 { depth: 32 }).print();
+
+    let t = time_it(2, || fig10_overall(RUN_STEPS));
+    t.report("\ntable 4/5 sweep (5 models)");
+
+    let rows = fig10_overall(RUN_STEPS);
+    println!("\n=== Table 4 — page migrations (per {RUN_STEPS}-step run) ===");
+    table4_migrations(&rows).print();
+    let more = rows
+        .iter()
+        .filter(|r| r.sentinel_migrations > r.ial_migrations)
+        .count();
+    println!(
+        "paper: Sentinel migrates ~88% more than IAL on average\n\
+         measured: Sentinel migrates more on {more}/{} models",
+        rows.len()
+    );
+
+    println!("\n=== Table 5 — peak memory with and without Sentinel ===");
+    let t5: Vec<(String, u64, u64)> = Model::paper_five()
+        .into_iter()
+        .map(|m| {
+            let (without, with) = table5_peak_memory(m);
+            (m.name(), without, with)
+        })
+        .collect();
+    peak_memory_table(&t5).print();
+    for (m, without, with) in &t5 {
+        let growth = (*with as f64 / *without as f64 - 1.0) * 100.0;
+        println!("{m}: +{growth:.1}% (paper: ≤ 2.1%)");
+        assert!(growth < 30.0, "{m} peak growth {growth}% too large");
+    }
+}

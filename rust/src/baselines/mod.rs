@@ -1,0 +1,16 @@
+//! Baseline data-management policies the paper compares against.
+//!
+//! * [`ial`] — the state of the art in the paper's evaluation: Yan et
+//!   al.'s *improved active list* (ASPLOS'19): Linux-style FIFO
+//!   active/inactive lists driving page placement, re-optimized every
+//!   5 seconds, with parallel (4-thread) page copy.
+//! * [`lru`] — a classic LRU caching policy over fast memory (the
+//!   "caching algorithm" family of [30, 36, 57, 74, 77]).
+//! * Static fast-only / slow-only references live in
+//!   [`crate::sim::engine::StaticPolicy`].
+
+pub mod ial;
+pub mod lru;
+
+pub use ial::{IalConfig, IalPolicy};
+pub use lru::LruPolicy;

@@ -1,0 +1,239 @@
+//! §4.5 extensions: dynamic graphs and control dependencies.
+//!
+//! *Dynamic graphs* (PyTorch / TF 2.0): mini-batches of different input
+//! sizes lower to different dataflow graphs. Sentinel bucketizes input
+//! sizes into at most [`MAX_BUCKETS`] buckets, profiles each bucket once
+//! (one training step per bucket), and keeps a per-bucket migration
+//! plan; at step start the incoming batch's bucket selects the plan.
+//!
+//! *Control dependencies*: a static graph whose dataflow depends on
+//! input values. Whenever an unseen dataflow signature shows up, the
+//! runtime triggers a new profiling step and caches the decision,
+//! exactly as §4.5 prescribes.
+
+use std::collections::HashMap;
+
+use crate::coordinator::sentinel::{SentinelConfig, SentinelPolicy};
+use crate::dnn::{ModelGraph, StepTrace};
+use crate::sim::MachineSpec;
+
+/// The paper caps bucketed profiling at "a small number of buckets
+/// (at most 10 in Sentinel)".
+pub const MAX_BUCKETS: usize = 10;
+
+/// Maps raw input sizes (e.g. sequence lengths) to profiling buckets.
+#[derive(Clone, Debug)]
+pub struct Bucketizer {
+    /// Ascending bucket upper bounds (inclusive). The last bound is the
+    /// maximum supported input size; larger inputs clamp to it.
+    bounds: Vec<u32>,
+}
+
+impl Bucketizer {
+    /// Build from observed input sizes: at most `max_buckets` buckets
+    /// with (near-)equal population, following the paper's "bucketize
+    /// the input sizes into a small number of buckets".
+    pub fn from_observed(mut sizes: Vec<u32>, max_buckets: usize) -> Self {
+        assert!(!sizes.is_empty(), "need at least one observed size");
+        let max_buckets = max_buckets.clamp(1, MAX_BUCKETS);
+        sizes.sort_unstable();
+        sizes.dedup();
+        if sizes.len() <= max_buckets {
+            return Bucketizer { bounds: sizes };
+        }
+        // Equal-width strides over the distinct sizes.
+        let mut bounds = Vec::with_capacity(max_buckets);
+        for i in 1..=max_buckets {
+            let idx = i * sizes.len() / max_buckets - 1;
+            bounds.push(sizes[idx]);
+        }
+        bounds.dedup();
+        Bucketizer { bounds }
+    }
+
+    /// Bucket index of an input size.
+    pub fn bucket_of(&self, size: u32) -> usize {
+        match self.bounds.binary_search(&size) {
+            Ok(i) => i,
+            Err(i) => i.min(self.bounds.len() - 1),
+        }
+    }
+
+    /// Representative (upper-bound) size of a bucket — the shape the
+    /// bucket's graph is built for (inputs pad up to it, which is the
+    /// zero-padding transform of [27] applied per bucket instead of
+    /// globally).
+    pub fn representative(&self, bucket: usize) -> u32 {
+        self.bounds[bucket]
+    }
+
+    pub fn n_buckets(&self) -> usize {
+        self.bounds.len()
+    }
+}
+
+/// Per-bucket Sentinel state for dynamic-graph workloads.
+///
+/// The caller supplies a graph builder (`size → ModelGraph`) so each
+/// bucket gets a graph of the right shape; this type owns the bucket →
+/// (graph, trace, policy) cache and the profiling-step ledger.
+pub struct DynamicSentinel<F: Fn(u32) -> ModelGraph> {
+    build: F,
+    bucketizer: Bucketizer,
+    spec: MachineSpec,
+    cfg: SentinelConfig,
+    /// bucket → prepared state.
+    prepared: HashMap<usize, BucketState>,
+    /// Total profiling steps spent (one per bucket, §4.5).
+    pub profiling_steps_spent: u32,
+}
+
+/// Prepared per-bucket state.
+pub struct BucketState {
+    pub graph: ModelGraph,
+    pub trace: StepTrace,
+    pub policy: SentinelPolicy,
+}
+
+impl<F: Fn(u32) -> ModelGraph> DynamicSentinel<F> {
+    pub fn new(build: F, bucketizer: Bucketizer, spec: MachineSpec, cfg: SentinelConfig) -> Self {
+        DynamicSentinel {
+            build,
+            bucketizer,
+            spec,
+            cfg,
+            prepared: HashMap::new(),
+            profiling_steps_spent: 0,
+        }
+    }
+
+    /// State for the bucket of `input_size`, profiling it first if this
+    /// is the bucket's first appearance.
+    pub fn for_input(&mut self, input_size: u32) -> &mut BucketState {
+        let bucket = self.bucketizer.bucket_of(input_size);
+        if !self.prepared.contains_key(&bucket) {
+            let size = self.bucketizer.representative(bucket);
+            let graph = (self.build)(size);
+            let trace = StepTrace::from_graph(&graph);
+            let policy = SentinelPolicy::new(&graph, &trace, self.spec, self.cfg);
+            self.profiling_steps_spent += 1;
+            self.prepared.insert(bucket, BucketState { graph, trace, policy });
+        }
+        self.prepared.get_mut(&bucket).unwrap()
+    }
+
+    /// Number of distinct buckets profiled so far.
+    pub fn buckets_profiled(&self) -> usize {
+        self.prepared.len()
+    }
+}
+
+/// Control-dependency tracker (§4.5 "handling control dependencies"):
+/// each step's dataflow signature (a hash of the taken control edges) is
+/// looked up; unseen signatures trigger re-profiling.
+#[derive(Clone, Debug, Default)]
+pub struct DataflowTracker {
+    seen: HashMap<u64, u32>, // signature → times seen
+    pub reprofiles: u32,
+}
+
+impl DataflowTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a step's dataflow signature. Returns `true` if this is a
+    /// new dataflow (the runtime must trigger profiling + migration
+    /// decisions again).
+    pub fn observe(&mut self, signature: u64) -> bool {
+        let count = self.seen.entry(signature).or_insert(0);
+        *count += 1;
+        if *count == 1 {
+            self.reprofiles += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn distinct_dataflows(&self) -> usize {
+        self.seen.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::graph::GraphBuilder;
+    use crate::dnn::layer::LayerKind;
+
+    fn toy_graph(size: u32) -> ModelGraph {
+        let mut b = GraphBuilder::new(format!("toy-{size}"), 4);
+        let l0 = b.layer(LayerKind::Dense, "f", 1e6, false);
+        let l1 = b.layer(LayerKind::Dense, "b", 1e6, true);
+        let w = b.persistent(4096 * size as u64);
+        b.access(w, l0, 1);
+        b.access(w, l1, 1);
+        b.temp(l0, 256, 2);
+        b.finish()
+    }
+
+    #[test]
+    fn bucketizer_caps_at_max_buckets() {
+        let sizes: Vec<u32> = (1..=100).collect();
+        let b = Bucketizer::from_observed(sizes, 10);
+        assert!(b.n_buckets() <= 10);
+        // Monotone: bigger inputs never map to smaller buckets.
+        let mut prev = 0;
+        for s in [1u32, 17, 35, 60, 99, 150] {
+            let k = b.bucket_of(s);
+            assert!(k >= prev);
+            prev = k;
+            // Representative covers the input (padding-up semantics),
+            // except beyond the max size which clamps.
+            if s <= 100 {
+                assert!(b.representative(k) >= s);
+            }
+        }
+    }
+
+    #[test]
+    fn few_distinct_sizes_get_exact_buckets() {
+        let b = Bucketizer::from_observed(vec![20, 35, 20, 35, 35], 10);
+        assert_eq!(b.n_buckets(), 2);
+        assert_eq!(b.bucket_of(20), 0);
+        assert_eq!(b.bucket_of(35), 1);
+    }
+
+    #[test]
+    fn dynamic_sentinel_profiles_each_bucket_once() {
+        let bucketizer = Bucketizer::from_observed(vec![16, 32, 64], 10);
+        let spec = MachineSpec::paper_testbed(1 << 24);
+        let mut ds = DynamicSentinel::new(
+            toy_graph,
+            bucketizer,
+            spec,
+            SentinelConfig { fixed_mi: Some(1), ..Default::default() },
+        );
+        // Three sizes in two of the three buckets.
+        ds.for_input(16);
+        ds.for_input(16);
+        ds.for_input(64);
+        assert_eq!(ds.buckets_profiled(), 2);
+        assert_eq!(ds.profiling_steps_spent, 2, "one profiling step per bucket");
+        // Graphs are shaped per representative size.
+        assert_eq!(ds.for_input(16).graph.name, "toy-16");
+        assert_eq!(ds.for_input(64).graph.name, "toy-64");
+    }
+
+    #[test]
+    fn dataflow_tracker_reprofiles_on_new_signature_only() {
+        let mut t = DataflowTracker::new();
+        assert!(t.observe(0xA));
+        assert!(!t.observe(0xA));
+        assert!(t.observe(0xB));
+        assert!(!t.observe(0xA));
+        assert_eq!(t.distinct_dataflows(), 2);
+        assert_eq!(t.reprofiles, 2);
+    }
+}

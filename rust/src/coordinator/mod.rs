@@ -1,0 +1,20 @@
+//! The Sentinel runtime (§4) — the paper's contribution.
+//!
+//! Pipeline: one profiling step ([`crate::profiler`]) → data
+//! reorganization and short/long-lived classification → migration-
+//! interval selection (Eq. 1/2 pruning + measured search, [`interval`])
+//! → steady-state adaptive migration ([`sentinel`]) with per-interval
+//! prefetch, mid-interval eviction, reserved fast space for short-lived
+//! objects ([`crate::mem::pool`]), and test-and-trial resolution of
+//! migration Case 3 ([`trial`]).
+
+pub mod dynamic;
+pub mod interval;
+pub mod plan;
+pub mod sentinel;
+pub mod trial;
+
+pub use interval::{candidate_intervals, feasible_intervals, IntervalEstimate};
+pub use plan::MigrationPlan;
+pub use sentinel::{CaseCounts, SentinelConfig, SentinelPolicy};
+pub use trial::{Case3Strategy, TestAndTrial};

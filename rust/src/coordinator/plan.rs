@@ -1,0 +1,306 @@
+//! Per-migration-interval planning derived from the profiling step.
+//!
+//! Given a graph and a migration interval `MI` (in layers, §4.4), the
+//! plan precomputes, for each interval:
+//!
+//! * the *prefetch list* — long-lived objects accessed in the interval
+//!   that already exist before it (issued one interval early);
+//! * the *eviction schedule* — per layer, long-lived objects whose last
+//!   use before a long gap happens at that layer (the mid-interval
+//!   fast→slow moves that keep Case 2 away);
+//! * `RS(k)` — the short-lived reservation for each interval (§4.3);
+//! * `Data(MI)` and `T(MI)` — the quantities in the space/time
+//!   constraints (Eq. 1 and Eq. 2).
+
+use crate::dnn::ModelGraph;
+use crate::mem::ObjectId;
+use crate::sim::MachineSpec;
+use crate::PAGE_SIZE;
+
+/// A complete migration plan for one (graph, MI) pair.
+#[derive(Clone, Debug)]
+pub struct MigrationPlan {
+    pub mi: u32,
+    pub n_layers: u32,
+    pub n_intervals: u32,
+    /// For interval `k`: objects to promote at the start of interval
+    /// `k-1` (index 0 is prefetched before the step begins).
+    pub prefetch: Vec<Vec<ObjectId>>,
+    /// For layer `l`: objects to demote right after the layer finishes.
+    pub evict_after_layer: Vec<Vec<ObjectId>>,
+    /// Per-interval short-lived reservation RS(k) in bytes, page-rounded.
+    pub rs_bytes: Vec<u64>,
+    /// Eq. 1's `Data(MI)`: the largest per-interval prefetch volume.
+    pub max_prefetch_bytes: u64,
+    /// Eq. 2's `T(MI)`: the smallest per-interval execution time (ns),
+    /// estimated at fast-memory speed (conservative for the constraint).
+    pub min_interval_time_ns: f64,
+    /// Short-lived classification per object (profiling outcome).
+    pub short_lived: Vec<bool>,
+}
+
+impl MigrationPlan {
+    /// Build the plan. `spec` supplies bandwidth/GFLOPS for the `T(MI)`
+    /// estimate.
+    pub fn build(g: &ModelGraph, mi: u32, spec: &MachineSpec) -> MigrationPlan {
+        assert!(mi >= 1);
+        let n_layers = g.n_layers();
+        let n_intervals = n_layers.div_ceil(mi);
+        let interval_of = |layer: u32| layer / mi;
+        let interval_end = |k: u32| ((k + 1) * mi).min(n_layers) - 1;
+
+        let short_lived: Vec<bool> = g.objects.iter().map(|o| o.is_short_lived()).collect();
+
+        // Prefetch lists.
+        let mut prefetch: Vec<Vec<ObjectId>> = vec![Vec::new(); n_intervals as usize];
+        // Eviction schedule.
+        let mut evict_after_layer: Vec<Vec<ObjectId>> = vec![Vec::new(); n_layers as usize];
+
+        for o in &g.objects {
+            if short_lived[o.id.index()] {
+                continue;
+            }
+            // Access layers of this object, ascending.
+            let access_layers: Vec<u32> = o
+                .accesses
+                .iter()
+                .enumerate()
+                .filter(|&(_, &c)| c > 0)
+                .map(|(i, _)| o.alloc_layer + i as u32)
+                .collect();
+            if access_layers.is_empty() {
+                continue;
+            }
+            // Prefetch: the object is wanted in interval k if accessed
+            // there; it can be prefetched only if it exists before the
+            // interval starts.
+            let mut wanted: Vec<u32> = access_layers.iter().map(|&l| interval_of(l)).collect();
+            wanted.dedup();
+            for &k in &wanted {
+                let start = k * mi;
+                if o.alloc_layer < start {
+                    prefetch[k as usize].push(o.id);
+                }
+            }
+            // Eviction: after the last access in a run of consecutive
+            // intervals, if the next access is beyond the *next* interval
+            // (which the prefetcher will handle), demote.
+            for (i, &l) in access_layers.iter().enumerate() {
+                let next = access_layers.get(i + 1).copied();
+                let horizon = interval_end(interval_of(l).min(n_intervals - 1));
+                let next_horizon = interval_end((interval_of(l) + 1).min(n_intervals - 1));
+                let _ = horizon;
+                let evict = match next {
+                    None => l < o.free_layer, // never used again but stays alive
+                    Some(nl) => nl > next_horizon,
+                };
+                if evict {
+                    evict_after_layer[l as usize].push(o.id);
+                }
+            }
+        }
+
+        // RS(k): peak short-lived live bytes inside each interval.
+        let mut rs_bytes = vec![0u64; n_intervals as usize];
+        {
+            let n = n_layers as usize;
+            let mut delta = vec![0i64; n + 1];
+            for o in g.objects.iter().filter(|o| short_lived[o.id.index()]) {
+                let b = (o.pages() * PAGE_SIZE) as i64;
+                delta[o.alloc_layer as usize] += b;
+                delta[o.free_layer as usize + 1] -= b;
+            }
+            let mut acc = 0i64;
+            for l in 0..n {
+                acc += delta[l];
+                let k = interval_of(l as u32) as usize;
+                rs_bytes[k] = rs_bytes[k].max(acc as u64);
+            }
+        }
+
+        // Data(MI): per-interval prefetch bytes; take the max.
+        let max_prefetch_bytes = prefetch
+            .iter()
+            .map(|objs| {
+                objs.iter()
+                    .map(|o| g.objects[o.index()].pages() * PAGE_SIZE)
+                    .sum::<u64>()
+            })
+            .max()
+            .unwrap_or(0);
+
+        // T(MI): per-interval execution time at fast-memory speed.
+        let mut interval_time = vec![0.0f64; n_intervals as usize];
+        for (l, layer) in g.layers.iter().enumerate() {
+            let mut mem_ns = 0.0;
+            let _ = &layer;
+            let compute_ns = layer.flops / spec.compute_gflops;
+            // Memory traffic of layer l at fast bandwidth.
+            for o in &g.objects {
+                let c = o.accesses_in_layer(l as u32);
+                if c > 0 {
+                    mem_ns += (o.size_bytes * c as u64) as f64 / spec.fast.bandwidth_gbps
+                        + c as f64 * spec.fast.latency_ns;
+                }
+            }
+            interval_time[interval_of(l as u32) as usize] += compute_ns.max(mem_ns);
+        }
+        let min_interval_time_ns = interval_time
+            .iter()
+            .copied()
+            .fold(f64::INFINITY, f64::min);
+
+        MigrationPlan {
+            mi,
+            n_layers,
+            n_intervals,
+            prefetch,
+            evict_after_layer,
+            rs_bytes,
+            max_prefetch_bytes,
+            min_interval_time_ns,
+            short_lived,
+        }
+    }
+
+    /// Largest RS(k) — the `RS` of Eq. 1/2 ("relatively stable" per §4.4).
+    pub fn max_rs_bytes(&self) -> u64 {
+        self.rs_bytes.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Interval index of a layer.
+    pub fn interval_of(&self, layer: u32) -> u32 {
+        layer / self.mi
+    }
+
+    /// First layer of interval `k`.
+    pub fn interval_start(&self, k: u32) -> u32 {
+        k * self.mi
+    }
+
+    /// Last layer of interval `k`.
+    pub fn interval_last(&self, k: u32) -> u32 {
+        ((k + 1) * self.mi).min(self.n_layers) - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::zoo::Model;
+
+    fn plan(mi: u32) -> (ModelGraph, MigrationPlan) {
+        let g = (Model::ResNetV1 { depth: 32 }).build(1);
+        let spec = MachineSpec::paper_testbed(1 << 30);
+        let p = MigrationPlan::build(&g, mi, &spec);
+        (g, p)
+    }
+
+    #[test]
+    fn interval_arithmetic() {
+        let (_, p) = plan(8);
+        assert_eq!(p.n_intervals, 8); // 64 layers / 8
+        assert_eq!(p.interval_of(0), 0);
+        assert_eq!(p.interval_of(7), 0);
+        assert_eq!(p.interval_of(8), 1);
+        assert_eq!(p.interval_start(3), 24);
+        assert_eq!(p.interval_last(3), 31);
+    }
+
+    #[test]
+    fn ragged_last_interval() {
+        let (_, p) = plan(7);
+        assert_eq!(p.n_intervals, 10); // ceil(64/7)
+        assert_eq!(p.interval_last(9), 63);
+    }
+
+    #[test]
+    fn prefetch_only_contains_preexisting_long_lived() {
+        let (g, p) = plan(8);
+        for (k, objs) in p.prefetch.iter().enumerate() {
+            for oid in objs {
+                let o = &g.objects[oid.index()];
+                assert!(!o.is_short_lived());
+                assert!(o.alloc_layer < (k as u32) * p.mi);
+                // And it is actually accessed in interval k.
+                let accessed = (0..o.accesses.len() as u32).any(|i| {
+                    o.accesses[i as usize] > 0
+                        && p.interval_of(o.alloc_layer + i) == k as u32
+                });
+                assert!(accessed);
+            }
+        }
+    }
+
+    #[test]
+    fn backward_intervals_prefetch_activations() {
+        // Activations produced in the forward pass must be prefetched by
+        // backward intervals — that's Sentinel's main win.
+        let (g, p) = plan(8);
+        let bwd_k = p.interval_of(50); // a backward layer
+        let has_fwd_act = p.prefetch[bwd_k as usize].iter().any(|oid| {
+            let o = &g.objects[oid.index()];
+            !o.persistent && o.alloc_layer < 32
+        });
+        assert!(has_fwd_act, "backward interval must prefetch fwd activations");
+    }
+
+    #[test]
+    fn eviction_never_schedules_short_lived() {
+        let (g, p) = plan(8);
+        for objs in &p.evict_after_layer {
+            for oid in objs {
+                assert!(!g.objects[oid.index()].is_short_lived());
+            }
+        }
+    }
+
+    #[test]
+    fn evicted_objects_not_needed_next_interval() {
+        let (g, p) = plan(8);
+        for (l, objs) in p.evict_after_layer.iter().enumerate() {
+            let next_end = p.interval_last((p.interval_of(l as u32) + 1).min(p.n_intervals - 1));
+            for oid in objs {
+                let o = &g.objects[oid.index()];
+                // No access in (l, next_end].
+                for al in (l as u32 + 1)..=next_end {
+                    assert_eq!(
+                        o.accesses_in_layer(al),
+                        0,
+                        "{oid} evicted after {l} but accessed at {al}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rs_bounded_by_total_short_lived_peak() {
+        let (g, p) = plan(8);
+        // Page-rounded per-interval RS can exceed the byte-level peak,
+        // but not the page-rounded global peak by much.
+        let page_peak: u64 = g.peak_short_lived_bytes() * 3; // generous
+        assert!(p.max_rs_bytes() <= page_peak.max(1 << 22));
+        assert!(p.max_rs_bytes() > 0);
+    }
+
+    #[test]
+    fn data_grows_with_mi() {
+        let (_, p4) = plan(4);
+        let (_, p16) = plan(16);
+        assert!(
+            p16.max_prefetch_bytes >= p4.max_prefetch_bytes,
+            "Data(MI) is monotonically increasing (§4.4)"
+        );
+    }
+
+    #[test]
+    fn time_grows_with_mi() {
+        let (_, p4) = plan(4);
+        let (_, p16) = plan(16);
+        assert!(
+            p16.min_interval_time_ns > p4.min_interval_time_ns,
+            "T(MI) is monotonically increasing (§4.4)"
+        );
+    }
+}

@@ -1,0 +1,527 @@
+//! The Sentinel policy (§4): profiling-driven, layer-quantized adaptive
+//! data migration.
+//!
+//! Step schedule (matching Table 3's "p, m & t" accounting):
+//!
+//! 1. **Step 0 — profiling.** Everything runs from slow memory while the
+//!    (simulated) PTE-poisoning channel measures objects; the engine
+//!    charges the measurement cost.
+//! 2. **Steps 1..=c — interval search.** Each step runs with one
+//!    candidate MI surviving Eq. 1/2 pruning; the fastest wins.
+//! 3. **Test-and-trial.** The first Case 3 triggers two measurement
+//!    steps (continue vs drop); the winner is locked in.
+//! 4. **Steady state.** Per-interval prefetch, mid-interval eviction,
+//!    reserved fast space for short-lived objects.
+
+use crate::coordinator::interval::candidate_intervals;
+use crate::coordinator::plan::MigrationPlan;
+use crate::coordinator::trial::{Case3Strategy, TestAndTrial};
+use crate::dnn::{ModelGraph, StepTrace};
+use crate::mem::{DataObject, ShortLivedPool};
+use crate::profiler::{profile, ProfileReport};
+use crate::sim::{Engine, EngineConfig, Machine, MachineSpec, Policy, Tier, TrainResult};
+use crate::PAGE_SIZE;
+
+/// Feature switches — each maps to one bar of the paper's Fig. 11
+/// ablation plus the knobs of §4.4/§4.5.
+#[derive(Clone, Copy, Debug)]
+pub struct SentinelConfig {
+    /// Force a migration interval instead of searching (Fig. 7 sweeps).
+    pub fixed_mi: Option<u32>,
+    /// §4.3: reserve fast space for short-lived objects ("No space
+    /// reservation" ablation when false).
+    pub reserve_space: bool,
+    /// §4.2: reorganized allocation ("Having false sharing" when false).
+    pub handle_false_sharing: bool,
+    /// §4.4: test-and-trial for Case 3 ("No t&t" when false; falls back
+    /// to always-continue).
+    pub test_and_trial: bool,
+    /// Mid-interval eviction of no-longer-needed long-lived objects
+    /// (the Case-2 avoidance of §4.4).
+    pub eager_evict: bool,
+    /// Maximum MI candidates measured online.
+    pub max_mi_candidates: usize,
+    /// Synchronization cost charged at every interval boundary (ns):
+    /// issuing the `move_pages()` batches to the helper threads, the
+    /// associated TLB shootdowns, and the end-of-interval handshake.
+    /// This is what makes very small intervals expensive (§4.4).
+    pub boundary_overhead_ns: f64,
+}
+
+impl Default for SentinelConfig {
+    fn default() -> Self {
+        SentinelConfig {
+            fixed_mi: None,
+            reserve_space: true,
+            handle_false_sharing: true,
+            test_and_trial: true,
+            eager_evict: true,
+            max_mi_candidates: 5,
+            boundary_overhead_ns: 1.0e6,
+        }
+    }
+}
+
+/// Occurrences of the three end-of-interval migration cases (§4.4).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CaseCounts {
+    /// All prefetches finished in time.
+    pub case1: u64,
+    /// Prefetch blocked on fast-memory space.
+    pub case2: u64,
+    /// Prefetch ran out of time (bandwidth-bound).
+    pub case3: u64,
+}
+
+impl CaseCounts {
+    fn add(&mut self, other: CaseCounts) {
+        self.case1 += other.case1;
+        self.case2 += other.case2;
+        self.case3 += other.case3;
+    }
+}
+
+/// Execution phase of the policy's step schedule.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Phase {
+    Profiling,
+    MeasureMi { idx: usize },
+    Steady,
+}
+
+/// The Sentinel data-management policy.
+pub struct SentinelPolicy {
+    cfg: SentinelConfig,
+    spec: MachineSpec,
+    phase: Phase,
+    /// MI candidates surviving Eq. 1/2, measured one step each.
+    candidates: Vec<u32>,
+    candidate_times: Vec<f64>,
+    plan: MigrationPlan,
+    pool: ShortLivedPool,
+    trial: TestAndTrial,
+    step_start_ns: f64,
+    /// Case counters: total and for the last completed step.
+    pub cases_total: CaseCounts,
+    pub cases_last_step: CaseCounts,
+    cases_this_step: CaseCounts,
+    /// Per-step case counts (Fig. 8 reports one steady step).
+    pub cases_per_step: Vec<CaseCounts>,
+    /// Chosen migration interval (after the search).
+    pub chosen_mi: u32,
+    /// The profiling report (kept for reporting/inspection).
+    pub report: ProfileReport,
+    /// Model name (reporting).
+    pub graph_name: String,
+    /// Layer count of the graph (reporting).
+    pub n_layers: u32,
+}
+
+impl SentinelPolicy {
+    /// Construct from a graph; the profile is derived exactly as the
+    /// one-step measurement would produce it (see `profiler`).
+    pub fn new(g: &ModelGraph, trace: &StepTrace, spec: MachineSpec, cfg: SentinelConfig) -> Self {
+        let report = profile(g, trace);
+        let fast = spec.fast.capacity_bytes;
+        let candidates = match cfg.fixed_mi {
+            Some(mi) => vec![mi.clamp(1, g.n_layers())],
+            None => candidate_intervals(g, &spec, fast, cfg.max_mi_candidates),
+        };
+        let first_mi = candidates[0];
+        let plan = MigrationPlan::build(g, first_mi, &spec);
+        SentinelPolicy {
+            cfg,
+            spec,
+            phase: Phase::Profiling,
+            candidate_times: Vec::with_capacity(candidates.len()),
+            candidates,
+            plan,
+            pool: ShortLivedPool::new(true),
+            trial: TestAndTrial::new(cfg.test_and_trial),
+            step_start_ns: 0.0,
+            cases_total: CaseCounts::default(),
+            cases_last_step: CaseCounts::default(),
+            cases_this_step: CaseCounts::default(),
+            cases_per_step: Vec::new(),
+            chosen_mi: first_mi,
+            report,
+            graph_name: g.name.clone(),
+            n_layers: g.n_layers(),
+        }
+    }
+
+    /// Steps consumed before steady state: 1 (profiling) + candidates
+    /// (+2 if a trial ran). The analogue of Table 3's "p, m & t".
+    pub fn tuning_steps(&self) -> u32 {
+        1 + self.candidates.len() as u32 + self.trial.steps_used()
+    }
+
+    /// Is this small object a false-sharing victim (used by the §4.2
+    /// ablation)? Deterministic hash over the id, thresholded by the
+    /// measured fraction of pages that mix hot and cold residents.
+    fn is_victim(&self, id: crate::mem::ObjectId) -> bool {
+        let shared = &self.report.shared_pages;
+        let denom = shared.small_object_pages + shared.false_shared_pages;
+        if denom == 0 {
+            return false;
+        }
+        let prob_milli = (shared.false_shared_pages * 1000 / denom).min(1000);
+        let h = (id.0 as u64).wrapping_mul(0x9E3779B97F4A7C15) >> 54; // 0..1023
+        h * 1000 / 1024 < prob_milli
+    }
+
+    /// Fast bytes available to long-lived placement right now: free fast
+    /// memory minus the *unused* part of the short-lived reservation.
+    fn long_budget(&self, m: &Machine) -> u64 {
+        let unused_reservation = self
+            .pool
+            .reserved_bytes()
+            .saturating_sub(self.pool.in_use_bytes());
+        m.fast_free_bytes().saturating_sub(unused_reservation)
+    }
+
+    fn rebuild_plan(&mut self, g: &ModelGraph, mi: u32) {
+        if self.plan.mi != mi {
+            self.plan = MigrationPlan::build(g, mi, &self.spec);
+        }
+    }
+
+    /// Issue the prefetch for interval `target` (wrapping: the last
+    /// interval prefetches next step's interval 0, which only persistent
+    /// objects survive into).
+    fn issue_prefetch(&mut self, target: u32, m: &mut Machine, g: &ModelGraph) {
+        let target = target % self.plan.n_intervals;
+        for oid in &self.plan.prefetch[target as usize] {
+            let o = &g.objects[oid.index()];
+            if target == 0 && !o.persistent {
+                continue; // does not survive the step boundary
+            }
+            m.request_promote(*oid, o.pages());
+        }
+    }
+
+    /// End-of-interval case classification (§4.4). Returns stall ns.
+    fn classify_and_handle(&mut self, m: &mut Machine) -> f64 {
+        if m.pending_in_pages() == 0 {
+            self.cases_this_step.case1 += 1;
+            return 0.0;
+        }
+        if m.promote_stalled() {
+            // Case 2: no space. Leave the queue — mid-interval eviction
+            // and frees will open space; counting is what Fig. 8 needs.
+            self.cases_this_step.case2 += 1;
+            return 0.0;
+        }
+        // Case 3: not enough time.
+        self.cases_this_step.case3 += 1;
+        self.trial.on_case3();
+        match self.trial.strategy() {
+            Case3Strategy::Continue => m.promote_drain_time_ns(),
+            Case3Strategy::Drop => {
+                m.cancel_all_promotions();
+                0.0
+            }
+        }
+    }
+}
+
+impl Policy for SentinelPolicy {
+    fn name(&self) -> String {
+        let mut name = "sentinel".to_string();
+        if !self.cfg.handle_false_sharing {
+            name.push_str("(false-sharing)");
+        }
+        if !self.cfg.reserve_space {
+            name.push_str("(no-reserve)");
+        }
+        if !self.cfg.test_and_trial {
+            name.push_str("(no-t&t)");
+        }
+        name
+    }
+
+    fn place(&mut self, obj: &DataObject, m: &Machine) -> Tier {
+        if self.phase == Phase::Profiling {
+            // §3.1: profiling happens on slow memory.
+            return Tier::Slow;
+        }
+        let bytes = obj.pages() * PAGE_SIZE;
+        if self.plan.short_lived[obj.id.index()] {
+            if !self.cfg.reserve_space {
+                // Ablation (§4.3 removed): short-lived objects lose their
+                // fast-space guarantee and fall into the generic
+                // allocate-then-migrate discipline — but living under one
+                // layer, they die before any prefetch could help. The
+                // paper's guarantee ("there is always memory space for
+                // short-lived data objects") inverted.
+                return Tier::Slow;
+            }
+            if !self.cfg.handle_false_sharing && self.is_victim(obj.id) {
+                // Ablation (§4.2 removed): this small object shares its
+                // pages with cold long-lived data that page-granularity
+                // management left in slow memory; it is pinned with it
+                // (Observation 3).
+                return Tier::Slow;
+            }
+            if self.pool.serve(obj.id, bytes) {
+                return Tier::Fast;
+            }
+            // Reservation exhausted: compete with long-lived data.
+            return if m.fast_free_bytes() >= bytes { Tier::Fast } else { Tier::Slow };
+        }
+        // Long-lived: prefer fast within the long-lived budget; the
+        // prefetcher will bring it (back) when its intervals need it.
+        if self.long_budget(m) >= bytes {
+            Tier::Fast
+        } else {
+            Tier::Slow
+        }
+    }
+
+    fn step_start(&mut self, step: u32, m: &mut Machine, g: &ModelGraph) {
+        self.step_start_ns = m.now_ns();
+        self.cases_this_step = CaseCounts::default();
+        match self.phase {
+            Phase::Profiling => {
+                if step > 0 {
+                    // Profiling finished at the end of step 0.
+                    self.phase = Phase::MeasureMi { idx: 0 };
+                    let mi = self.candidates[0];
+                    self.rebuild_plan(g, mi);
+                }
+            }
+            Phase::MeasureMi { idx } => {
+                let mi = self.candidates[idx];
+                self.rebuild_plan(g, mi);
+            }
+            Phase::Steady => {}
+        }
+        let _ = m;
+    }
+
+    fn layer_start(&mut self, layer: u32, m: &mut Machine, g: &ModelGraph) {
+        if self.phase == Phase::Profiling {
+            return;
+        }
+        if layer % self.plan.mi == 0 {
+            let k = self.plan.interval_of(layer);
+            if self.cfg.reserve_space {
+                self.pool
+                    .begin_interval(self.plan.rs_bytes[k as usize]);
+            }
+            // §4.4: prefetch for the NEXT interval at the start of this
+            // one (the last interval prefetches next step's interval 0).
+            self.issue_prefetch(k + 1, m, g);
+        }
+    }
+
+    fn after_free(&mut self, obj: &DataObject, _m: &mut Machine) {
+        // Shrink the reservation as short-lived objects die (§4.3).
+        self.pool.release(obj.id);
+    }
+
+    fn layer_end(&mut self, layer: u32, m: &mut Machine, _g: &ModelGraph) -> f64 {
+        if self.phase == Phase::Profiling {
+            return 0.0;
+        }
+        // Mid-interval eviction: free fast space as soon as the
+        // remaining operations don't need an object (§4.4, Case-2
+        // avoidance).
+        if self.cfg.eager_evict {
+            // Evictions are planned per layer; split borrows via index.
+            let evictions = std::mem::take(&mut self.plan.evict_after_layer[layer as usize]);
+            for oid in &evictions {
+                let r = m.residency(*oid);
+                if r.alive && r.pages_fast > 0 {
+                    m.request_demote(*oid, r.pages_fast);
+                }
+            }
+            self.plan.evict_after_layer[layer as usize] = evictions;
+        }
+        // Interval boundary: classify the prefetch outcome and pay the
+        // boundary synchronization cost.
+        let k = self.plan.interval_of(layer);
+        if layer == self.plan.interval_last(k) {
+            self.classify_and_handle(m) + self.cfg.boundary_overhead_ns
+        } else {
+            0.0
+        }
+    }
+
+    fn step_end(&mut self, _step: u32, m: &mut Machine, _g: &ModelGraph) {
+        let step_ns = m.now_ns() - self.step_start_ns;
+        self.cases_total.add(self.cases_this_step);
+        self.cases_last_step = self.cases_this_step;
+        self.cases_per_step.push(self.cases_this_step);
+        match self.phase {
+            Phase::Profiling => { /* transition happens in step_start */ }
+            Phase::MeasureMi { idx } => {
+                self.candidate_times.push(step_ns);
+                if idx + 1 < self.candidates.len() {
+                    self.phase = Phase::MeasureMi { idx: idx + 1 };
+                } else {
+                    // Pick the fastest measured candidate.
+                    let best = self
+                        .candidate_times
+                        .iter()
+                        .enumerate()
+                        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .map(|(i, _)| i)
+                        .unwrap_or(0);
+                    self.chosen_mi = self.candidates[best];
+                    self.phase = Phase::Steady;
+                }
+            }
+            Phase::Steady => {
+                self.trial.on_step_end(step_ns);
+            }
+        }
+        // Trial measurement also consumes steady steps.
+        if self.trial.measuring() {
+            self.trial.on_step_end(step_ns);
+        }
+    }
+}
+
+/// One-call harness: profile, tune and train `g` under Sentinel on the
+/// paper's testbed with `fast_bytes` of fast memory for `steps` steps.
+/// Applies the false-sharing bandwidth derating when the ablation is on
+/// (see DESIGN.md §Hardware-substitution).
+pub fn run_sentinel(
+    g: &ModelGraph,
+    fast_bytes: u64,
+    steps: u32,
+    cfg: SentinelConfig,
+) -> (TrainResult, CaseCounts, u32) {
+    let mut spec = MachineSpec::paper_testbed(fast_bytes);
+    let trace = StepTrace::from_graph(g);
+    if !cfg.handle_false_sharing {
+        // Page-granularity migration drags cold co-resident data along:
+        // derate migration bandwidth by the measured waste fraction.
+        let shared = &profile(g, &trace).shared_pages;
+        let total_bytes = (shared.total_pages * PAGE_SIZE).max(1);
+        let waste = shared.false_shared_waste_bytes as f64 / total_bytes as f64;
+        spec.migration_bw_gbps *= (1.0 - waste).clamp(0.3, 1.0);
+    }
+    let mut policy = SentinelPolicy::new(g, &trace, spec, cfg);
+    let mut machine = Machine::new(spec);
+    let engine = Engine::new(EngineConfig {
+        steps,
+        profiling_steps: 1,
+        ..Default::default()
+    });
+    let result = engine.run(g, &trace, &mut machine, &mut policy);
+    let tuning = policy.tuning_steps();
+    (result, policy.cases_total, tuning)
+}
+
+/// The fast-memory-only reference the paper normalizes against.
+pub fn run_fast_only(g: &ModelGraph, steps: u32) -> TrainResult {
+    let trace = StepTrace::from_graph(g);
+    let mut machine = Machine::new(MachineSpec::fast_only());
+    let engine = Engine::new(EngineConfig { steps, ..Default::default() });
+    engine.run(
+        g,
+        &trace,
+        &mut machine,
+        &mut crate::sim::engine::StaticPolicy { tier: Tier::Fast },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::zoo::Model;
+
+    fn rn32() -> ModelGraph {
+        (Model::ResNetV1 { depth: 32 }).build(1)
+    }
+
+    #[test]
+    fn sentinel_runs_and_reaches_steady_state() {
+        let g = rn32();
+        let fast = (Model::ResNetV1 { depth: 32 }).peak_memory_target() / 5;
+        let (r, cases, tuning) = run_sentinel(&g, fast, 12, SentinelConfig::default());
+        assert_eq!(r.steps.len(), 12);
+        assert!(tuning < 12, "tuning must finish within the run");
+        assert!(r.total_migrations() > 0, "Sentinel must migrate");
+        let total_cases = cases.case1 + cases.case2 + cases.case3;
+        assert!(total_cases > 0, "interval boundaries must be classified");
+    }
+
+    #[test]
+    fn sentinel_close_to_fast_only_at_20pct() {
+        // The paper's headline: ≤8% slower than fast-memory-only with
+        // fast = 20% of peak. Allow some slack: ≤15% in the simulator.
+        let g = rn32();
+        let fast = (Model::ResNetV1 { depth: 32 }).peak_memory_target() / 5;
+        let (r, _, tuning) = run_sentinel(&g, fast, 14, SentinelConfig::default());
+        let f = run_fast_only(&g, 6);
+        let ratio = r.throughput(tuning as usize) / f.throughput(1);
+        assert!(
+            ratio > 0.85,
+            "sentinel/fast-only = {ratio:.3} (must be ≥ 0.85)"
+        );
+        assert!(ratio <= 1.02, "sentinel can't beat fast-only: {ratio:.3}");
+    }
+
+    #[test]
+    fn more_fast_memory_is_no_worse() {
+        let g = rn32();
+        let peak = g.peak_live_bytes();
+        let (r20, _, t20) = run_sentinel(&g, peak / 5, 12, SentinelConfig::default());
+        let (r60, _, t60) = run_sentinel(&g, peak * 3 / 5, 12, SentinelConfig::default());
+        let thr20 = r20.throughput(t20 as usize);
+        let thr60 = r60.throughput(t60 as usize);
+        assert!(
+            thr60 >= thr20 * 0.98,
+            "60% fast ({thr60}) must be ≥ 20% fast ({thr20})"
+        );
+    }
+
+    #[test]
+    fn ablations_do_not_beat_full_sentinel() {
+        let g = rn32();
+        let fast = (Model::ResNetV1 { depth: 32 }).peak_memory_target() / 5;
+        let (full, _, t_full) = run_sentinel(&g, fast, 12, SentinelConfig::default());
+        let thr_full = full.throughput(t_full as usize);
+        for cfg in [
+            SentinelConfig { reserve_space: false, ..Default::default() },
+            SentinelConfig { handle_false_sharing: false, ..Default::default() },
+        ] {
+            let (abl, _, t) = run_sentinel(&g, fast, 12, cfg);
+            let thr = abl.throughput(t as usize);
+            assert!(
+                thr <= thr_full * 1.02,
+                "ablation {:?} beat full sentinel: {thr} vs {thr_full}",
+                abl.policy
+            );
+        }
+    }
+
+    #[test]
+    fn fixed_mi_is_respected() {
+        let g = rn32();
+        let fast = (Model::ResNetV1 { depth: 32 }).peak_memory_target() / 5;
+        let trace = StepTrace::from_graph(&g);
+        let spec = MachineSpec::paper_testbed(fast);
+        let p = SentinelPolicy::new(
+            &g,
+            &trace,
+            spec,
+            SentinelConfig { fixed_mi: Some(8), ..Default::default() },
+        );
+        assert_eq!(p.candidates, vec![8]);
+    }
+
+    #[test]
+    fn profiling_step_places_everything_slow() {
+        let g = rn32();
+        let trace = StepTrace::from_graph(&g);
+        let spec = MachineSpec::paper_testbed(1 << 30);
+        let mut p = SentinelPolicy::new(&g, &trace, spec, SentinelConfig::default());
+        let m = Machine::new(spec);
+        let obj = &g.objects[0];
+        assert_eq!(p.place(obj, &m), Tier::Slow);
+    }
+}

@@ -1,0 +1,173 @@
+//! Test-and-trial resolution of migration Case 3 (§4.4).
+//!
+//! When a prefetch cannot finish in time (Case 3), Sentinel can either
+//! *continue* the migration — stalling the next interval until the data
+//! is in fast memory — or *drop* it and use the data from slow memory.
+//! Which is faster depends on the model and machine (the classic
+//! locality-vs-movement trade-off), so Sentinel measures: one training
+//! step trying each strategy, then commits to the winner. Repeatability
+//! (§2.1) guarantees the two measured steps see identical placements.
+
+/// What to do when Case 3 is detected at an interval boundary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Case3Strategy {
+    /// Block the next interval until the promotion lane drains.
+    Continue,
+    /// Cancel the remaining promotions; access from slow memory.
+    Drop,
+}
+
+/// State machine for the two measurement steps.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Phase {
+    /// No Case 3 seen yet; provisional strategy in use.
+    Idle,
+    /// Case 3 seen — measuring `Continue` this step.
+    TryContinue,
+    /// Measuring `Drop` this step.
+    TryDrop,
+    /// Decision locked.
+    Decided,
+}
+
+/// The test-and-trial controller.
+#[derive(Clone, Copy, Debug)]
+pub struct TestAndTrial {
+    phase: Phase,
+    continue_ns: f64,
+    drop_ns: f64,
+    decided: Case3Strategy,
+    /// Trial disabled (the "No t&t" ablation of Fig. 11): always use the
+    /// provisional strategy.
+    enabled: bool,
+}
+
+impl TestAndTrial {
+    pub fn new(enabled: bool) -> Self {
+        TestAndTrial {
+            phase: Phase::Idle,
+            continue_ns: 0.0,
+            drop_ns: 0.0,
+            // Provisional default: continue (favors locality).
+            decided: Case3Strategy::Continue,
+            enabled,
+        }
+    }
+
+    /// Strategy to apply to a Case 3 occurring right now.
+    pub fn strategy(&self) -> Case3Strategy {
+        match self.phase {
+            Phase::TryContinue => Case3Strategy::Continue,
+            Phase::TryDrop => Case3Strategy::Drop,
+            _ => self.decided,
+        }
+    }
+
+    /// Report that Case 3 happened during the current step. Starts the
+    /// trial if it hasn't run yet.
+    pub fn on_case3(&mut self) {
+        if self.enabled && self.phase == Phase::Idle {
+            self.phase = Phase::TryContinue;
+        }
+    }
+
+    /// Report the finished step's duration; advances the trial.
+    pub fn on_step_end(&mut self, step_ns: f64) {
+        match self.phase {
+            Phase::TryContinue => {
+                self.continue_ns = step_ns;
+                self.phase = Phase::TryDrop;
+            }
+            Phase::TryDrop => {
+                self.drop_ns = step_ns;
+                self.decided = if self.continue_ns <= self.drop_ns {
+                    Case3Strategy::Continue
+                } else {
+                    Case3Strategy::Drop
+                };
+                self.phase = Phase::Decided;
+            }
+            _ => {}
+        }
+    }
+
+    /// Is the trial mid-measurement? (Fig-8-style counters may want to
+    /// exclude these steps.)
+    pub fn measuring(&self) -> bool {
+        matches!(self.phase, Phase::TryContinue | Phase::TryDrop)
+    }
+
+    /// Has a decision been locked in?
+    pub fn decided(&self) -> bool {
+        self.phase == Phase::Decided
+    }
+
+    /// Number of extra steps the trial consumed so far (the "t" of
+    /// Table 3's "p, m & t").
+    pub fn steps_used(&self) -> u32 {
+        match self.phase {
+            Phase::Idle => 0,
+            Phase::TryContinue => 1,
+            Phase::TryDrop => 2,
+            Phase::Decided => 2,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_case3_means_no_trial() {
+        let mut t = TestAndTrial::new(true);
+        t.on_step_end(100.0);
+        t.on_step_end(90.0);
+        assert!(!t.decided());
+        assert_eq!(t.strategy(), Case3Strategy::Continue);
+    }
+
+    #[test]
+    fn trial_picks_faster_continue() {
+        let mut t = TestAndTrial::new(true);
+        t.on_case3();
+        assert!(t.measuring());
+        assert_eq!(t.strategy(), Case3Strategy::Continue);
+        t.on_step_end(80.0); // continue: fast
+        assert_eq!(t.strategy(), Case3Strategy::Drop);
+        t.on_step_end(120.0); // drop: slow
+        assert!(t.decided());
+        assert_eq!(t.strategy(), Case3Strategy::Continue);
+    }
+
+    #[test]
+    fn trial_picks_faster_drop() {
+        let mut t = TestAndTrial::new(true);
+        t.on_case3();
+        t.on_step_end(150.0);
+        t.on_step_end(100.0);
+        assert_eq!(t.strategy(), Case3Strategy::Drop);
+    }
+
+    #[test]
+    fn trial_runs_once() {
+        let mut t = TestAndTrial::new(true);
+        t.on_case3();
+        t.on_step_end(150.0);
+        t.on_step_end(100.0);
+        let decided = t.strategy();
+        t.on_case3(); // later Case 3s don't restart the trial
+        t.on_step_end(999.0);
+        assert_eq!(t.strategy(), decided);
+        assert_eq!(t.steps_used(), 2);
+    }
+
+    #[test]
+    fn disabled_trial_never_measures() {
+        let mut t = TestAndTrial::new(false);
+        t.on_case3();
+        assert!(!t.measuring());
+        assert_eq!(t.strategy(), Case3Strategy::Continue);
+        assert_eq!(t.steps_used(), 0);
+    }
+}

@@ -1,0 +1,305 @@
+//! Model graphs: layers plus the data objects alive across them, and the
+//! builder the zoo uses to assemble them.
+
+use std::collections::BTreeMap;
+
+use crate::dnn::layer::{Layer, LayerKind};
+use crate::mem::{DataObject, ObjectId};
+
+/// A complete training-step graph: `2d` layers (forward + backward) and
+/// every data object allocated during one step, with per-layer access
+/// schedules. Identical every step (§2.1) — this repeatability is the
+/// domain knowledge Sentinel exploits.
+#[derive(Clone, Debug)]
+pub struct ModelGraph {
+    pub name: String,
+    pub layers: Vec<Layer>,
+    /// Objects indexed by `ObjectId` (dense).
+    pub objects: Vec<DataObject>,
+    pub batch_size: u32,
+}
+
+impl ModelGraph {
+    pub fn n_layers(&self) -> u32 {
+        self.layers.len() as u32
+    }
+
+    /// Live (allocated, not yet freed) bytes at the end of each layer,
+    /// assuming objects are allocated at the start of their alloc layer
+    /// and freed at the end of their free layer.
+    pub fn live_bytes_per_layer(&self) -> Vec<u64> {
+        let n = self.n_layers() as usize;
+        // Difference array over layer indices.
+        let mut delta = vec![0i64; n + 1];
+        for o in &self.objects {
+            delta[o.alloc_layer as usize] += o.size_bytes as i64;
+            delta[o.free_layer as usize + 1] -= o.size_bytes as i64;
+        }
+        let mut live = Vec::with_capacity(n);
+        let mut acc = 0i64;
+        for d in delta.iter().take(n) {
+            acc += d;
+            live.push(acc as u64);
+        }
+        live
+    }
+
+    /// Peak live bytes across the step (the paper's "peak memory
+    /// consumption", the denominator of every fast-size percentage).
+    pub fn peak_live_bytes(&self) -> u64 {
+        self.live_bytes_per_layer().into_iter().max().unwrap_or(0)
+    }
+
+    /// Peak live bytes counting only short-lived objects — the quantity
+    /// behind §4.5's fast-memory lower bound.
+    pub fn peak_short_lived_bytes(&self) -> u64 {
+        let n = self.n_layers() as usize;
+        let mut delta = vec![0i64; n + 1];
+        for o in self.objects.iter().filter(|o| o.is_short_lived()) {
+            delta[o.alloc_layer as usize] += o.size_bytes as i64;
+            delta[o.free_layer as usize + 1] -= o.size_bytes as i64;
+        }
+        let mut acc = 0i64;
+        let mut peak = 0i64;
+        for d in delta.iter().take(n) {
+            acc += d;
+            peak = peak.max(acc);
+        }
+        peak as u64
+    }
+
+    /// Largest single long-lived object (the other term of §4.5's bound).
+    pub fn largest_long_lived_bytes(&self) -> u64 {
+        self.objects
+            .iter()
+            .filter(|o| !o.is_short_lived())
+            .map(|o| o.size_bytes)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Iterate objects allocated in `layer`.
+    pub fn allocs_in_layer(&self, layer: u32) -> impl Iterator<Item = &DataObject> {
+        self.objects.iter().filter(move |o| o.alloc_layer == layer && !o.persistent)
+    }
+
+    /// Uniformly scale every object of at least one page (preserving the
+    /// small-object population) so that peak live bytes approaches
+    /// `target`. Used by the zoo to calibrate each model to the paper's
+    /// Table 5 peak figures without disturbing Observation-1 statistics.
+    pub fn calibrate_peak(&mut self, target_bytes: u64) {
+        for _ in 0..4 {
+            let peak = self.peak_live_bytes();
+            if peak == 0 {
+                return;
+            }
+            let ratio = target_bytes as f64 / peak as f64;
+            if (ratio - 1.0).abs() < 0.02 {
+                break;
+            }
+            for o in &mut self.objects {
+                if o.size_bytes >= crate::PAGE_SIZE {
+                    o.size_bytes = ((o.size_bytes as f64 * ratio) as u64)
+                        .max(crate::PAGE_SIZE);
+                }
+            }
+        }
+    }
+}
+
+/// Interim object record used by [`GraphBuilder`].
+struct PendingObject {
+    size_bytes: u64,
+    alloc_layer: u32,
+    free_layer: Option<u32>, // None = persistent (freed at last layer)
+    accesses: BTreeMap<u32, u32>,
+    persistent: bool,
+}
+
+/// Incremental builder for [`ModelGraph`]s. The zoo drives this with
+/// model-specific shape math; the builder owns id assignment, access
+/// bookkeeping, and final materialization.
+pub struct GraphBuilder {
+    name: String,
+    batch_size: u32,
+    layers: Vec<Layer>,
+    objects: Vec<PendingObject>,
+}
+
+/// Handle to an object under construction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ObjHandle(usize);
+
+impl GraphBuilder {
+    pub fn new(name: impl Into<String>, batch_size: u32) -> Self {
+        GraphBuilder {
+            name: name.into(),
+            batch_size,
+            layers: Vec::new(),
+            objects: Vec::new(),
+        }
+    }
+
+    /// Append a layer; returns its index.
+    pub fn layer(&mut self, kind: LayerKind, name: impl Into<String>, flops: f64, backward: bool) -> u32 {
+        let index = self.layers.len() as u32;
+        self.layers.push(Layer {
+            index,
+            kind,
+            name: name.into(),
+            flops,
+            backward,
+        });
+        index
+    }
+
+    pub fn n_layers(&self) -> u32 {
+        self.layers.len() as u32
+    }
+
+    /// A persistent object (weights, optimizer state): allocated before
+    /// the step, never freed within it.
+    pub fn persistent(&mut self, size_bytes: u64) -> ObjHandle {
+        self.objects.push(PendingObject {
+            size_bytes,
+            alloc_layer: 0,
+            free_layer: None,
+            accesses: BTreeMap::new(),
+            persistent: true,
+        });
+        ObjHandle(self.objects.len() - 1)
+    }
+
+    /// An object allocated at `alloc_layer`, freed at end of `free_layer`.
+    pub fn object(&mut self, size_bytes: u64, alloc_layer: u32, free_layer: u32) -> ObjHandle {
+        assert!(free_layer >= alloc_layer);
+        self.objects.push(PendingObject {
+            size_bytes,
+            alloc_layer,
+            free_layer: Some(free_layer),
+            accesses: BTreeMap::new(),
+            persistent: false,
+        });
+        ObjHandle(self.objects.len() - 1)
+    }
+
+    /// A short-lived temporary: allocated, accessed `count` times and
+    /// freed within a single layer.
+    pub fn temp(&mut self, layer: u32, size_bytes: u64, count: u32) -> ObjHandle {
+        let h = self.object(size_bytes, layer, layer);
+        self.access(h, layer, count);
+        h
+    }
+
+    /// Record `count` main-memory accesses to `h` in `layer`.
+    pub fn access(&mut self, h: ObjHandle, layer: u32, count: u32) {
+        if count == 0 {
+            return;
+        }
+        let o = &mut self.objects[h.0];
+        debug_assert!(layer >= o.alloc_layer);
+        if let Some(free) = o.free_layer {
+            debug_assert!(layer <= free, "access after free");
+        }
+        *o.accesses.entry(layer).or_insert(0) += count;
+    }
+
+    /// Materialize the graph. Persistent objects get `free_layer = last`.
+    pub fn finish(self) -> ModelGraph {
+        let last = (self.layers.len() as u32).saturating_sub(1);
+        let objects = self
+            .objects
+            .into_iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let free_layer = p.free_layer.unwrap_or(last);
+                let span = (free_layer - p.alloc_layer + 1) as usize;
+                let mut accesses = vec![0u32; span];
+                for (layer, count) in p.accesses {
+                    let idx = (layer - p.alloc_layer) as usize;
+                    debug_assert!(idx < span);
+                    accesses[idx] += count;
+                }
+                DataObject {
+                    id: ObjectId(i as u32),
+                    size_bytes: p.size_bytes,
+                    alloc_layer: p.alloc_layer,
+                    free_layer,
+                    accesses,
+                    persistent: p.persistent,
+                }
+            })
+            .collect();
+        ModelGraph {
+            name: self.name,
+            layers: self.layers,
+            objects,
+            batch_size: self.batch_size,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_graph() -> ModelGraph {
+        let mut b = GraphBuilder::new("tiny", 4);
+        let l0 = b.layer(LayerKind::Conv2d, "fwd0", 1e6, false);
+        let l1 = b.layer(LayerKind::Conv2d, "fwd1", 1e6, false);
+        let l2 = b.layer(LayerKind::Optimizer, "bwd", 1e6, true);
+        let w = b.persistent(8192);
+        b.access(w, l0, 2);
+        b.access(w, l2, 3);
+        let act = b.object(4096, l0, l2);
+        b.access(act, l0, 1);
+        b.access(act, l2, 1);
+        b.temp(l1, 128, 5);
+        b.finish()
+    }
+
+    #[test]
+    fn finish_materializes_ids_and_accesses() {
+        let g = tiny_graph();
+        assert_eq!(g.objects.len(), 3);
+        assert_eq!(g.objects[0].id, ObjectId(0));
+        // Persistent weight: alive all 3 layers, accessed layers 0 and 2.
+        let w = &g.objects[0];
+        assert!(w.persistent);
+        assert_eq!(w.free_layer, 2);
+        assert_eq!(w.accesses, vec![2, 0, 3]);
+        // Temp: single-layer lifetime.
+        let t = &g.objects[2];
+        assert!(t.is_short_lived());
+        assert_eq!(t.accesses, vec![5]);
+    }
+
+    #[test]
+    fn live_bytes_tracks_alloc_free() {
+        let g = tiny_graph();
+        let live = g.live_bytes_per_layer();
+        assert_eq!(live.len(), 3);
+        assert_eq!(live[0], 8192 + 4096);
+        assert_eq!(live[1], 8192 + 4096 + 128);
+        assert_eq!(live[2], 8192 + 4096);
+        assert_eq!(g.peak_live_bytes(), 8192 + 4096 + 128);
+    }
+
+    #[test]
+    fn short_lived_peak_excludes_long_lived() {
+        let g = tiny_graph();
+        assert_eq!(g.peak_short_lived_bytes(), 128);
+        assert_eq!(g.largest_long_lived_bytes(), 8192);
+    }
+
+    #[test]
+    fn calibrate_scales_large_objects_only() {
+        let mut g = tiny_graph();
+        let small_before = g.objects[2].size_bytes;
+        let target = 4 * g.peak_live_bytes();
+        g.calibrate_peak(target);
+        let peak = g.peak_live_bytes();
+        assert!((peak as f64 - target as f64).abs() / (target as f64) < 0.1);
+        assert_eq!(g.objects[2].size_bytes, small_before);
+    }
+}

@@ -1,0 +1,79 @@
+//! Layer descriptions: kind, FLOP count, and the paper's layer index.
+
+/// The operation class a layer performs. Only used for reporting and for
+/// FLOP/traffic estimation — the memory behaviour is fully captured by
+/// the objects attached to the layer in the graph.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerKind {
+    /// 2-D convolution (`KxK`, `Cin→Cout` over `HxW`).
+    Conv2d,
+    /// Depthwise convolution (MobileNet).
+    DepthwiseConv2d,
+    /// Fully connected / dense matmul.
+    Dense,
+    /// Recurrent cell step (LSTM).
+    Recurrent,
+    /// Normalization / activation / pooling — cheap elementwise stages
+    /// folded into their producing layer in the paper's layer counting.
+    Elementwise,
+    /// Loss + optimizer update stage at the end of the backward pass.
+    Optimizer,
+}
+
+impl std::fmt::Display for LayerKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            LayerKind::Conv2d => "conv2d",
+            LayerKind::DepthwiseConv2d => "dwconv2d",
+            LayerKind::Dense => "dense",
+            LayerKind::Recurrent => "recurrent",
+            LayerKind::Elementwise => "elementwise",
+            LayerKind::Optimizer => "optimizer",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// One forward or backward stage of the training step.
+#[derive(Clone, Debug)]
+pub struct Layer {
+    /// Paper-style layer index: `0..2d` (forward then backward).
+    pub index: u32,
+    pub kind: LayerKind,
+    /// Human-readable name, e.g. `fwd/stage2/block3/conv1`.
+    pub name: String,
+    /// Floating-point operations in this stage (per step, whole batch).
+    pub flops: f64,
+    /// True for backward-pass stages.
+    pub backward: bool,
+}
+
+impl Layer {
+    /// Compute time of this layer on a machine sustaining `gflops`
+    /// (10⁹ FLOP/s → FLOPs/ns equals GFLOPS/1e0... 1 GFLOPS = 1 FLOP/ns).
+    pub fn compute_ns(&self, gflops: f64) -> f64 {
+        if gflops <= 0.0 {
+            return 0.0;
+        }
+        self.flops / gflops
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compute_time_scales_with_flops() {
+        let l = Layer {
+            index: 0,
+            kind: LayerKind::Conv2d,
+            name: "conv".into(),
+            flops: 1.2e9,
+            backward: false,
+        };
+        // 1.2 GFLOP at 600 GFLOPS = 2 ms = 2e6 ns.
+        assert!((l.compute_ns(600.0) - 2.0e6).abs() < 1.0);
+        assert_eq!(l.compute_ns(0.0), 0.0);
+    }
+}

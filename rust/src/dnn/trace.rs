@@ -1,0 +1,163 @@
+//! Per-step execution traces derived from a [`ModelGraph`].
+//!
+//! A training step replays the same sequence every time (§2.1): for each
+//! layer, allocate the objects born there, access every object the layer
+//! touches, then free the objects that die there. The engine replays one
+//! [`StepTrace`] per training step.
+
+use crate::dnn::graph::ModelGraph;
+use crate::mem::ObjectId;
+
+/// One memory event inside a layer.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TraceEvent {
+    /// Allocate the object (placement chosen by the policy).
+    Alloc(ObjectId),
+    /// `count` main-memory accesses to the object in this layer. Traffic
+    /// charged is `count * size_bytes`.
+    Access { obj: ObjectId, count: u32 },
+    /// Free the object.
+    Free(ObjectId),
+}
+
+/// All events of one layer, in program order.
+#[derive(Clone, Debug)]
+pub struct LayerTrace {
+    pub layer: u32,
+    /// Compute-only time of the layer (ns) at the machine's GFLOPS —
+    /// filled by the engine from `Layer::flops`; stored here as FLOPs.
+    pub flops: f64,
+    pub events: Vec<TraceEvent>,
+}
+
+/// The full, repeatable trace of one training step.
+#[derive(Clone, Debug)]
+pub struct StepTrace {
+    /// Objects that survive across steps (weights, optimizer state) —
+    /// allocated once before step 0, never freed.
+    pub persistent: Vec<ObjectId>,
+    pub layers: Vec<LayerTrace>,
+}
+
+impl StepTrace {
+    /// Build the canonical trace from a graph. Event order within a layer
+    /// is: allocs (in id order), accesses (id order), frees (id order).
+    pub fn from_graph(g: &ModelGraph) -> StepTrace {
+        let n = g.n_layers();
+        let mut layers: Vec<LayerTrace> = g
+            .layers
+            .iter()
+            .map(|l| LayerTrace {
+                layer: l.index,
+                flops: l.flops,
+                events: Vec::new(),
+            })
+            .collect();
+        let mut persistent = Vec::new();
+        for o in &g.objects {
+            if o.persistent {
+                persistent.push(o.id);
+            } else {
+                layers[o.alloc_layer as usize].events.push(TraceEvent::Alloc(o.id));
+            }
+        }
+        for o in &g.objects {
+            for (i, &count) in o.accesses.iter().enumerate() {
+                if count > 0 {
+                    let layer = o.alloc_layer + i as u32;
+                    layers[layer as usize]
+                        .events
+                        .push(TraceEvent::Access { obj: o.id, count });
+                }
+            }
+        }
+        for o in &g.objects {
+            if !o.persistent {
+                debug_assert!(o.free_layer < n);
+                layers[o.free_layer as usize].events.push(TraceEvent::Free(o.id));
+            }
+        }
+        // Canonical intra-layer order: allocs, then accesses, then frees.
+        for lt in &mut layers {
+            lt.events.sort_by_key(|e| match e {
+                TraceEvent::Alloc(o) => (0u8, o.0),
+                TraceEvent::Access { obj, .. } => (1, obj.0),
+                TraceEvent::Free(o) => (2, o.0),
+            });
+        }
+        StepTrace { persistent, layers }
+    }
+
+    /// Total number of events in the step.
+    pub fn n_events(&self) -> usize {
+        self.layers.iter().map(|l| l.events.len()).sum()
+    }
+
+    /// Total main-memory traffic of one step given the graph (bytes).
+    pub fn total_traffic_bytes(&self, g: &ModelGraph) -> u64 {
+        self.layers
+            .iter()
+            .flat_map(|l| l.events.iter())
+            .map(|e| match e {
+                TraceEvent::Access { obj, count } => {
+                    g.objects[obj.index()].size_bytes * *count as u64
+                }
+                _ => 0,
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::graph::GraphBuilder;
+    use crate::dnn::layer::LayerKind;
+
+    fn graph() -> ModelGraph {
+        let mut b = GraphBuilder::new("t", 1);
+        let l0 = b.layer(LayerKind::Dense, "f0", 0.0, false);
+        let l1 = b.layer(LayerKind::Dense, "b0", 0.0, true);
+        let w = b.persistent(4096);
+        b.access(w, l0, 1);
+        b.access(w, l1, 2);
+        let a = b.object(8192, l0, l1);
+        b.access(a, l0, 1);
+        b.access(a, l1, 1);
+        b.temp(l0, 256, 3);
+        b.finish()
+    }
+
+    #[test]
+    fn trace_orders_alloc_access_free() {
+        let g = graph();
+        let t = StepTrace::from_graph(&g);
+        assert_eq!(t.persistent, vec![ObjectId(0)]);
+        let l0 = &t.layers[0];
+        // Allocs for activation (1) and temp (2) first, then accesses
+        // (w=0, a=1, temp=2), then the temp's free.
+        assert_eq!(l0.events[0], TraceEvent::Alloc(ObjectId(1)));
+        assert_eq!(l0.events[1], TraceEvent::Alloc(ObjectId(2)));
+        assert!(matches!(l0.events[2], TraceEvent::Access { obj: ObjectId(0), count: 1 }));
+        assert_eq!(*l0.events.last().unwrap(), TraceEvent::Free(ObjectId(2)));
+        // Activation freed in layer 1.
+        assert!(t.layers[1].events.contains(&TraceEvent::Free(ObjectId(1))));
+    }
+
+    #[test]
+    fn traffic_counts_access_bytes() {
+        let g = graph();
+        let t = StepTrace::from_graph(&g);
+        // w: 3 accesses * 4096 + a: 2 * 8192 + temp: 3 * 256
+        assert_eq!(t.total_traffic_bytes(&g), 3 * 4096 + 2 * 8192 + 3 * 256);
+    }
+
+    #[test]
+    fn event_count() {
+        let g = graph();
+        let t = StepTrace::from_graph(&g);
+        // alloc a, alloc temp, 3 accesses in l0 (w,a,temp), free temp,
+        // 2 accesses in l1 (w,a), free a = 9
+        assert_eq!(t.n_events(), 9);
+    }
+}

@@ -1,0 +1,819 @@
+//! The model zoo: memory-behaviour reconstructions of the paper's five
+//! evaluation models (Table 3) plus the ResNet_v1 depth variants used by
+//! Fig. 13.
+//!
+//! Each builder derives object sizes from the model's real layer shapes
+//! (CIFAR-10 / PTB / MNIST input dims, actual channel progressions) and
+//! then calibrates large-object sizes so the simulated peak live memory
+//! matches the paper's Table 5 peak consumption. The small-object
+//! population (counts, sizes, access counts) is synthesized to match the
+//! §3.2 measurements:
+//!
+//! * Observation 1 — ~92% of objects live ≤ 1 layer; ~98% of those are
+//!   < 4 KB;
+//! * Fig. 2 — ~52% of objects see < 10 main-memory accesses;
+//! * Fig. 2/3 — a few MB of "hot" objects see > 100 accesses.
+
+use crate::dnn::graph::{GraphBuilder, ModelGraph};
+use crate::dnn::layer::LayerKind;
+use crate::util::Rng;
+
+/// The models evaluated in the paper, plus ResNet_v1 depth variants.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Model {
+    /// ResNet_v1 on CIFAR-10; depth ∈ {20, 32, 44, 56, 110} (6n+2).
+    ResNetV1 { depth: u32 },
+    /// ResNet_v2-152 (bottleneck, ImageNet-shaped activations, batch 32).
+    ResNetV2_152,
+    /// 2-layer word LSTM on PTB, unrolled 35 steps, batch 20.
+    Lstm,
+    /// DCGAN on MNIST, batch 64 (G + D trained in one step).
+    Dcgan,
+    /// MobileNet v1 on CIFAR-10, batch 64.
+    MobileNet,
+}
+
+impl Model {
+    /// The five models of Table 3, in the paper's order.
+    pub fn paper_five() -> [Model; 5] {
+        [
+            Model::ResNetV1 { depth: 32 },
+            Model::ResNetV2_152,
+            Model::Lstm,
+            Model::Dcgan,
+            Model::MobileNet,
+        ]
+    }
+
+    /// Depth variants used by Fig. 13.
+    pub fn resnet_variants() -> Vec<Model> {
+        [20, 32, 44, 56, 110]
+            .into_iter()
+            .map(|depth| Model::ResNetV1 { depth })
+            .collect()
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Model::ResNetV1 { depth } => format!("ResNet_v1-{depth}"),
+            Model::ResNetV2_152 => "ResNet_v2-152".into(),
+            Model::Lstm => "LSTM".into(),
+            Model::Dcgan => "DCGAN".into(),
+            Model::MobileNet => "MobileNet".into(),
+        }
+    }
+
+    /// Short name used in the paper's figures.
+    pub fn short_name(&self) -> String {
+        match self {
+            Model::ResNetV1 { depth: 32 } => "RN(v1)".into(),
+            Model::ResNetV1 { depth } => format!("RN{depth}"),
+            Model::ResNetV2_152 => "RN(v2)".into(),
+            Model::Lstm => "LSTM".into(),
+            Model::Dcgan => "DCGAN".into(),
+            Model::MobileNet => "MN".into(),
+        }
+    }
+
+    /// Table 3 batch size.
+    pub fn batch_size(&self) -> u32 {
+        match self {
+            Model::ResNetV1 { .. } => 128,
+            Model::ResNetV2_152 => 32,
+            Model::Lstm => 20,
+            Model::Dcgan => 64,
+            Model::MobileNet => 64,
+        }
+    }
+
+    /// Fraction of the *reported* peak (Table 5) that is live tensor
+    /// data. Table 1 measures 1.57 GB of data objects per step for
+    /// ResNet_v1-32 against Table 5's 6144 MB reported peak — the
+    /// remainder is allocator pool slack (TF's BFC arena). The graphs are
+    /// calibrated to the live-byte level; "X% of peak" fast sizes are
+    /// computed from the reported level, exactly as the paper does.
+    pub const LIVE_FRACTION: f64 = 0.40;
+
+    /// Of the live bytes, the share that is *hot* — tensors actively
+    /// cycled through fast memory each interval (activations, gradients,
+    /// weights). The rest is the paper's measured cold mass: Fig. 2 shows
+    /// 54% of pages hold objects with < 10 accesses (written once, read
+    /// once or never) — reserved buffers, kept intermediates, statistics.
+    /// These contribute to peak consumption but not to per-interval
+    /// migration traffic, which is what makes Eq. 1/2 satisfiable at the
+    /// paper's MI ≈ 8 with 1 GB of fast memory.
+    pub const HOT_FRACTION: f64 = 0.28;
+
+    /// Table 5 peak memory consumption (without Sentinel) in bytes — the
+    /// base of every "X% of peak" fast-memory size in the evaluation.
+    pub fn peak_memory_target(&self) -> u64 {
+        const MB: u64 = 1 << 20;
+        match self {
+            // Fig. 13 shows peak growing quickly with depth; v1-32 is
+            // pinned by Table 5, the other variants scale with the
+            // per-layer activation count (6n+2 structure).
+            Model::ResNetV1 { depth } => {
+                let blocks = (depth - 2) / 2; // conv pairs
+                6144 * MB * blocks as u64 / 15 // 15 pairs at depth 32
+            }
+            Model::ResNetV2_152 => 25600 * MB,
+            Model::Lstm => 2048 * MB,
+            Model::Dcgan => 3072 * MB,
+            Model::MobileNet => 4096 * MB,
+        }
+    }
+
+    /// Table 3: training steps the paper spends on profiling, finding
+    /// the migration interval, and test-and-trial.
+    pub fn tuning_steps(&self) -> u32 {
+        match self {
+            Model::ResNetV1 { .. } => 8,
+            Model::ResNetV2_152 => 5,
+            Model::Lstm => 2,
+            Model::Dcgan => 4,
+            Model::MobileNet => 3,
+        }
+    }
+
+    /// Build the memory-behaviour graph (deterministic in `seed`).
+    pub fn build(&self, seed: u64) -> ModelGraph {
+        let mut g = match self {
+            Model::ResNetV1 { depth } => build_resnet_v1(*depth, self.batch_size(), seed),
+            Model::ResNetV2_152 => build_resnet_v2_152(self.batch_size(), seed),
+            Model::Lstm => build_lstm(self.batch_size(), seed),
+            Model::Dcgan => build_dcgan(self.batch_size(), seed),
+            Model::MobileNet => build_mobilenet(self.batch_size(), seed),
+        };
+        // Two-stage calibration: scale the hot tensor population to the
+        // hot share of the reported peak, then add the cold write-once
+        // mass (Fig. 2's 1–10-access majority of bytes) up to the live
+        // level.
+        let reported = self.peak_memory_target() as f64;
+        g.calibrate_peak((reported * Self::HOT_FRACTION) as u64);
+        add_cold_residuals(&mut g, (reported * Self::LIVE_FRACTION) as u64);
+        g
+    }
+
+    /// The reported-peak equivalent of a graph's live peak (what Table 5
+    /// prints): live bytes divided by the live fraction.
+    pub fn reported_peak(live_bytes: u64) -> u64 {
+        (live_bytes as f64 / Self::LIVE_FRACTION) as u64
+    }
+}
+
+/// Build a model by its paper name (used by the CLI).
+pub fn build_model(name: &str) -> Option<ModelGraph> {
+    let model = match name {
+        "resnet32" | "ResNet_v1-32" | "RN(v1)" => Model::ResNetV1 { depth: 32 },
+        "resnet20" => Model::ResNetV1 { depth: 20 },
+        "resnet44" => Model::ResNetV1 { depth: 44 },
+        "resnet56" => Model::ResNetV1 { depth: 56 },
+        "resnet110" => Model::ResNetV1 { depth: 110 },
+        "resnet152" | "ResNet_v2-152" | "RN(v2)" => Model::ResNetV2_152,
+        "lstm" | "LSTM" => Model::Lstm,
+        "dcgan" | "DCGAN" => Model::Dcgan,
+        "mobilenet" | "MobileNet" | "MN" => Model::MobileNet,
+        _ => return None,
+    };
+    Some(model.build(0x5E17))
+}
+
+/// CLI-facing model names.
+pub fn model_names() -> &'static [&'static str] {
+    &[
+        "resnet20", "resnet32", "resnet44", "resnet56", "resnet110",
+        "resnet152", "lstm", "dcgan", "mobilenet",
+    ]
+}
+
+// ---------------------------------------------------------------------
+// Assembly helpers
+// ---------------------------------------------------------------------
+
+const F32: u64 = 4;
+
+/// Add the cold write-once tensor mass (§3.2, Fig. 2: the majority of
+/// bytes see < 10 main-memory accesses): per forward layer, one tensor
+/// written at its birth layer and kept alive until the mirrored backward
+/// layer — reserved buffers, retained intermediates, running statistics.
+/// They raise peak live memory to `live_target` without adding to
+/// per-interval migration traffic (nothing re-reads them), which is the
+/// population an application-agnostic manager wastes fast memory on.
+fn add_cold_residuals(g: &mut crate::dnn::ModelGraph, live_target: u64) {
+    use crate::mem::{DataObject, ObjectId};
+    let peak = g.peak_live_bytes();
+    if peak >= live_target {
+        return;
+    }
+    let d = g.n_layers() / 2;
+    if d == 0 {
+        return;
+    }
+    let per_pair = (live_target - peak) / d as u64;
+    if per_pair < crate::PAGE_SIZE {
+        return;
+    }
+    let mut next_id = g.objects.len() as u32;
+    let last = g.n_layers() - 1;
+    for i in 0..d {
+        let free_layer = last - i; // the mirrored backward layer
+        let span = (free_layer - i + 1) as usize;
+        let mut accesses = vec![0u32; span];
+        accesses[0] = 1; // written once at birth, never re-read
+        g.objects.push(DataObject {
+            id: ObjectId(next_id),
+            size_bytes: per_pair,
+            alloc_layer: i,
+            free_layer,
+            accesses,
+            persistent: false,
+        });
+        next_id += 1;
+    }
+}
+
+/// Drives a [`GraphBuilder`] with the common structure of one training
+/// step: `d` forward layers mirrored by `d` backward layers, the last
+/// backward layer doubling as the optimizer stage.
+struct StepAssembler {
+    b: GraphBuilder,
+    d: u32,
+    rng: Rng,
+}
+
+impl StepAssembler {
+    /// `fwd_layers`: (kind, name, forward FLOPs) in forward order. The
+    /// backward mirror of each layer costs 2× its forward FLOPs (the
+    /// usual two-matmul backward structure).
+    fn new(
+        name: &str,
+        batch: u32,
+        seed: u64,
+        fwd_layers: Vec<(LayerKind, String, f64)>,
+    ) -> Self {
+        let d = fwd_layers.len() as u32;
+        let mut b = GraphBuilder::new(name, batch);
+        for (kind, lname, flops) in &fwd_layers {
+            b.layer(*kind, format!("fwd/{lname}"), *flops, false);
+        }
+        for (kind, lname, flops) in fwd_layers.iter().rev() {
+            let kind = if b.n_layers() == 2 * d - 1 {
+                LayerKind::Optimizer
+            } else {
+                *kind
+            };
+            b.layer(kind, format!("bwd/{lname}"), 2.0 * flops, true);
+        }
+        StepAssembler { b, d, rng: Rng::new(seed) }
+    }
+
+    /// Backward mirror of forward layer `i`.
+    fn bwd(&self, i: u32) -> u32 {
+        2 * self.d - 1 - i
+    }
+
+    fn last(&self) -> u32 {
+        2 * self.d - 1
+    }
+
+    /// Attach the standard tensor population of a parameterized layer
+    /// (conv / dense / recurrent step) at forward layer `i`:
+    /// weights + momentum (persistent), weight gradient, output
+    /// activation + its gradient, fwd/bwd workspace, small temporaries.
+    fn param_layer(&mut self, i: u32, weight_bytes: u64, act_bytes: u64) {
+        let bwd = self.bwd(i);
+        let last = self.last();
+
+        if weight_bytes > 0 {
+            let w = self.b.persistent(weight_bytes);
+            self.b.access(w, i, 2);
+            self.b.access(w, bwd, 2);
+            self.b.access(w, last, 1); // optimizer read-modify-write
+            let m = self.b.persistent(weight_bytes); // momentum
+            self.b.access(m, last, 2);
+            let wg = self.b.object(weight_bytes, bwd, last);
+            self.b.access(wg, bwd, 1);
+            if bwd != last {
+                self.b.access(wg, last, 1);
+            }
+        }
+
+        if act_bytes > 0 {
+            // Output activation: written here, read by the next forward
+            // layer, and read again when its backward mirror runs.
+            let a = self.b.object(act_bytes, i, bwd);
+            self.b.access(a, i, 1);
+            if i + 1 < self.d {
+                self.b.access(a, i + 1, 1);
+            }
+            self.b.access(a, bwd, 1);
+            // Activation gradient: born at the mirror, consumed by the
+            // next backward layer (lifetime 2 — the short end of
+            // "long-lived").
+            let g_end = (bwd + 1).min(last);
+            let g = self.b.object(act_bytes, bwd, g_end);
+            self.b.access(g, bwd, 1);
+            if g_end != bwd {
+                self.b.access(g, g_end, 1);
+            }
+            // Large short-lived workspace (im2col fragments, scratch):
+            // the ~2% of short-lived objects that are ≥ 4 KB (§3.2).
+            let ws = act_bytes / 2;
+            if ws >= crate::PAGE_SIZE {
+                let w1 = self.b.temp(i, ws, 2);
+                let _ = w1;
+                let w2 = self.b.temp(bwd, ws, 2);
+                let _ = w2;
+            }
+        }
+
+        // Batch-norm style parameter pair: small, persistent, touched in
+        // both directions (moderately hot).
+        let bn_bytes = 2 * 64 * F32;
+        let bn = self.b.persistent(bn_bytes);
+        self.b.access(bn, i, self.rng.range_inclusive(4, 12) as u32);
+        self.b.access(bn, bwd, self.rng.range_inclusive(4, 12) as u32);
+
+        self.small_temps(i);
+        self.small_temps(bwd);
+    }
+
+    /// The swarm of small short-lived temporaries every TF layer spawns
+    /// (shape vectors, scalars, reduction buffers — Observation 1).
+    fn small_temps(&mut self, layer: u32) {
+        let n = self.rng.range_inclusive(26, 42);
+        for _ in 0..n {
+            // Mostly tiny (shape vectors, scalars — Table 1 measures an
+            // average well under 100 B), occasionally up to a page.
+            let size = if self.rng.chance(0.10) {
+                self.rng.log_uniform(512.0, 4000.0) as u64
+            } else {
+                self.rng.log_uniform(8.0, 256.0) as u64
+            };
+            // Fig 2: ~52% of objects see <10 accesses; the rest 10–60.
+            let count = if self.rng.chance(0.58) {
+                self.rng.range_inclusive(1, 9) as u32
+            } else {
+                self.rng.range_inclusive(10, 60) as u32
+            };
+            self.b.temp(layer, size.max(16), count);
+        }
+    }
+
+    /// A handful of hot runtime-state objects (queue runners, RNG state,
+    /// running statistics): few MB total, >100 accesses each (Fig 2/3).
+    fn hot_state(&mut self, n: u32) {
+        let d2 = 2 * self.d;
+        for _ in 0..n {
+            let size = self.rng.log_uniform(64.0 * 1024.0, 512.0 * 1024.0) as u64;
+            let h = self.b.persistent(size);
+            // Spread accesses over every layer so these stay hot.
+            let per_layer = (self.rng.range_inclusive(2, 8) as u32).max(1);
+            for l in 0..d2 {
+                self.b.access(h, l, per_layer);
+            }
+        }
+        // Plus a few tiny hot scalars (step counter, learning rate).
+        for _ in 0..6 {
+            let h = self.b.persistent(self.rng.range_inclusive(8, 256));
+            for l in 0..d2 {
+                self.b.access(h, l, 2);
+            }
+        }
+    }
+
+    /// Input pipeline: one batch of samples + labels, long-lived through
+    /// the forward pass.
+    fn input(&mut self, bytes: u64) {
+        let last_fwd = self.d - 1;
+        let x = self.b.object(bytes, 0, last_fwd.max(1));
+        self.b.access(x, 0, 2);
+        let y = self.b.object(bytes / 64 + 64, 0, self.last());
+        self.b.access(y, self.d - 1, 1);
+        self.b.access(y, self.d, 1);
+    }
+
+    fn finish(self) -> ModelGraph {
+        self.b.finish()
+    }
+}
+
+fn conv_flops(batch: u32, h: u32, w: u32, k: u32, cin: u32, cout: u32) -> f64 {
+    2.0 * batch as f64 * h as f64 * w as f64 * (k * k) as f64 * cin as f64 * cout as f64
+}
+
+fn act_bytes(batch: u32, h: u32, w: u32, c: u32) -> u64 {
+    batch as u64 * h as u64 * w as u64 * c as u64 * F32
+}
+
+fn weight_bytes(k: u32, cin: u32, cout: u32) -> u64 {
+    (k * k * cin * cout) as u64 * F32
+}
+
+// ---------------------------------------------------------------------
+// ResNet_v1-{20,32,44,56,110} on CIFAR-10
+// ---------------------------------------------------------------------
+
+/// CIFAR ResNet_v1 (He et al. 6n+2): conv1(3→16, 32×32), three stages of
+/// `n` blocks × 2 convs at 16ch@32, 32ch@16, 64ch@8, then fc(64→10).
+/// Paper layer counting folds BN/ReLU into their conv: depth 32 ⇒ 32
+/// forward layers ⇒ 64 layers per step, matching §3.2.
+fn build_resnet_v1(depth: u32, batch: u32, seed: u64) -> ModelGraph {
+    assert!((depth - 2) % 6 == 0, "ResNet_v1 depth must be 6n+2");
+    let n = (depth - 2) / 6;
+    // (name, k, cin, cout, h_out)
+    let mut convs: Vec<(String, u32, u32, u32, u32)> =
+        vec![("conv1".into(), 3, 3, 16, 32)];
+    for (stage, (c, h)) in [(16u32, 32u32), (32, 16), (64, 8)].iter().enumerate() {
+        for blk in 0..n {
+            let cin_first = if stage == 0 || blk > 0 { *c } else { *c / 2 };
+            convs.push((format!("s{stage}b{blk}c0"), 3, cin_first, *c, *h));
+            convs.push((format!("s{stage}b{blk}c1"), 3, *c, *c, *h));
+        }
+    }
+    let mut fwd: Vec<(LayerKind, String, f64)> = convs
+        .iter()
+        .map(|(name, k, cin, cout, h)| {
+            (
+                LayerKind::Conv2d,
+                name.clone(),
+                conv_flops(batch, *h, *h, *k, *cin, *cout),
+            )
+        })
+        .collect();
+    fwd.push((
+        LayerKind::Dense,
+        "fc".into(),
+        2.0 * batch as f64 * 64.0 * 10.0,
+    ));
+
+    let mut a = StepAssembler::new(&format!("ResNet_v1-{depth}"), batch, seed, fwd);
+    a.input(act_bytes(batch, 32, 32, 3));
+    for (i, (_, k, cin, cout, h)) in convs.iter().enumerate() {
+        a.param_layer(
+            i as u32,
+            weight_bytes(*k, *cin, *cout),
+            act_bytes(batch, *h, *h, *cout),
+        );
+    }
+    let fc = convs.len() as u32;
+    a.param_layer(fc, 64 * 10 * F32, batch as u64 * 10 * F32);
+    a.hot_state(10);
+    a.finish()
+}
+
+// ---------------------------------------------------------------------
+// ResNet_v2-152 (bottleneck)
+// ---------------------------------------------------------------------
+
+/// ResNet_v2-152: conv1 + [3, 8, 36, 3] bottleneck blocks × 3 convs + fc
+/// = 152 forward layers, ImageNet-shaped activations, batch 32.
+fn build_resnet_v2_152(batch: u32, seed: u64) -> ModelGraph {
+    // (k, cin, cout, h_out) per conv.
+    let mut convs: Vec<(u32, u32, u32, u32)> = vec![(7, 3, 64, 112)];
+    let stages: [(u32, u32, u32); 4] = [(3, 64, 56), (8, 128, 28), (36, 256, 14), (3, 512, 7)];
+    let mut cin = 64;
+    for (blocks, width, h) in stages {
+        for blk in 0..blocks {
+            let c_out = width * 4;
+            let first_in = if blk == 0 { cin } else { c_out };
+            convs.push((1, first_in, width, h));
+            convs.push((3, width, width, h));
+            convs.push((1, width, c_out, h));
+            cin = c_out;
+        }
+    }
+    let mut fwd: Vec<(LayerKind, String, f64)> = convs
+        .iter()
+        .enumerate()
+        .map(|(i, (k, cin, cout, h))| {
+            (
+                LayerKind::Conv2d,
+                format!("conv{i}"),
+                conv_flops(batch, *h, *h, *k, *cin, *cout),
+            )
+        })
+        .collect();
+    fwd.push((
+        LayerKind::Dense,
+        "fc".into(),
+        2.0 * batch as f64 * 2048.0 * 1000.0,
+    ));
+
+    let mut a = StepAssembler::new("ResNet_v2-152", batch, seed, fwd);
+    a.input(act_bytes(batch, 224, 224, 3));
+    for (i, (k, cin, cout, h)) in convs.iter().enumerate() {
+        a.param_layer(
+            i as u32,
+            weight_bytes(*k, *cin, *cout),
+            act_bytes(batch, *h, *h, *cout),
+        );
+    }
+    let fc = convs.len() as u32;
+    a.param_layer(fc, 2048 * 1000 * F32, batch as u64 * 1000 * F32);
+    a.hot_state(12);
+    a.finish()
+}
+
+// ---------------------------------------------------------------------
+// LSTM on PTB
+// ---------------------------------------------------------------------
+
+/// 2-layer word LSTM (hidden 650, the PTB "medium" config), unrolled 35
+/// steps. Each (timestep, lstm-layer) pair is one paper layer: 70 forward
+/// layers. The recurrent weights are shared across timesteps — this is
+/// the model where a few large objects are extremely hot.
+fn build_lstm(batch: u32, seed: u64) -> ModelGraph {
+    const H: u32 = 650;
+    const VOCAB: u32 = 10_000;
+    const STEPS: u32 = 35;
+    const LAYERS: u32 = 2;
+    let cell_flops = 2.0 * batch as f64 * (4 * H) as f64 * (2 * H) as f64;
+    let mut fwd: Vec<(LayerKind, String, f64)> = Vec::new();
+    for t in 0..STEPS {
+        for l in 0..LAYERS {
+            fwd.push((LayerKind::Recurrent, format!("t{t}l{l}"), cell_flops));
+        }
+    }
+    let d = fwd.len() as u32;
+    let mut a = StepAssembler::new("LSTM", batch, seed, fwd);
+
+    // Embedding table + softmax weights: large, persistent, hot.
+    let emb = a.b.persistent((VOCAB * H) as u64 * F32);
+    let softmax_w = a.b.persistent((VOCAB * H) as u64 * F32);
+    for t in 0..STEPS {
+        a.b.access(emb, t * LAYERS, 1); // lookup feeding timestep t
+        a.b.access(softmax_w, a.bwd(t * LAYERS), 1);
+    }
+    a.b.access(softmax_w, d - 1, 2); // logits of the final step
+
+    // Shared recurrent weights: accessed by every timestep ⇒ hottest
+    // large objects in the workload.
+    for l in 0..LAYERS {
+        let w = a.b.persistent((4 * H * 2 * H) as u64 * F32);
+        let m = a.b.persistent((4 * H * 2 * H) as u64 * F32);
+        let wg = a.b.object((4 * H * 2 * H) as u64 * F32, d, a.last());
+        for t in 0..STEPS {
+            let i = t * LAYERS + l;
+            a.b.access(w, i, 2);
+            a.b.access(w, a.bwd(i), 2);
+            a.b.access(wg, a.bwd(i), 1);
+        }
+        a.b.access(m, a.last(), 2);
+        a.b.access(wg, a.last(), 1);
+    }
+
+    // Per-(timestep,layer) activations: h, c and gate pre-activations.
+    for t in 0..STEPS {
+        for l in 0..LAYERS {
+            let i = t * LAYERS + l;
+            a.param_layer(i, 0, (batch * 4 * H) as u64 * F32);
+            // Hidden/cell state carried to the next timestep.
+            let carry_end = ((t + 1) * LAYERS + l).min(d - 1);
+            let hc = a.b.object((batch * 2 * H) as u64 * F32, i, a.bwd(i).max(carry_end));
+            a.b.access(hc, i, 1);
+            if carry_end > i {
+                a.b.access(hc, carry_end, 1);
+            }
+            a.b.access(hc, a.bwd(i), 1);
+        }
+    }
+    a.input((batch * STEPS) as u64 * F32 * 2);
+    a.hot_state(8);
+    a.finish()
+}
+
+// ---------------------------------------------------------------------
+// DCGAN on MNIST
+// ---------------------------------------------------------------------
+
+/// DCGAN (carpedm20 layout, 28×28 MNIST): one training step runs
+/// D-on-real, D-on-fake, and G updates. We flatten it to 12 forward
+/// layers (G: project + 3 deconvs; D: 3 convs + dense; loss stages).
+fn build_dcgan(batch: u32, seed: u64) -> ModelGraph {
+    // (name, kind, weight_bytes, act_bytes, flops)
+    let g_layers: Vec<(&str, u64, u64, f64)> = vec![
+        ("g/project", (100 * 4 * 4 * 256) as u64 * F32, act_bytes(batch, 4, 4, 256), 2.0 * batch as f64 * 100.0 * 4096.0),
+        ("g/deconv1", weight_bytes(5, 256, 128), act_bytes(batch, 7, 7, 128), conv_flops(batch, 7, 7, 5, 256, 128)),
+        ("g/deconv2", weight_bytes(5, 128, 64), act_bytes(batch, 14, 14, 64), conv_flops(batch, 14, 14, 5, 128, 64)),
+        ("g/deconv3", weight_bytes(5, 64, 1), act_bytes(batch, 28, 28, 1), conv_flops(batch, 28, 28, 5, 64, 1)),
+    ];
+    let d_layers: Vec<(&str, u64, u64, f64)> = vec![
+        ("d/conv1", weight_bytes(5, 1, 64), act_bytes(batch, 14, 14, 64), conv_flops(batch, 14, 14, 5, 1, 64)),
+        ("d/conv2", weight_bytes(5, 64, 128), act_bytes(batch, 7, 7, 128), conv_flops(batch, 7, 7, 5, 64, 128)),
+        ("d/conv3", weight_bytes(5, 128, 256), act_bytes(batch, 4, 4, 256), conv_flops(batch, 4, 4, 5, 128, 256)),
+        ("d/dense", (4 * 4 * 256) as u64 * F32, batch as u64 * F32, 2.0 * batch as f64 * 4096.0),
+    ];
+    // D runs twice per step (real + fake): duplicate its stages.
+    let mut fwd: Vec<(LayerKind, String, f64)> = Vec::new();
+    for (n, _, _, f) in &g_layers {
+        fwd.push((LayerKind::Conv2d, n.to_string(), *f));
+    }
+    for pass in ["real", "fake"] {
+        for (n, _, _, f) in &d_layers {
+            fwd.push((LayerKind::Conv2d, format!("{n}/{pass}"), *f));
+        }
+    }
+    let mut a = StepAssembler::new("DCGAN", batch, seed, fwd);
+    a.input(act_bytes(batch, 28, 28, 1));
+    let mut i = 0u32;
+    for (_, wb, ab, _) in g_layers.iter() {
+        a.param_layer(i, *wb, *ab);
+        i += 1;
+    }
+    // The two D passes share weights: attach parameters on the first
+    // pass only, activations on both.
+    for (pass, offset) in [(0u32, 0u32), (1, d_layers.len() as u32)] {
+        for (j, (_, wb, ab, _)) in d_layers.iter().enumerate() {
+            let layer = i + j as u32 + offset;
+            a.param_layer(layer, if pass == 0 { *wb } else { 0 }, *ab);
+        }
+    }
+    a.hot_state(8);
+    a.finish()
+}
+
+// ---------------------------------------------------------------------
+// MobileNet v1 on CIFAR-10
+// ---------------------------------------------------------------------
+
+/// MobileNet v1 adapted to CIFAR-10 (32×32 input): conv1 + 13 depthwise
+/// separable blocks (dw + pw = 2 layers each) + fc = 28 forward layers.
+fn build_mobilenet(batch: u32, seed: u64) -> ModelGraph {
+    // (cin, cout, h_out, stride) per separable block.
+    let blocks: [(u32, u32, u32); 13] = [
+        (32, 64, 32),
+        (64, 128, 16),
+        (128, 128, 16),
+        (128, 256, 8),
+        (256, 256, 8),
+        (256, 512, 4),
+        (512, 512, 4),
+        (512, 512, 4),
+        (512, 512, 4),
+        (512, 512, 4),
+        (512, 512, 4),
+        (512, 1024, 2),
+        (1024, 1024, 2),
+    ];
+    let mut fwd: Vec<(LayerKind, String, f64)> = vec![(
+        LayerKind::Conv2d,
+        "conv1".into(),
+        conv_flops(batch, 32, 32, 3, 3, 32),
+    )];
+    for (i, (cin, cout, h)) in blocks.iter().enumerate() {
+        fwd.push((
+            LayerKind::DepthwiseConv2d,
+            format!("b{i}/dw"),
+            2.0 * batch as f64 * (h * h) as f64 * 9.0 * *cin as f64,
+        ));
+        fwd.push((
+            LayerKind::Conv2d,
+            format!("b{i}/pw"),
+            conv_flops(batch, *h, *h, 1, *cin, *cout),
+        ));
+    }
+    fwd.push((
+        LayerKind::Dense,
+        "fc".into(),
+        2.0 * batch as f64 * 1024.0 * 10.0,
+    ));
+
+    let mut a = StepAssembler::new("MobileNet", batch, seed, fwd);
+    a.input(act_bytes(batch, 32, 32, 3));
+    a.param_layer(0, weight_bytes(3, 3, 32), act_bytes(batch, 32, 32, 32));
+    let mut i = 1u32;
+    for (cin, cout, h) in blocks.iter() {
+        // Depthwise: K×K×Cin weights.
+        a.param_layer(i, (9 * cin) as u64 * F32, act_bytes(batch, *h, *h, *cin));
+        i += 1;
+        // Pointwise 1×1.
+        a.param_layer(i, (cin * cout) as u64 * F32, act_bytes(batch, *h, *h, *cout));
+        i += 1;
+    }
+    a.param_layer(i, 1024 * 10 * F32, batch as u64 * 10 * F32);
+    a.hot_state(8);
+    a.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet32_has_64_layers() {
+        let g = (Model::ResNetV1 { depth: 32 }).build(1);
+        assert_eq!(g.n_layers(), 64, "paper §3.2: ResNet_v1-32 has 64 layers");
+        assert_eq!(g.batch_size, 128);
+    }
+
+    #[test]
+    fn resnet152_has_304_layers() {
+        let g = Model::ResNetV2_152.build(1);
+        assert_eq!(g.n_layers(), 304);
+    }
+
+    #[test]
+    fn lstm_has_140_layers() {
+        let g = Model::Lstm.build(1);
+        assert_eq!(g.n_layers(), 140);
+    }
+
+    #[test]
+    fn mobilenet_has_56_layers() {
+        let g = Model::MobileNet.build(1);
+        assert_eq!(g.n_layers(), 56);
+    }
+
+    #[test]
+    fn peaks_match_table5_targets() {
+        for m in Model::paper_five() {
+            let g = m.build(1);
+            let peak = g.peak_live_bytes() as f64;
+            let target = m.peak_memory_target() as f64 * Model::LIVE_FRACTION;
+            let err = (peak - target).abs() / target;
+            assert!(
+                err < 0.15,
+                "{}: peak {:.0} MB vs target {:.0} MB (err {:.1}%)",
+                m.name(),
+                peak / 1048576.0,
+                target / 1048576.0,
+                err * 100.0
+            );
+        }
+    }
+
+    #[test]
+    fn observation1_short_lived_dominate() {
+        // §3.2: ~92% of objects have lifetime ≤ 1 layer; ~98% of those
+        // are < 4 KB. Accept a generous band — the *shape* is the claim.
+        let g = (Model::ResNetV1 { depth: 32 }).build(1);
+        let total = g.objects.len() as f64;
+        let short: Vec<_> = g.objects.iter().filter(|o| o.is_short_lived()).collect();
+        let frac_short = short.len() as f64 / total;
+        assert!(
+            (0.80..=0.98).contains(&frac_short),
+            "short-lived fraction {frac_short}"
+        );
+        let small_frac =
+            short.iter().filter(|o| o.is_small()).count() as f64 / short.len() as f64;
+        assert!(small_frac > 0.90, "small fraction of short-lived {small_frac}");
+    }
+
+    #[test]
+    fn fig2_access_distribution_shape() {
+        let g = (Model::ResNetV1 { depth: 32 }).build(1);
+        let total = g.objects.len() as f64;
+        let lt10 = g
+            .objects
+            .iter()
+            .filter(|o| o.total_accesses() < 10)
+            .count() as f64;
+        let frac = lt10 / total;
+        // Paper: 52.3%. Accept 35–70%.
+        assert!((0.35..=0.70).contains(&frac), "frac(<10 accesses) = {frac}");
+        // Hot objects (>100 accesses) exist but are a small share of bytes.
+        let hot_bytes: u64 = g
+            .objects
+            .iter()
+            .filter(|o| o.total_accesses() > 100)
+            .map(|o| o.size_bytes)
+            .sum();
+        let total_bytes: u64 = g.objects.iter().map(|o| o.size_bytes).sum();
+        assert!(hot_bytes > 0);
+        assert!(
+            (hot_bytes as f64) < 0.05 * total_bytes as f64,
+            "hot bytes {hot_bytes} of {total_bytes}"
+        );
+    }
+
+    #[test]
+    fn variants_grow_with_depth() {
+        let peaks: Vec<u64> = Model::resnet_variants()
+            .iter()
+            .map(|m| m.build(1).peak_live_bytes())
+            .collect();
+        for w in peaks.windows(2) {
+            assert!(w[1] > w[0], "peaks must grow with depth: {peaks:?}");
+        }
+    }
+
+    #[test]
+    fn build_model_by_name() {
+        for name in model_names() {
+            assert!(build_model(name).is_some(), "{name} should build");
+        }
+        assert!(build_model("nope").is_none());
+    }
+
+    #[test]
+    fn graphs_are_deterministic_in_seed() {
+        let a = (Model::Dcgan).build(7);
+        let b = (Model::Dcgan).build(7);
+        assert_eq!(a.objects.len(), b.objects.len());
+        for (x, y) in a.objects.iter().zip(&b.objects) {
+            assert_eq!(x.size_bytes, y.size_bytes);
+            assert_eq!(x.accesses, y.accesses);
+        }
+    }
+}

@@ -1,0 +1,388 @@
+//! Regeneration of every table and figure in the paper's evaluation
+//! (§3 and §6). Shared by the CLI (`sentinel figure <id>`) and the bench
+//! harness (`cargo bench`); each function returns the raw rows so tests
+//! and benches can assert the *shape* of the result, and renders a
+//! plain-text table for the console.
+//!
+//! Paper ↔ code map (see DESIGN.md §3 for the full experiment index):
+//!
+//! | Paper artifact | Function |
+//! |---|---|
+//! | Fig. 1 (lifetimes)        | [`fig1_lifetime`] |
+//! | Fig. 2/3 (access counts)  | [`fig2_fig3_access`] |
+//! | Fig. 4 (false sharing)    | [`fig4_false_sharing`] |
+//! | Table 1 (profiling mem)   | [`table1_memory`] |
+//! | Fig. 7 (MI sweep)         | [`fig7_mi_sweep`] |
+//! | Fig. 8 (case counts)      | [`fig8_cases`] |
+//! | Fig. 10 (overall perf)    | [`fig10_overall`] |
+//! | Table 4 (migrations)      | [`table4_migrations`] |
+//! | Table 5 (peak memory)     | [`table5_peak_memory`] |
+//! | Fig. 11 (ablation)        | [`fig11_ablation`] |
+//! | Fig. 12 (fast-size sens.) | [`fig12_sensitivity`] |
+//! | Fig. 13 (ResNet variants) | [`fig13_variants`] |
+
+use crate::baselines::{IalConfig, IalPolicy, LruPolicy};
+use crate::coordinator::sentinel::{run_fast_only, run_sentinel, SentinelConfig};
+use crate::dnn::zoo::Model;
+use crate::dnn::StepTrace;
+use crate::mem::{AllocMode, Allocator};
+use crate::profiler::profile;
+use crate::sim::{Engine, EngineConfig, Machine, MachineSpec, TrainResult};
+use crate::util::table::{fmt_bytes, Table};
+
+/// Default steps for policy comparison runs: enough for tuning plus a
+/// steady-state window.
+pub const RUN_STEPS: u32 = 14;
+
+fn seed() -> u64 {
+    0x5E17
+}
+
+// ---------------------------------------------------------------------
+// §3 profiling study
+// ---------------------------------------------------------------------
+
+/// Fig. 1: lifetime distribution of data objects and their sizes.
+pub fn fig1_lifetime(model: Model) -> (Table, f64) {
+    let g = model.build(seed());
+    let t = StepTrace::from_graph(&g);
+    let r = profile(&g, &t);
+    let mut table = Table::new(vec!["lifetime (layers)", "objects", "% objects", "bytes"]);
+    let total: u64 = r.objects.len() as u64;
+    for b in r.lifetime_histogram() {
+        table.row(vec![
+            b.label.clone(),
+            b.objects.to_string(),
+            format!("{:.1}%", 100.0 * b.objects as f64 / total as f64),
+            fmt_bytes(b.bytes),
+        ]);
+    }
+    (table, r.short_lived_fraction())
+}
+
+/// Fig. 2 (all objects) and Fig. 3 (small objects only): distribution of
+/// main-memory access counts.
+pub fn fig2_fig3_access(model: Model, small_only: bool) -> Table {
+    let g = model.build(seed());
+    let t = StepTrace::from_graph(&g);
+    let r = profile(&g, &t);
+    let hist = r.access_histogram(small_only);
+    let total: u64 = hist.iter().map(|b| b.objects).sum();
+    let mut table = Table::new(vec!["accesses", "objects", "% objects", "bytes"]);
+    for b in hist {
+        table.row(vec![
+            b.label.clone(),
+            b.objects.to_string(),
+            format!("{:.1}%", 100.0 * b.objects as f64 / total.max(1) as f64),
+            fmt_bytes(b.bytes),
+        ]);
+    }
+    table
+}
+
+/// Fig. 4: page-level vs object-level access distributions under the
+/// original (shared) allocator — page-level false sharing made visible.
+pub fn fig4_false_sharing(model: Model) -> (Table, u64) {
+    let g = model.build(seed());
+    let shared = Allocator::replay(AllocMode::Shared, &g);
+    let grouped = Allocator::replay(AllocMode::Grouped, &g);
+    let mut table = Table::new(vec![
+        "access bucket",
+        "pages (orig alloc)",
+        "bytes (orig)",
+        "pages (grouped)",
+    ]);
+    let gb = grouped.pages_by_access_bucket();
+    for (i, (label, pages, bytes)) in shared.pages_by_access_bucket().into_iter().enumerate() {
+        table.row(vec![
+            label.to_string(),
+            pages.to_string(),
+            fmt_bytes(bytes),
+            gb[i].1.to_string(),
+        ]);
+    }
+    table.row(vec![
+        "false-shared pages".into(),
+        shared.false_shared_pages.to_string(),
+        fmt_bytes(shared.false_shared_waste_bytes),
+        grouped.false_shared_pages.to_string(),
+    ]);
+    (table, shared.false_shared_pages)
+}
+
+/// Table 1: memory consumption, original execution vs one-object-per-page
+/// profiling.
+pub fn table1_memory(model: Model) -> Table {
+    let g = model.build(seed());
+    let t = StepTrace::from_graph(&g);
+    let r = profile(&g, &t);
+    let (prof_small, orig_small) = r.small_object_footprint();
+    let mut table = Table::new(vec!["memory consumption", "in prof.", "orig. exe."]);
+    table.row(vec![
+        "all data objects".to_string(),
+        fmt_bytes(r.profiling_pages.peak_pages * crate::PAGE_SIZE),
+        fmt_bytes(r.shared_pages.peak_pages * crate::PAGE_SIZE),
+    ]);
+    table.row(vec![
+        "objects < 4KB".to_string(),
+        fmt_bytes(prof_small),
+        fmt_bytes(orig_small),
+    ]);
+    table
+}
+
+// ---------------------------------------------------------------------
+// §4.4 migration-interval behaviour (Figs. 7 & 8)
+// ---------------------------------------------------------------------
+
+/// Fig. 7: training throughput vs migration interval (ResNet_v1-32,
+/// 1 GB fast memory). Returns (rows of (MI, steps/s), sweet-spot MI).
+pub fn fig7_mi_sweep(fast_bytes: u64, mis: &[u32]) -> (Vec<(u32, f64)>, u32) {
+    let g = (Model::ResNetV1 { depth: 32 }).build(seed());
+    let mut rows = Vec::new();
+    let mut best = (0u32, 0.0f64);
+    for &mi in mis {
+        let cfg = SentinelConfig { fixed_mi: Some(mi), ..Default::default() };
+        let (r, _, tuning) = run_sentinel(&g, fast_bytes, 10, cfg);
+        let thr = r.throughput(tuning as usize);
+        if thr > best.1 {
+            best = (mi, thr);
+        }
+        rows.push((mi, thr));
+    }
+    (rows, best.0)
+}
+
+/// Fig. 8: occurrences of migration Cases 1/2/3 per training step as the
+/// migration interval varies (same configuration as Fig. 7).
+pub fn fig8_cases(fast_bytes: u64, mis: &[u32]) -> Vec<(u32, u64, u64, u64)> {
+    let g = (Model::ResNetV1 { depth: 32 }).build(seed());
+    let mut rows = Vec::new();
+    for &mi in mis {
+        let cfg = SentinelConfig { fixed_mi: Some(mi), ..Default::default() };
+        let (r, cases, _) = run_sentinel(&g, fast_bytes, 10, cfg);
+        // Normalize to one steady training step.
+        let steps = (r.steps.len() as u64).saturating_sub(2).max(1);
+        rows.push((mi, cases.case1 / steps, cases.case2 / steps, cases.case3 / steps));
+    }
+    rows
+}
+
+// ---------------------------------------------------------------------
+// §6 evaluation
+// ---------------------------------------------------------------------
+
+/// Run IAL on a model at the given fast size.
+///
+/// IAL manages *pages*, not objects: its migrations drag the cold
+/// co-residents of every false-shared page along (Observation 3), and
+/// page-level reference bits misattribute hotness. Our machine is
+/// object-granularity, so we charge IAL the measured false-sharing
+/// waste as a migration-bandwidth derate — the same derate Sentinel's
+/// "Having false sharing" ablation pays (it runs on exactly the
+/// un-reorganized allocation IAL sees). See DESIGN.md §1.
+pub fn run_ial(g: &crate::dnn::ModelGraph, fast_bytes: u64, steps: u32) -> TrainResult {
+    let trace = StepTrace::from_graph(g);
+    let mut spec = MachineSpec::paper_testbed(fast_bytes);
+    let shared = Allocator::replay(AllocMode::Shared, g);
+    let total_bytes = (shared.total_pages * crate::PAGE_SIZE).max(1);
+    let waste = shared.false_shared_waste_bytes as f64 / total_bytes as f64;
+    spec.migration_bw_gbps *= (1.0 - waste).clamp(0.3, 1.0);
+    let mut machine = Machine::new(spec);
+    // IAL manages the framework's whole arena (reported peak), and fresh
+    // tensors inherit the tier of whatever arena page they reuse.
+    let arena = Model::reported_peak(g.peak_live_bytes());
+    let mut policy = IalPolicy::new(IalConfig {
+        arena_bytes: Some(arena),
+        ..Default::default()
+    });
+    let engine = Engine::new(EngineConfig { steps, ..Default::default() });
+    engine.run(g, &trace, &mut machine, &mut policy)
+}
+
+/// Run the LRU baseline.
+pub fn run_lru(g: &crate::dnn::ModelGraph, fast_bytes: u64, steps: u32) -> TrainResult {
+    let trace = StepTrace::from_graph(g);
+    let mut machine = Machine::new(MachineSpec::paper_testbed(fast_bytes));
+    let mut policy = LruPolicy::new();
+    let engine = Engine::new(EngineConfig { steps, ..Default::default() });
+    engine.run(g, &trace, &mut machine, &mut policy)
+}
+
+/// One Fig. 10 row: normalized throughput (vs fast-only) of Sentinel and
+/// IAL at fast = 20% of reported peak.
+#[derive(Clone, Debug)]
+pub struct OverallRow {
+    pub model: String,
+    pub fast_only_thr: f64,
+    pub sentinel_norm: f64,
+    pub ial_norm: f64,
+    pub sentinel_migrations: u64,
+    pub ial_migrations: u64,
+    pub sentinel_peak_reported: u64,
+    pub baseline_peak_reported: u64,
+}
+
+/// Fig. 10 + Tables 4/5 share one sweep over the five models.
+pub fn fig10_overall(steps: u32) -> Vec<OverallRow> {
+    Model::paper_five()
+        .into_iter()
+        .map(|m| {
+            let g = m.build(seed());
+            let fast = m.peak_memory_target() / 5; // 20% of reported peak
+            let f = run_fast_only(&g, 6);
+            let (s, _, tuning) = run_sentinel(&g, fast, steps, SentinelConfig::default());
+            let i = run_ial(&g, fast, steps);
+            let fthr = f.throughput(1);
+            OverallRow {
+                model: m.name(),
+                fast_only_thr: fthr,
+                sentinel_norm: s.throughput(tuning as usize) / fthr,
+                ial_norm: i.throughput(3) / fthr,
+                sentinel_migrations: s.total_migrations(),
+                ial_migrations: i.total_migrations(),
+                sentinel_peak_reported: Model::reported_peak(s.peak_total_bytes),
+                baseline_peak_reported: Model::reported_peak(f.peak_total_bytes),
+            }
+        })
+        .collect()
+}
+
+/// Render Fig. 10 rows.
+pub fn fig10_table(rows: &[OverallRow]) -> Table {
+    let mut t = Table::new(vec!["model", "fast-only", "Sentinel", "IAL"]);
+    for r in rows {
+        t.row(vec![
+            r.model.clone(),
+            "1.000".to_string(),
+            format!("{:.3}", r.sentinel_norm),
+            format!("{:.3}", r.ial_norm),
+        ]);
+    }
+    t
+}
+
+/// Table 4 from the same sweep (page migrations; we report per run of
+/// `RUN_STEPS` steps — the paper reports per epoch, a linear rescale).
+pub fn table4_migrations(rows: &[OverallRow]) -> Table {
+    let mut t = Table::new(vec!["model", "IAL", "Sentinel"]);
+    for r in rows {
+        t.row(vec![
+            r.model.clone(),
+            r.ial_migrations.to_string(),
+            r.sentinel_migrations.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Table 5 from the same sweep: reported peak memory with/without
+/// Sentinel (profiling inflation is what the paper measures).
+pub fn table5_peak_memory(model: Model) -> (u64, u64) {
+    let g = model.build(seed());
+    let without = Allocator::replay(AllocMode::Shared, &g).peak_pages * crate::PAGE_SIZE;
+    let with = Allocator::replay(AllocMode::OneObjectPerPage, &g).peak_pages * crate::PAGE_SIZE;
+    // Scale to reported level, as Table 5 prints RSS-level numbers.
+    (
+        Model::reported_peak(without),
+        Model::reported_peak(with.max(without)),
+    )
+}
+
+/// Fig. 11: ablation of the three techniques. Returns
+/// (model, full, no-false-sharing-handling, no-reservation, no-t&t)
+/// normalized to full Sentinel.
+pub fn fig11_ablation(models: &[Model], steps: u32) -> Vec<(String, f64, f64, f64)> {
+    models
+        .iter()
+        .map(|m| {
+            let g = m.build(seed());
+            let fast = m.peak_memory_target() / 5;
+            let (full, _, t) = run_sentinel(&g, fast, steps, SentinelConfig::default());
+            let base = full.throughput(t as usize);
+            let norm = |cfg: SentinelConfig| {
+                let (r, _, t) = run_sentinel(&g, fast, steps, cfg);
+                r.throughput(t as usize) / base
+            };
+            let fs = norm(SentinelConfig { handle_false_sharing: false, ..Default::default() });
+            let rs = norm(SentinelConfig { reserve_space: false, ..Default::default() });
+            let tt = norm(SentinelConfig { test_and_trial: false, ..Default::default() });
+            (m.name(), fs, rs, tt)
+        })
+        .collect()
+}
+
+/// Fig. 12: normalized throughput vs fast-memory size (percent of
+/// reported peak) for every model.
+pub fn fig12_sensitivity(pcts: &[u32], steps: u32) -> Vec<(String, Vec<(u32, f64)>)> {
+    Model::paper_five()
+        .into_iter()
+        .map(|m| {
+            let g = m.build(seed());
+            let f = run_fast_only(&g, 6);
+            let fthr = f.throughput(1);
+            let series = pcts
+                .iter()
+                .map(|&pct| {
+                    let fast = m.peak_memory_target() * pct as u64 / 100;
+                    let (r, _, t) = run_sentinel(&g, fast, steps, SentinelConfig::default());
+                    (pct, r.throughput(t as usize) / fthr)
+                })
+                .collect();
+            (m.name(), series)
+        })
+        .collect()
+}
+
+/// Fig. 13: for each ResNet_v1 variant, the reported peak memory and the
+/// minimum fast size at which Sentinel matches fast-only (within 2%).
+pub fn fig13_variants(steps: u32) -> Vec<(String, u64, u64)> {
+    Model::resnet_variants()
+        .into_iter()
+        .map(|m| {
+            let g = m.build(seed());
+            let f = run_fast_only(&g, 6);
+            let fthr = f.throughput(1);
+            let reported_peak = m.peak_memory_target();
+            let mut min_fast = reported_peak;
+            for pct in [10u64, 15, 20, 25, 30, 40, 50, 60] {
+                let fast = reported_peak * pct / 100;
+                let (r, _, t) = run_sentinel(&g, fast, steps, SentinelConfig::default());
+                if r.throughput(t as usize) >= 0.98 * fthr {
+                    min_fast = fast;
+                    break;
+                }
+            }
+            (m.name(), reported_peak, min_fast)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_reports_observation1() {
+        let (_, short_frac) = fig1_lifetime(Model::ResNetV1 { depth: 32 });
+        assert!(short_frac > 0.8);
+    }
+
+    #[test]
+    fn fig7_has_interior_sweet_spot() {
+        // 1 GB fast memory, as in the paper's Fig. 7.
+        let mis: Vec<u32> = (2..=14).step_by(2).collect();
+        let (rows, sp) = fig7_mi_sweep(1 << 30, &mis);
+        assert_eq!(rows.len(), mis.len());
+        assert!(sp > mis[0] || sp < *mis.last().unwrap(), "sweet spot {sp}");
+    }
+
+    #[test]
+    fn table5_with_sentinel_is_modest_increase() {
+        let (without, with) = table5_peak_memory(Model::ResNetV1 { depth: 32 });
+        assert!(with >= without);
+        // Paper: at most ~2.1% growth (profiling inflation is transient
+        // and small objects are a sliver of total bytes). Allow 30%.
+        assert!((with as f64) < 1.3 * without as f64, "{with} vs {without}");
+    }
+}

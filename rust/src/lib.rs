@@ -1,0 +1,60 @@
+//! # sentinel-hm
+//!
+//! A full-system reproduction of **Sentinel: Runtime Data Management on
+//! Heterogeneous Main Memory Systems for Deep Learning** (Ren et al., 2019)
+//! as a three-layer Rust + JAX + Pallas stack.
+//!
+//! Sentinel places and migrates DNN training data between a small *fast*
+//! memory tier and a large *slow* tier so that training runs at
+//! fast-memory-only speed with only ~20% of peak memory as fast memory.
+//! It does so with domain knowledge: one-step object-granularity
+//! profiling, page packing that eliminates page-level false sharing,
+//! reserved fast space for short-lived tensors, and an adaptive,
+//! layer-quantized migration interval tuned online.
+//!
+//! ## Layout
+//!
+//! * [`sim`] — discrete-event heterogeneous-memory machine model
+//!   (the paper's 2-socket NUMA testbed, Table 2).
+//! * [`mem`] — data objects, object→page allocators, short-lived pool.
+//! * [`profiler`] — one-training-step object-granularity profiling
+//!   (the paper's PTE-poisoning channel, §3.1).
+//! * [`dnn`] — layer-graph model zoo and trace generation (the paper's
+//!   five TensorFlow models, Table 3).
+//! * [`coordinator`] — the Sentinel runtime itself (§4).
+//! * [`baselines`] — IAL (Yan et al. ASPLOS'19), LRU, static placements.
+//! * [`runtime`] — PJRT execution of AOT-compiled JAX/Pallas artifacts.
+//! * [`metrics`] — counters and report tables for the paper's figures.
+
+pub mod baselines;
+pub mod coordinator;
+pub mod dnn;
+pub mod figures;
+pub mod mem;
+pub mod metrics;
+pub mod profiler;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+/// Page size used throughout (the paper's 4 KB OS page).
+pub const PAGE_SIZE: u64 = 4096;
+
+/// Round `bytes` up to whole pages.
+pub fn pages_for(bytes: u64) -> u64 {
+    bytes.div_ceil(PAGE_SIZE)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pages_for_rounds_up() {
+        assert_eq!(pages_for(0), 0);
+        assert_eq!(pages_for(1), 1);
+        assert_eq!(pages_for(4096), 1);
+        assert_eq!(pages_for(4097), 2);
+        assert_eq!(pages_for(8192), 2);
+    }
+}

@@ -1,0 +1,379 @@
+//! `sentinel` — the CLI leader for the Sentinel reproduction.
+//!
+//! ```text
+//! sentinel profile <model>                 # Figs 1-4 + Table 1 for a model
+//! sentinel train <model> [opts]            # one training run, any policy
+//! sentinel sweep-mi [--fast-mb N]          # Figs 7/8 (MI sweep)
+//! sentinel compare [--steps N]             # Fig 10 + Tables 4/5
+//! sentinel figure <id|all>                 # regenerate a paper figure/table
+//! sentinel e2e [--steps N] [--artifacts D] # real training via PJRT artifacts
+//! sentinel models                          # list model names
+//! ```
+//!
+//! Argument parsing is hand-rolled (`--key value` pairs) — no clap in the
+//! offline build environment.
+
+use std::collections::HashMap;
+use std::process::ExitCode;
+
+use sentinel_hm::coordinator::sentinel::{run_fast_only, run_sentinel, SentinelConfig};
+use sentinel_hm::dnn::zoo::{build_model, model_names, Model};
+use sentinel_hm::figures;
+use sentinel_hm::metrics::peak_memory_table;
+use sentinel_hm::runtime::{trainer::synthetic_batch, MlpTrainer, Runtime};
+use sentinel_hm::util::table::{fmt_bytes, Table};
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return ExitCode::FAILURE;
+    };
+    let opts = parse_opts(&args[1..]);
+    let result = match cmd.as_str() {
+        "profile" => cmd_profile(&args),
+        "train" => cmd_train(&args, &opts),
+        "sweep-mi" => cmd_sweep_mi(&opts),
+        "compare" => cmd_compare(&opts),
+        "figure" => cmd_figure(&args, &opts),
+        "e2e" => cmd_e2e(&opts),
+        "models" => {
+            println!("{}", model_names().join("\n"));
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => Err(format!("unknown command '{other}'")),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            print_usage();
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn print_usage() {
+    eprintln!(
+        "sentinel — runtime data management on heterogeneous memory (paper reproduction)\n\
+         \n\
+         USAGE:\n\
+           sentinel profile <model>\n\
+           sentinel train <model> [--policy sentinel|ial|lru|fast|slow] [--fast-pct 20] [--steps 14] [--mi K]\n\
+           sentinel sweep-mi [--fast-mb 1024]\n\
+           sentinel compare [--steps 14]\n\
+           sentinel figure <1|2|3|4|7|8|10|11|12|13|t1|t4|t5|all>\n\
+           sentinel e2e [--steps 300] [--artifacts artifacts] [--lr 0.05]\n\
+           sentinel models"
+    );
+}
+
+/// Parse `--key value` pairs (flags without values get "true").
+fn parse_opts(args: &[String]) -> HashMap<String, String> {
+    let mut opts = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            let value = args
+                .get(i + 1)
+                .filter(|v| !v.starts_with("--"))
+                .cloned()
+                .unwrap_or_else(|| "true".into());
+            let consumed = if value == "true" && args.get(i + 1).map(|v| v.starts_with("--")).unwrap_or(true) { 1 } else { 2 };
+            opts.insert(key.to_string(), value);
+            i += consumed;
+        } else {
+            i += 1;
+        }
+    }
+    opts
+}
+
+fn opt_u64(opts: &HashMap<String, String>, key: &str, default: u64) -> Result<u64, String> {
+    match opts.get(key) {
+        None => Ok(default),
+        Some(v) => v.parse().map_err(|_| format!("--{key} wants a number, got '{v}'")),
+    }
+}
+
+fn opt_f32(opts: &HashMap<String, String>, key: &str, default: f32) -> Result<f32, String> {
+    match opts.get(key) {
+        None => Ok(default),
+        Some(v) => v.parse().map_err(|_| format!("--{key} wants a number, got '{v}'")),
+    }
+}
+
+fn model_arg(args: &[String]) -> Result<(Model, String), String> {
+    let name = args.get(1).ok_or("missing <model> argument")?;
+    if build_model(name).is_none() {
+        return Err(format!("unknown model '{name}' (try: {})", model_names().join(", ")));
+    }
+    let model = match name.as_str() {
+        "resnet20" => Model::ResNetV1 { depth: 20 },
+        "resnet32" => Model::ResNetV1 { depth: 32 },
+        "resnet44" => Model::ResNetV1 { depth: 44 },
+        "resnet56" => Model::ResNetV1 { depth: 56 },
+        "resnet110" => Model::ResNetV1 { depth: 110 },
+        "resnet152" => Model::ResNetV2_152,
+        "lstm" => Model::Lstm,
+        "dcgan" => Model::Dcgan,
+        "mobilenet" => Model::MobileNet,
+        _ => unreachable!(),
+    };
+    Ok((model, name.clone()))
+}
+
+// ---------------------------------------------------------------------
+// Commands
+// ---------------------------------------------------------------------
+
+fn cmd_profile(args: &[String]) -> Result<(), String> {
+    let (model, _) = model_arg(args)?;
+    println!("== {} — one-step object-granularity profile (§3) ==\n", model.name());
+    let (t, short_frac) = figures::fig1_lifetime(model);
+    println!("Fig 1 — object lifetimes ({:.1}% short-lived):", short_frac * 100.0);
+    t.print();
+    println!("\nFig 2 — access-count distribution (all objects):");
+    figures::fig2_fig3_access(model, false).print();
+    println!("\nFig 3 — access-count distribution (objects < 4KB):");
+    figures::fig2_fig3_access(model, true).print();
+    let (t4, fs_pages) = figures::fig4_false_sharing(model);
+    println!("\nFig 4 — page-level false sharing ({fs_pages} mixed pages):");
+    t4.print();
+    println!("\nTable 1 — memory consumption:");
+    figures::table1_memory(model).print();
+    Ok(())
+}
+
+fn cmd_train(args: &[String], opts: &HashMap<String, String>) -> Result<(), String> {
+    let (model, _) = model_arg(args)?;
+    let steps = opt_u64(opts, "steps", 14)? as u32;
+    let fast_pct = opt_u64(opts, "fast-pct", 20)?;
+    let policy = opts.get("policy").map(String::as_str).unwrap_or("sentinel");
+    let g = model.build(0x5E17);
+    let fast = model.peak_memory_target() * fast_pct / 100;
+    println!(
+        "model={} policy={policy} fast={} ({}% of reported peak) steps={steps}",
+        model.name(),
+        fmt_bytes(fast),
+        fast_pct
+    );
+    let (result, skip) = match policy {
+        "sentinel" => {
+            let mut cfg = SentinelConfig::default();
+            if let Some(mi) = opts.get("mi") {
+                cfg.fixed_mi = Some(mi.parse().map_err(|_| "--mi wants a number")?);
+            }
+            let (r, cases, tuning) = run_sentinel(&g, fast, steps, cfg);
+            println!(
+                "cases: 1={} 2={} 3={} | tuning steps={tuning}",
+                cases.case1, cases.case2, cases.case3
+            );
+            (r, tuning as usize)
+        }
+        "ial" => (figures::run_ial(&g, fast, steps), 3),
+        "lru" => (figures::run_lru(&g, fast, steps), 3),
+        "fast" => (run_fast_only(&g, steps), 1),
+        "slow" => {
+            let trace = sentinel_hm::dnn::StepTrace::from_graph(&g);
+            let mut m = sentinel_hm::sim::Machine::new(sentinel_hm::sim::MachineSpec::slow_only());
+            let e = sentinel_hm::sim::Engine::new(sentinel_hm::sim::EngineConfig {
+                steps,
+                ..Default::default()
+            });
+            let r = e.run(&g, &trace, &mut m, &mut sentinel_hm::sim::engine::StaticPolicy {
+                tier: sentinel_hm::sim::Tier::Slow,
+            });
+            (r, 1)
+        }
+        other => return Err(format!("unknown policy '{other}'")),
+    };
+    println!(
+        "throughput: {:.3} steps/s | migrations: {} pages (in {} / out {}) | peak fast: {}",
+        result.throughput(skip),
+        result.total_migrations(),
+        result.pages_migrated_in,
+        result.pages_migrated_out,
+        fmt_bytes(result.peak_fast_bytes),
+    );
+    Ok(())
+}
+
+fn cmd_sweep_mi(opts: &HashMap<String, String>) -> Result<(), String> {
+    let fast = opt_u64(opts, "fast-mb", 1024)? << 20;
+    let mis: Vec<u32> = (1..=16).collect();
+    println!("== Fig 7 — throughput vs migration interval (ResNet_v1-32, fast={}) ==", fmt_bytes(fast));
+    let (rows, sp) = figures::fig7_mi_sweep(fast, &mis);
+    let mut t = Table::new(vec!["MI", "steps/s", ""]);
+    for (mi, thr) in &rows {
+        t.row(vec![
+            mi.to_string(),
+            format!("{thr:.3}"),
+            if *mi == sp { "<- sweet spot (SP)".into() } else { String::new() },
+        ]);
+    }
+    t.print();
+    println!("\n== Fig 8 — migration cases per training step ==");
+    let mut t = Table::new(vec!["MI", "case1", "case2", "case3"]);
+    for (mi, c1, c2, c3) in figures::fig8_cases(fast, &mis) {
+        t.row(vec![mi.to_string(), c1.to_string(), c2.to_string(), c3.to_string()]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_compare(opts: &HashMap<String, String>) -> Result<(), String> {
+    let steps = opt_u64(opts, "steps", figures::RUN_STEPS as u64)? as u32;
+    println!("== Fig 10 — Sentinel vs IAL vs fast-only (fast = 20% of peak) ==");
+    let rows = figures::fig10_overall(steps);
+    figures::fig10_table(&rows).print();
+    println!("\n== Table 4 — page migrations per {steps}-step run ==");
+    figures::table4_migrations(&rows).print();
+    println!("\n== Table 5 — peak memory with and without Sentinel ==");
+    let t5: Vec<(String, u64, u64)> = Model::paper_five()
+        .into_iter()
+        .map(|m| {
+            let (w, wo) = figures::table5_peak_memory(m);
+            (m.name(), w, wo)
+        })
+        .collect();
+    peak_memory_table(&t5).print();
+    Ok(())
+}
+
+fn cmd_figure(args: &[String], opts: &HashMap<String, String>) -> Result<(), String> {
+    let id = args.get(1).ok_or("missing figure id")?.clone();
+    let steps = opt_u64(opts, "steps", figures::RUN_STEPS as u64)? as u32;
+    let rn32 = Model::ResNetV1 { depth: 32 };
+    let run = |id: &str| -> Result<(), String> {
+        match id {
+            "1" => {
+                let (t, frac) = figures::fig1_lifetime(rn32);
+                println!("Fig 1 — lifetimes ({:.1}% short-lived):", frac * 100.0);
+                t.print();
+            }
+            "2" => figures::fig2_fig3_access(rn32, false).print(),
+            "3" => figures::fig2_fig3_access(rn32, true).print(),
+            "4" => figures::fig4_false_sharing(rn32).0.print(),
+            "t1" => figures::table1_memory(rn32).print(),
+            "7" | "8" => {
+                let mut o = opts.clone();
+                o.entry("fast-mb".into()).or_insert("1024".into());
+                cmd_sweep_mi(&o)?;
+            }
+            "10" | "t4" => {
+                let rows = figures::fig10_overall(steps);
+                if id == "10" {
+                    figures::fig10_table(&rows).print();
+                } else {
+                    figures::table4_migrations(&rows).print();
+                }
+            }
+            "t5" => {
+                let t5: Vec<(String, u64, u64)> = Model::paper_five()
+                    .into_iter()
+                    .map(|m| {
+                        let (w, wo) = figures::table5_peak_memory(m);
+                        (m.name(), w, wo)
+                    })
+                    .collect();
+                peak_memory_table(&t5).print();
+            }
+            "11" => {
+                println!("Fig 11 — ablation (normalized to full Sentinel):");
+                let models = [rn32, Model::ResNetV2_152, Model::MobileNet];
+                let mut t = Table::new(vec![
+                    "model",
+                    "having false sharing",
+                    "no space reservation",
+                    "no t&t",
+                ]);
+                for (m, fs, rs, tt) in figures::fig11_ablation(&models, steps) {
+                    t.row(vec![
+                        m,
+                        format!("{fs:.3}"),
+                        format!("{rs:.3}"),
+                        format!("{tt:.3}"),
+                    ]);
+                }
+                t.print();
+            }
+            "12" => {
+                println!("Fig 12 — sensitivity to fast-memory size (normalized):");
+                let pcts = [10u32, 20, 30, 40, 60];
+                let mut t = Table::new(vec!["model", "10%", "20%", "30%", "40%", "60%"]);
+                for (m, series) in figures::fig12_sensitivity(&pcts, steps) {
+                    let mut row = vec![m];
+                    for (_, v) in series {
+                        row.push(format!("{v:.3}"));
+                    }
+                    t.row(row);
+                }
+                t.print();
+            }
+            "13" => {
+                println!("Fig 13 — peak memory vs min fast size (ResNet variants):");
+                let mut t = Table::new(vec!["model", "peak memory", "min fast size", "saving"]);
+                for (m, peak, fast) in figures::fig13_variants(steps) {
+                    t.row(vec![
+                        m,
+                        fmt_bytes(peak),
+                        fmt_bytes(fast),
+                        format!("{:.0}%", 100.0 * (1.0 - fast as f64 / peak as f64)),
+                    ]);
+                }
+                t.print();
+            }
+            other => return Err(format!("unknown figure '{other}'")),
+        }
+        Ok(())
+    };
+    if id == "all" {
+        for fid in ["1", "2", "3", "4", "t1", "7", "10", "t4", "t5", "11", "12", "13"] {
+            println!("\n───────────────────────── figure {fid} ─────────────────────────");
+            run(fid)?;
+        }
+        Ok(())
+    } else {
+        run(&id)
+    }
+}
+
+fn cmd_e2e(opts: &HashMap<String, String>) -> Result<(), String> {
+    let steps = opt_u64(opts, "steps", 300)? as u32;
+    let lr = opt_f32(opts, "lr", 0.05)?;
+    let dir = opts
+        .get("artifacts")
+        .cloned()
+        .unwrap_or_else(|| "artifacts".into());
+    let rt = Runtime::load(&dir).map_err(|e| format!("{e:#}"))?;
+    let m = rt.manifest.clone();
+    println!(
+        "e2e: {}-layer MLP ({} params) batch={} on PJRT/{}",
+        m.layers,
+        m.param_count(),
+        m.batch,
+        rt.platform()
+    );
+    let mut trainer = MlpTrainer::new(&rt, 42).map_err(|e| format!("{e:#}"))?;
+    let t0 = std::time::Instant::now();
+    for step in 0..steps {
+        let (x, y) = synthetic_batch(&m, step as u64 % 64).map_err(|e| format!("{e:#}"))?;
+        let (loss, timing) = trainer.train_step(&x, &y, lr).map_err(|e| format!("{e:#}"))?;
+        if step % 10 == 0 || step + 1 == steps {
+            println!(
+                "step {step:4}  loss {loss:.4}  (fwd {:.1}ms bwd {:.1}ms opt {:.1}ms)",
+                timing.fwd_ns as f64 / 1e6,
+                timing.bwd_ns as f64 / 1e6,
+                timing.opt_ns as f64 / 1e6,
+            );
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!("{} steps in {:.1}s = {:.2} steps/s", steps, dt, steps as f64 / dt);
+    Ok(())
+}

@@ -1,0 +1,413 @@
+//! Object→page allocation disciplines.
+//!
+//! The paper's §3/§4.2 insight is that *who shares a page with whom*
+//! decides whether page-granularity management can work at all:
+//!
+//! * [`AllocMode::Shared`] — the unmodified TensorFlow-style allocator:
+//!   objects are packed into pages in allocation order, so cold small
+//!   objects land next to hot ones (*page-level false sharing*,
+//!   Observation 3) and page-level access counts mislead migration.
+//! * [`AllocMode::OneObjectPerPage`] — the profiling-step discipline:
+//!   every object gets whole pages, so page counts equal object counts
+//!   (at a memory-footprint cost — Table 1).
+//! * [`AllocMode::Grouped`] — Sentinel's reorganized allocation: objects
+//!   with the same layer *bit string* are packed together, sorted by
+//!   access count, so pages are hotness- and lifetime-homogeneous.
+//!
+//! The allocator here is a *placement simulator*: it replays the step's
+//! allocation/free sequence and reports page-level statistics; the
+//! residency/capacity side lives in [`crate::sim::Machine`].
+
+use std::collections::HashMap;
+
+use crate::dnn::ModelGraph;
+use crate::mem::object::{DataObject, ObjectId};
+use crate::PAGE_SIZE;
+
+/// Allocation discipline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AllocMode {
+    /// Pack objects into pages in allocation order (TF default).
+    Shared,
+    /// One object per page (profiling step, §3.1).
+    OneObjectPerPage,
+    /// Pack by (bit string, access count) groups (Sentinel, §4.2).
+    Grouped,
+}
+
+/// Statistics of one simulated allocation replay.
+#[derive(Clone, Debug, Default)]
+pub struct PageStats {
+    /// Peak pages in use at any point of the step.
+    pub peak_pages: u64,
+    /// Peak bytes actually requested by live objects at any point.
+    pub peak_live_bytes: u64,
+    /// Total pages ever allocated (page-slots created).
+    pub total_pages: u64,
+    /// For each *shared* page: total accesses by all objects that ever
+    /// resided on it during the step.
+    pub page_access_counts: Vec<u64>,
+    /// Whole-page (exclusive) allocations, coalesced as spans:
+    /// `(per-page access count, pages)` — §Perf: storing one span per
+    /// object instead of one record per 4 KB page makes replay O(objects)
+    /// instead of O(bytes/4K).
+    pub exclusive_spans: Vec<(u64, u64)>,
+    /// For each page: bytes of the most access-heterogeneous pair — used
+    /// to quantify false sharing. Specifically, number of pages holding
+    /// both a <10-access object and a ≥10-access object.
+    pub false_shared_pages: u64,
+    /// Pages occupied by small objects only.
+    pub small_object_pages: u64,
+    /// Cold bytes riding on false-shared pages: if such a page migrates
+    /// because of its hot residents, this many bytes of migration
+    /// bandwidth are wasted on data that didn't need to move. Drives the
+    /// bandwidth derating of the "Having false sharing" ablation.
+    pub false_shared_waste_bytes: u64,
+}
+
+impl PageStats {
+    /// Bucket pages by access count using the paper's Fig. 2/4 buckets.
+    /// Returns (bucket label, page count, bytes).
+    pub fn pages_by_access_bucket(&self) -> Vec<(&'static str, u64, u64)> {
+        let mut buckets = vec![("0", 0u64, 0u64), ("1-10", 0, 0), ("10-100", 0, 0), (">100", 0, 0)];
+        let bucket_of = |c: u64| match c {
+            0 => 0usize,
+            1..=9 => 1,
+            10..=99 => 2,
+            _ => 3,
+        };
+        for &c in &self.page_access_counts {
+            let idx = bucket_of(c);
+            buckets[idx].1 += 1;
+            buckets[idx].2 += PAGE_SIZE;
+        }
+        for &(c, pages) in &self.exclusive_spans {
+            let idx = bucket_of(c);
+            buckets[idx].1 += pages;
+            buckets[idx].2 += pages * PAGE_SIZE;
+        }
+        buckets
+    }
+}
+
+#[derive(Clone, Debug)]
+struct Page {
+    free_bytes: u64,
+    /// (object, accesses, small) ever placed on this page.
+    residents: Vec<(ObjectId, u64, bool)>,
+}
+
+/// One whole-page allocation (object ≥ 4 KB or one-object-per-page
+/// mode), coalesced: one record regardless of page count.
+#[derive(Clone, Copy, Debug)]
+struct Span {
+    pages: u64,
+    accesses: u64,
+}
+
+#[derive(Clone, Debug)]
+enum Placement {
+    /// Index into the exclusive span list.
+    Span(usize),
+    /// (shared page index, bytes) placements.
+    Shared(Vec<(usize, u64)>),
+}
+
+/// Replay a step's allocations under `mode` and report page statistics.
+///
+/// The replay walks layers in order: allocate objects born in the layer,
+/// free objects dying at its end. First-fit reuse over partially-free
+/// pages models the BFC-style allocator's recycling.
+pub struct Allocator {
+    mode: AllocMode,
+    pages: Vec<Page>,
+    /// Indices of pages with any free space (first-fit candidates),
+    /// keyed by group for `Grouped` mode (group 0 for other modes).
+    open: HashMap<u64, Vec<usize>>,
+    /// obj -> where it went.
+    placement: HashMap<ObjectId, Placement>,
+    /// Exclusive whole-page spans (alive and dead; stats keep history).
+    spans: Vec<Span>,
+    live_bytes: u64,
+    live_pages: u64,
+    stats: PageStats,
+}
+
+impl Allocator {
+    pub fn new(mode: AllocMode) -> Self {
+        Allocator {
+            mode,
+            pages: Vec::new(),
+            open: HashMap::new(),
+            placement: HashMap::new(),
+            spans: Vec::new(),
+            live_bytes: 0,
+            live_pages: 0,
+            stats: PageStats::default(),
+        }
+    }
+
+    fn group_of(&self, obj: &DataObject, n_layers: u32) -> u64 {
+        match self.mode {
+            AllocMode::Grouped => {
+                // §4.2: same bit string → same group; within a group,
+                // order by access count (coarse bands keep page
+                // populations homogeneous in hotness).
+                let hot_band = match obj.total_accesses() {
+                    0..=9 => 0u64,
+                    10..=99 => 1,
+                    _ => 2,
+                };
+                obj.bit_string(n_layers).wrapping_mul(4) + hot_band
+            }
+            _ => 0,
+        }
+    }
+
+    fn new_page(&mut self) -> usize {
+        let idx = self.pages.len();
+        self.pages.push(Page { free_bytes: PAGE_SIZE, residents: Vec::new() });
+        self.stats.total_pages += 1;
+        idx
+    }
+
+    /// Place one object; returns number of *new* pages created.
+    pub fn alloc(&mut self, obj: &DataObject, n_layers: u32) {
+        let accesses = obj.total_accesses();
+        let small = obj.is_small();
+        let remaining = obj.size_bytes.max(1);
+
+        if self.mode == AllocMode::OneObjectPerPage || remaining >= PAGE_SIZE {
+            // Whole pages; no sharing. One span regardless of page count
+            // (§Perf: O(1) per object instead of O(pages)).
+            let n = remaining.div_ceil(PAGE_SIZE);
+            self.spans.push(Span { pages: n, accesses });
+            self.placement.insert(obj.id, Placement::Span(self.spans.len() - 1));
+            self.stats.total_pages += n;
+            self.live_pages += n;
+            if small {
+                // Only possible in one-object-per-page mode.
+                self.stats.small_object_pages += n;
+            }
+            self.live_bytes += obj.size_bytes;
+            self.stats.peak_live_bytes = self.stats.peak_live_bytes.max(self.live_bytes);
+            self.stats.peak_pages = self.stats.peak_pages.max(self.live_pages);
+            return;
+        }
+        let mut placements = Vec::new();
+        {
+            // Sub-page object: share within its group.
+            let group = self.group_of(obj, n_layers);
+            let open = self.open.entry(group).or_default();
+            // First-fit over the open list.
+            let mut chosen = None;
+            for (i, &p) in open.iter().enumerate() {
+                if self.pages[p].free_bytes >= remaining {
+                    chosen = Some((i, p));
+                    break;
+                }
+            }
+            let p = match chosen {
+                Some((_, p)) => p,
+                None => {
+                    let p = self.new_page();
+                    self.live_pages += 1;
+                    self.open.entry(group).or_default().push(p);
+                    p
+                }
+            };
+            self.pages[p].free_bytes -= remaining;
+            self.pages[p].residents.push((obj.id, accesses, small));
+            placements.push((p, remaining));
+            // Drop full pages from the open list lazily.
+            let open = self.open.entry(group).or_default();
+            open.retain(|&q| self.pages[q].free_bytes >= 64);
+        }
+
+        self.live_bytes += obj.size_bytes;
+        self.stats.peak_live_bytes = self.stats.peak_live_bytes.max(self.live_bytes);
+        self.stats.peak_pages = self.stats.peak_pages.max(self.live_pages);
+        self.placement.insert(obj.id, Placement::Shared(placements));
+    }
+
+    /// Free an object (page space is recycled; resident history is kept
+    /// for the access statistics).
+    pub fn free(&mut self, obj: &DataObject) {
+        match self.placement.remove(&obj.id) {
+            Some(Placement::Span(idx)) => {
+                self.live_pages -= self.spans[idx].pages;
+                self.live_bytes -= obj.size_bytes;
+            }
+            Some(Placement::Shared(places)) => {
+                for (p, bytes) in places {
+                    self.pages[p].free_bytes = (self.pages[p].free_bytes + bytes).min(PAGE_SIZE);
+                    if self.pages[p].free_bytes == PAGE_SIZE {
+                        self.live_pages = self.live_pages.saturating_sub(1);
+                    }
+                }
+                self.live_bytes -= obj.size_bytes;
+            }
+            None => {}
+        }
+    }
+
+    /// Replay a whole graph and return the final statistics.
+    pub fn replay(mode: AllocMode, g: &ModelGraph) -> PageStats {
+        let mut a = Allocator::new(mode);
+        let n = g.n_layers();
+        // Persistent objects first (they exist before the step).
+        for o in g.objects.iter().filter(|o| o.persistent) {
+            a.alloc(o, n);
+        }
+        for layer in 0..n {
+            for o in g.objects.iter().filter(|o| !o.persistent && o.alloc_layer == layer) {
+                a.alloc(o, n);
+            }
+            for o in g.objects.iter().filter(|o| !o.persistent && o.free_layer == layer) {
+                a.free(o);
+            }
+        }
+        a.finish()
+    }
+
+    /// Finalize: compute per-page aggregates.
+    pub fn finish(mut self) -> PageStats {
+        self.stats.page_access_counts = self
+            .pages
+            .iter()
+            .map(|p| p.residents.iter().map(|&(_, a, _)| a).sum())
+            .collect();
+        self.stats.exclusive_spans = self
+            .spans
+            .iter()
+            .map(|s| (s.accesses, s.pages))
+            .collect();
+        let mut false_shared = 0u64;
+        let mut waste = 0u64;
+        for p in &self.pages {
+            let cold = p.residents.iter().any(|&(_, a, _)| a < 10);
+            let hot = p.residents.iter().any(|&(_, a, _)| a >= 10);
+            if cold && hot {
+                false_shared += 1;
+                // All of a mixed page moves when its hot residents do;
+                // estimate the cold share as proportional to cold
+                // resident count (object sizes within a shared page are
+                // commensurate).
+                let n_cold = p.residents.iter().filter(|&&(_, a, _)| a < 10).count() as u64;
+                let n_tot = p.residents.len() as u64;
+                waste += PAGE_SIZE * n_cold / n_tot.max(1);
+            }
+        }
+        self.stats.false_shared_pages = false_shared;
+        self.stats.false_shared_waste_bytes = waste;
+        self.stats.small_object_pages += self
+            .pages
+            .iter()
+            .filter(|p| !p.residents.is_empty() && p.residents.iter().all(|&(_, _, s)| s))
+            .count() as u64;
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::zoo::Model;
+
+    fn obj(id: u32, size: u64, accesses: u32) -> DataObject {
+        DataObject {
+            id: ObjectId(id),
+            size_bytes: size,
+            alloc_layer: 0,
+            free_layer: 0,
+            accesses: vec![accesses],
+            persistent: false,
+        }
+    }
+
+    #[test]
+    fn one_object_per_page_never_shares() {
+        let mut a = Allocator::new(AllocMode::OneObjectPerPage);
+        a.alloc(&obj(0, 100, 1), 4);
+        a.alloc(&obj(1, 100, 50), 4);
+        let s = a.finish();
+        assert_eq!(s.total_pages, 2);
+        assert_eq!(s.false_shared_pages, 0);
+    }
+
+    #[test]
+    fn shared_mode_packs_small_objects() {
+        let mut a = Allocator::new(AllocMode::Shared);
+        a.alloc(&obj(0, 1000, 1), 4);
+        a.alloc(&obj(1, 1000, 50), 4);
+        let s = a.finish();
+        assert_eq!(s.total_pages, 1, "two 1 KB objects fit one page");
+        assert_eq!(s.false_shared_pages, 1, "cold+hot on one page");
+    }
+
+    #[test]
+    fn grouped_mode_separates_hotness() {
+        let mut a = Allocator::new(AllocMode::Grouped);
+        a.alloc(&obj(0, 1000, 1), 4);
+        a.alloc(&obj(1, 1000, 50), 4);
+        let s = a.finish();
+        assert_eq!(s.total_pages, 2, "different hot bands → different pages");
+        assert_eq!(s.false_shared_pages, 0);
+    }
+
+    #[test]
+    fn large_objects_get_whole_pages_in_all_modes() {
+        for mode in [AllocMode::Shared, AllocMode::Grouped, AllocMode::OneObjectPerPage] {
+            let mut a = Allocator::new(mode);
+            a.alloc(&obj(0, 10_000, 5), 4);
+            let s = a.finish();
+            assert_eq!(s.total_pages, 3, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn free_recycles_page_space() {
+        let mut a = Allocator::new(AllocMode::Shared);
+        let o0 = obj(0, 3000, 1);
+        a.alloc(&o0, 4);
+        a.free(&o0);
+        a.alloc(&obj(1, 3000, 2), 4);
+        let s = a.finish();
+        // Second allocation reuses the recycled space.
+        assert_eq!(s.total_pages, 1);
+        assert_eq!(s.peak_pages, 1);
+    }
+
+    #[test]
+    fn table1_shape_profiling_blows_up_small_objects() {
+        // Table 1: one-object-per-page inflates small-object footprint by
+        // orders of magnitude (0.45 MB → 152 MB in the paper) while total
+        // consumption grows only modestly.
+        let g = (Model::ResNetV1 { depth: 32 }).build(1);
+        let shared = Allocator::replay(AllocMode::Shared, &g);
+        let prof = Allocator::replay(AllocMode::OneObjectPerPage, &g);
+        let shared_small = shared.small_object_pages * PAGE_SIZE;
+        let prof_small = prof.small_object_pages * PAGE_SIZE;
+        assert!(
+            prof_small > 20 * shared_small.max(1),
+            "profiling small-object footprint {prof_small} vs shared {shared_small}"
+        );
+        // Whole-footprint growth stays bounded (paper: ~25%).
+        let growth = prof.peak_pages as f64 / shared.peak_pages as f64;
+        assert!(growth < 1.6, "total footprint growth {growth}");
+    }
+
+    #[test]
+    fn fig4_false_sharing_exists_under_shared_mode() {
+        let g = (Model::ResNetV1 { depth: 32 }).build(1);
+        let shared = Allocator::replay(AllocMode::Shared, &g);
+        let grouped = Allocator::replay(AllocMode::Grouped, &g);
+        assert!(shared.false_shared_pages > 0, "Observation 3");
+        assert!(
+            grouped.false_shared_pages * 4 < shared.false_shared_pages,
+            "grouping must eliminate most false sharing: {} vs {}",
+            grouped.false_shared_pages,
+            shared.false_shared_pages
+        );
+    }
+}

@@ -1,0 +1,22 @@
+//! Data objects (tensors) and object→page memory allocation.
+//!
+//! The paper's key mechanism is *controlling memory allocation* so that
+//! profiling and migration happen at data-object granularity instead of
+//! page granularity (§3.1, §4.2). This module provides:
+//!
+//! * [`object`] — object metadata: size, lifetime in layers, access
+//!   schedule, and the layer *bit string* used for grouping;
+//! * [`allocator`] — three allocation disciplines: the default TF-style
+//!   shared-page allocator (exhibits page-level false sharing), the
+//!   profiling allocator (one object per page, Table 1), and the
+//!   reorganized allocator (bit-string grouped packing, §4.2);
+//! * [`pool`] — the preallocated memory pool that serves short-lived
+//!   objects from reserved fast-memory space (§4.3).
+
+pub mod allocator;
+pub mod object;
+pub mod pool;
+
+pub use allocator::{AllocMode, Allocator, PageStats};
+pub use object::{DataObject, ObjectId};
+pub use pool::ShortLivedPool;

@@ -1,0 +1,200 @@
+//! Data-object (tensor) metadata.
+//!
+//! A *data object* is the application-level unit of allocation — in the
+//! paper's language, a TensorFlow tensor. Objects carry everything the
+//! profiler measures in §3: size, lifetime expressed in layers, and the
+//! number of main-memory accesses per layer of life.
+
+/// Dense object identifier, unique within one model's training step.
+///
+/// Because DNN training repeats the same computation graph every step
+/// (§2.1), the same id refers to "the same tensor" in every step — this is
+/// exactly the repeatability Sentinel exploits to profile once and act on
+/// all subsequent steps.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ObjectId(pub u32);
+
+impl ObjectId {
+    #[inline]
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl std::fmt::Display for ObjectId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "obj#{}", self.0)
+    }
+}
+
+/// Static description of one data object in the training-step graph.
+#[derive(Clone, Debug)]
+pub struct DataObject {
+    pub id: ObjectId,
+    /// Payload size in bytes (NOT page-rounded).
+    pub size_bytes: u64,
+    /// Layer index at which the object is allocated.
+    pub alloc_layer: u32,
+    /// Layer index *after* which the object is freed (inclusive of
+    /// accesses in this layer). `free_layer >= alloc_layer`.
+    pub free_layer: u32,
+    /// Per-layer main-memory access counts over `[alloc_layer ..= free_layer]`.
+    /// `accesses[i]` is the count in layer `alloc_layer + i`.
+    pub accesses: Vec<u32>,
+    /// True for parameter/optimizer state that survives across steps
+    /// (weights, momentum) — these are never freed within a step.
+    pub persistent: bool,
+}
+
+impl DataObject {
+    /// Lifetime in layers (1 = allocated and freed within one layer).
+    pub fn lifetime_layers(&self) -> u32 {
+        self.free_layer - self.alloc_layer + 1
+    }
+
+    /// The paper's short-lived classification: "lifetime no longer than
+    /// one layer" (§3.2, Observation 1).
+    pub fn is_short_lived(&self) -> bool {
+        !self.persistent && self.lifetime_layers() <= 1
+    }
+
+    /// Smaller than one 4 KB OS page (the paper's "small object").
+    pub fn is_small(&self) -> bool {
+        self.size_bytes < crate::PAGE_SIZE
+    }
+
+    /// Total main-memory accesses over the whole lifetime.
+    pub fn total_accesses(&self) -> u64 {
+        self.accesses.iter().map(|&a| a as u64).sum()
+    }
+
+    /// Number of 4 KB pages the object occupies when given whole pages.
+    pub fn pages(&self) -> u64 {
+        crate::pages_for(self.size_bytes).max(1)
+    }
+
+    /// Accesses in an absolute layer, 0 if not alive there.
+    pub fn accesses_in_layer(&self, layer: u32) -> u32 {
+        if layer < self.alloc_layer || layer > self.free_layer {
+            return 0;
+        }
+        self.accesses
+            .get((layer - self.alloc_layer) as usize)
+            .copied()
+            .unwrap_or(0)
+    }
+
+    /// Is the object alive in (allocated at or before, freed after) `layer`?
+    pub fn alive_in_layer(&self, layer: u32) -> bool {
+        layer >= self.alloc_layer && layer <= self.free_layer
+    }
+
+    /// The paper's §4.2 *bit string*: which layers of a window of
+    /// `n_layers` the object is accessed in. Objects with identical bit
+    /// strings are packed into the same pages. For graphs with more than
+    /// 64 layers the bit string folds (wraps) — grouping remains
+    /// deterministic which is all packing requires.
+    pub fn bit_string(&self, n_layers: u32) -> u64 {
+        let mut bits = 0u64;
+        for (i, &a) in self.accesses.iter().enumerate() {
+            if a > 0 {
+                let layer = self.alloc_layer + i as u32;
+                bits |= 1u64 << (layer % n_layers.min(64)).min(63);
+            }
+        }
+        bits
+    }
+
+    /// Last absolute layer in which the object is actually accessed
+    /// (falls back to `alloc_layer` for objects never accessed).
+    pub fn last_access_layer(&self) -> u32 {
+        self.accesses
+            .iter()
+            .rposition(|&a| a > 0)
+            .map(|i| self.alloc_layer + i as u32)
+            .unwrap_or(self.alloc_layer)
+    }
+
+    /// First absolute layer in which the object is accessed.
+    pub fn first_access_layer(&self) -> u32 {
+        self.accesses
+            .iter()
+            .position(|&a| a > 0)
+            .map(|i| self.alloc_layer + i as u32)
+            .unwrap_or(self.alloc_layer)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obj(size: u64, alloc: u32, free: u32, acc: Vec<u32>) -> DataObject {
+        DataObject {
+            id: ObjectId(0),
+            size_bytes: size,
+            alloc_layer: alloc,
+            free_layer: free,
+            accesses: acc,
+            persistent: false,
+        }
+    }
+
+    #[test]
+    fn lifetime_classification() {
+        let short = obj(100, 3, 3, vec![4]);
+        assert!(short.is_short_lived());
+        assert_eq!(short.lifetime_layers(), 1);
+        let long = obj(100, 3, 5, vec![4, 0, 2]);
+        assert!(!long.is_short_lived());
+        assert_eq!(long.lifetime_layers(), 3);
+    }
+
+    #[test]
+    fn persistent_objects_are_never_short_lived() {
+        let mut o = obj(100, 0, 0, vec![1]);
+        o.persistent = true;
+        assert!(!o.is_short_lived());
+    }
+
+    #[test]
+    fn small_threshold_is_one_page() {
+        assert!(obj(4095, 0, 0, vec![1]).is_small());
+        assert!(!obj(4096, 0, 0, vec![1]).is_small());
+    }
+
+    #[test]
+    fn page_count_rounds_up_and_is_at_least_one() {
+        assert_eq!(obj(0, 0, 0, vec![]).pages(), 1);
+        assert_eq!(obj(1, 0, 0, vec![]).pages(), 1);
+        assert_eq!(obj(8192, 0, 0, vec![]).pages(), 2);
+        assert_eq!(obj(8193, 0, 0, vec![]).pages(), 3);
+    }
+
+    #[test]
+    fn access_lookup_by_absolute_layer() {
+        let o = obj(100, 2, 4, vec![5, 0, 7]);
+        assert_eq!(o.accesses_in_layer(1), 0);
+        assert_eq!(o.accesses_in_layer(2), 5);
+        assert_eq!(o.accesses_in_layer(3), 0);
+        assert_eq!(o.accesses_in_layer(4), 7);
+        assert_eq!(o.accesses_in_layer(5), 0);
+        assert_eq!(o.total_accesses(), 12);
+    }
+
+    #[test]
+    fn first_last_access_layers() {
+        let o = obj(100, 2, 6, vec![0, 3, 0, 9, 0]);
+        assert_eq!(o.first_access_layer(), 3);
+        assert_eq!(o.last_access_layer(), 5);
+    }
+
+    #[test]
+    fn bit_string_groups_same_pattern() {
+        let a = obj(100, 2, 2, vec![3]);
+        let b = obj(200, 2, 2, vec![9]);
+        let c = obj(200, 3, 3, vec![9]);
+        assert_eq!(a.bit_string(64), b.bit_string(64));
+        assert_ne!(a.bit_string(64), c.bit_string(64));
+    }
+}

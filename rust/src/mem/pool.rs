@@ -1,0 +1,164 @@
+//! The reserved fast-memory pool for short-lived data objects (§4.3).
+//!
+//! Sentinel allocates a contiguous region of fast memory per migration
+//! interval, sized to the peak short-lived footprint of that interval.
+//! Short-lived objects are served from the pool and never migrate; the
+//! pool shrinks mid-interval as its pages free, releasing space to
+//! long-lived prefetches.
+//!
+//! This type does the *capacity bookkeeping* of that scheme: reserve,
+//! serve, release, shrink. The actual placement effect (objects in the
+//! pool are always fast-resident) is enforced by the Sentinel policy
+//! choosing `Tier::Fast` and never queueing migrations for pool objects.
+
+use std::collections::HashMap;
+
+use crate::mem::object::ObjectId;
+
+/// Bookkeeping for the reserved short-lived region.
+#[derive(Clone, Debug, Default)]
+pub struct ShortLivedPool {
+    /// Bytes reserved for the current migration interval.
+    reserved_bytes: u64,
+    /// Bytes currently handed out to live short-lived objects.
+    in_use_bytes: u64,
+    /// High-water mark of `in_use_bytes` within the current interval.
+    interval_peak_bytes: u64,
+    /// Live allocations.
+    live: HashMap<ObjectId, u64>,
+    /// Whether mid-interval shrinking is enabled (§4.3: "the space is
+    /// dynamically shrunk ... when a memory page in the space is freed").
+    pub shrink_enabled: bool,
+}
+
+impl ShortLivedPool {
+    pub fn new(shrink_enabled: bool) -> Self {
+        ShortLivedPool {
+            shrink_enabled,
+            ..Default::default()
+        }
+    }
+
+    /// Begin a migration interval with `reserve_bytes` of fast memory
+    /// set aside for short-lived objects.
+    pub fn begin_interval(&mut self, reserve_bytes: u64) {
+        self.reserved_bytes = reserve_bytes.max(self.in_use_bytes);
+        self.interval_peak_bytes = self.in_use_bytes;
+    }
+
+    /// Serve a short-lived allocation. Returns `true` if it fits in the
+    /// reservation (always placed in fast memory), `false` if the pool is
+    /// exhausted and the object must fall back to the general allocator.
+    pub fn serve(&mut self, obj: ObjectId, bytes: u64) -> bool {
+        if self.in_use_bytes + bytes > self.reserved_bytes {
+            return false;
+        }
+        self.in_use_bytes += bytes;
+        self.interval_peak_bytes = self.interval_peak_bytes.max(self.in_use_bytes);
+        self.live.insert(obj, bytes);
+        true
+    }
+
+    /// Release a short-lived object. With shrinking enabled the freed
+    /// space immediately leaves the reservation (becoming available to
+    /// long-lived prefetch); otherwise it stays reserved until the next
+    /// interval boundary.
+    pub fn release(&mut self, obj: ObjectId) -> bool {
+        match self.live.remove(&obj) {
+            Some(bytes) => {
+                self.in_use_bytes -= bytes;
+                if self.shrink_enabled {
+                    self.reserved_bytes -= bytes;
+                }
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Bytes currently reserved (counted against fast capacity).
+    pub fn reserved_bytes(&self) -> u64 {
+        self.reserved_bytes
+    }
+
+    /// Bytes in use by live short-lived objects.
+    pub fn in_use_bytes(&self) -> u64 {
+        self.in_use_bytes
+    }
+
+    /// Peak usage observed in the current interval (used to size the next
+    /// run's reservation from profiling).
+    pub fn interval_peak_bytes(&self) -> u64 {
+        self.interval_peak_bytes
+    }
+
+    /// Is the object currently served by the pool?
+    pub fn contains(&self, obj: ObjectId) -> bool {
+        self.live.contains_key(&obj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serve_and_release_roundtrip() {
+        let mut p = ShortLivedPool::new(false);
+        p.begin_interval(1000);
+        assert!(p.serve(ObjectId(1), 600));
+        assert!(p.contains(ObjectId(1)));
+        assert!(!p.serve(ObjectId(2), 600), "pool exhausted");
+        assert!(p.release(ObjectId(1)));
+        assert!(!p.contains(ObjectId(1)));
+        assert!(p.serve(ObjectId(2), 600));
+    }
+
+    #[test]
+    fn shrink_returns_space_to_system() {
+        let mut p = ShortLivedPool::new(true);
+        p.begin_interval(1000);
+        p.serve(ObjectId(1), 400);
+        assert_eq!(p.reserved_bytes(), 1000);
+        p.release(ObjectId(1));
+        assert_eq!(p.reserved_bytes(), 600, "shrink on free");
+    }
+
+    #[test]
+    fn no_shrink_keeps_reservation() {
+        let mut p = ShortLivedPool::new(false);
+        p.begin_interval(1000);
+        p.serve(ObjectId(1), 400);
+        p.release(ObjectId(1));
+        assert_eq!(p.reserved_bytes(), 1000);
+    }
+
+    #[test]
+    fn interval_peak_tracks_high_water() {
+        let mut p = ShortLivedPool::new(false);
+        p.begin_interval(1000);
+        p.serve(ObjectId(1), 300);
+        p.serve(ObjectId(2), 500);
+        p.release(ObjectId(1));
+        p.serve(ObjectId(3), 100);
+        assert_eq!(p.interval_peak_bytes(), 800);
+    }
+
+    #[test]
+    fn reservation_never_undercuts_live_bytes() {
+        let mut p = ShortLivedPool::new(false);
+        p.begin_interval(1000);
+        p.serve(ObjectId(1), 700);
+        // New interval asks for less than what's live: clamped up.
+        p.begin_interval(100);
+        assert_eq!(p.reserved_bytes(), 700);
+    }
+
+    #[test]
+    fn release_unknown_object_is_noop() {
+        let mut p = ShortLivedPool::new(true);
+        p.begin_interval(100);
+        assert!(!p.release(ObjectId(9)));
+        assert_eq!(p.reserved_bytes(), 100);
+    }
+}

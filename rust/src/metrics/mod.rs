@@ -1,0 +1,124 @@
+//! Reporting helpers shared by the CLI, examples, and benches: assembling
+//! the paper's tables/figures from [`TrainResult`]s.
+
+use crate::sim::TrainResult;
+use crate::util::table::{fmt_bytes, Table};
+
+/// A named series of (x, y) points — one line of a paper figure.
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(name: impl Into<String>) -> Self {
+        Series { name: name.into(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.points.push((x, y));
+    }
+
+    /// Render as an ASCII sparkline-style row set.
+    pub fn render(&self) -> String {
+        let mut out = format!("{}\n", self.name);
+        for (x, y) in &self.points {
+            out.push_str(&format!("  x={x:<10.3} y={y:.4}\n"));
+        }
+        out
+    }
+}
+
+/// Comparison of several policies on one model (a group of Fig-10 bars).
+#[derive(Clone, Debug)]
+pub struct PolicyComparison {
+    pub model: String,
+    /// (policy name, throughput steps/s, normalized to the first entry).
+    pub entries: Vec<(String, f64)>,
+}
+
+impl PolicyComparison {
+    /// Build from results; normalization base is the first result
+    /// (conventionally the fast-only reference).
+    pub fn from_results(model: &str, results: &[(&TrainResult, usize)]) -> Self {
+        PolicyComparison {
+            model: model.to_string(),
+            entries: results
+                .iter()
+                .map(|(r, skip)| (r.policy.clone(), r.throughput(*skip)))
+                .collect(),
+        }
+    }
+
+    /// Normalized throughput of entry `i` relative to entry 0.
+    pub fn normalized(&self, i: usize) -> f64 {
+        if self.entries.is_empty() || self.entries[0].1 == 0.0 {
+            return 0.0;
+        }
+        self.entries[i].1 / self.entries[0].1
+    }
+
+    pub fn to_table(&self) -> Table {
+        let mut t = Table::new(vec!["policy", "steps/s", "vs fast-only"]);
+        for (i, (name, thr)) in self.entries.iter().enumerate() {
+            t.row(vec![
+                name.clone(),
+                format!("{thr:.3}"),
+                format!("{:.3}", self.normalized(i)),
+            ]);
+        }
+        t
+    }
+}
+
+/// Render a Table-4-style migration-count comparison.
+pub fn migrations_table(rows: &[(String, u64, u64)]) -> Table {
+    let mut t = Table::new(vec!["model", "IAL", "Sentinel"]);
+    for (model, ial, sentinel) in rows {
+        t.row(vec![model.clone(), ial.to_string(), sentinel.to_string()]);
+    }
+    t
+}
+
+/// Render a Table-5-style peak-memory comparison.
+pub fn peak_memory_table(rows: &[(String, u64, u64)]) -> Table {
+    let mut t = Table::new(vec!["model", "w/o Sentinel", "w/ Sentinel"]);
+    for (model, without, with) in rows {
+        t.row(vec![model.clone(), fmt_bytes(*without), fmt_bytes(*with)]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_renders_points() {
+        let mut s = Series::new("sentinel");
+        s.push(1.0, 2.0);
+        s.push(2.0, 4.0);
+        let r = s.render();
+        assert!(r.contains("sentinel"));
+        assert_eq!(r.lines().count(), 3);
+    }
+
+    #[test]
+    fn normalization_uses_first_entry() {
+        let c = PolicyComparison {
+            model: "m".into(),
+            entries: vec![("fast".into(), 10.0), ("sentinel".into(), 9.0)],
+        };
+        assert!((c.normalized(1) - 0.9).abs() < 1e-12);
+        assert_eq!(c.normalized(0), 1.0);
+    }
+
+    #[test]
+    fn tables_render() {
+        let t = migrations_table(&[("RN(v1)".into(), 807308, 2097152)]);
+        assert!(t.render().contains("2097152"));
+        let t = peak_memory_table(&[("LSTM".into(), 2048 << 20, 2080 << 20)]);
+        assert!(t.render().contains("LSTM"));
+    }
+}

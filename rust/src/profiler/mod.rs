@@ -1,0 +1,261 @@
+//! One-training-step, object-granularity memory profiling (§3.1).
+//!
+//! The paper's profiler runs a single training step with (a) each data
+//! object given whole pages so page-level access counting (via PTE
+//! poisoning) becomes object-level counting, and (b) allocation hooks
+//! capturing object size and lifetime. DNN training's repeatability
+//! (§2.1) makes one measured step representative of the millions that
+//! follow.
+//!
+//! In this reproduction the workload engine knows every tensor event
+//! natively, so "profiling" is a replay that *derives the same report the
+//! kernel channel would produce* — per-object sizes, lifetimes, per-layer
+//! access counts — plus the derived aggregates behind Figures 1–4 and
+//! Table 1. The measurement *cost* (the poison/fault/flush cycle) is
+//! charged by the engine when a policy requests profiling steps.
+
+use crate::dnn::{ModelGraph, StepTrace, TraceEvent};
+use crate::mem::{AllocMode, Allocator, PageStats};
+
+/// Everything Sentinel learns from its one profiling step.
+#[derive(Clone, Debug)]
+pub struct ProfileReport {
+    pub model: String,
+    pub n_layers: u32,
+    /// Per-object measured records, indexed by `ObjectId`.
+    pub objects: Vec<ObjectProfile>,
+    /// Peak live bytes during the step (Table 5 "w/o Sentinel" basis).
+    pub peak_live_bytes: u64,
+    /// Peak live bytes of short-lived objects per migration-interval
+    /// granularity 1 (refined by `short_lived_peak_for_interval`).
+    pub peak_short_lived_bytes: u64,
+    /// Page statistics under the profiling allocator (one object/page).
+    pub profiling_pages: PageStats,
+    /// Page statistics under the default shared allocator (the "original
+    /// execution" column of Table 1 / Fig. 4).
+    pub shared_pages: PageStats,
+}
+
+/// One object's measured profile.
+#[derive(Clone, Debug)]
+pub struct ObjectProfile {
+    pub size_bytes: u64,
+    pub lifetime_layers: u32,
+    pub total_accesses: u64,
+    pub small: bool,
+    pub short_lived: bool,
+    pub persistent: bool,
+}
+
+/// Lifetime histogram bucket (Fig. 1). `label` is layers-of-life.
+#[derive(Clone, Debug)]
+pub struct HistBucket {
+    pub label: String,
+    pub objects: u64,
+    pub bytes: u64,
+}
+
+/// Run the profiling step: replay the trace, validate it against the
+/// graph, and assemble the report.
+pub fn profile(graph: &ModelGraph, trace: &StepTrace) -> ProfileReport {
+    // Validate trace/graph consistency the way the real profiler's
+    // allocation hooks would observe it: every alloc has a matching free,
+    // accesses only to live objects.
+    let mut live = vec![false; graph.objects.len()];
+    for &oid in &trace.persistent {
+        live[oid.index()] = true;
+    }
+    for lt in &trace.layers {
+        for ev in &lt.events {
+            match *ev {
+                TraceEvent::Alloc(o) => {
+                    assert!(!live[o.index()], "profiler saw double alloc of {o}");
+                    live[o.index()] = true;
+                }
+                TraceEvent::Access { obj, .. } => {
+                    assert!(live[obj.index()], "profiler saw access to dead {obj}");
+                }
+                TraceEvent::Free(o) => {
+                    assert!(live[o.index()], "profiler saw double free of {o}");
+                    live[o.index()] = false;
+                }
+            }
+        }
+    }
+
+    let objects = graph
+        .objects
+        .iter()
+        .map(|o| ObjectProfile {
+            size_bytes: o.size_bytes,
+            lifetime_layers: o.lifetime_layers(),
+            total_accesses: o.total_accesses(),
+            small: o.is_small(),
+            short_lived: o.is_short_lived(),
+            persistent: o.persistent,
+        })
+        .collect();
+
+    ProfileReport {
+        model: graph.name.clone(),
+        n_layers: graph.n_layers(),
+        objects,
+        peak_live_bytes: graph.peak_live_bytes(),
+        peak_short_lived_bytes: graph.peak_short_lived_bytes(),
+        profiling_pages: Allocator::replay(AllocMode::OneObjectPerPage, graph),
+        shared_pages: Allocator::replay(AllocMode::Shared, graph),
+    }
+}
+
+impl ProfileReport {
+    /// Fig. 1: lifetime distribution of objects and their bytes, using
+    /// the paper's buckets (1, 2–4, 5–16, 17–64, >64 layers).
+    pub fn lifetime_histogram(&self) -> Vec<HistBucket> {
+        let buckets: [(&str, u32, u32); 5] = [
+            ("1", 1, 1),
+            ("2-4", 2, 4),
+            ("5-16", 5, 16),
+            ("17-64", 17, 64),
+            (">64", 65, u32::MAX),
+        ];
+        buckets
+            .iter()
+            .map(|(label, lo, hi)| {
+                let mut objects = 0;
+                let mut bytes = 0;
+                for o in &self.objects {
+                    if o.lifetime_layers >= *lo && o.lifetime_layers <= *hi {
+                        objects += 1;
+                        bytes += o.size_bytes;
+                    }
+                }
+                HistBucket { label: label.to_string(), objects, bytes }
+            })
+            .collect()
+    }
+
+    /// Fig. 2/3: object counts and bytes bucketed by total main-memory
+    /// accesses. `small_only` restricts to objects < 4 KB (Fig. 3).
+    pub fn access_histogram(&self, small_only: bool) -> Vec<HistBucket> {
+        let buckets: [(&str, u64, u64); 4] = [
+            ("0", 0, 0),
+            ("1-10", 1, 9),
+            ("10-100", 10, 99),
+            (">100", 100, u64::MAX),
+        ];
+        buckets
+            .iter()
+            .map(|(label, lo, hi)| {
+                let mut objects = 0;
+                let mut bytes = 0;
+                for o in &self.objects {
+                    if small_only && !o.small {
+                        continue;
+                    }
+                    if o.total_accesses >= *lo && o.total_accesses <= *hi {
+                        objects += 1;
+                        bytes += o.size_bytes;
+                    }
+                }
+                HistBucket { label: label.to_string(), objects, bytes }
+            })
+            .collect()
+    }
+
+    /// Fraction of objects that are short-lived (Observation 1).
+    pub fn short_lived_fraction(&self) -> f64 {
+        let short = self.objects.iter().filter(|o| o.short_lived).count();
+        short as f64 / self.objects.len().max(1) as f64
+    }
+
+    /// Of the short-lived objects, fraction smaller than a page.
+    pub fn short_lived_small_fraction(&self) -> f64 {
+        let short: Vec<_> = self.objects.iter().filter(|o| o.short_lived).collect();
+        if short.is_empty() {
+            return 0.0;
+        }
+        short.iter().filter(|o| o.small).count() as f64 / short.len() as f64
+    }
+
+    /// Table 1 row: total bytes of small objects under profiling
+    /// (one-object-per-page) vs original allocation.
+    pub fn small_object_footprint(&self) -> (u64, u64) {
+        let small_live: u64 = self
+            .objects
+            .iter()
+            .filter(|o| o.small)
+            .map(|o| o.size_bytes)
+            .sum();
+        let prof = self.profiling_pages.small_object_pages * crate::PAGE_SIZE;
+        (prof, small_live)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::zoo::Model;
+    use crate::dnn::StepTrace;
+
+    fn report() -> ProfileReport {
+        let g = (Model::ResNetV1 { depth: 32 }).build(1);
+        let t = StepTrace::from_graph(&g);
+        profile(&g, &t)
+    }
+
+    #[test]
+    fn observation1_in_report() {
+        let r = report();
+        assert!(r.short_lived_fraction() > 0.8, "{}", r.short_lived_fraction());
+        assert!(r.short_lived_small_fraction() > 0.9);
+    }
+
+    #[test]
+    fn fig1_buckets_cover_all_objects() {
+        let r = report();
+        let hist = r.lifetime_histogram();
+        let total: u64 = hist.iter().map(|b| b.objects).sum();
+        assert_eq!(total, r.objects.len() as u64);
+        // Bucket "1" dominates object count.
+        assert!(hist[0].objects * 10 > total * 8, "lifetime-1 bucket dominates");
+    }
+
+    #[test]
+    fn fig2_buckets_cover_all_objects() {
+        let r = report();
+        let hist = r.access_histogram(false);
+        let total: u64 = hist.iter().map(|b| b.objects).sum();
+        assert_eq!(total, r.objects.len() as u64);
+    }
+
+    #[test]
+    fn fig3_is_subset_of_fig2() {
+        let r = report();
+        let all = r.access_histogram(false);
+        let small = r.access_histogram(true);
+        for (a, s) in all.iter().zip(&small) {
+            assert!(s.objects <= a.objects);
+            assert!(s.bytes <= a.bytes);
+        }
+    }
+
+    #[test]
+    fn table1_small_footprint_inflates_under_profiling() {
+        let r = report();
+        let (prof, orig) = r.small_object_footprint();
+        // Paper's Table 1 measures 0.45 MB → 152 MB (≈340×); the exact
+        // factor depends on allocator internals — an order of magnitude
+        // is the reproducible claim.
+        assert!(
+            prof > 10 * orig,
+            "one-object-per-page must inflate small objects: {prof} vs {orig}"
+        );
+    }
+
+    #[test]
+    fn peaks_are_consistent() {
+        let r = report();
+        assert!(r.peak_short_lived_bytes < r.peak_live_bytes);
+        assert!(r.peak_live_bytes > 0);
+    }
+}

@@ -1,0 +1,110 @@
+//! The artifact manifest written by `python -m compile.aot`.
+//!
+//! Plain `key=value` lines (no JSON dependency in the offline build):
+//! model dimensions plus one `artifact=<name>` line per exported HLO.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+/// Parsed `manifest.txt`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Manifest {
+    pub batch: usize,
+    pub dim: usize,
+    pub hidden: usize,
+    pub classes: usize,
+    pub layers: usize,
+    pub artifacts: Vec<String>,
+}
+
+impl Manifest {
+    /// Parse manifest text.
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut batch = None;
+        let mut dim = None;
+        let mut hidden = None;
+        let mut classes = None;
+        let mut layers = None;
+        let mut artifacts = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("manifest line {}: missing '=': {line}", lineno + 1))?;
+            match key {
+                "batch" => batch = Some(value.parse()?),
+                "dim" => dim = Some(value.parse()?),
+                "hidden" => hidden = Some(value.parse()?),
+                "classes" => classes = Some(value.parse()?),
+                "layers" => layers = Some(value.parse()?),
+                "artifact" => artifacts.push(value.to_string()),
+                other => return Err(anyhow!("manifest line {}: unknown key {other}", lineno + 1)),
+            }
+        }
+        Ok(Manifest {
+            batch: batch.ok_or_else(|| anyhow!("manifest missing batch"))?,
+            dim: dim.ok_or_else(|| anyhow!("manifest missing dim"))?,
+            hidden: hidden.ok_or_else(|| anyhow!("manifest missing hidden"))?,
+            classes: classes.ok_or_else(|| anyhow!("manifest missing classes"))?,
+            layers: layers.ok_or_else(|| anyhow!("manifest missing layers"))?,
+            artifacts,
+        })
+    }
+
+    /// Load from a file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    /// Parameter count of the MLP the artifacts implement.
+    pub fn param_count(&self) -> usize {
+        let hidden_layers = self.layers.saturating_sub(1);
+        let mut n = self.dim * self.hidden + self.hidden; // input layer
+        if hidden_layers > 1 {
+            n += (hidden_layers - 1) * (self.hidden * self.hidden + self.hidden);
+        }
+        n += self.hidden * self.classes + self.classes; // output layer
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "batch=128\ndim=256\nhidden=256\nclasses=10\nlayers=4\nartifact=fwd_in\nartifact=fwd_hidden\n";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.batch, 128);
+        assert_eq!(m.hidden, 256);
+        assert_eq!(m.artifacts, vec!["fwd_in", "fwd_hidden"]);
+    }
+
+    #[test]
+    fn rejects_missing_keys() {
+        assert!(Manifest::parse("batch=1\n").is_err());
+        assert!(Manifest::parse("nonsense\n").is_err());
+        assert!(Manifest::parse(&format!("{SAMPLE}bogus=1\n")).is_err());
+    }
+
+    #[test]
+    fn skips_comments_and_blank_lines() {
+        let m = Manifest::parse(&format!("# hi\n\n{SAMPLE}")).unwrap();
+        assert_eq!(m.layers, 4);
+    }
+
+    #[test]
+    fn param_count_matches_mlp() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        // 256*256+256 (in) + 2*(256*256+256) (hidden 2,3) + 256*10+10 (out)
+        assert_eq!(m.param_count(), 3 * (256 * 256 + 256) + 256 * 10 + 10);
+    }
+}

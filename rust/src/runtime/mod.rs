@@ -1,0 +1,125 @@
+//! PJRT execution of the AOT-compiled JAX/Pallas artifacts.
+//!
+//! The build path (`make artifacts`) runs Python once to lower every
+//! per-layer piece of the L2 model to HLO text; this module loads those
+//! artifacts with the `xla` crate (PJRT CPU client), compiles them, and
+//! chains them into full training steps — Python never runs here.
+//!
+//! Layout mirrors /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
+//! → `XlaComputation::from_proto` → `client.compile` → `execute`.
+
+pub mod manifest;
+pub mod trainer;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+pub use manifest::Manifest;
+pub use trainer::{MlpTrainer, StepTiming};
+
+/// A PJRT client plus the compiled executables of every artifact.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    pub manifest: Manifest,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Load and compile every artifact listed in `dir/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.txt"))
+            .with_context(|| format!("reading manifest in {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut executables = HashMap::new();
+        for name in &manifest.artifacts {
+            let path = dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e}"))?;
+            executables.insert(name.clone(), exe);
+        }
+        Ok(Runtime { client, executables, manifest, dir })
+    }
+
+    /// Execute artifact `name` with the given inputs; outputs are the
+    /// elements of the returned tuple (artifacts lower with
+    /// `return_tuple=True`).
+    pub fn run(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .executables
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}"))?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("executing {name}: {e}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {name} result: {e}"))?;
+        out.to_tuple().map_err(|e| anyhow!("untupling {name}: {e}"))
+    }
+
+    /// Names of all loaded artifacts.
+    pub fn artifact_names(&self) -> Vec<&str> {
+        self.executables.keys().map(String::as_str).collect()
+    }
+
+    /// The artifact directory this runtime was loaded from.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Platform name of the PJRT backend (e.g. "cpu").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+/// Build an f32 literal of the given shape from a flat slice.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    if n as usize != data.len() {
+        return Err(anyhow!("shape {dims:?} wants {n} elements, got {}", data.len()));
+    }
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Build an i32 literal of the given shape from a flat slice.
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    if n as usize != data.len() {
+        return Err(anyhow!("shape {dims:?} wants {n} elements, got {}", data.len()));
+    }
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Scalar f32 literal.
+pub fn scalar_f32(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_helpers_validate_shapes() {
+        assert!(literal_f32(&[1.0, 2.0], &[2]).is_ok());
+        assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(literal_i32(&[1, 2, 3, 4], &[2, 2]).is_ok());
+        assert!(literal_i32(&[1], &[2]).is_err());
+    }
+
+    #[test]
+    fn missing_manifest_is_an_error() {
+        assert!(Runtime::load("/nonexistent/dir").is_err());
+    }
+}

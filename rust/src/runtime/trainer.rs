@@ -1,0 +1,206 @@
+//! Training-step orchestration over the compiled artifacts: the L3 side
+//! of the three-layer stack. Chains `fwd_* → loss_grad → bwd_* → sgd_*`
+//! per layer, owning every intermediate tensor — the same per-layer
+//! control points at which Sentinel's coordinator profiles, prefetches
+//! and evicts.
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::Runtime;
+use crate::util::Rng;
+
+/// Wall-clock timing of one training step, per phase (ns).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepTiming {
+    pub fwd_ns: u128,
+    pub loss_ns: u128,
+    pub bwd_ns: u128,
+    pub opt_ns: u128,
+}
+
+impl StepTiming {
+    pub fn total_ns(&self) -> u128 {
+        self.fwd_ns + self.loss_ns + self.bwd_ns + self.opt_ns
+    }
+}
+
+/// An MLP trainer over a loaded [`Runtime`].
+pub struct MlpTrainer<'a> {
+    rt: &'a Runtime,
+    /// Per layer: (weights, bias) literals, layer 0 is dim→hidden, the
+    /// last is hidden→classes.
+    params: Vec<(xla::Literal, xla::Literal)>,
+    ones_mask: xla::Literal,
+}
+
+impl<'a> MlpTrainer<'a> {
+    /// He-initialized parameters (deterministic in `seed`).
+    pub fn new(rt: &'a Runtime, seed: u64) -> Result<Self> {
+        let m = &rt.manifest;
+        if m.layers < 2 {
+            return Err(anyhow!("need >= 2 layers, manifest says {}", m.layers));
+        }
+        let mut rng = Rng::new(seed);
+        let mut params = Vec::new();
+        let mut dims = vec![m.dim];
+        dims.extend(std::iter::repeat(m.hidden).take(m.layers - 1));
+        dims.push(m.classes);
+        for i in 0..m.layers {
+            let (fan_in, fan_out) = (dims[i], dims[i + 1]);
+            let scale = (2.0 / fan_in as f64).sqrt() * (3.0f64).sqrt();
+            let w: Vec<f32> = (0..fan_in * fan_out)
+                .map(|_| ((rng.f64() * 2.0 - 1.0) * scale) as f32)
+                .collect();
+            let b = vec![0.0f32; fan_out];
+            params.push((
+                crate::runtime::literal_f32(&w, &[fan_in as i64, fan_out as i64])?,
+                crate::runtime::literal_f32(&b, &[fan_out as i64])?,
+            ));
+        }
+        let ones = vec![1.0f32; m.batch * m.classes];
+        let ones_mask =
+            crate::runtime::literal_f32(&ones, &[m.batch as i64, m.classes as i64])?;
+        Ok(MlpTrainer { rt, params, ones_mask })
+    }
+
+    /// Number of trainable parameters.
+    pub fn param_count(&self) -> usize {
+        self.rt.manifest.param_count()
+    }
+
+    /// One SGD training step on batch `(x, y)`. Returns the loss and the
+    /// per-phase wall-clock timing.
+    pub fn train_step(
+        &mut self,
+        x: &xla::Literal,
+        y: &xla::Literal,
+        lr: f32,
+    ) -> Result<(f32, StepTiming)> {
+        let m = &self.rt.manifest;
+        let n_hidden = m.layers - 1; // layers with relu
+        let mut timing = StepTiming::default();
+
+        // ---- forward: save every activation (Sentinel's long-lived
+        // tensors: written here, read again in the backward pass).
+        let t0 = Instant::now();
+        let mut acts: Vec<xla::Literal> = Vec::with_capacity(m.layers);
+        let mut h = x.clone();
+        for li in 0..n_hidden {
+            let art = if li == 0 { "fwd_in" } else { "fwd_hidden" };
+            let (w, b) = &self.params[li];
+            let mut out = self.rt.run(art, &[h.clone(), w.clone(), b.clone()])?;
+            h = out.remove(0);
+            acts.push(h.clone());
+        }
+        let (w_out, b_out) = &self.params[n_hidden];
+        let mut out = self
+            .rt
+            .run("fwd_out", &[h.clone(), w_out.clone(), b_out.clone()])?;
+        let logits = out.remove(0);
+        timing.fwd_ns = t0.elapsed().as_nanos();
+
+        // ---- loss + dlogits.
+        let t0 = Instant::now();
+        let mut out = self.rt.run("loss_grad", &[logits, y.clone()])?;
+        let loss = out.remove(0).get_first_element::<f32>()?;
+        let dlogits = out.remove(0);
+        timing.loss_ns = t0.elapsed().as_nanos();
+
+        // ---- backward (output layer first; no relu mask).
+        let t0 = Instant::now();
+        let x_out = &acts[n_hidden - 1];
+        let mut out = self.rt.run(
+            "bwd_out",
+            &[
+                x_out.clone(),
+                self.params[n_hidden].0.clone(),
+                self.ones_mask.clone(),
+                dlogits,
+            ],
+        )?;
+        let mut dh = out.remove(0);
+        let mut grads: Vec<(xla::Literal, xla::Literal)> = vec![];
+        grads.push((out.remove(0), out.remove(0))); // (dw_out, db_out)
+
+        for li in (0..n_hidden).rev() {
+            let art = if li == 0 { "bwd_in" } else { "bwd_hidden" };
+            let x_in: &xla::Literal = if li == 0 { x } else { &acts[li - 1] };
+            let mask = &acts[li]; // relu output: its sign is the mask
+            let mut out = self.rt.run(
+                art,
+                &[
+                    x_in.clone(),
+                    self.params[li].0.clone(),
+                    mask.clone(),
+                    dh.clone(),
+                ],
+            )?;
+            dh = out.remove(0);
+            grads.push((out.remove(0), out.remove(0)));
+        }
+        timing.bwd_ns = t0.elapsed().as_nanos();
+
+        // ---- optimizer. grads is output-layer-first.
+        let t0 = Instant::now();
+        let lr_lit = crate::runtime::scalar_f32(lr);
+        for (rev_idx, (dw, db)) in grads.into_iter().enumerate() {
+            let li = m.layers - 1 - rev_idx;
+            let (w_art, b_art) = match li {
+                0 => ("sgd_w_in", "sgd_b_hidden"),
+                l if l == m.layers - 1 => ("sgd_w_out", "sgd_b_out"),
+                _ => ("sgd_w_hidden", "sgd_b_hidden"),
+            };
+            let (w, b) = &self.params[li];
+            let mut out = self
+                .rt
+                .run(w_art, &[w.clone(), dw, lr_lit.clone()])?;
+            let new_w = out.remove(0);
+            let mut out = self
+                .rt
+                .run(b_art, &[b.clone(), db, lr_lit.clone()])?;
+            let new_b = out.remove(0);
+            self.params[li] = (new_w, new_b);
+        }
+        timing.opt_ns = t0.elapsed().as_nanos();
+
+        Ok((loss, timing))
+    }
+}
+
+/// Deterministic synthetic classification batch: a random linear teacher
+/// labels random Gaussian-ish inputs. Returns `(x, y)` literals shaped
+/// per the manifest.
+pub fn synthetic_batch(
+    m: &crate::runtime::Manifest,
+    seed: u64,
+) -> Result<(xla::Literal, xla::Literal)> {
+    let mut rng = Rng::new(seed ^ 0xDA7A);
+    // A fixed teacher per seed-stream.
+    let mut teacher_rng = Rng::new(0x7EAC4E6);
+    let teacher: Vec<f32> = (0..m.dim * m.classes)
+        .map(|_| (teacher_rng.f64() * 2.0 - 1.0) as f32)
+        .collect();
+    let mut xs = Vec::with_capacity(m.batch * m.dim);
+    let mut ys = Vec::with_capacity(m.batch);
+    for _ in 0..m.batch {
+        let row: Vec<f32> = (0..m.dim).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect();
+        // argmax over teacher logits.
+        let mut best = 0usize;
+        let mut best_v = f32::NEG_INFINITY;
+        for c in 0..m.classes {
+            let v: f32 = (0..m.dim).map(|d| row[d] * teacher[d * m.classes + c]).sum();
+            if v > best_v {
+                best_v = v;
+                best = c;
+            }
+        }
+        xs.extend_from_slice(&row);
+        ys.push(best as i32);
+    }
+    Ok((
+        crate::runtime::literal_f32(&xs, &[m.batch as i64, m.dim as i64])?,
+        crate::runtime::literal_i32(&ys, &[m.batch as i64])?,
+    ))
+}

@@ -1,0 +1,153 @@
+//! Memory device and machine specifications (the paper's Table 2).
+
+/// Which memory tier a page/object resides in.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Tier {
+    /// Local-socket DDR4 in the paper: 34 GB/s, 87 ns.
+    Fast,
+    /// Remote-socket DDR4 in the paper: 19 GB/s, 182.7 ns.
+    Slow,
+}
+
+impl Tier {
+    /// The other tier.
+    pub fn other(self) -> Tier {
+        match self {
+            Tier::Fast => Tier::Slow,
+            Tier::Slow => Tier::Fast,
+        }
+    }
+}
+
+impl std::fmt::Display for Tier {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Tier::Fast => write!(f, "fast"),
+            Tier::Slow => write!(f, "slow"),
+        }
+    }
+}
+
+/// One memory device: capacity plus the two parameters that drive the
+/// roofline (sustained bandwidth, idle latency).
+#[derive(Clone, Copy, Debug)]
+pub struct DeviceSpec {
+    /// Capacity in bytes. `u64::MAX` means effectively unbounded.
+    pub capacity_bytes: u64,
+    /// Sustained bandwidth in GB/s (== bytes/ns).
+    pub bandwidth_gbps: f64,
+    /// Idle access latency in ns (charged per *operation access*, not per
+    /// byte — it models the pointer-chasing / first-touch component).
+    pub latency_ns: f64,
+}
+
+/// Full machine model. Defaults mirror the paper's Table 2 testbed.
+#[derive(Clone, Copy, Debug)]
+pub struct MachineSpec {
+    pub fast: DeviceSpec,
+    pub slow: DeviceSpec,
+    /// Cross-socket migration bandwidth in GB/s, shared per lane.
+    pub migration_bw_gbps: f64,
+    /// Fixed software cost per migrated page (the `move_pages()` syscall,
+    /// page-table updates and TLB shootdowns), before dividing by the
+    /// parallel-copy thread count.
+    pub page_move_overhead_ns: f64,
+    /// Parallel page-copy threads per migration lane (Yan et al. use 4).
+    pub copy_threads: u32,
+    /// Aggregate compute throughput used to convert layer FLOPs into
+    /// compute-time (24 physical cores in the paper's socket).
+    pub compute_gflops: f64,
+}
+
+impl MachineSpec {
+    /// The paper's testbed (Table 2) with a given fast-memory capacity.
+    pub fn paper_testbed(fast_capacity_bytes: u64) -> Self {
+        MachineSpec {
+            fast: DeviceSpec {
+                capacity_bytes: fast_capacity_bytes,
+                bandwidth_gbps: 34.0,
+                latency_ns: 87.0,
+            },
+            slow: DeviceSpec {
+                capacity_bytes: u64::MAX,
+                bandwidth_gbps: 19.0,
+                latency_ns: 182.7,
+            },
+            migration_bw_gbps: 19.0,
+            page_move_overhead_ns: 1500.0,
+            copy_threads: 4,
+            compute_gflops: 600.0,
+        }
+    }
+
+    /// A fast-memory-only machine: the paper's reference configuration.
+    pub fn fast_only() -> Self {
+        Self::paper_testbed(u64::MAX)
+    }
+
+    /// A machine forced to keep everything in slow memory (lower bound).
+    pub fn slow_only() -> Self {
+        let mut spec = Self::paper_testbed(0);
+        spec.fast.capacity_bytes = 0;
+        spec
+    }
+
+    /// Device spec for a tier.
+    pub fn device(&self, tier: Tier) -> &DeviceSpec {
+        match tier {
+            Tier::Fast => &self.fast,
+            Tier::Slow => &self.slow,
+        }
+    }
+
+    /// Effective time to migrate one 4 KB page, including amortized
+    /// software overhead spread over the parallel copy threads.
+    pub fn ns_per_page(&self) -> f64 {
+        let copy = crate::PAGE_SIZE as f64 / self.migration_bw_gbps;
+        copy + self.page_move_overhead_ns / self.copy_threads.max(1) as f64
+    }
+}
+
+impl Default for MachineSpec {
+    fn default() -> Self {
+        // 1 GB fast memory — the configuration of the paper's Fig. 7/8.
+        Self::paper_testbed(1 << 30)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tier_other_flips() {
+        assert_eq!(Tier::Fast.other(), Tier::Slow);
+        assert_eq!(Tier::Slow.other(), Tier::Fast);
+    }
+
+    #[test]
+    fn paper_testbed_matches_table2() {
+        let m = MachineSpec::paper_testbed(1 << 30);
+        assert_eq!(m.fast.bandwidth_gbps, 34.0);
+        assert_eq!(m.fast.latency_ns, 87.0);
+        assert_eq!(m.slow.bandwidth_gbps, 19.0);
+        assert_eq!(m.slow.latency_ns, 182.7);
+        assert_eq!(m.migration_bw_gbps, 19.0);
+        assert_eq!(m.fast.capacity_bytes, 1 << 30);
+    }
+
+    #[test]
+    fn ns_per_page_includes_overhead() {
+        let m = MachineSpec::paper_testbed(1 << 30);
+        let raw_copy = 4096.0 / 19.0;
+        assert!(m.ns_per_page() > raw_copy);
+        // With 4 copy threads the overhead term is 1500/4 = 375ns.
+        assert!((m.ns_per_page() - (raw_copy + 375.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fast_only_is_unbounded() {
+        assert_eq!(MachineSpec::fast_only().fast.capacity_bytes, u64::MAX);
+        assert_eq!(MachineSpec::slow_only().fast.capacity_bytes, 0);
+    }
+}

@@ -1,0 +1,328 @@
+//! The training engine: replays a model's [`StepTrace`] on a [`Machine`]
+//! under a pluggable data-management [`Policy`].
+//!
+//! Time accounting per layer follows a roofline with overlap: each access
+//! event charges its memory time immediately (advancing the clock and —
+//! crucially — the migration lanes by the same amount, which is how
+//! migration overlaps compute); at layer end, if the layer's pure compute
+//! time exceeds the memory time already charged, the difference is
+//! charged too, yielding `t_layer = max(compute, memory)` while keeping
+//! lanes draining throughout. Any extra stall a policy requests (e.g.
+//! Sentinel's Case-3 "continue migration" wait) is charged on top.
+
+use crate::dnn::{ModelGraph, StepTrace, TraceEvent};
+use crate::mem::DataObject;
+use crate::sim::device::Tier;
+use crate::sim::machine::Machine;
+
+/// A data-management policy: decides placement at allocation time and may
+/// queue migrations at layer/step boundaries or after accesses.
+pub trait Policy {
+    fn name(&self) -> String;
+
+    /// Preferred tier for an object being allocated right now.
+    fn place(&mut self, obj: &DataObject, m: &Machine) -> Tier;
+
+    /// Called when a step begins.
+    fn step_start(&mut self, _step: u32, _m: &mut Machine, _g: &ModelGraph) {}
+
+    /// Called when a layer begins; may queue migrations on the machine.
+    fn layer_start(&mut self, _layer: u32, _m: &mut Machine, _g: &ModelGraph) {}
+
+    /// Called after every access event (IAL-style policies track
+    /// recency/frequency here).
+    fn after_access(&mut self, _obj: &DataObject, _m: &mut Machine) {}
+
+    /// Called after an object is freed (pool bookkeeping).
+    fn after_free(&mut self, _obj: &DataObject, _m: &mut Machine) {}
+
+    /// Called when a layer ends. Returns extra stall time (ns) the engine
+    /// must charge on the critical path (0 for "no synchronization").
+    fn layer_end(&mut self, _layer: u32, _m: &mut Machine, _g: &ModelGraph) -> f64 {
+        0.0
+    }
+
+    /// Called when a step ends.
+    fn step_end(&mut self, _step: u32, _m: &mut Machine, _g: &ModelGraph) {}
+}
+
+/// Engine knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct EngineConfig {
+    /// Number of training steps to simulate.
+    pub steps: u32,
+    /// Extra cost per captured access during profiling steps: the PTE
+    /// poison → fault → count → re-poison cycle of §3.1. Charged only
+    /// while `profiling_steps` are running.
+    pub profiling_fault_ns: f64,
+    /// The first `profiling_steps` steps run with profiling overhead.
+    pub profiling_steps: u32,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            steps: 10,
+            profiling_fault_ns: 1_000.0,
+            profiling_steps: 0,
+        }
+    }
+}
+
+/// Per-step timing/counters.
+#[derive(Clone, Copy, Debug)]
+pub struct StepStats {
+    pub step: u32,
+    pub time_ns: f64,
+    pub pages_in: u64,
+    pub pages_out: u64,
+}
+
+/// Result of a training run.
+#[derive(Clone, Debug)]
+pub struct TrainResult {
+    pub policy: String,
+    pub model: String,
+    pub steps: Vec<StepStats>,
+    pub total_time_ns: f64,
+    pub peak_fast_bytes: u64,
+    pub peak_total_bytes: u64,
+    pub pages_migrated_in: u64,
+    pub pages_migrated_out: u64,
+    pub alloc_spills: u64,
+}
+
+impl TrainResult {
+    /// Steady-state throughput in steps/s, excluding the first
+    /// `skip` warm-up/profiling steps.
+    pub fn throughput(&self, skip: usize) -> f64 {
+        let steady: Vec<&StepStats> = self.steps.iter().skip(skip).collect();
+        if steady.is_empty() {
+            return 0.0;
+        }
+        let total: f64 = steady.iter().map(|s| s.time_ns).sum();
+        steady.len() as f64 / (total / 1e9)
+    }
+
+    /// Mean steady-state step time in ns (same skip semantics).
+    pub fn mean_step_ns(&self, skip: usize) -> f64 {
+        let steady: Vec<&StepStats> = self.steps.iter().skip(skip).collect();
+        if steady.is_empty() {
+            return 0.0;
+        }
+        steady.iter().map(|s| s.time_ns).sum::<f64>() / steady.len() as f64
+    }
+
+    /// Total pages migrated (both directions) — the paper's Table 4.
+    pub fn total_migrations(&self) -> u64 {
+        self.pages_migrated_in + self.pages_migrated_out
+    }
+}
+
+/// The engine. Owns nothing; borrows machine + policy per run.
+pub struct Engine {
+    pub config: EngineConfig,
+}
+
+impl Engine {
+    pub fn new(config: EngineConfig) -> Self {
+        Engine { config }
+    }
+
+    /// Simulate `config.steps` training steps of `graph` under `policy`.
+    pub fn run(
+        &self,
+        graph: &ModelGraph,
+        trace: &StepTrace,
+        machine: &mut Machine,
+        policy: &mut dyn Policy,
+    ) -> TrainResult {
+        // Allocate persistent objects (weights, optimizer state) once.
+        for &oid in &trace.persistent {
+            let obj = &graph.objects[oid.index()];
+            let pref = policy.place(obj, machine);
+            machine.alloc(oid, obj.pages(), pref);
+        }
+
+        let gflops = machine.spec.compute_gflops;
+        let mut steps = Vec::with_capacity(self.config.steps as usize);
+        for step in 0..self.config.steps {
+            let profiling = step < self.config.profiling_steps;
+            let t0 = machine.now_ns();
+            let in0 = machine.stats.pages_in;
+            let out0 = machine.stats.pages_out;
+            policy.step_start(step, machine, graph);
+            for lt in &trace.layers {
+                policy.layer_start(lt.layer, machine, graph);
+                let mut mem_ns = 0.0;
+                for ev in &lt.events {
+                    match *ev {
+                        TraceEvent::Alloc(oid) => {
+                            let obj = &graph.objects[oid.index()];
+                            let pref = policy.place(obj, machine);
+                            machine.alloc(oid, obj.pages(), pref);
+                        }
+                        TraceEvent::Access { obj: oid, count } => {
+                            let obj = &graph.objects[oid.index()];
+                            let bytes = obj.size_bytes * count as u64;
+                            let mut dt = machine.access_time_ns(oid, bytes, count);
+                            if profiling {
+                                // Every captured page access pays the
+                                // poison → fault → flush cycle (§3.1):
+                                // cost scales with pages touched × access
+                                // count, which is what makes full-accuracy
+                                // profiling ~4× slower (cf. Thermostat).
+                                dt += self.config.profiling_fault_ns
+                                    * count as f64
+                                    * obj.pages() as f64;
+                            }
+                            machine.exec(dt);
+                            mem_ns += dt;
+                            policy.after_access(obj, machine);
+                        }
+                        TraceEvent::Free(oid) => {
+                            machine.free(oid);
+                            policy.after_free(&graph.objects[oid.index()], machine);
+                        }
+                    }
+                }
+                // Roofline: top up to the layer's compute time.
+                let compute_ns = lt.flops / gflops;
+                if compute_ns > mem_ns {
+                    machine.exec(compute_ns - mem_ns);
+                }
+                let stall = policy.layer_end(lt.layer, machine, graph);
+                if stall > 0.0 {
+                    machine.exec(stall);
+                }
+            }
+            policy.step_end(step, machine, graph);
+            steps.push(StepStats {
+                step,
+                time_ns: machine.now_ns() - t0,
+                pages_in: machine.stats.pages_in - in0,
+                pages_out: machine.stats.pages_out - out0,
+            });
+        }
+
+        TrainResult {
+            policy: policy.name(),
+            model: graph.name.clone(),
+            total_time_ns: machine.now_ns(),
+            peak_fast_bytes: machine.stats.peak_fast_bytes,
+            peak_total_bytes: machine.stats.peak_total_bytes,
+            pages_migrated_in: machine.stats.pages_in,
+            pages_migrated_out: machine.stats.pages_out,
+            alloc_spills: machine.stats.alloc_spills,
+            steps,
+        }
+    }
+}
+
+/// The trivial static policy: always prefer one tier (used for the
+/// paper's fast-memory-only reference and the slow-only lower bound).
+pub struct StaticPolicy {
+    pub tier: Tier,
+}
+
+impl Policy for StaticPolicy {
+    fn name(&self) -> String {
+        match self.tier {
+            Tier::Fast => "fast-only".into(),
+            Tier::Slow => "slow-only".into(),
+        }
+    }
+
+    fn place(&mut self, _obj: &DataObject, _m: &Machine) -> Tier {
+        self.tier
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::zoo::Model;
+    use crate::sim::device::MachineSpec;
+
+    fn small_model() -> (ModelGraph, StepTrace) {
+        let g = Model::Dcgan.build(3);
+        let t = StepTrace::from_graph(&g);
+        (g, t)
+    }
+
+    #[test]
+    fn fast_only_beats_slow_only() {
+        let (g, t) = small_model();
+        let engine = Engine::new(EngineConfig { steps: 3, ..Default::default() });
+
+        let mut fast = Machine::new(MachineSpec::fast_only());
+        let rf = engine.run(&g, &t, &mut fast, &mut StaticPolicy { tier: Tier::Fast });
+
+        let mut slow = Machine::new(MachineSpec::slow_only());
+        let rs = engine.run(&g, &t, &mut slow, &mut StaticPolicy { tier: Tier::Slow });
+
+        assert!(rf.throughput(0) > rs.throughput(0));
+        // No migration under static policies.
+        assert_eq!(rf.total_migrations(), 0);
+        assert_eq!(rs.total_migrations(), 0);
+    }
+
+    #[test]
+    fn steps_are_repeatable_in_steady_state() {
+        let (g, t) = small_model();
+        let engine = Engine::new(EngineConfig { steps: 4, ..Default::default() });
+        let mut m = Machine::new(MachineSpec::fast_only());
+        let r = engine.run(&g, &t, &mut m, &mut StaticPolicy { tier: Tier::Fast });
+        let t1 = r.steps[1].time_ns;
+        for s in &r.steps[2..] {
+            assert!((s.time_ns - t1).abs() / t1 < 1e-9, "steps must repeat");
+        }
+    }
+
+    #[test]
+    fn profiling_step_is_slower() {
+        let (g, t) = small_model();
+        let engine = Engine::new(EngineConfig {
+            steps: 3,
+            profiling_steps: 1,
+            profiling_fault_ns: 2_000.0,
+        });
+        let mut m = Machine::new(MachineSpec::fast_only());
+        let r = engine.run(&g, &t, &mut m, &mut StaticPolicy { tier: Tier::Fast });
+        assert!(
+            r.steps[0].time_ns > 1.5 * r.steps[1].time_ns,
+            "profiling step {} vs steady {}",
+            r.steps[0].time_ns,
+            r.steps[1].time_ns
+        );
+    }
+
+    #[test]
+    fn memory_returns_to_baseline_after_each_step() {
+        let (g, t) = small_model();
+        let engine = Engine::new(EngineConfig { steps: 2, ..Default::default() });
+        let mut m = Machine::new(MachineSpec::fast_only());
+        let _ = engine.run(&g, &t, &mut m, &mut StaticPolicy { tier: Tier::Fast });
+        // Only persistent objects remain after a step.
+        let persistent_bytes: u64 = g
+            .objects
+            .iter()
+            .filter(|o| o.persistent)
+            .map(|o| o.pages() * crate::PAGE_SIZE)
+            .sum();
+        assert_eq!(m.used_bytes(Tier::Fast) + m.used_bytes(Tier::Slow), persistent_bytes);
+    }
+
+    #[test]
+    fn throughput_skips_warmup() {
+        let (g, t) = small_model();
+        let engine = Engine::new(EngineConfig {
+            steps: 3,
+            profiling_steps: 1,
+            profiling_fault_ns: 5_000.0,
+        });
+        let mut m = Machine::new(MachineSpec::fast_only());
+        let r = engine.run(&g, &t, &mut m, &mut StaticPolicy { tier: Tier::Fast });
+        assert!(r.throughput(1) > r.throughput(0));
+    }
+}

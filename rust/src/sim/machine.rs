@@ -1,0 +1,442 @@
+//! The heterogeneous-memory machine: residency tracking, capacity
+//! accounting, a simulated clock, and the two migration lanes.
+//!
+//! All policy-visible effects of the paper's testbed funnel through this
+//! type: where an object's pages live, how long an operation's memory
+//! traffic takes given that placement, and how fast queued migrations
+//! drain while compute proceeds.
+
+use crate::mem::ObjectId;
+use crate::sim::device::{MachineSpec, Tier};
+use crate::sim::migration::{Direction, Lane};
+use crate::PAGE_SIZE;
+
+/// Per-object page residency. Objects may be split across tiers while a
+/// migration is in flight.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Residency {
+    pub pages_total: u64,
+    pub pages_fast: u64,
+    pub alive: bool,
+}
+
+impl Residency {
+    /// Fraction of the object's pages resident in fast memory.
+    pub fn fast_fraction(&self) -> f64 {
+        if self.pages_total == 0 {
+            0.0
+        } else {
+            self.pages_fast as f64 / self.pages_total as f64
+        }
+    }
+}
+
+/// Counters accumulated over a simulation run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MachineStats {
+    /// Pages promoted slow→fast.
+    pub pages_in: u64,
+    /// Pages demoted fast→slow.
+    pub pages_out: u64,
+    /// Allocations that wanted fast memory but spilled to slow.
+    pub alloc_spills: u64,
+    /// High-water mark of fast-memory usage (bytes).
+    pub peak_fast_bytes: u64,
+    /// High-water mark of total usage across both tiers (bytes).
+    pub peak_total_bytes: u64,
+}
+
+/// The simulated machine.
+#[derive(Clone, Debug)]
+pub struct Machine {
+    pub spec: MachineSpec,
+    now_ns: f64,
+    res: Vec<Residency>,
+    used_fast: u64,
+    used_slow: u64,
+    lane_in: Lane,
+    lane_out: Lane,
+    ns_per_page: f64,
+    pub stats: MachineStats,
+}
+
+impl Machine {
+    pub fn new(spec: MachineSpec) -> Self {
+        Machine {
+            ns_per_page: spec.ns_per_page(),
+            spec,
+            now_ns: 0.0,
+            res: Vec::new(),
+            used_fast: 0,
+            used_slow: 0,
+            lane_in: Lane::new(Direction::In),
+            lane_out: Lane::new(Direction::Out),
+            stats: MachineStats::default(),
+        }
+    }
+
+    /// Current simulated time in nanoseconds.
+    pub fn now_ns(&self) -> f64 {
+        self.now_ns
+    }
+
+    /// Bytes currently allocated in a tier.
+    pub fn used_bytes(&self, tier: Tier) -> u64 {
+        match tier {
+            Tier::Fast => self.used_fast,
+            Tier::Slow => self.used_slow,
+        }
+    }
+
+    /// Free bytes in fast memory.
+    pub fn fast_free_bytes(&self) -> u64 {
+        self.spec.fast.capacity_bytes.saturating_sub(self.used_fast)
+    }
+
+    /// Residency of an object (zeroed default if never allocated).
+    pub fn residency(&self, obj: ObjectId) -> Residency {
+        self.res.get(obj.index()).copied().unwrap_or_default()
+    }
+
+    fn res_mut(&mut self, obj: ObjectId) -> &mut Residency {
+        if obj.index() >= self.res.len() {
+            self.res.resize(obj.index() + 1, Residency::default());
+        }
+        &mut self.res[obj.index()]
+    }
+
+    /// Allocate `pages` whole pages for `obj`, preferring `pref`. Falls
+    /// back to the other tier when the preferred one lacks capacity.
+    /// Returns the tier actually used (whole-object placement at alloc
+    /// time; splits only arise from partial migration).
+    ///
+    /// Panics if neither tier can hold the object — simulated OOM is a
+    /// bug in the caller's sizing, not a recoverable condition.
+    pub fn alloc(&mut self, obj: ObjectId, pages: u64, pref: Tier) -> Tier {
+        let bytes = pages * PAGE_SIZE;
+        let fits = |used: u64, cap: u64| used.saturating_add(bytes) <= cap;
+        let tier = match pref {
+            Tier::Fast if fits(self.used_fast, self.spec.fast.capacity_bytes) => Tier::Fast,
+            Tier::Slow if fits(self.used_slow, self.spec.slow.capacity_bytes) => Tier::Slow,
+            Tier::Fast => {
+                self.stats.alloc_spills += 1;
+                assert!(
+                    fits(self.used_slow, self.spec.slow.capacity_bytes),
+                    "simulated OOM: {pages} pages fit neither tier"
+                );
+                Tier::Slow
+            }
+            Tier::Slow => {
+                assert!(
+                    fits(self.used_fast, self.spec.fast.capacity_bytes),
+                    "simulated OOM: {pages} pages fit neither tier"
+                );
+                Tier::Fast
+            }
+        };
+        let r = self.res_mut(obj);
+        assert!(!r.alive, "double alloc of {obj}");
+        *r = Residency {
+            pages_total: pages,
+            pages_fast: if tier == Tier::Fast { pages } else { 0 },
+            alive: true,
+        };
+        match tier {
+            Tier::Fast => self.used_fast += bytes,
+            Tier::Slow => self.used_slow += bytes,
+        }
+        self.stats.peak_fast_bytes = self.stats.peak_fast_bytes.max(self.used_fast);
+        self.stats.peak_total_bytes = self
+            .stats
+            .peak_total_bytes
+            .max(self.used_fast + self.used_slow);
+        tier
+    }
+
+    /// Free an object, releasing pages in both tiers and cancelling any
+    /// in-flight migration work for it.
+    pub fn free(&mut self, obj: ObjectId) {
+        let r = self.res_mut(obj);
+        assert!(r.alive, "free of dead {obj}");
+        let fast_bytes = r.pages_fast * PAGE_SIZE;
+        let slow_bytes = (r.pages_total - r.pages_fast) * PAGE_SIZE;
+        *r = Residency::default();
+        self.used_fast -= fast_bytes;
+        self.used_slow -= slow_bytes;
+        self.lane_in.cancel(obj);
+        self.lane_out.cancel(obj);
+    }
+
+    /// Queue promotion of up to `pages` of `obj` slow→fast. The request is
+    /// clamped to what's actually in slow memory right now.
+    pub fn request_promote(&mut self, obj: ObjectId, pages: u64) {
+        let r = self.residency(obj);
+        if !r.alive {
+            return;
+        }
+        let movable = r.pages_total - r.pages_fast;
+        self.lane_in.push(obj, pages.min(movable));
+    }
+
+    /// Queue demotion of up to `pages` of `obj` fast→slow.
+    pub fn request_demote(&mut self, obj: ObjectId, pages: u64) {
+        let r = self.residency(obj);
+        if !r.alive {
+            return;
+        }
+        self.lane_out.push(obj, pages.min(r.pages_fast));
+    }
+
+    /// Pages queued for promotion (slow→fast) not yet moved.
+    pub fn pending_in_pages(&self) -> u64 {
+        self.lane_in.pending_pages()
+    }
+
+    /// Pages queued for demotion (fast→slow) not yet moved.
+    pub fn pending_out_pages(&self) -> u64 {
+        self.lane_out.pending_pages()
+    }
+
+    /// Did the promotion lane stall on fast-memory capacity during the
+    /// last advance? (The raw signal behind the paper's Case 2.)
+    pub fn promote_stalled(&self) -> bool {
+        self.lane_in.stalled
+    }
+
+    /// Time to drain the promotion lane at migration bandwidth assuming
+    /// no capacity stalls (the paper's Case-3 "continue migration" wait).
+    pub fn promote_drain_time_ns(&self) -> f64 {
+        self.lane_in.drain_time_ns(self.ns_per_page).max(0.0)
+    }
+
+    /// Abandon all queued promotions (Case-3 "leave data in slow memory").
+    pub fn cancel_all_promotions(&mut self) -> u64 {
+        self.lane_in.clear()
+    }
+
+    /// Memory-time (ns) for one operation touching `bytes` of `obj`
+    /// `n_accesses` times, given current residency: a roofline over the
+    /// tier bandwidths plus the latency component, linearly interpolated
+    /// across a split object.
+    pub fn access_time_ns(&self, obj: ObjectId, bytes: u64, n_accesses: u32) -> f64 {
+        let r = self.residency(obj);
+        debug_assert!(r.alive, "access to dead {obj}");
+        let f = r.fast_fraction();
+        let bw = f / self.spec.fast.bandwidth_gbps + (1.0 - f) / self.spec.slow.bandwidth_gbps;
+        let lat = f * self.spec.fast.latency_ns + (1.0 - f) * self.spec.slow.latency_ns;
+        bytes as f64 * bw + n_accesses as f64 * lat
+    }
+
+    /// Advance simulated time by `dt` ns: the clock moves and both
+    /// migration lanes drain concurrently. This is the ONLY way time
+    /// passes — every charged operation also grants the lanes bandwidth,
+    /// which is how migration/compute overlap is modeled.
+    pub fn exec(&mut self, dt: f64) {
+        debug_assert!(dt >= 0.0);
+        self.now_ns += dt;
+
+        // Demotion first: it frees fast space that promotion may need
+        // within the same quantum. Both lanes move pages in bulk chunks
+        // (§Perf: this loop handles millions of simulated pages per run).
+        use crate::sim::migration::MoveOutcome;
+        let mut lane_out = std::mem::replace(&mut self.lane_out, Lane::new(Direction::Out));
+        let moved_out = {
+            let res = &mut self.res;
+            let used_fast = &mut self.used_fast;
+            let used_slow = &mut self.used_slow;
+            let slow_cap = self.spec.slow.capacity_bytes;
+            lane_out.advance(dt, self.ns_per_page, |obj, want| {
+                let r = &mut res[obj.index()];
+                if !r.alive || r.pages_fast == 0 {
+                    return MoveOutcome::Drained;
+                }
+                let room = slow_cap.saturating_sub(*used_slow) / PAGE_SIZE;
+                if room == 0 {
+                    return MoveOutcome::Blocked;
+                }
+                let n = want.min(r.pages_fast).min(room);
+                r.pages_fast -= n;
+                *used_fast -= n * PAGE_SIZE;
+                *used_slow += n * PAGE_SIZE;
+                MoveOutcome::Moved(n)
+            })
+        };
+        self.lane_out = lane_out;
+        self.stats.pages_out += moved_out;
+
+        let mut lane_in = std::mem::replace(&mut self.lane_in, Lane::new(Direction::In));
+        let moved_in = {
+            let res = &mut self.res;
+            let used_fast = &mut self.used_fast;
+            let used_slow = &mut self.used_slow;
+            let fast_cap = self.spec.fast.capacity_bytes;
+            lane_in.advance(dt, self.ns_per_page, |obj, want| {
+                let r = &mut res[obj.index()];
+                if !r.alive || r.pages_fast == r.pages_total {
+                    return MoveOutcome::Drained;
+                }
+                let room = fast_cap.saturating_sub(*used_fast) / PAGE_SIZE;
+                if room == 0 {
+                    return MoveOutcome::Blocked;
+                }
+                let n = want.min(r.pages_total - r.pages_fast).min(room);
+                r.pages_fast += n;
+                *used_fast += n * PAGE_SIZE;
+                *used_slow -= n * PAGE_SIZE;
+                MoveOutcome::Moved(n)
+            })
+        };
+        self.lane_in = lane_in;
+        self.stats.pages_in += moved_in;
+        self.stats.peak_fast_bytes = self.stats.peak_fast_bytes.max(self.used_fast);
+    }
+
+    /// Effective per-page migration time for this machine.
+    pub fn ns_per_page(&self) -> f64 {
+        self.ns_per_page
+    }
+
+    /// Reset clock and counters but keep residency (used between a
+    /// measurement step and the next when searching migration intervals).
+    pub fn reset_clock(&mut self) {
+        self.now_ns = 0.0;
+    }
+
+    /// Drop every object and empty both lanes (fresh training run).
+    pub fn reset_all(&mut self) {
+        self.res.clear();
+        self.used_fast = 0;
+        self.used_slow = 0;
+        self.lane_in = Lane::new(Direction::In);
+        self.lane_out = Lane::new(Direction::Out);
+        self.now_ns = 0.0;
+        self.stats = MachineStats::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn machine_1gb() -> Machine {
+        Machine::new(MachineSpec::paper_testbed(1 << 30))
+    }
+
+    #[test]
+    fn alloc_prefers_requested_tier() {
+        let mut m = machine_1gb();
+        assert_eq!(m.alloc(ObjectId(0), 16, Tier::Fast), Tier::Fast);
+        assert_eq!(m.alloc(ObjectId(1), 16, Tier::Slow), Tier::Slow);
+        assert_eq!(m.used_bytes(Tier::Fast), 16 * PAGE_SIZE);
+        assert_eq!(m.used_bytes(Tier::Slow), 16 * PAGE_SIZE);
+    }
+
+    #[test]
+    fn alloc_spills_to_slow_when_fast_full() {
+        let mut m = Machine::new(MachineSpec::paper_testbed(8 * PAGE_SIZE));
+        assert_eq!(m.alloc(ObjectId(0), 8, Tier::Fast), Tier::Fast);
+        assert_eq!(m.alloc(ObjectId(1), 1, Tier::Fast), Tier::Slow);
+        assert_eq!(m.stats.alloc_spills, 1);
+    }
+
+    #[test]
+    fn free_releases_both_tiers_and_cancels_migration() {
+        let mut m = machine_1gb();
+        m.alloc(ObjectId(0), 100, Tier::Slow);
+        m.request_promote(ObjectId(0), 100);
+        // Move roughly half.
+        m.exec(50.0 * m.ns_per_page());
+        let r = m.residency(ObjectId(0));
+        assert!(r.pages_fast > 0 && r.pages_fast < 100);
+        m.free(ObjectId(0));
+        assert_eq!(m.used_bytes(Tier::Fast), 0);
+        assert_eq!(m.used_bytes(Tier::Slow), 0);
+        assert_eq!(m.pending_in_pages(), 0);
+    }
+
+    #[test]
+    fn promotion_respects_capacity_and_stalls() {
+        let mut m = Machine::new(MachineSpec::paper_testbed(4 * PAGE_SIZE));
+        m.alloc(ObjectId(0), 4, Tier::Fast);
+        m.alloc(ObjectId(1), 4, Tier::Slow);
+        m.request_promote(ObjectId(1), 4);
+        m.exec(100.0 * m.ns_per_page());
+        assert_eq!(m.residency(ObjectId(1)).pages_fast, 0);
+        assert!(m.promote_stalled());
+        // Free the blocker: promotion resumes.
+        m.free(ObjectId(0));
+        m.exec(100.0 * m.ns_per_page());
+        assert_eq!(m.residency(ObjectId(1)).pages_fast, 4);
+        assert!(!m.promote_stalled());
+    }
+
+    #[test]
+    fn demotion_frees_space_for_promotion_same_quantum() {
+        let mut m = Machine::new(MachineSpec::paper_testbed(4 * PAGE_SIZE));
+        m.alloc(ObjectId(0), 4, Tier::Fast);
+        m.alloc(ObjectId(1), 4, Tier::Slow);
+        m.request_demote(ObjectId(0), 4);
+        m.request_promote(ObjectId(1), 4);
+        m.exec(1000.0 * m.ns_per_page());
+        assert_eq!(m.residency(ObjectId(0)).pages_fast, 0);
+        assert_eq!(m.residency(ObjectId(1)).pages_fast, 4);
+        assert_eq!(m.stats.pages_in, 4);
+        assert_eq!(m.stats.pages_out, 4);
+    }
+
+    #[test]
+    fn access_time_reflects_tier() {
+        let mut m = machine_1gb();
+        m.alloc(ObjectId(0), 256, Tier::Fast);
+        m.alloc(ObjectId(1), 256, Tier::Slow);
+        let bytes = 256 * PAGE_SIZE;
+        let t_fast = m.access_time_ns(ObjectId(0), bytes, 1);
+        let t_slow = m.access_time_ns(ObjectId(1), bytes, 1);
+        assert!(t_slow > t_fast);
+        // Ratio tracks bandwidth ratio 34/19 for BW-dominated access.
+        let ratio = t_slow / t_fast;
+        assert!((ratio - 34.0 / 19.0).abs() < 0.05, "ratio={ratio}");
+    }
+
+    #[test]
+    fn split_object_access_time_interpolates() {
+        let mut m = machine_1gb();
+        m.alloc(ObjectId(0), 100, Tier::Slow);
+        let bytes = 100 * PAGE_SIZE;
+        let t_all_slow = m.access_time_ns(ObjectId(0), bytes, 10);
+        m.request_promote(ObjectId(0), 50);
+        m.exec(50.0 * m.ns_per_page());
+        assert_eq!(m.residency(ObjectId(0)).pages_fast, 50);
+        let t_half = m.access_time_ns(ObjectId(0), bytes, 10);
+        m.request_promote(ObjectId(0), 50);
+        m.exec(50.0 * m.ns_per_page());
+        let t_all_fast = m.access_time_ns(ObjectId(0), bytes, 10);
+        assert!(t_all_fast < t_half && t_half < t_all_slow);
+    }
+
+    #[test]
+    fn peak_tracking() {
+        let mut m = machine_1gb();
+        m.alloc(ObjectId(0), 10, Tier::Fast);
+        m.alloc(ObjectId(1), 20, Tier::Slow);
+        m.free(ObjectId(0));
+        assert_eq!(m.stats.peak_fast_bytes, 10 * PAGE_SIZE);
+        assert_eq!(m.stats.peak_total_bytes, 30 * PAGE_SIZE);
+    }
+
+    #[test]
+    fn clock_advances_with_exec() {
+        let mut m = machine_1gb();
+        m.exec(123.0);
+        m.exec(77.0);
+        assert!((m.now_ns() - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn double_alloc_panics() {
+        let mut m = machine_1gb();
+        m.alloc(ObjectId(0), 1, Tier::Fast);
+        m.alloc(ObjectId(0), 1, Tier::Fast);
+    }
+}

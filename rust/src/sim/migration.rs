@@ -1,0 +1,289 @@
+//! Migration lanes: the simulated counterpart of Sentinel's two helper
+//! threads (§5, Fig. 9) — one moving pages slow→fast, one fast→slow —
+//! and of Yan et al.'s parallel/concurrent page-copy machinery.
+//!
+//! A lane is a FIFO of page-move requests that drains at the machine's
+//! migration bandwidth *concurrently with compute*: the [`Machine`]
+//! (see `machine.rs`) advances lanes by the same `dt` it charges for each
+//! operation, which is how overlap (and its failure — exposure on the
+//! critical path) is modeled.
+//!
+//! [`Machine`]: super::machine::Machine
+
+use std::collections::VecDeque;
+
+use crate::mem::ObjectId;
+
+/// Direction of a page move.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    /// Slow → fast (prefetch / promotion).
+    In,
+    /// Fast → slow (eviction / demotion).
+    Out,
+}
+
+/// A queued request to move `pages` pages of `obj` in the lane direction.
+#[derive(Clone, Copy, Debug)]
+pub struct MoveRequest {
+    pub obj: ObjectId,
+    pub pages: u64,
+}
+
+/// Result of one bulk move attempt (see [`Lane::advance`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MoveOutcome {
+    /// Moved this many pages (> 0).
+    Moved(u64),
+    /// Nothing movable remains for this object: drop the request.
+    Drained,
+    /// Destination has no room: stall the lane.
+    Blocked,
+}
+
+/// A migration lane: FIFO of requests plus accumulated bandwidth credit.
+#[derive(Clone, Debug)]
+pub struct Lane {
+    pub dir: Direction,
+    queue: VecDeque<MoveRequest>,
+    /// Unspent simulated time credit (ns). Each page consumes
+    /// `ns_per_page`; the fractional remainder carries across `advance`
+    /// calls so short intervals still make progress.
+    credit_ns: f64,
+    /// Total pages queued and not yet moved (kept in sync with `queue`).
+    pending_pages: u64,
+    /// True if the last advance was blocked by destination capacity —
+    /// this is what turns into the paper's migration Case 2.
+    pub stalled: bool,
+}
+
+impl Lane {
+    pub fn new(dir: Direction) -> Self {
+        Lane {
+            dir,
+            queue: VecDeque::new(),
+            credit_ns: 0.0,
+            pending_pages: 0,
+            stalled: false,
+        }
+    }
+
+    /// Enqueue a move request. Zero-page requests are ignored.
+    pub fn push(&mut self, obj: ObjectId, pages: u64) {
+        if pages == 0 {
+            return;
+        }
+        self.pending_pages += pages;
+        self.queue.push_back(MoveRequest { obj, pages });
+    }
+
+    /// Remove all queued work for `obj` (called when the object is freed
+    /// mid-migration). Returns the number of pages cancelled.
+    pub fn cancel(&mut self, obj: ObjectId) -> u64 {
+        let mut cancelled = 0;
+        self.queue.retain(|r| {
+            if r.obj == obj {
+                cancelled += r.pages;
+                false
+            } else {
+                true
+            }
+        });
+        self.pending_pages -= cancelled;
+        cancelled
+    }
+
+    /// Pages still queued.
+    pub fn pending_pages(&self) -> u64 {
+        self.pending_pages
+    }
+
+    /// Drop the whole queue (the Case-3 "leave data in slow memory" arm).
+    /// Returns the number of pages cancelled.
+    pub fn clear(&mut self) -> u64 {
+        let cancelled = self.pending_pages;
+        self.queue.clear();
+        self.pending_pages = 0;
+        self.stalled = false;
+        cancelled
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Time (ns) needed to drain the current queue at `ns_per_page`,
+    /// ignoring capacity stalls. Used by the coordinator's Case-3
+    /// "continue migration" arm to decide how long to block.
+    pub fn drain_time_ns(&self, ns_per_page: f64) -> f64 {
+        self.pending_pages as f64 * ns_per_page - self.credit_ns
+    }
+
+    /// Grant `dt` nanoseconds of bandwidth and move pages. For each head
+    /// request, `try_move(obj, max_pages)` performs the residency and
+    /// capacity bookkeeping *in bulk* and reports a [`MoveOutcome`]:
+    ///
+    /// * `Moved(n)`  — `0 < n ≤ max_pages` pages moved;
+    /// * `Drained`   — nothing left to move for this object (freed or
+    ///   already fully resident): the request is dropped;
+    /// * `Blocked`   — destination full: the lane stalls (FIFO order is
+    ///   preserved; no bypass) until space frees up.
+    ///
+    /// Returns the number of pages moved.
+    ///
+    /// §Perf: requests are processed in whole-batch chunks rather than
+    /// page-at-a-time — the migration lane is the simulator's hottest
+    /// loop (millions of simulated pages per run); see EXPERIMENTS.md
+    /// §Perf for the before/after.
+    pub fn advance(
+        &mut self,
+        dt: f64,
+        ns_per_page: f64,
+        mut try_move: impl FnMut(ObjectId, u64) -> MoveOutcome,
+    ) -> u64 {
+        self.credit_ns += dt;
+        // Don't bank unbounded credit while idle or stalled: a lane can
+        // never retroactively use bandwidth from periods where it had
+        // nothing (or no room) to do.
+        let mut moved = 0u64;
+        self.stalled = false;
+        while let Some(head) = self.queue.front_mut() {
+            let budget = (self.credit_ns / ns_per_page) as u64;
+            if budget == 0 {
+                break;
+            }
+            let want = budget.min(head.pages);
+            match try_move(head.obj, want) {
+                MoveOutcome::Drained => {
+                    // Nothing left of this object in the source tier.
+                    self.pending_pages -= head.pages;
+                    self.queue.pop_front();
+                }
+                MoveOutcome::Moved(n) => {
+                    debug_assert!(0 < n && n <= want);
+                    self.credit_ns -= n as f64 * ns_per_page;
+                    moved += n;
+                    self.pending_pages -= n;
+                    head.pages -= n;
+                    if head.pages == 0 {
+                        self.queue.pop_front();
+                    }
+                    // Partial progress (n < want) loops again: the next
+                    // try_move reports Blocked or Drained as appropriate.
+                }
+                MoveOutcome::Blocked => {
+                    self.stalled = true;
+                    break;
+                }
+            }
+        }
+        if self.queue.is_empty() || self.stalled {
+            self.credit_ns = self.credit_ns.min(ns_per_page);
+        }
+        moved
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const NSPP: f64 = 100.0;
+
+    #[test]
+    fn lane_moves_pages_at_bandwidth() {
+        let mut lane = Lane::new(Direction::In);
+        lane.push(ObjectId(1), 10);
+        let moved = lane.advance(450.0, NSPP, |_, want| MoveOutcome::Moved(want));
+        assert_eq!(moved, 4);
+        assert_eq!(lane.pending_pages(), 6);
+        let moved = lane.advance(600.0, NSPP, |_, want| MoveOutcome::Moved(want));
+        assert_eq!(moved, 6);
+        assert!(lane.is_empty());
+    }
+
+    #[test]
+    fn partial_bulk_moves_make_progress() {
+        // The closure moves at most 2 pages per attempt (tight
+        // destination room that keeps reopening): the lane must keep
+        // looping within one advance call.
+        let mut lane = Lane::new(Direction::In);
+        lane.push(ObjectId(1), 10);
+        let moved = lane.advance(2000.0, NSPP, |_, want| MoveOutcome::Moved(want.min(2)));
+        assert_eq!(moved, 10);
+        assert!(lane.is_empty());
+    }
+
+    #[test]
+    fn fractional_credit_carries_over() {
+        let mut lane = Lane::new(Direction::In);
+        lane.push(ObjectId(1), 2);
+        assert_eq!(lane.advance(60.0, NSPP, |_, w| MoveOutcome::Moved(w)), 0);
+        assert_eq!(lane.advance(60.0, NSPP, |_, w| MoveOutcome::Moved(w)), 1);
+    }
+
+    #[test]
+    fn stall_preserves_fifo_and_flags() {
+        let mut lane = Lane::new(Direction::In);
+        lane.push(ObjectId(1), 2);
+        lane.push(ObjectId(2), 2);
+        // Destination full: nothing moves, lane reports stalled.
+        let moved = lane.advance(1000.0, NSPP, |_, _| MoveOutcome::Blocked);
+        assert_eq!(moved, 0);
+        assert!(lane.stalled);
+        assert_eq!(lane.pending_pages(), 4);
+        // Space frees up: obj 1 still goes first.
+        let mut order = vec![];
+        lane.advance(400.0, NSPP, |o, w| {
+            order.push(o);
+            MoveOutcome::Moved(w)
+        });
+        assert_eq!(order[0], ObjectId(1));
+    }
+
+    #[test]
+    fn credit_does_not_bank_while_stalled() {
+        let mut lane = Lane::new(Direction::In);
+        lane.push(ObjectId(1), 100);
+        lane.advance(1_000_000.0, NSPP, |_, _| MoveOutcome::Blocked);
+        // After the stall clears only ~1 page worth of credit remains.
+        let moved = lane.advance(0.0, NSPP, |_, w| MoveOutcome::Moved(w));
+        assert!(moved <= 1, "moved {moved} pages from banked credit");
+    }
+
+    #[test]
+    fn cancel_removes_pending_work() {
+        let mut lane = Lane::new(Direction::Out);
+        lane.push(ObjectId(1), 5);
+        lane.push(ObjectId(2), 3);
+        assert_eq!(lane.cancel(ObjectId(1)), 5);
+        assert_eq!(lane.pending_pages(), 3);
+        let moved = lane.advance(10_000.0, NSPP, |o, w| {
+            assert_eq!(o, ObjectId(2));
+            MoveOutcome::Moved(w)
+        });
+        assert_eq!(moved, 3);
+    }
+
+    #[test]
+    fn drained_object_requests_are_dropped() {
+        let mut lane = Lane::new(Direction::In);
+        lane.push(ObjectId(1), 4);
+        lane.push(ObjectId(2), 1);
+        // Object 1 reports nothing left to move (freed).
+        let moved = lane.advance(200.0, NSPP, |o, w| {
+            if o == ObjectId(1) { MoveOutcome::Drained } else { MoveOutcome::Moved(w) }
+        });
+        assert_eq!(moved, 1);
+        assert!(lane.is_empty());
+    }
+
+    #[test]
+    fn drain_time_accounts_for_credit() {
+        let mut lane = Lane::new(Direction::In);
+        lane.push(ObjectId(1), 10);
+        assert!((lane.drain_time_ns(NSPP) - 1000.0).abs() < 1e-9);
+        lane.advance(250.0, NSPP, |_, w| MoveOutcome::Moved(w));
+        assert!((lane.drain_time_ns(NSPP) - 750.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,26 @@
+//! Discrete-event simulator of a software-managed heterogeneous-memory
+//! machine.
+//!
+//! The paper's testbed (Table 2) is a 2-socket Xeon E5-2670 v3 where the
+//! local socket's DDR4 plays *fast* memory (34 GB/s, 87 ns) and the remote
+//! socket's DDR4 plays *slow* memory (19 GB/s, 182.7 ns), with 19 GB/s of
+//! cross-socket migration bandwidth. We cannot reproduce that hardware, so
+//! this module models the quantities that determine wall time on it:
+//!
+//! * per-layer execution time from a roofline over the byte traffic each
+//!   operation issues against the tier its operands reside in, and
+//! * migration progress charged against dedicated migration lanes that
+//!   drain concurrently with compute (the paper's helper threads).
+//!
+//! Time is in **nanoseconds**; bandwidth in **GB/s**, which conveniently
+//! equals **bytes/ns** (1 GB/s = 1e9 B / 1e9 ns).
+
+pub mod device;
+pub mod engine;
+pub mod machine;
+pub mod migration;
+
+pub use device::{DeviceSpec, MachineSpec, Tier};
+pub use engine::{Engine, EngineConfig, Policy, StepStats, TrainResult};
+pub use machine::{Machine, Residency};
+pub use migration::{Direction, Lane, MoveRequest};

@@ -1,0 +1,114 @@
+//! Wall-clock benchmarking helpers (in lieu of `criterion`, which is not
+//! available offline). `cargo bench` runs our `harness = false` bench
+//! binaries, which use [`time_it`] / [`Bencher`] to report min/median/mean
+//! over repeated runs.
+
+use std::time::Instant;
+
+/// Timing summary over repeated runs of a closure.
+#[derive(Clone, Copy, Debug)]
+pub struct Timing {
+    pub iters: u32,
+    pub min_ns: u128,
+    pub median_ns: u128,
+    pub mean_ns: u128,
+    pub max_ns: u128,
+}
+
+impl Timing {
+    pub fn report(&self, label: &str) {
+        println!(
+            "{label:<44} iters={:<3} min={} median={} mean={} max={}",
+            self.iters,
+            fmt_ns(self.min_ns),
+            fmt_ns(self.median_ns),
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.max_ns),
+        );
+    }
+}
+
+/// Human-readable nanoseconds.
+pub fn fmt_ns(ns: u128) -> String {
+    if ns >= 1_000_000_000 {
+        format!("{:.3}s", ns as f64 / 1e9)
+    } else if ns >= 1_000_000 {
+        format!("{:.3}ms", ns as f64 / 1e6)
+    } else if ns >= 1_000 {
+        format!("{:.3}µs", ns as f64 / 1e3)
+    } else {
+        format!("{ns}ns")
+    }
+}
+
+/// Run `f` `iters` times (after one warm-up) and summarize.
+pub fn time_it<R>(iters: u32, mut f: impl FnMut() -> R) -> Timing {
+    assert!(iters > 0);
+    std::hint::black_box(f()); // warm-up
+    let mut samples: Vec<u128> = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_nanos());
+    }
+    samples.sort_unstable();
+    let sum: u128 = samples.iter().sum();
+    Timing {
+        iters,
+        min_ns: samples[0],
+        median_ns: samples[samples.len() / 2],
+        mean_ns: sum / samples.len() as u128,
+        max_ns: *samples.last().unwrap(),
+    }
+}
+
+/// Convenience wrapper that times and reports in one call, returning the
+/// result of the final run so benches can also print derived metrics.
+pub struct Bencher {
+    pub iters: u32,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self { iters: 5 }
+    }
+}
+
+impl Bencher {
+    pub fn new(iters: u32) -> Self {
+        Self { iters }
+    }
+
+    pub fn run<R>(&self, label: &str, mut f: impl FnMut() -> R) -> R {
+        let t = time_it(self.iters, &mut f);
+        t.report(label);
+        f()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_orders_statistics() {
+        let t = time_it(9, || {
+            let mut x = 0u64;
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(t.min_ns <= t.median_ns);
+        assert!(t.median_ns <= t.max_ns);
+        assert!(t.mean_ns >= t.min_ns && t.mean_ns <= t.max_ns);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(12), "12ns");
+        assert_eq!(fmt_ns(1_500), "1.500µs");
+        assert_eq!(fmt_ns(2_000_000), "2.000ms");
+        assert_eq!(fmt_ns(3_000_000_000), "3.000s");
+    }
+}

@@ -1,0 +1,11 @@
+//! Small in-tree utilities replacing crates that are unavailable in this
+//! offline build environment: a deterministic PRNG (`rng`), a minimal
+//! property-testing harness (`prop`), wall-clock bench helpers (`bench`),
+//! and table formatting (`table`).
+
+pub mod bench;
+pub mod prop;
+pub mod rng;
+pub mod table;
+
+pub use rng::Rng;

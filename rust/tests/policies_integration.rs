@@ -1,0 +1,162 @@
+//! Cross-policy integration tests over the full simulator stack: every
+//! model in the zoo, every policy, checking the orderings the paper's
+//! evaluation establishes.
+
+use sentinel_hm::coordinator::sentinel::{run_fast_only, run_sentinel, SentinelConfig};
+use sentinel_hm::dnn::zoo::Model;
+use sentinel_hm::dnn::StepTrace;
+use sentinel_hm::figures::{run_ial, run_lru};
+use sentinel_hm::sim::{Engine, EngineConfig, Machine, MachineSpec, Tier};
+
+const STEPS: u32 = 14;
+
+fn slow_only(g: &sentinel_hm::dnn::ModelGraph) -> f64 {
+    let trace = StepTrace::from_graph(g);
+    let mut m = Machine::new(MachineSpec::slow_only());
+    let e = Engine::new(EngineConfig { steps: 3, ..Default::default() });
+    e.run(
+        g,
+        &trace,
+        &mut m,
+        &mut sentinel_hm::sim::engine::StaticPolicy { tier: Tier::Slow },
+    )
+    .throughput(1)
+}
+
+#[test]
+fn all_models_policy_ordering_at_20pct() {
+    for model in Model::paper_five() {
+        let g = model.build(0x5E17);
+        let fast = model.peak_memory_target() / 5;
+        let fthr = run_fast_only(&g, 5).throughput(1);
+        let (s, _, tuning) = run_sentinel(&g, fast, STEPS, SentinelConfig::default());
+        let sthr = s.throughput(tuning as usize);
+        let ithr = run_ial(&g, fast, STEPS).throughput(3);
+        let slow = slow_only(&g);
+        let name = model.name();
+        // Paper Fig. 10 orderings.
+        assert!(sthr <= fthr * 1.02, "{name}: Sentinel can't beat fast-only");
+        assert!(
+            sthr >= 0.85 * fthr,
+            "{name}: Sentinel must be within 15% of fast-only ({:.3})",
+            sthr / fthr
+        );
+        assert!(sthr > ithr, "{name}: Sentinel must beat IAL");
+        assert!(ithr > slow * 0.99, "{name}: IAL must beat slow-only");
+        assert!(slow < 0.95 * fthr, "{name}: slow-only must trail fast-only");
+    }
+}
+
+#[test]
+fn sentinel_beats_ial_by_meaningful_margin() {
+    // Paper: +18% on average. Require ≥ +5% on average across models.
+    let mut ratios = Vec::new();
+    for model in Model::paper_five() {
+        let g = model.build(0x5E17);
+        let fast = model.peak_memory_target() / 5;
+        let (s, _, t) = run_sentinel(&g, fast, STEPS, SentinelConfig::default());
+        let i = run_ial(&g, fast, STEPS);
+        ratios.push(s.throughput(t as usize) / i.throughput(3));
+    }
+    let avg = ratios.iter().sum::<f64>() / ratios.len() as f64;
+    assert!(avg > 1.05, "Sentinel/IAL avg {avg:.3} (paper: 1.18)");
+}
+
+#[test]
+fn sentinel_migrates_more_than_ial() {
+    // Paper Table 4: Sentinel has ~88% more migrations — frequent,
+    // well-overlapped migration is the design, not a bug.
+    let mut more = 0;
+    for model in Model::paper_five() {
+        let g = model.build(0x5E17);
+        let fast = model.peak_memory_target() / 5;
+        let (s, _, _) = run_sentinel(&g, fast, STEPS, SentinelConfig::default());
+        let i = run_ial(&g, fast, STEPS);
+        if s.total_migrations() > i.total_migrations() {
+            more += 1;
+        }
+    }
+    assert!(more >= 3, "Sentinel should out-migrate IAL on most models ({more}/5)");
+}
+
+#[test]
+fn lru_is_between_slow_and_fast() {
+    let model = Model::ResNetV1 { depth: 32 };
+    let g = model.build(0x5E17);
+    let fast = model.peak_memory_target() / 5;
+    let fthr = run_fast_only(&g, 5).throughput(1);
+    let lthr = run_lru(&g, fast, STEPS).throughput(3);
+    let slow = slow_only(&g);
+    assert!(lthr < fthr * 1.01);
+    assert!(lthr > slow);
+}
+
+#[test]
+fn fig12_larger_fast_memory_never_hurts_much() {
+    for model in [Model::ResNetV1 { depth: 32 }, Model::Dcgan] {
+        let g = model.build(0x5E17);
+        let mut prev = 0.0;
+        for pct in [10u64, 20, 40, 60] {
+            let fast = model.peak_memory_target() * pct / 100;
+            let (r, _, t) = run_sentinel(&g, fast, STEPS, SentinelConfig::default());
+            let thr = r.throughput(t as usize);
+            assert!(
+                thr >= prev * 0.97,
+                "{}: throughput dropped {prev:.3} → {thr:.3} at {pct}%",
+                model.name()
+            );
+            prev = thr;
+        }
+    }
+}
+
+#[test]
+fn fig13_required_fast_share_does_not_grow_with_depth() {
+    let rows = sentinel_hm::figures::fig13_variants(10);
+    assert_eq!(rows.len(), 5);
+    let first = rows[0].2 as f64 / rows[0].1 as f64;
+    let last = rows.last().unwrap().2 as f64 / rows.last().unwrap().1 as f64;
+    assert!(last <= first + 0.05, "fast share grew: {first:.2} → {last:.2}");
+    // Peaks grow with depth.
+    for w in rows.windows(2) {
+        assert!(w[1].1 > w[0].1);
+    }
+}
+
+#[test]
+fn ablations_cost_performance() {
+    let model = Model::ResNetV1 { depth: 32 };
+    let g = model.build(0x5E17);
+    let fast = model.peak_memory_target() / 5;
+    let (full, _, t) = run_sentinel(&g, fast, STEPS, SentinelConfig::default());
+    let base = full.throughput(t as usize);
+    let (no_rs, _, t2) = run_sentinel(
+        &g,
+        fast,
+        STEPS,
+        SentinelConfig { reserve_space: false, ..Default::default() },
+    );
+    let (no_fs, _, t3) = run_sentinel(
+        &g,
+        fast,
+        STEPS,
+        SentinelConfig { handle_false_sharing: false, ..Default::default() },
+    );
+    assert!(no_rs.throughput(t2 as usize) <= base * 1.02);
+    assert!(no_fs.throughput(t3 as usize) <= base * 1.02);
+}
+
+#[test]
+fn tuning_steps_are_bounded_like_table3() {
+    // Paper Table 3: 2–8 steps for profiling + MI search + trial.
+    for model in Model::paper_five() {
+        let g = model.build(0x5E17);
+        let fast = model.peak_memory_target() / 5;
+        let (_, _, tuning) = run_sentinel(&g, fast, STEPS, SentinelConfig::default());
+        assert!(
+            (2..=10).contains(&tuning),
+            "{}: tuning steps {tuning} out of Table-3 range",
+            model.name()
+        );
+    }
+}

@@ -1,0 +1,282 @@
+//! Property-based tests over the coordinator/simulator invariants, using
+//! the in-tree `util::prop` harness (no proptest in the offline build).
+//!
+//! Invariants covered:
+//! * machine capacity is never exceeded, residency never goes negative,
+//!   and used-bytes accounting matches residency exactly under random
+//!   alloc/free/promote/demote/exec sequences;
+//! * migration lanes conserve pages (no page created or lost);
+//! * migration plans only prefetch live, long-lived, pre-existing
+//!   objects, and RS reservations are bounded;
+//! * the short-lived pool never lends more than it reserved;
+//! * the engine returns memory to the persistent baseline every step.
+
+use sentinel_hm::coordinator::plan::MigrationPlan;
+use sentinel_hm::dnn::graph::GraphBuilder;
+use sentinel_hm::dnn::layer::LayerKind;
+use sentinel_hm::dnn::{ModelGraph, StepTrace};
+use sentinel_hm::mem::{ObjectId, ShortLivedPool};
+use sentinel_hm::sim::{Machine, MachineSpec, Tier};
+use sentinel_hm::util::prop::{check, Gen};
+use sentinel_hm::PAGE_SIZE;
+
+/// Random small graph: a few layers, random objects with consistent
+/// lifetimes and accesses.
+fn random_graph(g: &mut Gen) -> ModelGraph {
+    let n_layers = g.range(2, 12) as u32;
+    let mut b = GraphBuilder::new("prop", 4);
+    for i in 0..n_layers {
+        b.layer(LayerKind::Dense, format!("l{i}"), g.range(0, 1_000_000) as f64, false);
+    }
+    let n_objects = g.range(1, 60);
+    for _ in 0..n_objects {
+        let alloc = g.range(0, (n_layers - 1) as u64) as u32;
+        let free = g.range(alloc as u64, (n_layers - 1) as u64) as u32;
+        let size = g.range(16, 3 * PAGE_SIZE);
+        if g.bool(0.15) {
+            let h = b.persistent(size);
+            for l in 0..n_layers {
+                if g.bool(0.4) {
+                    b.access(h, l, g.range(1, 20) as u32);
+                }
+            }
+        } else {
+            let h = b.object(size, alloc, free);
+            for l in alloc..=free {
+                if g.bool(0.6) {
+                    b.access(h, l, g.range(1, 20) as u32);
+                }
+            }
+        }
+    }
+    b.finish()
+}
+
+#[test]
+fn machine_capacity_and_accounting_invariants() {
+    check("machine invariants", 96, |g| {
+        let cap_pages = g.range(1, 64);
+        let spec = MachineSpec::paper_testbed(cap_pages * PAGE_SIZE);
+        let mut m = Machine::new(spec);
+        let mut live: Vec<(ObjectId, u64)> = Vec::new();
+        let mut next_id = 0u32;
+        for _ in 0..g.range(1, 200) {
+            match g.range(0, 5) {
+                0 => {
+                    let pages = g.range(1, 8);
+                    let pref = if g.bool(0.5) { Tier::Fast } else { Tier::Slow };
+                    let id = ObjectId(next_id);
+                    next_id += 1;
+                    m.alloc(id, pages, pref);
+                    live.push((id, pages));
+                }
+                1 => {
+                    if !live.is_empty() {
+                        let idx = g.range(0, live.len() as u64 - 1) as usize;
+                        let (id, _) = live.swap_remove(idx);
+                        m.free(id);
+                    }
+                }
+                2 => {
+                    if !live.is_empty() {
+                        let idx = g.range(0, live.len() as u64 - 1) as usize;
+                        let (id, pages) = live[idx];
+                        m.request_promote(id, g.range(1, pages));
+                    }
+                }
+                3 => {
+                    if !live.is_empty() {
+                        let idx = g.range(0, live.len() as u64 - 1) as usize;
+                        let (id, pages) = live[idx];
+                        m.request_demote(id, g.range(1, pages));
+                    }
+                }
+                _ => {
+                    m.exec(g.range(0, 100_000) as f64);
+                }
+            }
+            // INVARIANT: fast usage within capacity.
+            assert!(
+                m.used_bytes(Tier::Fast) <= cap_pages * PAGE_SIZE,
+                "fast over capacity"
+            );
+            // INVARIANT: accounting matches residency.
+            let (mut fast, mut total) = (0u64, 0u64);
+            for &(id, pages) in &live {
+                let r = m.residency(id);
+                assert!(r.alive);
+                assert_eq!(r.pages_total, pages, "residency total drifted");
+                assert!(r.pages_fast <= r.pages_total, "fast > total");
+                fast += r.pages_fast;
+                total += r.pages_total;
+            }
+            assert_eq!(m.used_bytes(Tier::Fast), fast * PAGE_SIZE);
+            assert_eq!(
+                m.used_bytes(Tier::Fast) + m.used_bytes(Tier::Slow),
+                total * PAGE_SIZE,
+                "pages created or lost"
+            );
+        }
+    });
+}
+
+#[test]
+fn lane_drain_completes_all_requests() {
+    check("lane conservation", 64, |g| {
+        let spec = MachineSpec::paper_testbed(u64::MAX);
+        let mut m = Machine::new(spec);
+        let n = g.range(1, 30) as u32;
+        let mut total_pages = 0;
+        for i in 0..n {
+            let pages = g.range(1, 64);
+            m.alloc(ObjectId(i), pages, Tier::Slow);
+            m.request_promote(ObjectId(i), pages);
+            total_pages += pages;
+        }
+        // Grant more than enough time: everything must arrive.
+        m.exec((total_pages as f64 + 10.0) * m.ns_per_page() * 2.0);
+        for i in 0..n {
+            let r = m.residency(ObjectId(i));
+            assert_eq!(r.pages_fast, r.pages_total, "promotion incomplete");
+        }
+        assert_eq!(m.stats.pages_in, total_pages);
+        assert_eq!(m.pending_in_pages(), 0);
+    });
+}
+
+#[test]
+fn plan_invariants_hold_for_random_graphs() {
+    check("plan invariants", 48, |g| {
+        let graph = random_graph(g);
+        let mi = g.range(1, graph.n_layers() as u64) as u32;
+        let spec = MachineSpec::paper_testbed(1 << 30);
+        let plan = MigrationPlan::build(&graph, mi, &spec);
+        assert_eq!(plan.n_intervals, graph.n_layers().div_ceil(mi));
+        // Prefetch entries: long-lived, existing before their interval.
+        for (k, objs) in plan.prefetch.iter().enumerate() {
+            for oid in objs {
+                let o = &graph.objects[oid.index()];
+                assert!(!o.is_short_lived());
+                assert!(o.alloc_layer < k as u32 * mi);
+            }
+        }
+        // Eviction entries: alive at that layer.
+        for (l, objs) in plan.evict_after_layer.iter().enumerate() {
+            for oid in objs {
+                let o = &graph.objects[oid.index()];
+                assert!(o.alive_in_layer(l as u32));
+            }
+        }
+        // RS bounded by page-rounded short-lived total.
+        let bound: u64 = graph
+            .objects
+            .iter()
+            .filter(|o| o.is_short_lived())
+            .map(|o| o.pages() * PAGE_SIZE)
+            .sum();
+        assert!(plan.max_rs_bytes() <= bound);
+    });
+}
+
+#[test]
+fn pool_never_overlends() {
+    check("pool bounds", 96, |g| {
+        let mut pool = ShortLivedPool::new(g.bool(0.5));
+        let mut served: Vec<ObjectId> = Vec::new();
+        let mut next = 0u32;
+        for _ in 0..g.range(1, 100) {
+            match g.range(0, 2) {
+                0 => {
+                    pool.begin_interval(g.range(0, 1 << 20));
+                }
+                1 => {
+                    let id = ObjectId(next);
+                    next += 1;
+                    if pool.serve(id, g.range(1, 1 << 16)) {
+                        served.push(id);
+                    }
+                }
+                _ => {
+                    if !served.is_empty() {
+                        let idx = g.range(0, served.len() as u64 - 1) as usize;
+                        pool.release(served.swap_remove(idx));
+                    }
+                }
+            }
+            assert!(
+                pool.in_use_bytes() <= pool.reserved_bytes(),
+                "pool lent more than reserved"
+            );
+        }
+    });
+}
+
+#[test]
+fn engine_returns_to_persistent_baseline_on_random_graphs() {
+    check("engine baseline", 24, |g| {
+        let graph = random_graph(g);
+        let trace = StepTrace::from_graph(&graph);
+        let mut m = Machine::new(MachineSpec::paper_testbed(u64::MAX));
+        let e = sentinel_hm::sim::Engine::new(sentinel_hm::sim::EngineConfig {
+            steps: 2,
+            ..Default::default()
+        });
+        let r = e.run(
+            &graph,
+            &trace,
+            &mut m,
+            &mut sentinel_hm::sim::engine::StaticPolicy { tier: Tier::Fast },
+        );
+        assert_eq!(r.steps.len(), 2);
+        let persistent: u64 = graph
+            .objects
+            .iter()
+            .filter(|o| o.persistent)
+            .map(|o| o.pages() * PAGE_SIZE)
+            .sum();
+        assert_eq!(
+            m.used_bytes(Tier::Fast) + m.used_bytes(Tier::Slow),
+            persistent,
+            "non-persistent memory leaked across steps"
+        );
+    });
+}
+
+#[test]
+fn trace_events_are_consistent_for_random_graphs() {
+    check("trace consistency", 48, |g| {
+        let graph = random_graph(g);
+        let trace = StepTrace::from_graph(&graph);
+        // Every non-persistent object allocs exactly once and frees
+        // exactly once; accesses only between them.
+        let mut state = vec![0u8; graph.objects.len()]; // 0=unborn 1=live 2=dead
+        for &p in &trace.persistent {
+            state[p.index()] = 1;
+        }
+        for lt in &trace.layers {
+            for ev in &lt.events {
+                match *ev {
+                    sentinel_hm::dnn::TraceEvent::Alloc(o) => {
+                        assert_eq!(state[o.index()], 0, "double alloc");
+                        state[o.index()] = 1;
+                    }
+                    sentinel_hm::dnn::TraceEvent::Access { obj, count } => {
+                        assert_eq!(state[obj.index()], 1, "access while not live");
+                        assert!(count > 0);
+                    }
+                    sentinel_hm::dnn::TraceEvent::Free(o) => {
+                        assert_eq!(state[o.index()], 1, "free while not live");
+                        state[o.index()] = 2;
+                    }
+                }
+            }
+        }
+        for (i, o) in graph.objects.iter().enumerate() {
+            if o.persistent {
+                assert_eq!(state[i], 1);
+            } else {
+                assert_eq!(state[i], 2, "object never freed");
+            }
+        }
+    });
+}

@@ -1,0 +1,102 @@
+//! Integration: the AOT artifacts load, compile and train through the
+//! PJRT runtime — the full L1(Pallas)→L2(JAX)→L3(Rust) composition.
+//!
+//! Requires `make artifacts` to have run (the Makefile's `test` target
+//! guarantees it); the tests are skipped with a notice otherwise.
+
+use sentinel_hm::runtime::{literal_f32, trainer::synthetic_batch, MlpTrainer, Runtime};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts/ — run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn artifacts_load_and_compile() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).expect("load artifacts");
+    assert_eq!(rt.platform(), "cpu");
+    let mut names = rt.artifact_names();
+    names.sort();
+    for required in ["fwd_in", "fwd_hidden", "fwd_out", "loss_grad", "bwd_hidden"] {
+        assert!(names.contains(&required), "missing {required}");
+    }
+}
+
+#[test]
+fn fwd_hidden_applies_relu() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).expect("load artifacts");
+    let m = rt.manifest.clone();
+    // x = -1 everywhere, w = +1, b = 0 → pre-activation is negative →
+    // relu output must be exactly zero.
+    let x = literal_f32(&vec![-1.0; m.batch * m.dim], &[m.batch as i64, m.dim as i64]).unwrap();
+    let w = literal_f32(&vec![1.0; m.dim * m.hidden], &[m.dim as i64, m.hidden as i64]).unwrap();
+    let b = literal_f32(&vec![0.0; m.hidden], &[m.hidden as i64]).unwrap();
+    let out = rt.run("fwd_in", &[x, w, b]).expect("run fwd_in");
+    let h: Vec<f32> = out[0].to_vec().unwrap();
+    assert!(h.iter().all(|&v| v == 0.0), "relu must clamp negatives");
+}
+
+#[test]
+fn loss_grad_rows_sum_to_zero() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).expect("load artifacts");
+    let m = rt.manifest.clone();
+    let (_, y) = synthetic_batch(&m, 3).unwrap();
+    let logits = literal_f32(
+        &(0..m.batch * m.classes)
+            .map(|i| ((i * 37 % 101) as f32 / 50.0) - 1.0)
+            .collect::<Vec<_>>(),
+        &[m.batch as i64, m.classes as i64],
+    )
+    .unwrap();
+    let out = rt.run("loss_grad", &[logits, y]).expect("run loss_grad");
+    let loss: f32 = out[0].get_first_element().unwrap();
+    assert!(loss.is_finite() && loss > 0.0);
+    let d: Vec<f32> = out[1].to_vec().unwrap();
+    for row in d.chunks(m.classes) {
+        let s: f32 = row.iter().sum();
+        assert!(s.abs() < 1e-5, "softmax CE grad rows sum to 0, got {s}");
+    }
+}
+
+#[test]
+fn training_reduces_loss() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).expect("load artifacts");
+    let m = rt.manifest.clone();
+    let mut trainer = MlpTrainer::new(&rt, 42).expect("init trainer");
+    assert!(trainer.param_count() > 100_000, "non-trivial model");
+    let (x, y) = synthetic_batch(&m, 0).unwrap();
+    let (loss0, timing) = trainer.train_step(&x, &y, 0.05).expect("step");
+    assert!(timing.total_ns() > 0);
+    let mut loss_end = loss0;
+    for i in 1..30 {
+        let (l, _) = trainer.train_step(&x, &y, 0.05).expect("step");
+        loss_end = l;
+        let _ = i;
+    }
+    assert!(
+        loss_end < loss0 * 0.7,
+        "loss must decrease on a fixed batch: {loss0} → {loss_end}"
+    );
+}
+
+#[test]
+fn training_is_deterministic() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).expect("load artifacts");
+    let m = rt.manifest.clone();
+    let (x, y) = synthetic_batch(&m, 7).unwrap();
+    let mut t1 = MlpTrainer::new(&rt, 9).unwrap();
+    let mut t2 = MlpTrainer::new(&rt, 9).unwrap();
+    let (l1, _) = t1.train_step(&x, &y, 0.1).unwrap();
+    let (l2, _) = t2.train_step(&x, &y, 0.1).unwrap();
+    assert_eq!(l1, l2, "same seed + same data = same loss");
+}
