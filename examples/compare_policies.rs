@@ -2,53 +2,59 @@
 //! bound), Sentinel, IAL (Yan et al.), LRU caching, and slow-only
 //! (lower bound), all at fast = 20% of reported peak memory.
 //!
+//! The whole (model × policy) grid is a `Vec<RunSpec>` fanned across
+//! every core by `run_batch` — the serial per-model loop of the old API
+//! is gone.
+//!
 //! Run: `cargo run --release --example compare_policies`
 
-use sentinel_hm::coordinator::sentinel::{run_fast_only, run_sentinel, SentinelConfig};
+use sentinel_hm::api::{default_threads, run_batch, PolicyKind, RunSpec};
 use sentinel_hm::dnn::zoo::Model;
-use sentinel_hm::dnn::StepTrace;
-use sentinel_hm::figures::{run_ial, run_lru};
-use sentinel_hm::sim::{Engine, EngineConfig, Machine, MachineSpec, Tier};
 use sentinel_hm::util::table::Table;
 
 fn main() {
     let steps = 14;
+    let models = Model::paper_five();
+    // Per model: reference, Sentinel, IAL, LRU, slow-only.
+    let policies = [
+        (PolicyKind::FastOnly, 6u32),
+        (PolicyKind::Sentinel(Default::default()), steps),
+        (PolicyKind::Ial, steps),
+        (PolicyKind::Lru, steps),
+        (PolicyKind::SlowOnly, 4),
+    ];
+    let specs: Vec<RunSpec> = models
+        .iter()
+        .flat_map(|&m| {
+            policies
+                .iter()
+                .map(move |&(p, s)| RunSpec::for_model(m).fast_pct(20).policy(p).steps(s))
+        })
+        .collect();
+    let outs = run_batch(specs, default_threads());
+
     let mut table = Table::new(vec![
         "model", "fast-only", "Sentinel", "IAL", "LRU", "slow-only",
     ]);
     let mut sentinel_vs_ial = Vec::new();
-
-    for model in Model::paper_five() {
-        let g = model.build(0x5E17);
-        let trace = StepTrace::from_graph(&g);
-        let fast = model.peak_memory_target() / 5;
-
-        let reference = run_fast_only(&g, 6);
-        let fthr = reference.throughput(1);
-
-        let (s, _, tuning) = run_sentinel(&g, fast, steps, SentinelConfig::default());
-        let ial = run_ial(&g, fast, steps);
-        let lru = run_lru(&g, fast, steps);
-
-        let mut slow_machine = Machine::new(MachineSpec::slow_only());
-        let engine = Engine::new(EngineConfig { steps: 4, ..Default::default() });
-        let slow = engine.run(
-            &g,
-            &trace,
-            &mut slow_machine,
-            &mut sentinel_hm::sim::engine::StaticPolicy { tier: Tier::Slow },
-        );
-
-        let s_norm = s.throughput(tuning as usize) / fthr;
-        let ial_norm = ial.throughput(3) / fthr;
+    for (i, model) in models.iter().enumerate() {
+        let thr = |j: usize| -> f64 {
+            outs[i * policies.len() + j]
+                .as_ref()
+                .expect("grid run")
+                .throughput()
+        };
+        let fthr = thr(0);
+        let s_norm = thr(1) / fthr;
+        let ial_norm = thr(2) / fthr;
         sentinel_vs_ial.push(s_norm / ial_norm);
         table.row(vec![
             model.name(),
             "1.000".to_string(),
-            format!("{:.3}", s_norm),
-            format!("{:.3}", ial_norm),
-            format!("{:.3}", lru.throughput(3) / fthr),
-            format!("{:.3}", slow.throughput(1) / fthr),
+            format!("{s_norm:.3}"),
+            format!("{ial_norm:.3}"),
+            format!("{:.3}", thr(3) / fthr),
+            format!("{:.3}", thr(4) / fthr),
         ]);
     }
 

@@ -1,58 +1,62 @@
 //! Quickstart: profile a model, let Sentinel tune itself, and compare
 //! against the fast-memory-only reference — the paper's headline claim
-//! in ~30 lines of user code.
+//! in ~30 lines of user code, all through the `api` front door.
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use sentinel_hm::coordinator::sentinel::{run_fast_only, run_sentinel, SentinelConfig};
+use sentinel_hm::api::{PolicyKind, RunSpec};
 use sentinel_hm::dnn::zoo::Model;
-use sentinel_hm::dnn::StepTrace;
-use sentinel_hm::profiler::profile;
 use sentinel_hm::util::table::fmt_bytes;
 
 fn main() {
-    // 1. Pick a model from the zoo (the paper's Table 3).
+    // 1. Pick a model from the zoo (the paper's Table 3) and train with
+    //    only 20% of the reported peak as fast memory.
     let model = Model::ResNetV1 { depth: 32 };
-    let graph = model.build(0x5E17);
-    let trace = StepTrace::from_graph(&graph);
     println!(
-        "{}: {} layers, {} data objects, {} live peak",
-        graph.name,
-        graph.n_layers(),
-        graph.objects.len(),
-        fmt_bytes(graph.peak_live_bytes()),
+        "training {} with fast memory = {} (20% of reported peak)…",
+        model.name(),
+        fmt_bytes(model.peak_memory_target() / 5),
+    );
+    let result = RunSpec::for_model(model)
+        .fast_fraction(0.2)
+        .steps(14)
+        .run()
+        .expect("sentinel run");
+
+    // 2. The one-step object-granularity profile (§3) rode along.
+    let profile = result.profile.expect("sentinel profiles on step 0");
+    println!(
+        "profile: {} objects; {:.1}% short-lived; {:.1}% of those < 4KB",
+        profile.n_objects,
+        profile.short_lived_fraction * 100.0,
+        profile.short_lived_small_fraction * 100.0,
     );
 
-    // 2. One-step object-granularity profile (§3).
-    let report = profile(&graph, &trace);
-    println!(
-        "profile: {:.1}% of objects are short-lived; {:.1}% of those are < 4KB",
-        report.short_lived_fraction() * 100.0,
-        report.short_lived_small_fraction() * 100.0,
-    );
-
-    // 3. Train with only 20% of the reported peak as fast memory.
-    let fast = model.peak_memory_target() / 5;
-    println!("\ntraining with fast memory = {} (20% of peak)…", fmt_bytes(fast));
-    let (result, cases, tuning) = run_sentinel(&graph, fast, 14, SentinelConfig::default());
-    let reference = run_fast_only(&graph, 6);
+    // 3. The fast-memory-only reference the paper normalizes against.
+    let reference = RunSpec::for_model(model)
+        .policy(PolicyKind::FastOnly)
+        .steps(6)
+        .run()
+        .expect("fast-only run");
 
     // 4. The headline: Sentinel ≈ fast-memory-only.
-    let ratio = result.throughput(tuning as usize) / reference.throughput(1);
+    let cases = result.cases.expect("sentinel classifies intervals");
+    let ratio = result.throughput() / reference.throughput();
     println!(
-        "sentinel:  {:.3} steps/s (tuned in {} steps; cases 1/2/3 = {}/{}/{})",
-        result.throughput(tuning as usize),
-        tuning,
+        "sentinel:  {:.3} steps/s (tuned in {} steps; MI={}; cases 1/2/3 = {}/{}/{})",
+        result.throughput(),
+        result.warmup_steps,
+        result.chosen_mi.unwrap_or(0),
         cases.case1,
         cases.case2,
         cases.case3,
     );
-    println!("fast-only: {:.3} steps/s", reference.throughput(1));
+    println!("fast-only: {:.3} steps/s", reference.throughput());
     println!(
         "→ {:.1}% of fast-memory-only performance with 80% less fast memory \
          ({} pages migrated)",
         ratio * 100.0,
-        result.total_migrations(),
+        result.result.total_migrations(),
     );
     assert!(ratio > 0.85, "quickstart regression: ratio {ratio}");
 }

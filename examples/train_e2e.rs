@@ -7,18 +7,21 @@
 //!    the loss curve — proving L1 (Pallas kernel) → L2 (JAX model) →
 //!    L3 (Rust runtime) compose.
 //! 2. Mirrors the trained model as a `ModelGraph` whose per-layer compute
-//!    times are the *measured* PJRT wall times, then runs the Sentinel
-//!    policy against the paper's heterogeneous-memory machine on that
-//!    graph — the coordinator driving placement for the exact workload
-//!    that just ran for real.
+//!    times are the *measured* PJRT wall times, then hands that graph to
+//!    a `RunSpec` — the Sentinel coordinator driving placement for the
+//!    exact workload that just ran for real.
 //!
-//! Run: `cargo run --release --example train_e2e -- [steps] [lr]`
-//! (defaults: 300 steps, lr 0.05). Results recorded in EXPERIMENTS.md.
+//! Run: `cargo run --release --features pjrt --example train_e2e -- [steps] [lr]`
+//! (defaults: 300 steps, lr 0.05) — after vendoring the `xla`/`anyhow`
+//! crates and declaring them in Cargo.toml; the offline manifest ships
+//! with no dependencies, so the `pjrt` feature alone does not build.
+//! Results recorded in EXPERIMENTS.md.
 
-use sentinel_hm::coordinator::sentinel::{run_fast_only, run_sentinel, SentinelConfig};
+use sentinel_hm::api::{PolicyKind, RunSpec};
+use sentinel_hm::coordinator::sentinel::SentinelConfig;
 use sentinel_hm::dnn::graph::GraphBuilder;
 use sentinel_hm::dnn::layer::LayerKind;
-use sentinel_hm::dnn::{ModelGraph, StepTrace};
+use sentinel_hm::dnn::ModelGraph;
 use sentinel_hm::runtime::{trainer::synthetic_batch, Manifest, MlpTrainer, Runtime, StepTiming};
 use sentinel_hm::util::table::fmt_bytes;
 
@@ -92,22 +95,30 @@ fn main() {
         fmt_bytes(peak),
         fmt_bytes(fast),
     );
-    let trace = StepTrace::from_graph(&g);
-    let _ = &trace;
     // The MLP's layers run in microseconds; scale the interval-boundary
     // synchronization cost accordingly (a single-process runtime, not
     // the kernel move_pages path the zoo models assume).
     let cfg = SentinelConfig { boundary_overhead_ns: 5_000.0, ..Default::default() };
-    let (r, cases, tuning) = run_sentinel(&g, fast, 14, cfg);
-    let f = run_fast_only(&g, 6);
-    let ratio = r.throughput(tuning as usize) / f.throughput(1);
+    let out = RunSpec::for_graph(g.clone())
+        .policy(PolicyKind::Sentinel(cfg))
+        .fast_bytes(fast)
+        .steps(14)
+        .run()
+        .expect("sentinel run");
+    let reference = RunSpec::for_graph(g)
+        .policy(PolicyKind::FastOnly)
+        .steps(6)
+        .run()
+        .expect("fast-only run");
+    let cases = out.cases.expect("sentinel cases");
+    let ratio = out.throughput() / reference.throughput();
     println!(
         "sentinel {:.1} steps/s vs fast-only {:.1} steps/s → {:.1}% | \
          {} pages migrated | cases 1/2/3 = {}/{}/{}",
-        r.throughput(tuning as usize),
-        f.throughput(1),
+        out.throughput(),
+        reference.throughput(),
         ratio * 100.0,
-        r.total_migrations(),
+        out.result.total_migrations(),
         cases.case1,
         cases.case2,
         cases.case3,

@@ -1,54 +1,62 @@
 //! Bench: the L3 hot paths themselves — trace replay rate, migration-lane
 //! throughput, plan construction, and the end-to-end figure-suite cost.
 //! This is the §Perf driver: EXPERIMENTS.md records the before/after of
-//! each optimization against these numbers.
+//! each optimization against these numbers, and the final JSON summary
+//! line is what future PRs diff against `BENCH_*.json` to catch
+//! engine-hot-path regressions.
 //!
 //! Run: `cargo bench --bench sim_hotpath`
 
+use sentinel_hm::api::{json, PolicyKind, RunSpec};
 use sentinel_hm::coordinator::plan::MigrationPlan;
-use sentinel_hm::coordinator::sentinel::{run_sentinel, SentinelConfig};
 use sentinel_hm::dnn::zoo::Model;
 use sentinel_hm::dnn::StepTrace;
 use sentinel_hm::mem::ObjectId;
-use sentinel_hm::sim::{Engine, EngineConfig, Machine, MachineSpec, Tier};
+use sentinel_hm::sim::{Engine, Machine, MachineSpec, Tier};
 use sentinel_hm::util::bench::time_it;
 
 fn main() {
+    const RN32: Model = Model::ResNetV1 { depth: 32 };
+
     // --- workload generation -----------------------------------------
-    let t = time_it(5, || (Model::ResNetV1 { depth: 32 }).build(1));
+    let t = time_it(5, || RN32.build(1));
     t.report("zoo build (ResNet_v1-32, ~2.4k objects)");
     let t = time_it(3, || Model::ResNetV2_152.build(1));
     t.report("zoo build (ResNet_v2-152, ~12k objects)");
 
-    let g = (Model::ResNetV1 { depth: 32 }).build(1);
+    let g = RN32.build(1);
     let trace = StepTrace::from_graph(&g);
     let n_events = trace.n_events();
 
     let t = time_it(5, || StepTrace::from_graph(&g));
     t.report("trace build");
 
-    // --- engine replay rate (events/s) -------------------------------
+    // --- engine replay rate (events/s, ns/step) ----------------------
     let steps = 10u32;
+    let fast_only = PolicyKind::FastOnly;
     let t = time_it(5, || {
         let mut m = Machine::new(MachineSpec::fast_only());
-        let e = Engine::new(EngineConfig { steps, ..Default::default() });
-        e.run(
-            &g,
-            &trace,
-            &mut m,
-            &mut sentinel_hm::sim::engine::StaticPolicy { tier: Tier::Fast },
-        )
+        let mut p = fast_only.construct(&g, &trace, MachineSpec::fast_only());
+        let e = Engine::new(fast_only.engine_config(steps));
+        e.run(&g, &trace, &mut m, p.as_mut())
     });
     t.report("engine replay (10 steps, static policy)");
+    let engine_ns_per_step = t.median_ns as f64 / steps as f64;
     let events_per_s = (n_events as f64 * steps as f64) / (t.median_ns as f64 / 1e9);
-    println!("  → {:.1} M events/s (target ≥ 10 M/s)", events_per_s / 1e6);
+    println!(
+        "  → {engine_ns_per_step:.0} ns/step | {:.1} M events/s (target ≥ 10 M/s)",
+        events_per_s / 1e6
+    );
 
-    // --- full Sentinel run --------------------------------------------
-    let fast = (Model::ResNetV1 { depth: 32 }).peak_memory_target() / 5;
-    let t = time_it(5, || run_sentinel(&g, fast, 14, SentinelConfig::default()));
-    t.report("sentinel end-to-end (14 steps incl. tuning)");
+    // --- full Sentinel run through the API (incl. graph build) -------
+    let sentinel_spec = RunSpec::for_model(RN32).seed(1).fast_pct(20).steps(14);
+    let t = time_it(5, || sentinel_spec.run().expect("sentinel run"));
+    t.report("sentinel end-to-end (RunSpec: build+tune+14 steps)");
+    let sentinel_ns_per_step = t.median_ns as f64 / 14.0;
+    println!("  → {sentinel_ns_per_step:.0} ns/step (wall, incl. setup)");
 
     // --- plan construction --------------------------------------------
+    let fast = RN32.peak_memory_target() / 5;
     let spec = MachineSpec::paper_testbed(fast);
     let t = time_it(5, || MigrationPlan::build(&g, 8, &spec));
     t.report("migration-plan build (MI=8)");
@@ -83,4 +91,13 @@ fn main() {
         }
     });
     t.report("machine alloc/access/free (10k objects)");
+
+    // Machine-readable summary for regression tracking (BENCH_*.json).
+    let summary = json::Obj::new()
+        .field_str("bench", "sim_hotpath")
+        .field_f64("engine_ns_per_step", engine_ns_per_step)
+        .field_f64("engine_events_per_s", events_per_s)
+        .field_f64("sentinel_e2e_ns_per_step", sentinel_ns_per_step)
+        .end();
+    println!("\n{summary}");
 }

@@ -1,0 +1,77 @@
+//! Parallel batch execution of [`RunSpec`]s.
+//!
+//! Every run is a pure function of its spec (graphs are seeded, the
+//! simulator is deterministic, no global state), so fanning a grid
+//! across a `std::thread` worker pool is bit-identical to running it
+//! serially — results come back in spec order regardless of scheduling.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::api::outcome::RunOutcome;
+use crate::api::spec::{RunSpec, SpecError};
+
+/// Worker threads to use when the caller has no preference.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run every spec, fanning across `threads` workers (clamped to the
+/// batch size; `1` degrades to a plain serial loop). The result vector
+/// is index-aligned with `specs`.
+pub fn run_batch(specs: Vec<RunSpec>, threads: usize) -> Vec<Result<RunOutcome, SpecError>> {
+    let n = specs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.clamp(1, n);
+    if threads == 1 {
+        return specs.iter().map(RunSpec::run).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<Result<RunOutcome, SpecError>>>> =
+        (0..n).map(|_| Mutex::new(None)).collect();
+    let (specs_ref, slots_ref, next_ref) = (&specs, &slots, &next);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(move || loop {
+                let i = next_ref.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let out = specs_ref[i].run();
+                *slots_ref[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|slot| slot.into_inner().unwrap().expect("worker filled every slot"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::PolicyKind;
+    use crate::dnn::zoo::Model;
+
+    #[test]
+    fn empty_batch_is_fine() {
+        assert!(run_batch(Vec::new(), 4).is_empty());
+    }
+
+    #[test]
+    fn batch_preserves_spec_order_and_errors() {
+        let specs = vec![
+            RunSpec::for_model(Model::Dcgan).policy(PolicyKind::FastOnly).steps(2),
+            RunSpec::model("not-a-model").steps(2),
+            RunSpec::for_model(Model::Dcgan).policy(PolicyKind::SlowOnly).steps(2),
+        ];
+        let outs = run_batch(specs, 3);
+        assert_eq!(outs.len(), 3);
+        assert_eq!(outs[0].as_ref().unwrap().policy, "fast-only");
+        assert!(matches!(outs[1], Err(SpecError::UnknownModel(_))));
+        assert_eq!(outs[2].as_ref().unwrap().policy, "slow-only");
+    }
+}

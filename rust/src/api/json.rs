@@ -1,0 +1,385 @@
+//! Hand-rolled JSON emission and validation.
+//!
+//! The offline build has no serde; this module provides the minimum the
+//! experiment API needs: escaped string literals, shortest-round-trip
+//! float formatting (so serialized [`crate::api::RunOutcome`]s are
+//! bit-faithful), incremental object/array builders, a renderer for
+//! [`Table`]s, and a strict syntax checker used by tests and the
+//! `scripts/verify.sh` smoke run.
+
+use crate::util::table::Table;
+
+/// Escape `s` for inclusion inside a JSON string literal (quotes not
+/// included).
+pub fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// A quoted, escaped JSON string literal.
+pub fn string(s: &str) -> String {
+    format!("\"{}\"", escape(s))
+}
+
+/// A JSON number from an `f64`. Rust's `{:?}` prints the shortest string
+/// that round-trips to the same bits, so equality of serialized outcomes
+/// implies bit-identical floats. Non-finite values become `null`.
+pub fn number(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:?}")
+    } else {
+        "null".into()
+    }
+}
+
+/// Incremental JSON object builder (consuming, chainable).
+pub struct Obj {
+    buf: String,
+    empty: bool,
+}
+
+impl Obj {
+    pub fn new() -> Self {
+        Obj { buf: String::from("{"), empty: true }
+    }
+
+    fn key(&mut self, k: &str) {
+        if !self.empty {
+            self.buf.push(',');
+        }
+        self.empty = false;
+        self.buf.push_str(&string(k));
+        self.buf.push(':');
+    }
+
+    /// Add a field whose value is already-rendered JSON.
+    pub fn field_raw(mut self, k: &str, v: &str) -> Self {
+        self.key(k);
+        self.buf.push_str(v);
+        self
+    }
+
+    pub fn field_str(self, k: &str, v: &str) -> Self {
+        let lit = string(v);
+        self.field_raw(k, &lit)
+    }
+
+    pub fn field_u64(self, k: &str, v: u64) -> Self {
+        let lit = v.to_string();
+        self.field_raw(k, &lit)
+    }
+
+    pub fn field_f64(self, k: &str, v: f64) -> Self {
+        let lit = number(v);
+        self.field_raw(k, &lit)
+    }
+
+    pub fn field_bool(self, k: &str, v: bool) -> Self {
+        self.field_raw(k, if v { "true" } else { "false" })
+    }
+
+    pub fn end(mut self) -> String {
+        self.buf.push('}');
+        self.buf
+    }
+}
+
+impl Default for Obj {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Incremental JSON array builder.
+pub struct Arr {
+    buf: String,
+    empty: bool,
+}
+
+impl Arr {
+    pub fn new() -> Self {
+        Arr { buf: String::from("["), empty: true }
+    }
+
+    /// Push an already-rendered JSON value.
+    pub fn push_raw(mut self, v: &str) -> Self {
+        if !self.empty {
+            self.buf.push(',');
+        }
+        self.empty = false;
+        self.buf.push_str(v);
+        self
+    }
+
+    pub fn push_str_val(self, v: &str) -> Self {
+        let lit = string(v);
+        self.push_raw(&lit)
+    }
+
+    pub fn end(mut self) -> String {
+        self.buf.push(']');
+        self.buf
+    }
+}
+
+impl Default for Arr {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Render a [`Table`] as a JSON array of objects keyed by the header row
+/// (all values as strings, exactly as the text renderer prints them).
+pub fn table_json(t: &Table) -> String {
+    let header = t.header();
+    let mut arr = Arr::new();
+    for row in t.rows() {
+        let mut obj = Obj::new();
+        for (k, v) in header.iter().zip(row) {
+            obj = obj.field_str(k, v);
+        }
+        let rendered = obj.end();
+        arr = arr.push_raw(&rendered);
+    }
+    arr.end()
+}
+
+// ---------------------------------------------------------------------
+// Validation
+// ---------------------------------------------------------------------
+
+/// Strict syntax check of a complete JSON document.
+pub fn is_valid(s: &str) -> bool {
+    let b = s.as_bytes();
+    let mut p = Parser { b, i: 0 };
+    p.skip_ws();
+    if !p.value() {
+        return false;
+    }
+    p.skip_ws();
+    p.i == b.len()
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl Parser<'_> {
+    fn skip_ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn eat(&mut self, c: u8) -> bool {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn lit(&mut self, word: &[u8]) -> bool {
+        if self.b.len() - self.i >= word.len() && &self.b[self.i..self.i + word.len()] == word {
+            self.i += word.len();
+            true
+        } else {
+            false
+        }
+    }
+
+    fn value(&mut self) -> bool {
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => self.string(),
+            Some(b't') => self.lit(b"true"),
+            Some(b'f') => self.lit(b"false"),
+            Some(b'n') => self.lit(b"null"),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.num(),
+            _ => false,
+        }
+    }
+
+    fn object(&mut self) -> bool {
+        if !self.eat(b'{') {
+            return false;
+        }
+        self.skip_ws();
+        if self.eat(b'}') {
+            return true;
+        }
+        loop {
+            self.skip_ws();
+            if !self.string() {
+                return false;
+            }
+            self.skip_ws();
+            if !self.eat(b':') {
+                return false;
+            }
+            self.skip_ws();
+            if !self.value() {
+                return false;
+            }
+            self.skip_ws();
+            if self.eat(b',') {
+                continue;
+            }
+            return self.eat(b'}');
+        }
+    }
+
+    fn array(&mut self) -> bool {
+        if !self.eat(b'[') {
+            return false;
+        }
+        self.skip_ws();
+        if self.eat(b']') {
+            return true;
+        }
+        loop {
+            self.skip_ws();
+            if !self.value() {
+                return false;
+            }
+            self.skip_ws();
+            if self.eat(b',') {
+                continue;
+            }
+            return self.eat(b']');
+        }
+    }
+
+    fn string(&mut self) -> bool {
+        if !self.eat(b'"') {
+            return false;
+        }
+        while let Some(c) = self.peek() {
+            self.i += 1;
+            match c {
+                b'"' => return true,
+                b'\\' => {
+                    let Some(e) = self.peek() else { return false };
+                    self.i += 1;
+                    match e {
+                        b'"' | b'\\' | b'/' | b'b' | b'f' | b'n' | b'r' | b't' => {}
+                        b'u' => {
+                            for _ in 0..4 {
+                                let Some(h) = self.peek() else { return false };
+                                if !h.is_ascii_hexdigit() {
+                                    return false;
+                                }
+                                self.i += 1;
+                            }
+                        }
+                        _ => return false,
+                    }
+                }
+                c if c < 0x20 => return false,
+                _ => {}
+            }
+        }
+        false
+    }
+
+    fn digits(&mut self) -> bool {
+        let start = self.i;
+        while self.peek().is_some_and(|c| c.is_ascii_digit()) {
+            self.i += 1;
+        }
+        self.i > start
+    }
+
+    fn num(&mut self) -> bool {
+        self.eat(b'-');
+        if !self.digits() {
+            return false;
+        }
+        if self.eat(b'.') && !self.digits() {
+            return false;
+        }
+        if self.peek() == Some(b'e') || self.peek() == Some(b'E') {
+            self.i += 1;
+            if self.peek() == Some(b'+') || self.peek() == Some(b'-') {
+                self.i += 1;
+            }
+            if !self.digits() {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn escapes_control_and_quote() {
+        assert_eq!(escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(escape("\u{1}"), "\\u0001");
+    }
+
+    #[test]
+    fn numbers_round_trip_and_guard_nonfinite() {
+        assert_eq!(number(0.5), "0.5");
+        assert_eq!(number(f64::NAN), "null");
+        assert_eq!(number(f64::INFINITY), "null");
+        let x = 1.0 / 3.0;
+        let s = number(x);
+        assert_eq!(s.parse::<f64>().unwrap().to_bits(), x.to_bits());
+    }
+
+    #[test]
+    fn builders_emit_valid_json() {
+        let inner = Arr::new().push_str_val("a\"b").push_raw("1").end();
+        let doc = Obj::new()
+            .field_str("name", "x\ny")
+            .field_u64("n", 7)
+            .field_f64("t", 0.25)
+            .field_bool("ok", true)
+            .field_raw("list", &inner)
+            .end();
+        assert!(is_valid(&doc), "{doc}");
+        assert!(is_valid("{}"));
+        assert!(is_valid("[]"));
+    }
+
+    #[test]
+    fn validator_rejects_garbage() {
+        for bad in ["{", "[1,]", "{\"a\":}", "tru", "1.2.3", "\"\\x\"", "{} {}", ""] {
+            assert!(!is_valid(bad), "{bad:?} should be invalid");
+        }
+        for good in ["null", "-1.5e-7", "[1,2,3]", "{\"a\":[{\"b\":\"\\u00e9\"}]}"] {
+            assert!(is_valid(good), "{good:?} should be valid");
+        }
+    }
+
+    #[test]
+    fn table_renders_as_object_rows() {
+        let mut t = Table::new(vec!["model", "thr"]);
+        t.row(vec!["LSTM", "1.5"]);
+        let j = table_json(&t);
+        assert!(is_valid(&j), "{j}");
+        assert!(j.contains("\"model\":\"LSTM\""));
+    }
+}

@@ -1,0 +1,50 @@
+//! The unified experiment API — the front door for running anything.
+//!
+//! Sentinel's evaluation is a grid of (model × policy × fast-memory
+//! size × knobs) runs. This module is the one surface that grid goes
+//! through:
+//!
+//! * [`PolicyKind`] — the exhaustive policy registry: name parsing,
+//!   enumeration, and construction of every data-management policy
+//!   (Sentinel and its ablations, fixed-MI variants, IAL, LRU, the
+//!   static references), including the per-policy machine adjustments.
+//! * [`RunSpec`] — a builder describing one run declaratively; it owns
+//!   graph/trace/machine setup and validation.
+//! * [`RunOutcome`] — the run's full result: [`crate::sim::TrainResult`]
+//!   plus case counts, tuning metadata and a profile summary, with a
+//!   hand-rolled JSON serializer (`--json` on the CLI).
+//! * [`run_batch`] — a `std::thread` worker pool that fans a
+//!   `Vec<RunSpec>` across cores, bit-identical to the serial loop.
+//! * [`json`] — the serde-less JSON building blocks and validator.
+//!
+//! ```no_run
+//! use sentinel_hm::api::{run_batch, PolicyKind, RunSpec};
+//!
+//! // One run.
+//! let out = RunSpec::model("resnet32").fast_fraction(0.2).steps(14).run().unwrap();
+//! println!("{:.3} steps/s", out.throughput());
+//!
+//! // A grid, fanned across 4 threads.
+//! let grid: Vec<RunSpec> = ["resnet32", "lstm", "dcgan"]
+//!     .into_iter()
+//!     .flat_map(|m| {
+//!         [PolicyKind::FastOnly, PolicyKind::Ial]
+//!             .into_iter()
+//!             .map(move |p| RunSpec::model(m).policy(p))
+//!     })
+//!     .collect();
+//! for outcome in run_batch(grid, 4) {
+//!     println!("{}", outcome.unwrap().to_json());
+//! }
+//! ```
+
+pub mod batch;
+pub mod json;
+pub mod outcome;
+pub mod policy;
+pub mod spec;
+
+pub use batch::{default_threads, run_batch};
+pub use outcome::{ProfileSummary, RunOutcome};
+pub use policy::PolicyKind;
+pub use spec::{RunSpec, SpecError, DEFAULT_SEED, DEFAULT_STEPS};

@@ -1,0 +1,117 @@
+//! The result of one experiment run: the raw [`TrainResult`] plus the
+//! policy metadata (migration-case counts, tuning steps, chosen MI,
+//! profile summary) that the paper's tables report, serializable to JSON
+//! without serde.
+
+use crate::api::json::{Arr, Obj};
+use crate::coordinator::sentinel::CaseCounts;
+use crate::sim::TrainResult;
+
+/// Condensed §3 profile of the workload, captured when the run's policy
+/// performed a profiling step.
+#[derive(Clone, Copy, Debug)]
+pub struct ProfileSummary {
+    /// Data objects in the one-step profile.
+    pub n_objects: u64,
+    /// Fraction of objects living ≤ 1 layer (Observation 1).
+    pub short_lived_fraction: f64,
+    /// Fraction of the short-lived objects that are < 4 KB.
+    pub short_lived_small_fraction: f64,
+}
+
+/// Everything one run produces.
+#[derive(Clone, Debug)]
+pub struct RunOutcome {
+    /// Model name (as the graph reports it).
+    pub model: String,
+    /// Registry name of the policy ([`crate::api::PolicyKind::name`]).
+    pub policy: String,
+    /// The policy's own display name (includes ablation suffixes).
+    pub policy_detail: String,
+    /// Training steps simulated.
+    pub steps: u32,
+    /// Fast-memory capacity of the machine the run executed on
+    /// (bytes; `u64::MAX` for the unbounded fast-only reference).
+    pub fast_bytes: u64,
+    /// Warm-up steps excluded from steady-state throughput: the tuning
+    /// steps for Sentinel-family policies ("p, m & t" of Table 3), a
+    /// fixed policy-specific count otherwise.
+    pub warmup_steps: u32,
+    /// End-of-interval migration-case counts (Sentinel-family only).
+    pub cases: Option<CaseCounts>,
+    /// Migration interval the online search settled on.
+    pub chosen_mi: Option<u32>,
+    /// Profile summary (policies that ran a profiling step).
+    pub profile: Option<ProfileSummary>,
+    /// The engine's full per-step record.
+    pub result: TrainResult,
+}
+
+impl RunOutcome {
+    /// Steady-state throughput in steps/s (warm-up excluded).
+    pub fn throughput(&self) -> f64 {
+        self.result.throughput(self.warmup_steps as usize)
+    }
+
+    /// Mean steady-state step time in ns (warm-up excluded).
+    pub fn mean_step_ns(&self) -> f64 {
+        self.result.mean_step_ns(self.warmup_steps as usize)
+    }
+
+    /// Serialize to JSON. Floats print with shortest-round-trip
+    /// precision, so two outcomes are bit-identical iff their JSON is
+    /// string-identical — the property the batch-determinism test keys
+    /// on.
+    pub fn to_json(&self) -> String {
+        let mut steps = Arr::new();
+        for s in &self.result.steps {
+            let row = Obj::new()
+                .field_u64("step", s.step as u64)
+                .field_f64("time_ns", s.time_ns)
+                .field_u64("pages_in", s.pages_in)
+                .field_u64("pages_out", s.pages_out)
+                .end();
+            steps = steps.push_raw(&row);
+        }
+        let cases = match &self.cases {
+            Some(c) => Obj::new()
+                .field_u64("case1", c.case1)
+                .field_u64("case2", c.case2)
+                .field_u64("case3", c.case3)
+                .end(),
+            None => "null".into(),
+        };
+        let chosen_mi = match self.chosen_mi {
+            Some(mi) => mi.to_string(),
+            None => "null".into(),
+        };
+        let profile = match &self.profile {
+            Some(p) => Obj::new()
+                .field_u64("n_objects", p.n_objects)
+                .field_f64("short_lived_fraction", p.short_lived_fraction)
+                .field_f64("short_lived_small_fraction", p.short_lived_small_fraction)
+                .end(),
+            None => "null".into(),
+        };
+        Obj::new()
+            .field_str("model", &self.model)
+            .field_str("policy", &self.policy)
+            .field_str("policy_detail", &self.policy_detail)
+            .field_u64("steps", self.steps as u64)
+            .field_u64("fast_bytes", self.fast_bytes)
+            .field_u64("warmup_steps", self.warmup_steps as u64)
+            .field_f64("throughput_steps_per_s", self.throughput())
+            .field_f64("mean_step_ns", self.mean_step_ns())
+            .field_f64("total_time_ns", self.result.total_time_ns)
+            .field_u64("peak_fast_bytes", self.result.peak_fast_bytes)
+            .field_u64("peak_total_bytes", self.result.peak_total_bytes)
+            .field_u64("pages_migrated_in", self.result.pages_migrated_in)
+            .field_u64("pages_migrated_out", self.result.pages_migrated_out)
+            .field_u64("alloc_spills", self.result.alloc_spills)
+            .field_raw("chosen_mi", &chosen_mi)
+            .field_raw("cases", &cases)
+            .field_raw("profile", &profile)
+            .field_raw("per_step", &steps.end())
+            .end()
+    }
+}

@@ -1,0 +1,308 @@
+//! [`RunSpec`]: the declarative description of one experiment run.
+//!
+//! A spec names a workload (a zoo model, by value or by CLI name, or a
+//! caller-supplied [`ModelGraph`]), a policy from the registry, a step
+//! count, and a fast-memory size; [`RunSpec::run`] owns the whole
+//! graph/trace/machine/engine setup that consumers used to hand-wire.
+//! Specs are plain data (`Clone + Send + Sync`), so
+//! [`crate::api::run_batch`] can fan a grid of them across threads.
+
+use crate::api::outcome::{ProfileSummary, RunOutcome};
+use crate::api::policy::PolicyKind;
+use crate::coordinator::sentinel::SentinelPolicy;
+use crate::dnn::zoo::Model;
+use crate::dnn::{ModelGraph, StepTrace};
+use crate::sim::{Engine, Machine};
+
+/// Default steps per run: enough for Sentinel's tuning phase plus a
+/// steady-state window (the evaluation's standard run length).
+pub const DEFAULT_STEPS: u32 = 14;
+
+/// Default graph seed — every figure in the reproduction uses it.
+pub const DEFAULT_SEED: u64 = 0x5E17;
+
+/// Workload selector.
+#[derive(Clone, Debug)]
+enum ModelSel {
+    Zoo(Model),
+    Named(String),
+    Graph(Box<ModelGraph>),
+}
+
+/// Fast-memory sizing rule.
+#[derive(Clone, Copy, Debug)]
+enum FastSize {
+    /// Fraction of the model's reported peak memory (Table 5 basis).
+    FractionOfPeak(f64),
+    /// Integer percent of reported peak — exact integer arithmetic, as
+    /// the figure suite computes its "X% of peak" sizes.
+    PctOfPeak(u32),
+    /// Absolute bytes.
+    Bytes(u64),
+}
+
+/// Errors a spec can fail validation with.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SpecError {
+    /// The model name is not in the zoo.
+    UnknownModel(String),
+    /// `steps` is zero — nothing to run.
+    ZeroSteps,
+    /// The fast-memory sizing rule is out of range.
+    BadFastSize(String),
+    /// Fast capacity exceeds the configured slow-tier capacity.
+    FastExceedsSlow { fast: u64, slow: u64 },
+}
+
+impl std::fmt::Display for SpecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SpecError::UnknownModel(name) => write!(
+                f,
+                "unknown model '{name}' (try: {})",
+                crate::dnn::zoo::model_names().join(", ")
+            ),
+            SpecError::ZeroSteps => write!(f, "a run needs at least 1 step"),
+            SpecError::BadFastSize(msg) => write!(f, "bad fast-memory size: {msg}"),
+            SpecError::FastExceedsSlow { fast, slow } => write!(
+                f,
+                "fast capacity ({fast} B) exceeds the slow tier ({slow} B); \
+                 the fast tier must be the small one"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SpecError {}
+
+/// A declarative experiment run. Build with the fluent setters, execute
+/// with [`RunSpec::run`] or fan out with [`crate::api::run_batch`].
+///
+/// ```no_run
+/// use sentinel_hm::api::{PolicyKind, RunSpec};
+///
+/// let outcome = RunSpec::model("resnet32")
+///     .fast_fraction(0.2)
+///     .steps(14)
+///     .policy(PolicyKind::Ial)
+///     .run()
+///     .unwrap();
+/// println!("{}", outcome.to_json());
+/// ```
+#[derive(Clone, Debug)]
+pub struct RunSpec {
+    model: ModelSel,
+    policy: PolicyKind,
+    steps: u32,
+    fast: FastSize,
+    slow_bytes: Option<u64>,
+    seed: u64,
+}
+
+impl RunSpec {
+    fn with_model(model: ModelSel) -> Self {
+        RunSpec {
+            model,
+            policy: PolicyKind::Sentinel(Default::default()),
+            steps: DEFAULT_STEPS,
+            fast: FastSize::PctOfPeak(20),
+            slow_bytes: None,
+            seed: DEFAULT_SEED,
+        }
+    }
+
+    /// Spec for a zoo model by CLI name (validated at run time).
+    pub fn model(name: impl Into<String>) -> Self {
+        Self::with_model(ModelSel::Named(name.into()))
+    }
+
+    /// Spec for a zoo model by value.
+    pub fn for_model(model: Model) -> Self {
+        Self::with_model(ModelSel::Zoo(model))
+    }
+
+    /// Spec for a caller-supplied graph (e.g. a workload mirrored from a
+    /// real training run). Fraction sizing uses the graph's live peak
+    /// scaled to the reported level.
+    pub fn for_graph(graph: ModelGraph) -> Self {
+        Self::with_model(ModelSel::Graph(Box::new(graph)))
+    }
+
+    /// Which policy to run (default: full Sentinel).
+    pub fn policy(mut self, policy: PolicyKind) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Training steps to simulate (default: [`DEFAULT_STEPS`]).
+    pub fn steps(mut self, steps: u32) -> Self {
+        self.steps = steps;
+        self
+    }
+
+    /// Fast memory as a fraction of the model's reported peak
+    /// (default: 0.2, the paper's headline configuration).
+    pub fn fast_fraction(mut self, fraction: f64) -> Self {
+        self.fast = FastSize::FractionOfPeak(fraction);
+        self
+    }
+
+    /// Fast memory as an integer percent of reported peak.
+    pub fn fast_pct(mut self, pct: u32) -> Self {
+        self.fast = FastSize::PctOfPeak(pct);
+        self
+    }
+
+    /// Fast memory in absolute bytes.
+    pub fn fast_bytes(mut self, bytes: u64) -> Self {
+        self.fast = FastSize::Bytes(bytes);
+        self
+    }
+
+    /// Cap the slow tier (default: unbounded, as on the paper's
+    /// testbed). Validation rejects specs whose fast tier outsizes it.
+    pub fn slow_bytes(mut self, bytes: u64) -> Self {
+        self.slow_bytes = Some(bytes);
+        self
+    }
+
+    /// Graph seed (default: [`DEFAULT_SEED`], shared by every figure).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// The policy this spec runs.
+    pub fn policy_kind(&self) -> PolicyKind {
+        self.policy
+    }
+
+    fn zoo_model(&self) -> Result<Option<Model>, SpecError> {
+        match &self.model {
+            ModelSel::Zoo(m) => Ok(Some(*m)),
+            ModelSel::Named(n) => Model::from_name(n)
+                .map(Some)
+                .ok_or_else(|| SpecError::UnknownModel(n.clone())),
+            ModelSel::Graph(_) => Ok(None),
+        }
+    }
+
+    /// The one range check both `validate` and `run` share. `resolved`
+    /// is `Some` once the reported peak is known (the run path), `None`
+    /// in the graph-free `validate` path. Fast-only / slow-only ignore
+    /// the fast size entirely, so every check is skipped for them.
+    fn check_fast(&self, resolved: Option<u64>) -> Result<(), SpecError> {
+        if matches!(self.policy, PolicyKind::FastOnly | PolicyKind::SlowOnly) {
+            return Ok(());
+        }
+        match self.fast {
+            FastSize::FractionOfPeak(f) if !(f > 0.0 && f <= 1.0) => {
+                return Err(SpecError::BadFastSize(format!(
+                    "fraction {f} must be in (0, 1]"
+                )));
+            }
+            FastSize::PctOfPeak(p) if p == 0 || p > 100 => {
+                return Err(SpecError::BadFastSize(format!(
+                    "percent {p} must be in 1..=100"
+                )));
+            }
+            _ => {}
+        }
+        let bytes = match (self.fast, resolved) {
+            (FastSize::Bytes(b), _) => Some(b),
+            (_, r) => r,
+        };
+        if let Some(b) = bytes {
+            if b == 0 {
+                return Err(SpecError::BadFastSize(
+                    "resolves to 0 bytes of fast memory".into(),
+                ));
+            }
+            if let Some(slow) = self.slow_bytes {
+                if b > slow {
+                    return Err(SpecError::FastExceedsSlow { fast: b, slow });
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn resolve_fast(&self, reported_peak: u64) -> Result<u64, SpecError> {
+        let fast = match self.fast {
+            FastSize::FractionOfPeak(f) => (reported_peak as f64 * f) as u64,
+            FastSize::PctOfPeak(p) => reported_peak * p as u64 / 100,
+            FastSize::Bytes(b) => b,
+        };
+        self.check_fast(Some(fast))?;
+        Ok(fast)
+    }
+
+    /// Check everything that can be checked without building the graph.
+    pub fn validate(&self) -> Result<(), SpecError> {
+        if self.steps == 0 {
+            return Err(SpecError::ZeroSteps);
+        }
+        self.zoo_model()?;
+        self.check_fast(None)
+    }
+
+    /// Execute the run: build the graph and trace, size and construct
+    /// the machine, construct the policy from the registry, simulate,
+    /// and package the outcome.
+    pub fn run(&self) -> Result<RunOutcome, SpecError> {
+        self.validate()?;
+        let zoo = self.zoo_model()?;
+        let built;
+        let g: &ModelGraph = match (&self.model, zoo) {
+            (ModelSel::Graph(g), _) => &**g,
+            (_, Some(m)) => {
+                built = m.build(self.seed);
+                &built
+            }
+            _ => unreachable!("non-graph specs always resolve a zoo model"),
+        };
+        let reported_peak = match zoo {
+            Some(m) => m.peak_memory_target(),
+            None => Model::reported_peak(g.peak_live_bytes()),
+        };
+        let fast_bytes = self.resolve_fast(reported_peak)?;
+        let trace = StepTrace::from_graph(g);
+        let mut spec = self.policy.machine_spec(g, &trace, fast_bytes);
+        if let Some(slow) = self.slow_bytes {
+            spec.slow.capacity_bytes = slow;
+        }
+        let mut policy = self.policy.construct(g, &trace, spec);
+        let engine = Engine::new(self.policy.engine_config(self.steps));
+        let mut machine = Machine::new(spec);
+        let result = engine.run(&g, &trace, &mut machine, policy.as_mut());
+        let (cases, chosen_mi, warmup, profile) =
+            match policy.as_any().downcast_ref::<SentinelPolicy>() {
+                Some(p) => (
+                    Some(p.cases_total),
+                    Some(p.chosen_mi),
+                    p.tuning_steps(),
+                    Some(ProfileSummary {
+                        n_objects: p.report.objects.len() as u64,
+                        short_lived_fraction: p.report.short_lived_fraction(),
+                        short_lived_small_fraction: p.report.short_lived_small_fraction(),
+                    }),
+                ),
+                None => (None, None, self.policy.default_warmup(), None),
+            };
+        Ok(RunOutcome {
+            model: g.name.clone(),
+            policy: self.policy.name(),
+            policy_detail: result.policy.clone(),
+            steps: self.steps,
+            // Report the machine's actual fast capacity: for fast-only /
+            // slow-only the requested sizing is ignored, and publishing
+            // it would misstate the normalization baseline.
+            fast_bytes: spec.fast.capacity_bytes,
+            warmup_steps: warmup,
+            cases,
+            chosen_mi,
+            profile,
+            result,
+        })
+    }
+}

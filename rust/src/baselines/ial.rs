@@ -164,6 +164,10 @@ impl Policy for IalPolicy {
         "IAL".into()
     }
 
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
     fn place(&mut self, _obj: &DataObject, m: &Machine) -> Tier {
         match self.cfg.arena_bytes {
             // Page-granularity reality: the tensor reuses an arbitrary
@@ -265,10 +269,15 @@ mod tests {
     #[test]
     fn ial_loses_to_fast_only() {
         // Fig 10: IAL at 20% fast loses measurably to fast-only.
+        use crate::api::{PolicyKind, RunSpec};
         let (r, _) = run_ial(0.2, 10);
-        let g = (Model::ResNetV1 { depth: 32 }).build(1);
-        let f = crate::coordinator::sentinel::run_fast_only(&g, 4);
-        let ratio = r.throughput(2) / f.throughput(1);
+        let f = RunSpec::for_model(Model::ResNetV1 { depth: 32 })
+            .seed(1)
+            .policy(PolicyKind::FastOnly)
+            .steps(4)
+            .run()
+            .expect("fast-only run");
+        let ratio = r.throughput(2) / f.result.throughput(1);
         assert!(ratio < 0.97, "IAL/fast-only = {ratio:.3} must show a gap");
         assert!(ratio > 0.3, "IAL should still be usable: {ratio:.3}");
     }

@@ -63,6 +63,10 @@ impl Policy for LruPolicy {
         "LRU".into()
     }
 
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
     fn place(&mut self, obj: &DataObject, m: &Machine) -> Tier {
         self.tick += 1;
         self.last_use.insert(obj.id, self.tick);

@@ -19,12 +19,12 @@ use crate::coordinator::trial::{Case3Strategy, TestAndTrial};
 use crate::dnn::{ModelGraph, StepTrace};
 use crate::mem::{DataObject, ShortLivedPool};
 use crate::profiler::{profile, ProfileReport};
-use crate::sim::{Engine, EngineConfig, Machine, MachineSpec, Policy, Tier, TrainResult};
+use crate::sim::{Machine, MachineSpec, Policy, Tier};
 use crate::PAGE_SIZE;
 
 /// Feature switches — each maps to one bar of the paper's Fig. 11
 /// ablation plus the knobs of §4.4/§4.5.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct SentinelConfig {
     /// Force a migration interval instead of searching (Fig. 7 sweeps).
     pub fixed_mi: Option<u32>,
@@ -226,6 +226,10 @@ impl SentinelPolicy {
 }
 
 impl Policy for SentinelPolicy {
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
     fn name(&self) -> String {
         let mut name = "sentinel".to_string();
         if !self.cfg.handle_false_sharing {
@@ -383,68 +387,25 @@ impl Policy for SentinelPolicy {
     }
 }
 
-/// One-call harness: profile, tune and train `g` under Sentinel on the
-/// paper's testbed with `fast_bytes` of fast memory for `steps` steps.
-/// Applies the false-sharing bandwidth derating when the ablation is on
-/// (see DESIGN.md §Hardware-substitution).
-pub fn run_sentinel(
-    g: &ModelGraph,
-    fast_bytes: u64,
-    steps: u32,
-    cfg: SentinelConfig,
-) -> (TrainResult, CaseCounts, u32) {
-    let mut spec = MachineSpec::paper_testbed(fast_bytes);
-    let trace = StepTrace::from_graph(g);
-    if !cfg.handle_false_sharing {
-        // Page-granularity migration drags cold co-resident data along:
-        // derate migration bandwidth by the measured waste fraction.
-        let shared = &profile(g, &trace).shared_pages;
-        let total_bytes = (shared.total_pages * PAGE_SIZE).max(1);
-        let waste = shared.false_shared_waste_bytes as f64 / total_bytes as f64;
-        spec.migration_bw_gbps *= (1.0 - waste).clamp(0.3, 1.0);
-    }
-    let mut policy = SentinelPolicy::new(g, &trace, spec, cfg);
-    let mut machine = Machine::new(spec);
-    let engine = Engine::new(EngineConfig {
-        steps,
-        profiling_steps: 1,
-        ..Default::default()
-    });
-    let result = engine.run(g, &trace, &mut machine, &mut policy);
-    let tuning = policy.tuning_steps();
-    (result, policy.cases_total, tuning)
-}
-
-/// The fast-memory-only reference the paper normalizes against.
-pub fn run_fast_only(g: &ModelGraph, steps: u32) -> TrainResult {
-    let trace = StepTrace::from_graph(g);
-    let mut machine = Machine::new(MachineSpec::fast_only());
-    let engine = Engine::new(EngineConfig { steps, ..Default::default() });
-    engine.run(
-        g,
-        &trace,
-        &mut machine,
-        &mut crate::sim::engine::StaticPolicy { tier: Tier::Fast },
-    )
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::api::{PolicyKind, RunSpec};
     use crate::dnn::zoo::Model;
 
+    const RN32: Model = Model::ResNetV1 { depth: 32 };
+
     fn rn32() -> ModelGraph {
-        (Model::ResNetV1 { depth: 32 }).build(1)
+        RN32.build(1)
     }
 
     #[test]
     fn sentinel_runs_and_reaches_steady_state() {
-        let g = rn32();
-        let fast = (Model::ResNetV1 { depth: 32 }).peak_memory_target() / 5;
-        let (r, cases, tuning) = run_sentinel(&g, fast, 12, SentinelConfig::default());
-        assert_eq!(r.steps.len(), 12);
-        assert!(tuning < 12, "tuning must finish within the run");
-        assert!(r.total_migrations() > 0, "Sentinel must migrate");
+        let out = RunSpec::for_model(RN32).seed(1).fast_pct(20).steps(12).run().unwrap();
+        assert_eq!(out.result.steps.len(), 12);
+        assert!(out.warmup_steps < 12, "tuning must finish within the run");
+        assert!(out.result.total_migrations() > 0, "Sentinel must migrate");
+        let cases = out.cases.expect("sentinel reports cases");
         let total_cases = cases.case1 + cases.case2 + cases.case3;
         assert!(total_cases > 0, "interval boundaries must be classified");
     }
@@ -453,11 +414,14 @@ mod tests {
     fn sentinel_close_to_fast_only_at_20pct() {
         // The paper's headline: ≤8% slower than fast-memory-only with
         // fast = 20% of peak. Allow some slack: ≤15% in the simulator.
-        let g = rn32();
-        let fast = (Model::ResNetV1 { depth: 32 }).peak_memory_target() / 5;
-        let (r, _, tuning) = run_sentinel(&g, fast, 14, SentinelConfig::default());
-        let f = run_fast_only(&g, 6);
-        let ratio = r.throughput(tuning as usize) / f.throughput(1);
+        let s = RunSpec::for_model(RN32).seed(1).fast_pct(20).steps(14).run().unwrap();
+        let f = RunSpec::for_model(RN32)
+            .seed(1)
+            .policy(PolicyKind::FastOnly)
+            .steps(6)
+            .run()
+            .unwrap();
+        let ratio = s.throughput() / f.throughput();
         assert!(
             ratio > 0.85,
             "sentinel/fast-only = {ratio:.3} (must be ≥ 0.85)"
@@ -467,12 +431,11 @@ mod tests {
 
     #[test]
     fn more_fast_memory_is_no_worse() {
-        let g = rn32();
-        let peak = g.peak_live_bytes();
-        let (r20, _, t20) = run_sentinel(&g, peak / 5, 12, SentinelConfig::default());
-        let (r60, _, t60) = run_sentinel(&g, peak * 3 / 5, 12, SentinelConfig::default());
-        let thr20 = r20.throughput(t20 as usize);
-        let thr60 = r60.throughput(t60 as usize);
+        let peak = rn32().peak_live_bytes();
+        let spec = RunSpec::for_model(RN32).seed(1).steps(12);
+        let r20 = spec.clone().fast_bytes(peak / 5).run().unwrap();
+        let r60 = spec.fast_bytes(peak * 3 / 5).run().unwrap();
+        let (thr20, thr60) = (r20.throughput(), r60.throughput());
         assert!(
             thr60 >= thr20 * 0.98,
             "60% fast ({thr60}) must be ≥ 20% fast ({thr20})"
@@ -481,20 +444,23 @@ mod tests {
 
     #[test]
     fn ablations_do_not_beat_full_sentinel() {
-        let g = rn32();
-        let fast = (Model::ResNetV1 { depth: 32 }).peak_memory_target() / 5;
-        let (full, _, t_full) = run_sentinel(&g, fast, 12, SentinelConfig::default());
-        let thr_full = full.throughput(t_full as usize);
+        let spec = RunSpec::for_model(RN32).seed(1).fast_pct(20).steps(12);
+        let full = spec.clone().run().unwrap();
+        let thr_full = full.throughput();
         for cfg in [
             SentinelConfig { reserve_space: false, ..Default::default() },
             SentinelConfig { handle_false_sharing: false, ..Default::default() },
         ] {
-            let (abl, _, t) = run_sentinel(&g, fast, 12, cfg);
-            let thr = abl.throughput(t as usize);
+            let abl = spec
+                .clone()
+                .policy(PolicyKind::Sentinel(cfg))
+                .run()
+                .unwrap();
+            let thr = abl.throughput();
             assert!(
                 thr <= thr_full * 1.02,
                 "ablation {:?} beat full sentinel: {thr} vs {thr_full}",
-                abl.policy
+                abl.policy_detail
             );
         }
     }

@@ -159,23 +159,27 @@ impl Model {
     pub fn reported_peak(live_bytes: u64) -> u64 {
         (live_bytes as f64 / Self::LIVE_FRACTION) as u64
     }
+
+    /// Look a model up by CLI or paper name.
+    pub fn from_name(name: &str) -> Option<Model> {
+        Some(match name {
+            "resnet32" | "ResNet_v1-32" | "RN(v1)" => Model::ResNetV1 { depth: 32 },
+            "resnet20" => Model::ResNetV1 { depth: 20 },
+            "resnet44" => Model::ResNetV1 { depth: 44 },
+            "resnet56" => Model::ResNetV1 { depth: 56 },
+            "resnet110" => Model::ResNetV1 { depth: 110 },
+            "resnet152" | "ResNet_v2-152" | "RN(v2)" => Model::ResNetV2_152,
+            "lstm" | "LSTM" => Model::Lstm,
+            "dcgan" | "DCGAN" => Model::Dcgan,
+            "mobilenet" | "MobileNet" | "MN" => Model::MobileNet,
+            _ => return None,
+        })
+    }
 }
 
 /// Build a model by its paper name (used by the CLI).
 pub fn build_model(name: &str) -> Option<ModelGraph> {
-    let model = match name {
-        "resnet32" | "ResNet_v1-32" | "RN(v1)" => Model::ResNetV1 { depth: 32 },
-        "resnet20" => Model::ResNetV1 { depth: 20 },
-        "resnet44" => Model::ResNetV1 { depth: 44 },
-        "resnet56" => Model::ResNetV1 { depth: 56 },
-        "resnet110" => Model::ResNetV1 { depth: 110 },
-        "resnet152" | "ResNet_v2-152" | "RN(v2)" => Model::ResNetV2_152,
-        "lstm" | "LSTM" => Model::Lstm,
-        "dcgan" | "DCGAN" => Model::Dcgan,
-        "mobilenet" | "MobileNet" | "MN" => Model::MobileNet,
-        _ => return None,
-    };
-    Some(model.build(0x5E17))
+    Model::from_name(name).map(|m| m.build(0x5E17))
 }
 
 /// CLI-facing model names.

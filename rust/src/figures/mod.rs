@@ -4,6 +4,12 @@
 //! and benches can assert the *shape* of the result, and renders a
 //! plain-text table for the console.
 //!
+//! Every training run is described as a [`RunSpec`] and executed through
+//! [`run_batch`], so multi-run figures (the MI sweeps, the five-model
+//! comparison, the ablations, the sensitivity grids) fan out across all
+//! cores; determinism of the simulator makes the parallel results
+//! bit-identical to a serial loop.
+//!
 //! Paper ↔ code map (see DESIGN.md §3 for the full experiment index):
 //!
 //! | Paper artifact | Function |
@@ -21,21 +27,22 @@
 //! | Fig. 12 (fast-size sens.) | [`fig12_sensitivity`] |
 //! | Fig. 13 (ResNet variants) | [`fig13_variants`] |
 
-use crate::baselines::{IalConfig, IalPolicy, LruPolicy};
-use crate::coordinator::sentinel::{run_fast_only, run_sentinel, SentinelConfig};
+use crate::api::{default_threads, run_batch, PolicyKind, RunSpec};
+use crate::coordinator::sentinel::SentinelConfig;
 use crate::dnn::zoo::Model;
 use crate::dnn::StepTrace;
 use crate::mem::{AllocMode, Allocator};
 use crate::profiler::profile;
-use crate::sim::{Engine, EngineConfig, Machine, MachineSpec, TrainResult};
 use crate::util::table::{fmt_bytes, Table};
 
 /// Default steps for policy comparison runs: enough for tuning plus a
 /// steady-state window.
-pub const RUN_STEPS: u32 = 14;
+pub const RUN_STEPS: u32 = crate::api::DEFAULT_STEPS;
+
+const RN32: Model = Model::ResNetV1 { depth: 32 };
 
 fn seed() -> u64 {
-    0x5E17
+    crate::api::DEFAULT_SEED
 }
 
 // ---------------------------------------------------------------------
@@ -135,79 +142,59 @@ pub fn table1_memory(model: Model) -> Table {
 // §4.4 migration-interval behaviour (Figs. 7 & 8)
 // ---------------------------------------------------------------------
 
-/// Fig. 7: training throughput vs migration interval (ResNet_v1-32,
-/// 1 GB fast memory). Returns (rows of (MI, steps/s), sweet-spot MI).
-pub fn fig7_mi_sweep(fast_bytes: u64, mis: &[u32]) -> (Vec<(u32, f64)>, u32) {
-    let g = (Model::ResNetV1 { depth: 32 }).build(seed());
-    let mut rows = Vec::new();
+fn mi_sweep_specs(fast_bytes: u64, mis: &[u32]) -> Vec<RunSpec> {
+    mis.iter()
+        .map(|&mi| {
+            RunSpec::for_model(RN32)
+                .policy(PolicyKind::StaticInterval(mi))
+                .steps(10)
+                .fast_bytes(fast_bytes)
+        })
+        .collect()
+}
+
+/// The shared Fig. 7/8 sweep: one batch over the MIs yields both the
+/// throughput curve (with sweet-spot MI) and the per-step Case 1/2/3
+/// rows — every outcome carries both, so the grid runs once.
+pub fn fig7_fig8_sweep(
+    fast_bytes: u64,
+    mis: &[u32],
+) -> (Vec<(u32, f64)>, u32, Vec<(u32, u64, u64, u64)>) {
+    let outs = run_batch(mi_sweep_specs(fast_bytes, mis), default_threads());
+    let mut thr_rows = Vec::with_capacity(mis.len());
+    let mut case_rows = Vec::with_capacity(mis.len());
     let mut best = (0u32, 0.0f64);
-    for &mi in mis {
-        let cfg = SentinelConfig { fixed_mi: Some(mi), ..Default::default() };
-        let (r, _, tuning) = run_sentinel(&g, fast_bytes, 10, cfg);
-        let thr = r.throughput(tuning as usize);
+    for (&mi, out) in mis.iter().zip(&outs) {
+        let o = out.as_ref().expect("MI sweep run");
+        let thr = o.throughput();
         if thr > best.1 {
             best = (mi, thr);
         }
-        rows.push((mi, thr));
+        thr_rows.push((mi, thr));
+        let cases = o.cases.expect("sentinel-family runs report cases");
+        // Normalize to one steady training step.
+        let steps = (o.result.steps.len() as u64).saturating_sub(2).max(1);
+        case_rows.push((mi, cases.case1 / steps, cases.case2 / steps, cases.case3 / steps));
     }
-    (rows, best.0)
+    (thr_rows, best.0, case_rows)
+}
+
+/// Fig. 7: training throughput vs migration interval (ResNet_v1-32,
+/// 1 GB fast memory). Returns (rows of (MI, steps/s), sweet-spot MI).
+pub fn fig7_mi_sweep(fast_bytes: u64, mis: &[u32]) -> (Vec<(u32, f64)>, u32) {
+    let (rows, sp, _) = fig7_fig8_sweep(fast_bytes, mis);
+    (rows, sp)
 }
 
 /// Fig. 8: occurrences of migration Cases 1/2/3 per training step as the
 /// migration interval varies (same configuration as Fig. 7).
 pub fn fig8_cases(fast_bytes: u64, mis: &[u32]) -> Vec<(u32, u64, u64, u64)> {
-    let g = (Model::ResNetV1 { depth: 32 }).build(seed());
-    let mut rows = Vec::new();
-    for &mi in mis {
-        let cfg = SentinelConfig { fixed_mi: Some(mi), ..Default::default() };
-        let (r, cases, _) = run_sentinel(&g, fast_bytes, 10, cfg);
-        // Normalize to one steady training step.
-        let steps = (r.steps.len() as u64).saturating_sub(2).max(1);
-        rows.push((mi, cases.case1 / steps, cases.case2 / steps, cases.case3 / steps));
-    }
-    rows
+    fig7_fig8_sweep(fast_bytes, mis).2
 }
 
 // ---------------------------------------------------------------------
 // §6 evaluation
 // ---------------------------------------------------------------------
-
-/// Run IAL on a model at the given fast size.
-///
-/// IAL manages *pages*, not objects: its migrations drag the cold
-/// co-residents of every false-shared page along (Observation 3), and
-/// page-level reference bits misattribute hotness. Our machine is
-/// object-granularity, so we charge IAL the measured false-sharing
-/// waste as a migration-bandwidth derate — the same derate Sentinel's
-/// "Having false sharing" ablation pays (it runs on exactly the
-/// un-reorganized allocation IAL sees). See DESIGN.md §1.
-pub fn run_ial(g: &crate::dnn::ModelGraph, fast_bytes: u64, steps: u32) -> TrainResult {
-    let trace = StepTrace::from_graph(g);
-    let mut spec = MachineSpec::paper_testbed(fast_bytes);
-    let shared = Allocator::replay(AllocMode::Shared, g);
-    let total_bytes = (shared.total_pages * crate::PAGE_SIZE).max(1);
-    let waste = shared.false_shared_waste_bytes as f64 / total_bytes as f64;
-    spec.migration_bw_gbps *= (1.0 - waste).clamp(0.3, 1.0);
-    let mut machine = Machine::new(spec);
-    // IAL manages the framework's whole arena (reported peak), and fresh
-    // tensors inherit the tier of whatever arena page they reuse.
-    let arena = Model::reported_peak(g.peak_live_bytes());
-    let mut policy = IalPolicy::new(IalConfig {
-        arena_bytes: Some(arena),
-        ..Default::default()
-    });
-    let engine = Engine::new(EngineConfig { steps, ..Default::default() });
-    engine.run(g, &trace, &mut machine, &mut policy)
-}
-
-/// Run the LRU baseline.
-pub fn run_lru(g: &crate::dnn::ModelGraph, fast_bytes: u64, steps: u32) -> TrainResult {
-    let trace = StepTrace::from_graph(g);
-    let mut machine = Machine::new(MachineSpec::paper_testbed(fast_bytes));
-    let mut policy = LruPolicy::new();
-    let engine = Engine::new(EngineConfig { steps, ..Default::default() });
-    engine.run(g, &trace, &mut machine, &mut policy)
-}
 
 /// One Fig. 10 row: normalized throughput (vs fast-only) of Sentinel and
 /// IAL at fast = 20% of reported peak.
@@ -223,26 +210,35 @@ pub struct OverallRow {
     pub baseline_peak_reported: u64,
 }
 
-/// Fig. 10 + Tables 4/5 share one sweep over the five models.
+/// Fig. 10 + Tables 4/5 share one sweep over the five models:
+/// (fast-only, Sentinel, IAL) per model, all fanned out in one batch.
 pub fn fig10_overall(steps: u32) -> Vec<OverallRow> {
-    Model::paper_five()
+    let models = Model::paper_five();
+    let mut specs = Vec::with_capacity(models.len() * 3);
+    for m in models {
+        let base = RunSpec::for_model(m).fast_pct(20);
+        specs.push(base.clone().policy(PolicyKind::FastOnly).steps(6));
+        specs.push(base.clone().steps(steps));
+        specs.push(base.policy(PolicyKind::Ial).steps(steps));
+    }
+    let outs = run_batch(specs, default_threads());
+    models
         .into_iter()
-        .map(|m| {
-            let g = m.build(seed());
-            let fast = m.peak_memory_target() / 5; // 20% of reported peak
-            let f = run_fast_only(&g, 6);
-            let (s, _, tuning) = run_sentinel(&g, fast, steps, SentinelConfig::default());
-            let i = run_ial(&g, fast, steps);
-            let fthr = f.throughput(1);
+        .enumerate()
+        .map(|(i, m)| {
+            let f = outs[3 * i].as_ref().expect("fast-only run");
+            let s = outs[3 * i + 1].as_ref().expect("sentinel run");
+            let ial = outs[3 * i + 2].as_ref().expect("ial run");
+            let fthr = f.throughput();
             OverallRow {
                 model: m.name(),
                 fast_only_thr: fthr,
-                sentinel_norm: s.throughput(tuning as usize) / fthr,
-                ial_norm: i.throughput(3) / fthr,
-                sentinel_migrations: s.total_migrations(),
-                ial_migrations: i.total_migrations(),
-                sentinel_peak_reported: Model::reported_peak(s.peak_total_bytes),
-                baseline_peak_reported: Model::reported_peak(f.peak_total_bytes),
+                sentinel_norm: s.throughput() / fthr,
+                ial_norm: ial.throughput() / fthr,
+                sentinel_migrations: s.result.total_migrations(),
+                ial_migrations: ial.result.total_migrations(),
+                sentinel_peak_reported: Model::reported_peak(s.result.peak_total_bytes),
+                baseline_peak_reported: Model::reported_peak(f.result.peak_total_bytes),
             }
         })
         .collect()
@@ -290,43 +286,64 @@ pub fn table5_peak_memory(model: Model) -> (u64, u64) {
 }
 
 /// Fig. 11: ablation of the three techniques. Returns
-/// (model, full, no-false-sharing-handling, no-reservation, no-t&t)
-/// normalized to full Sentinel.
+/// (model, having-false-sharing, no-reservation, no-t&t) normalized to
+/// full Sentinel; the 4 configs × N models all run in one batch.
 pub fn fig11_ablation(models: &[Model], steps: u32) -> Vec<(String, f64, f64, f64)> {
+    let cfgs = [
+        SentinelConfig::default(),
+        SentinelConfig { handle_false_sharing: false, ..Default::default() },
+        SentinelConfig { reserve_space: false, ..Default::default() },
+        SentinelConfig { test_and_trial: false, ..Default::default() },
+    ];
+    let mut specs = Vec::with_capacity(models.len() * cfgs.len());
+    for &m in models {
+        for cfg in cfgs {
+            specs.push(
+                RunSpec::for_model(m)
+                    .fast_pct(20)
+                    .policy(PolicyKind::Sentinel(cfg))
+                    .steps(steps),
+            );
+        }
+    }
+    let outs = run_batch(specs, default_threads());
     models
         .iter()
-        .map(|m| {
-            let g = m.build(seed());
-            let fast = m.peak_memory_target() / 5;
-            let (full, _, t) = run_sentinel(&g, fast, steps, SentinelConfig::default());
-            let base = full.throughput(t as usize);
-            let norm = |cfg: SentinelConfig| {
-                let (r, _, t) = run_sentinel(&g, fast, steps, cfg);
-                r.throughput(t as usize) / base
-            };
-            let fs = norm(SentinelConfig { handle_false_sharing: false, ..Default::default() });
-            let rs = norm(SentinelConfig { reserve_space: false, ..Default::default() });
-            let tt = norm(SentinelConfig { test_and_trial: false, ..Default::default() });
-            (m.name(), fs, rs, tt)
+        .enumerate()
+        .map(|(i, m)| {
+            let thr =
+                |j: usize| outs[i * cfgs.len() + j].as_ref().expect("fig11 run").throughput();
+            let base = thr(0);
+            (m.name(), thr(1) / base, thr(2) / base, thr(3) / base)
         })
         .collect()
 }
 
 /// Fig. 12: normalized throughput vs fast-memory size (percent of
-/// reported peak) for every model.
+/// reported peak) for every model, one batched grid.
 pub fn fig12_sensitivity(pcts: &[u32], steps: u32) -> Vec<(String, Vec<(u32, f64)>)> {
-    Model::paper_five()
+    let models = Model::paper_five();
+    let stride = pcts.len() + 1;
+    let mut specs = Vec::with_capacity(models.len() * stride);
+    for m in models {
+        specs.push(RunSpec::for_model(m).policy(PolicyKind::FastOnly).steps(6));
+        for &pct in pcts {
+            specs.push(RunSpec::for_model(m).fast_pct(pct).steps(steps));
+        }
+    }
+    let outs = run_batch(specs, default_threads());
+    models
         .into_iter()
-        .map(|m| {
-            let g = m.build(seed());
-            let f = run_fast_only(&g, 6);
-            let fthr = f.throughput(1);
+        .enumerate()
+        .map(|(i, m)| {
+            let base = i * stride;
+            let fthr = outs[base].as_ref().expect("fast-only run").throughput();
             let series = pcts
                 .iter()
-                .map(|&pct| {
-                    let fast = m.peak_memory_target() * pct as u64 / 100;
-                    let (r, _, t) = run_sentinel(&g, fast, steps, SentinelConfig::default());
-                    (pct, r.throughput(t as usize) / fthr)
+                .enumerate()
+                .map(|(j, &pct)| {
+                    let o = outs[base + 1 + j].as_ref().expect("fig12 run");
+                    (pct, o.throughput() / fthr)
                 })
                 .collect();
             (m.name(), series)
@@ -336,20 +353,32 @@ pub fn fig12_sensitivity(pcts: &[u32], steps: u32) -> Vec<(String, Vec<(u32, f64
 
 /// Fig. 13: for each ResNet_v1 variant, the reported peak memory and the
 /// minimum fast size at which Sentinel matches fast-only (within 2%).
+/// The whole (variant × fast-size) grid runs as one batch; the scan for
+/// the smallest adequate size happens over the finished results.
 pub fn fig13_variants(steps: u32) -> Vec<(String, u64, u64)> {
-    Model::resnet_variants()
-        .into_iter()
-        .map(|m| {
-            let g = m.build(seed());
-            let f = run_fast_only(&g, 6);
-            let fthr = f.throughput(1);
+    const PCTS: [u64; 8] = [10, 15, 20, 25, 30, 40, 50, 60];
+    let variants = Model::resnet_variants();
+    let stride = PCTS.len() + 1;
+    let mut specs = Vec::with_capacity(variants.len() * stride);
+    for &m in &variants {
+        specs.push(RunSpec::for_model(m).policy(PolicyKind::FastOnly).steps(6));
+        for &pct in &PCTS {
+            specs.push(RunSpec::for_model(m).fast_pct(pct as u32).steps(steps));
+        }
+    }
+    let outs = run_batch(specs, default_threads());
+    variants
+        .iter()
+        .enumerate()
+        .map(|(i, m)| {
+            let base = i * stride;
+            let fthr = outs[base].as_ref().expect("fast-only run").throughput();
             let reported_peak = m.peak_memory_target();
             let mut min_fast = reported_peak;
-            for pct in [10u64, 15, 20, 25, 30, 40, 50, 60] {
-                let fast = reported_peak * pct / 100;
-                let (r, _, t) = run_sentinel(&g, fast, steps, SentinelConfig::default());
-                if r.throughput(t as usize) >= 0.98 * fthr {
-                    min_fast = fast;
+            for (j, &pct) in PCTS.iter().enumerate() {
+                let o = outs[base + 1 + j].as_ref().expect("fig13 run");
+                if o.throughput() >= 0.98 * fthr {
+                    min_fast = reported_peak * pct / 100;
                     break;
                 }
             }

@@ -14,6 +14,15 @@
 //!
 //! ## Layout
 //!
+//! **[`api`] is the front door.** Every experiment — CLI command, figure
+//! regeneration, example, bench, test — goes through it: describe a run
+//! with [`api::RunSpec`], pick a policy from the [`api::PolicyKind`]
+//! registry, execute with [`api::RunSpec::run`] or fan a grid across
+//! cores with [`api::run_batch`], and serialize the [`api::RunOutcome`]
+//! with its hand-rolled JSON writer.
+//!
+//! The layers underneath:
+//!
 //! * [`sim`] — discrete-event heterogeneous-memory machine model
 //!   (the paper's 2-socket NUMA testbed, Table 2).
 //! * [`mem`] — data objects, object→page allocators, short-lived pool.
@@ -23,9 +32,14 @@
 //!   five TensorFlow models, Table 3).
 //! * [`coordinator`] — the Sentinel runtime itself (§4).
 //! * [`baselines`] — IAL (Yan et al. ASPLOS'19), LRU, static placements.
-//! * [`runtime`] — PJRT execution of AOT-compiled JAX/Pallas artifacts.
+//! * [`figures`] — the paper's evaluation artifacts (Figs. 1–13,
+//!   Tables 1/4/5), assembled from batched API runs.
 //! * [`metrics`] — counters and report tables for the paper's figures.
+//! * `runtime` — PJRT execution of AOT-compiled JAX/Pallas artifacts;
+//!   behind the `pjrt` feature because it needs the `xla` and `anyhow`
+//!   crates, which the offline build does not carry.
 
+pub mod api;
 pub mod baselines;
 pub mod coordinator;
 pub mod dnn;
@@ -33,6 +47,7 @@ pub mod figures;
 pub mod mem;
 pub mod metrics;
 pub mod profiler;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sim;
 pub mod util;

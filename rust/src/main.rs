@@ -10,18 +10,22 @@
 //! sentinel models                          # list model names
 //! ```
 //!
-//! Argument parsing is hand-rolled (`--key value` pairs) — no clap in the
-//! offline build environment.
+//! Every command accepts `--json` to emit machine-readable output.
+//! Argument parsing is hand-rolled (`--key value` pairs, unknown flags
+//! rejected) — no clap in the offline build environment. All runs are
+//! constructed through [`sentinel_hm::api`]: [`RunSpec`] + the
+//! [`PolicyKind`] registry.
 
 use std::collections::HashMap;
 use std::process::ExitCode;
 
-use sentinel_hm::coordinator::sentinel::{run_fast_only, run_sentinel, SentinelConfig};
-use sentinel_hm::dnn::zoo::{build_model, model_names, Model};
+use sentinel_hm::api::{json, PolicyKind, RunSpec};
+use sentinel_hm::dnn::zoo::{model_names, Model};
 use sentinel_hm::figures;
 use sentinel_hm::metrics::peak_memory_table;
-use sentinel_hm::runtime::{trainer::synthetic_batch, MlpTrainer, Runtime};
 use sentinel_hm::util::table::{fmt_bytes, Table};
+
+type Opts = HashMap<String, String>;
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -29,18 +33,14 @@ fn main() -> ExitCode {
         print_usage();
         return ExitCode::FAILURE;
     };
-    let opts = parse_opts(&args[1..]);
     let result = match cmd.as_str() {
         "profile" => cmd_profile(&args),
-        "train" => cmd_train(&args, &opts),
-        "sweep-mi" => cmd_sweep_mi(&opts),
-        "compare" => cmd_compare(&opts),
-        "figure" => cmd_figure(&args, &opts),
-        "e2e" => cmd_e2e(&opts),
-        "models" => {
-            println!("{}", model_names().join("\n"));
-            Ok(())
-        }
+        "train" => cmd_train(&args),
+        "sweep-mi" => cmd_sweep_mi(&args),
+        "compare" => cmd_compare(&args),
+        "figure" => cmd_figure(&args),
+        "e2e" => cmd_e2e(&args),
+        "models" => cmd_models(&args),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -62,69 +62,97 @@ fn print_usage() {
         "sentinel — runtime data management on heterogeneous memory (paper reproduction)\n\
          \n\
          USAGE:\n\
-           sentinel profile <model>\n\
-           sentinel train <model> [--policy sentinel|ial|lru|fast|slow] [--fast-pct 20] [--steps 14] [--mi K]\n\
-           sentinel sweep-mi [--fast-mb 1024]\n\
-           sentinel compare [--steps 14]\n\
-           sentinel figure <1|2|3|4|7|8|10|11|12|13|t1|t4|t5|all>\n\
-           sentinel e2e [--steps 300] [--artifacts artifacts] [--lr 0.05]\n\
-           sentinel models"
+           sentinel profile <model> [--json]\n\
+           sentinel train <model> [--policy <P>] [--fast-pct 20] [--fast-mb N] [--steps 14] [--mi K] [--seed S] [--json]\n\
+           sentinel sweep-mi [--fast-mb 1024] [--json]\n\
+           sentinel compare [--steps 14] [--json]\n\
+           sentinel figure <1|2|3|4|7|8|10|11|12|13|t1|t4|t5|all> [--steps N] [--fast-mb N] [--json]\n\
+           sentinel e2e [--steps 300] [--artifacts artifacts] [--lr 0.05]   (needs the `pjrt` feature)\n\
+           sentinel models [--json]\n\
+         \n\
+         policies: {}",
+        PolicyKind::valid_names()
     );
 }
 
-/// Parse `--key value` pairs (flags without values get "true").
-fn parse_opts(args: &[String]) -> HashMap<String, String> {
-    let mut opts = HashMap::new();
+/// Parse `--key value` pairs, rejecting any flag not in `flags` (value
+/// flags) or `switches` (boolean flags). Positional arguments are left
+/// for the caller.
+fn parse_opts(
+    cmd: &str,
+    args: &[String],
+    flags: &[&str],
+    switches: &[&str],
+) -> Result<Opts, String> {
+    let mut opts = Opts::new();
     let mut i = 0;
     while i < args.len() {
-        if let Some(key) = args[i].strip_prefix("--") {
+        let Some(key) = args[i].strip_prefix("--") else {
+            i += 1;
+            continue;
+        };
+        if switches.contains(&key) {
+            opts.insert(key.to_string(), "true".into());
+            i += 1;
+        } else if flags.contains(&key) {
             let value = args
                 .get(i + 1)
                 .filter(|v| !v.starts_with("--"))
                 .cloned()
-                .unwrap_or_else(|| "true".into());
-            let consumed = if value == "true" && args.get(i + 1).map(|v| v.starts_with("--")).unwrap_or(true) { 1 } else { 2 };
+                .ok_or_else(|| format!("--{key} wants a value"))?;
             opts.insert(key.to_string(), value);
-            i += consumed;
+            i += 2;
         } else {
-            i += 1;
+            let mut valid: Vec<String> = flags
+                .iter()
+                .map(|f| format!("--{f} <value>"))
+                .chain(switches.iter().map(|s| format!("--{s}")))
+                .collect();
+            valid.sort();
+            return Err(format!(
+                "unknown flag --{key} for '{cmd}' (valid: {})",
+                valid.join(", ")
+            ));
         }
     }
-    opts
+    Ok(opts)
 }
 
-fn opt_u64(opts: &HashMap<String, String>, key: &str, default: u64) -> Result<u64, String> {
+fn opt_u64(opts: &Opts, key: &str, default: u64) -> Result<u64, String> {
     match opts.get(key) {
         None => Ok(default),
         Some(v) => v.parse().map_err(|_| format!("--{key} wants a number, got '{v}'")),
     }
 }
 
-fn opt_f32(opts: &HashMap<String, String>, key: &str, default: f32) -> Result<f32, String> {
-    match opts.get(key) {
-        None => Ok(default),
-        Some(v) => v.parse().map_err(|_| format!("--{key} wants a number, got '{v}'")),
-    }
+fn want_json(opts: &Opts) -> bool {
+    opts.contains_key("json")
 }
 
-fn model_arg(args: &[String]) -> Result<(Model, String), String> {
-    let name = args.get(1).ok_or("missing <model> argument")?;
-    if build_model(name).is_none() {
-        return Err(format!("unknown model '{name}' (try: {})", model_names().join(", ")));
+fn model_arg(args: &[String]) -> Result<Model, String> {
+    let name = args.get(1).filter(|a| !a.starts_with("--"));
+    let name = name.ok_or("missing <model> argument")?;
+    Model::from_name(name)
+        .ok_or_else(|| format!("unknown model '{name}' (try: {})", model_names().join(", ")))
+}
+
+/// Print labelled tables as text, or as one JSON object keyed by label.
+fn print_sections(sections: &[(String, Table)], as_json: bool) {
+    if as_json {
+        let mut obj = json::Obj::new();
+        for (label, table) in sections {
+            obj = obj.field_raw(label, &json::table_json(table));
+        }
+        println!("{}", obj.end());
+    } else {
+        for (i, (label, table)) in sections.iter().enumerate() {
+            if i > 0 {
+                println!();
+            }
+            println!("{label}:");
+            table.print();
+        }
     }
-    let model = match name.as_str() {
-        "resnet20" => Model::ResNetV1 { depth: 20 },
-        "resnet32" => Model::ResNetV1 { depth: 32 },
-        "resnet44" => Model::ResNetV1 { depth: 44 },
-        "resnet56" => Model::ResNetV1 { depth: 56 },
-        "resnet110" => Model::ResNetV1 { depth: 110 },
-        "resnet152" => Model::ResNetV2_152,
-        "lstm" => Model::Lstm,
-        "dcgan" => Model::Dcgan,
-        "mobilenet" => Model::MobileNet,
-        _ => unreachable!(),
-    };
-    Ok((model, name.clone()))
 }
 
 // ---------------------------------------------------------------------
@@ -132,108 +160,148 @@ fn model_arg(args: &[String]) -> Result<(Model, String), String> {
 // ---------------------------------------------------------------------
 
 fn cmd_profile(args: &[String]) -> Result<(), String> {
-    let (model, _) = model_arg(args)?;
-    println!("== {} — one-step object-granularity profile (§3) ==\n", model.name());
-    let (t, short_frac) = figures::fig1_lifetime(model);
-    println!("Fig 1 — object lifetimes ({:.1}% short-lived):", short_frac * 100.0);
-    t.print();
-    println!("\nFig 2 — access-count distribution (all objects):");
-    figures::fig2_fig3_access(model, false).print();
-    println!("\nFig 3 — access-count distribution (objects < 4KB):");
-    figures::fig2_fig3_access(model, true).print();
+    let opts = parse_opts("profile", &args[1..], &[], &["json"])?;
+    let model = model_arg(args)?;
+    let (t1, short_frac) = figures::fig1_lifetime(model);
     let (t4, fs_pages) = figures::fig4_false_sharing(model);
-    println!("\nFig 4 — page-level false sharing ({fs_pages} mixed pages):");
-    t4.print();
-    println!("\nTable 1 — memory consumption:");
-    figures::table1_memory(model).print();
+    let sections = vec![
+        (
+            format!(
+                "Fig 1 — object lifetimes ({:.1}% short-lived)",
+                short_frac * 100.0
+            ),
+            t1,
+        ),
+        (
+            "Fig 2 — access-count distribution (all objects)".into(),
+            figures::fig2_fig3_access(model, false),
+        ),
+        (
+            "Fig 3 — access-count distribution (objects < 4KB)".into(),
+            figures::fig2_fig3_access(model, true),
+        ),
+        (
+            format!("Fig 4 — page-level false sharing ({fs_pages} mixed pages)"),
+            t4,
+        ),
+        (
+            "Table 1 — memory consumption".into(),
+            figures::table1_memory(model),
+        ),
+    ];
+    if !want_json(&opts) {
+        println!(
+            "== {} — one-step object-granularity profile (§3) ==\n",
+            model.name()
+        );
+    }
+    print_sections(&sections, want_json(&opts));
     Ok(())
 }
 
-fn cmd_train(args: &[String], opts: &HashMap<String, String>) -> Result<(), String> {
-    let (model, _) = model_arg(args)?;
-    let steps = opt_u64(opts, "steps", 14)? as u32;
-    let fast_pct = opt_u64(opts, "fast-pct", 20)?;
-    let policy = opts.get("policy").map(String::as_str).unwrap_or("sentinel");
-    let g = model.build(0x5E17);
-    let fast = model.peak_memory_target() * fast_pct / 100;
-    println!(
-        "model={} policy={policy} fast={} ({}% of reported peak) steps={steps}",
-        model.name(),
-        fmt_bytes(fast),
-        fast_pct
-    );
-    let (result, skip) = match policy {
-        "sentinel" => {
-            let mut cfg = SentinelConfig::default();
-            if let Some(mi) = opts.get("mi") {
-                cfg.fixed_mi = Some(mi.parse().map_err(|_| "--mi wants a number")?);
+fn cmd_train(args: &[String]) -> Result<(), String> {
+    let opts = parse_opts(
+        "train",
+        &args[1..],
+        &["policy", "steps", "fast-pct", "fast-mb", "mi", "seed"],
+        &["json"],
+    )?;
+    let model = model_arg(args)?;
+    let steps = opt_u64(&opts, "steps", u64::from(figures::RUN_STEPS))? as u32;
+    let policy = match opts.get("policy") {
+        None => PolicyKind::Sentinel(Default::default()),
+        Some(p) => p.parse::<PolicyKind>()?,
+    };
+    let policy = match opts.get("mi") {
+        None => policy,
+        Some(v) => {
+            if !matches!(policy, PolicyKind::Sentinel(_)) {
+                return Err("--mi only applies to the sentinel policy".into());
             }
-            let (r, cases, tuning) = run_sentinel(&g, fast, steps, cfg);
-            println!(
-                "cases: 1={} 2={} 3={} | tuning steps={tuning}",
-                cases.case1, cases.case2, cases.case3
-            );
-            (r, tuning as usize)
+            let mi: u32 = v.parse().map_err(|_| "--mi wants a number".to_string())?;
+            PolicyKind::StaticInterval(mi)
         }
-        "ial" => (figures::run_ial(&g, fast, steps), 3),
-        "lru" => (figures::run_lru(&g, fast, steps), 3),
-        "fast" => (run_fast_only(&g, steps), 1),
-        "slow" => {
-            let trace = sentinel_hm::dnn::StepTrace::from_graph(&g);
-            let mut m = sentinel_hm::sim::Machine::new(sentinel_hm::sim::MachineSpec::slow_only());
-            let e = sentinel_hm::sim::Engine::new(sentinel_hm::sim::EngineConfig {
-                steps,
-                ..Default::default()
-            });
-            let r = e.run(&g, &trace, &mut m, &mut sentinel_hm::sim::engine::StaticPolicy {
-                tier: sentinel_hm::sim::Tier::Slow,
-            });
-            (r, 1)
-        }
-        other => return Err(format!("unknown policy '{other}'")),
+    };
+    let mut spec = RunSpec::for_model(model).policy(policy).steps(steps);
+    if opts.contains_key("fast-mb") && opts.contains_key("fast-pct") {
+        return Err("--fast-mb and --fast-pct both size fast memory; pass only one".into());
+    }
+    if let Some(mb) = opts.get("fast-mb") {
+        let mb: u64 = mb.parse().map_err(|_| "--fast-mb wants a number".to_string())?;
+        spec = spec.fast_bytes(mb << 20);
+    } else {
+        spec = spec.fast_pct(opt_u64(&opts, "fast-pct", 20)? as u32);
+    }
+    if let Some(seed) = opts.get("seed") {
+        spec = spec.seed(seed.parse().map_err(|_| "--seed wants a number".to_string())?);
+    }
+    let out = spec.run().map_err(|e| e.to_string())?;
+    if want_json(&opts) {
+        println!("{}", out.to_json());
+        return Ok(());
+    }
+    let fast_str = if out.fast_bytes == u64::MAX {
+        "unbounded".to_string()
+    } else {
+        fmt_bytes(out.fast_bytes)
     };
     println!(
+        "model={} policy={} fast={fast_str} steps={}",
+        out.model, out.policy_detail, out.steps
+    );
+    if let Some(cases) = out.cases {
+        println!(
+            "cases: 1={} 2={} 3={} | tuning steps={}",
+            cases.case1, cases.case2, cases.case3, out.warmup_steps
+        );
+    }
+    println!(
         "throughput: {:.3} steps/s | migrations: {} pages (in {} / out {}) | peak fast: {}",
-        result.throughput(skip),
-        result.total_migrations(),
-        result.pages_migrated_in,
-        result.pages_migrated_out,
-        fmt_bytes(result.peak_fast_bytes),
+        out.throughput(),
+        out.result.total_migrations(),
+        out.result.pages_migrated_in,
+        out.result.pages_migrated_out,
+        fmt_bytes(out.result.peak_fast_bytes),
     );
     Ok(())
 }
 
-fn cmd_sweep_mi(opts: &HashMap<String, String>) -> Result<(), String> {
-    let fast = opt_u64(opts, "fast-mb", 1024)? << 20;
+fn sweep_sections(fast_bytes: u64) -> Vec<(String, Table)> {
     let mis: Vec<u32> = (1..=16).collect();
-    println!("== Fig 7 — throughput vs migration interval (ResNet_v1-32, fast={}) ==", fmt_bytes(fast));
-    let (rows, sp) = figures::fig7_mi_sweep(fast, &mis);
-    let mut t = Table::new(vec!["MI", "steps/s", ""]);
+    // One batch yields both figures.
+    let (rows, sp, cases) = figures::fig7_fig8_sweep(fast_bytes, &mis);
+    let mut t7 = Table::new(vec!["MI", "steps/s", ""]);
     for (mi, thr) in &rows {
-        t.row(vec![
+        t7.row(vec![
             mi.to_string(),
             format!("{thr:.3}"),
             if *mi == sp { "<- sweet spot (SP)".into() } else { String::new() },
         ]);
     }
-    t.print();
-    println!("\n== Fig 8 — migration cases per training step ==");
-    let mut t = Table::new(vec!["MI", "case1", "case2", "case3"]);
-    for (mi, c1, c2, c3) in figures::fig8_cases(fast, &mis) {
-        t.row(vec![mi.to_string(), c1.to_string(), c2.to_string(), c3.to_string()]);
+    let mut t8 = Table::new(vec!["MI", "case1", "case2", "case3"]);
+    for (mi, c1, c2, c3) in cases {
+        t8.row(vec![mi.to_string(), c1.to_string(), c2.to_string(), c3.to_string()]);
     }
-    t.print();
+    vec![
+        (
+            format!(
+                "Fig 7 — throughput vs migration interval (ResNet_v1-32, fast={})",
+                fmt_bytes(fast_bytes)
+            ),
+            t7,
+        ),
+        ("Fig 8 — migration cases per training step".into(), t8),
+    ]
+}
+
+fn cmd_sweep_mi(args: &[String]) -> Result<(), String> {
+    let opts = parse_opts("sweep-mi", &args[1..], &["fast-mb"], &["json"])?;
+    let fast = opt_u64(&opts, "fast-mb", 1024)? << 20;
+    print_sections(&sweep_sections(fast), want_json(&opts));
     Ok(())
 }
 
-fn cmd_compare(opts: &HashMap<String, String>) -> Result<(), String> {
-    let steps = opt_u64(opts, "steps", figures::RUN_STEPS as u64)? as u32;
-    println!("== Fig 10 — Sentinel vs IAL vs fast-only (fast = 20% of peak) ==");
-    let rows = figures::fig10_overall(steps);
-    figures::fig10_table(&rows).print();
-    println!("\n== Table 4 — page migrations per {steps}-step run ==");
-    figures::table4_migrations(&rows).print();
-    println!("\n== Table 5 — peak memory with and without Sentinel ==");
+fn t5_section() -> (String, Table) {
     let t5: Vec<(String, u64, u64)> = Model::paper_five()
         .into_iter()
         .map(|m| {
@@ -241,111 +309,154 @@ fn cmd_compare(opts: &HashMap<String, String>) -> Result<(), String> {
             (m.name(), w, wo)
         })
         .collect();
-    peak_memory_table(&t5).print();
+    (
+        "Table 5 — peak memory with and without Sentinel".into(),
+        peak_memory_table(&t5),
+    )
+}
+
+/// Fig 10 and Table 4 share one (5 models × 3 policies) batch.
+fn fig10_sections(steps: u32) -> Vec<(String, Table)> {
+    let rows = figures::fig10_overall(steps);
+    vec![
+        (
+            "Fig 10 — Sentinel vs IAL vs fast-only (fast = 20% of peak)".into(),
+            figures::fig10_table(&rows),
+        ),
+        (
+            format!("Table 4 — page migrations per {steps}-step run"),
+            figures::table4_migrations(&rows),
+        ),
+    ]
+}
+
+fn compare_sections(steps: u32) -> Vec<(String, Table)> {
+    let mut sections = fig10_sections(steps);
+    sections.push(t5_section());
+    sections
+}
+
+fn cmd_compare(args: &[String]) -> Result<(), String> {
+    let opts = parse_opts("compare", &args[1..], &["steps"], &["json"])?;
+    let steps = opt_u64(&opts, "steps", u64::from(figures::RUN_STEPS))? as u32;
+    print_sections(&compare_sections(steps), want_json(&opts));
     Ok(())
 }
 
-fn cmd_figure(args: &[String], opts: &HashMap<String, String>) -> Result<(), String> {
-    let id = args.get(1).ok_or("missing figure id")?.clone();
-    let steps = opt_u64(opts, "steps", figures::RUN_STEPS as u64)? as u32;
+fn figure_sections(id: &str, steps: u32, fast_bytes: u64) -> Result<Vec<(String, Table)>, String> {
     let rn32 = Model::ResNetV1 { depth: 32 };
-    let run = |id: &str| -> Result<(), String> {
-        match id {
-            "1" => {
-                let (t, frac) = figures::fig1_lifetime(rn32);
-                println!("Fig 1 — lifetimes ({:.1}% short-lived):", frac * 100.0);
-                t.print();
+    let sections = match id {
+        "1" => {
+            let (t, frac) = figures::fig1_lifetime(rn32);
+            vec![(format!("Fig 1 — lifetimes ({:.1}% short-lived)", frac * 100.0), t)]
+        }
+        "2" => vec![(
+            "Fig 2 — access counts (all objects)".into(),
+            figures::fig2_fig3_access(rn32, false),
+        )],
+        "3" => vec![(
+            "Fig 3 — access counts (< 4KB)".into(),
+            figures::fig2_fig3_access(rn32, true),
+        )],
+        "4" => vec![(
+            "Fig 4 — page-level false sharing".into(),
+            figures::fig4_false_sharing(rn32).0,
+        )],
+        "t1" => vec![("Table 1 — memory consumption".into(), figures::table1_memory(rn32))],
+        // Figs 7 and 8 come from one sweep; either id prints both tables.
+        "7" | "8" => sweep_sections(fast_bytes),
+        // Fig 10 and Table 4 come from one sweep; either id prints both.
+        "10" | "t4" => fig10_sections(steps),
+        "t5" => vec![t5_section()],
+        "11" => {
+            let models = [rn32, Model::ResNetV2_152, Model::MobileNet];
+            let mut t = Table::new(vec![
+                "model",
+                "having false sharing",
+                "no space reservation",
+                "no t&t",
+            ]);
+            for (m, fs, rs, tt) in figures::fig11_ablation(&models, steps) {
+                t.row(vec![m, format!("{fs:.3}"), format!("{rs:.3}"), format!("{tt:.3}")]);
             }
-            "2" => figures::fig2_fig3_access(rn32, false).print(),
-            "3" => figures::fig2_fig3_access(rn32, true).print(),
-            "4" => figures::fig4_false_sharing(rn32).0.print(),
-            "t1" => figures::table1_memory(rn32).print(),
-            "7" | "8" => {
-                let mut o = opts.clone();
-                o.entry("fast-mb".into()).or_insert("1024".into());
-                cmd_sweep_mi(&o)?;
-            }
-            "10" | "t4" => {
-                let rows = figures::fig10_overall(steps);
-                if id == "10" {
-                    figures::fig10_table(&rows).print();
-                } else {
-                    figures::table4_migrations(&rows).print();
+            vec![("Fig 11 — ablation (normalized to full Sentinel)".into(), t)]
+        }
+        "12" => {
+            let pcts = [10u32, 20, 30, 40, 60];
+            let mut t = Table::new(vec!["model", "10%", "20%", "30%", "40%", "60%"]);
+            for (m, series) in figures::fig12_sensitivity(&pcts, steps) {
+                let mut row = vec![m];
+                for (_, v) in series {
+                    row.push(format!("{v:.3}"));
                 }
+                t.row(row);
             }
-            "t5" => {
-                let t5: Vec<(String, u64, u64)> = Model::paper_five()
-                    .into_iter()
-                    .map(|m| {
-                        let (w, wo) = figures::table5_peak_memory(m);
-                        (m.name(), w, wo)
-                    })
-                    .collect();
-                peak_memory_table(&t5).print();
-            }
-            "11" => {
-                println!("Fig 11 — ablation (normalized to full Sentinel):");
-                let models = [rn32, Model::ResNetV2_152, Model::MobileNet];
-                let mut t = Table::new(vec![
-                    "model",
-                    "having false sharing",
-                    "no space reservation",
-                    "no t&t",
+            vec![("Fig 12 — sensitivity to fast-memory size (normalized)".into(), t)]
+        }
+        "13" => {
+            let mut t = Table::new(vec!["model", "peak memory", "min fast size", "saving"]);
+            for (m, peak, fast) in figures::fig13_variants(steps) {
+                t.row(vec![
+                    m,
+                    fmt_bytes(peak),
+                    fmt_bytes(fast),
+                    format!("{:.0}%", 100.0 * (1.0 - fast as f64 / peak as f64)),
                 ]);
-                for (m, fs, rs, tt) in figures::fig11_ablation(&models, steps) {
-                    t.row(vec![
-                        m,
-                        format!("{fs:.3}"),
-                        format!("{rs:.3}"),
-                        format!("{tt:.3}"),
-                    ]);
-                }
-                t.print();
             }
-            "12" => {
-                println!("Fig 12 — sensitivity to fast-memory size (normalized):");
-                let pcts = [10u32, 20, 30, 40, 60];
-                let mut t = Table::new(vec!["model", "10%", "20%", "30%", "40%", "60%"]);
-                for (m, series) in figures::fig12_sensitivity(&pcts, steps) {
-                    let mut row = vec![m];
-                    for (_, v) in series {
-                        row.push(format!("{v:.3}"));
-                    }
-                    t.row(row);
-                }
-                t.print();
-            }
-            "13" => {
-                println!("Fig 13 — peak memory vs min fast size (ResNet variants):");
-                let mut t = Table::new(vec!["model", "peak memory", "min fast size", "saving"]);
-                for (m, peak, fast) in figures::fig13_variants(steps) {
-                    t.row(vec![
-                        m,
-                        fmt_bytes(peak),
-                        fmt_bytes(fast),
-                        format!("{:.0}%", 100.0 * (1.0 - fast as f64 / peak as f64)),
-                    ]);
-                }
-                t.print();
-            }
-            other => return Err(format!("unknown figure '{other}'")),
+            vec![("Fig 13 — peak memory vs min fast size (ResNet variants)".into(), t)]
         }
-        Ok(())
+        other => return Err(format!("unknown figure '{other}'")),
     };
-    if id == "all" {
-        for fid in ["1", "2", "3", "4", "t1", "7", "10", "t4", "t5", "11", "12", "13"] {
-            println!("\n───────────────────────── figure {fid} ─────────────────────────");
-            run(fid)?;
-        }
-        Ok(())
-    } else {
-        run(&id)
-    }
+    Ok(sections)
 }
 
-fn cmd_e2e(opts: &HashMap<String, String>) -> Result<(), String> {
-    let steps = opt_u64(opts, "steps", 300)? as u32;
-    let lr = opt_f32(opts, "lr", 0.05)?;
+fn cmd_figure(args: &[String]) -> Result<(), String> {
+    let opts = parse_opts("figure", &args[1..], &["steps", "fast-mb"], &["json"])?;
+    let id = args
+        .get(1)
+        .filter(|a| !a.starts_with("--"))
+        .ok_or("missing figure id")?
+        .clone();
+    let steps = opt_u64(&opts, "steps", u64::from(figures::RUN_STEPS))? as u32;
+    let fast = opt_u64(&opts, "fast-mb", 1024)? << 20;
+    // "7" covers Fig 8 and "10" covers Table 4 (shared sweeps).
+    let ids: Vec<&str> = if id == "all" {
+        vec!["1", "2", "3", "4", "t1", "7", "10", "t5", "11", "12", "13"]
+    } else {
+        vec![id.as_str()]
+    };
+    let mut sections = Vec::new();
+    for fid in ids {
+        sections.extend(figure_sections(fid, steps, fast)?);
+    }
+    print_sections(&sections, want_json(&opts));
+    Ok(())
+}
+
+fn cmd_models(args: &[String]) -> Result<(), String> {
+    let opts = parse_opts("models", &args[1..], &[], &["json"])?;
+    if want_json(&opts) {
+        let mut arr = json::Arr::new();
+        for name in model_names() {
+            arr = arr.push_str_val(name);
+        }
+        println!("{}", arr.end());
+    } else {
+        println!("{}", model_names().join("\n"));
+    }
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn cmd_e2e(args: &[String]) -> Result<(), String> {
+    use sentinel_hm::runtime::{trainer::synthetic_batch, MlpTrainer, Runtime};
+
+    let opts = parse_opts("e2e", &args[1..], &["steps", "artifacts", "lr"], &[])?;
+    let steps = opt_u64(&opts, "steps", 300)? as u32;
+    let lr: f32 = match opts.get("lr") {
+        None => 0.05,
+        Some(v) => v.parse().map_err(|_| format!("--lr wants a number, got '{v}'"))?,
+    };
     let dir = opts
         .get("artifacts")
         .cloned()
@@ -376,4 +487,13 @@ fn cmd_e2e(opts: &HashMap<String, String>) -> Result<(), String> {
     let dt = t0.elapsed().as_secs_f64();
     println!("{} steps in {:.1}s = {:.2} steps/s", steps, dt, steps as f64 / dt);
     Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_e2e(_args: &[String]) -> Result<(), String> {
+    Err("the `e2e` command drives real PJRT training and is compiled out of \
+         this build. Enabling it needs the `xla` and `anyhow` crates: vendor \
+         them, declare them in Cargo.toml (the offline build intentionally \
+         declares no dependencies), then `cargo run --features pjrt -- e2e`"
+        .into())
 }

@@ -17,8 +17,15 @@ use crate::sim::machine::Machine;
 
 /// A data-management policy: decides placement at allocation time and may
 /// queue migrations at layer/step boundaries or after accesses.
+///
+/// Policies are constructed through the [`crate::api::PolicyKind`]
+/// registry; `as_any` lets the API recover policy-specific metadata
+/// (tuning steps, case counts) from the trait object after a run.
 pub trait Policy {
     fn name(&self) -> String;
+
+    /// Downcast support for post-run metadata extraction.
+    fn as_any(&self) -> &dyn std::any::Any;
 
     /// Preferred tier for an object being allocated right now.
     fn place(&mut self, obj: &DataObject, m: &Machine) -> Tier;
@@ -231,6 +238,10 @@ impl Policy for StaticPolicy {
             Tier::Fast => "fast-only".into(),
             Tier::Slow => "slow-only".into(),
         }
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
     }
 
     fn place(&mut self, _obj: &DataObject, _m: &Machine) -> Tier {

@@ -14,6 +14,16 @@ impl Table {
         }
     }
 
+    /// The header cells (JSON rendering keys off these).
+    pub fn header(&self) -> &[String] {
+        &self.header
+    }
+
+    /// The body rows, as rendered strings.
+    pub fn rows(&self) -> &[Vec<String>] {
+        &self.rows
+    }
+
     pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
         let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
         assert_eq!(

@@ -1,0 +1,160 @@
+//! Surface tests for the unified experiment API: policy-name round
+//! trips, spec validation, JSON well-formedness, and the determinism
+//! guarantee of the parallel batch runner.
+
+use sentinel_hm::api::{json, run_batch, PolicyKind, RunSpec, SpecError};
+use sentinel_hm::dnn::zoo::Model;
+
+#[test]
+fn policy_names_round_trip_through_from_str() {
+    for kind in PolicyKind::all() {
+        let name = kind.name();
+        let parsed: PolicyKind = name.parse().unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(parsed, kind, "{name} must round-trip");
+        assert_eq!(parsed.name(), name);
+    }
+}
+
+#[test]
+fn unknown_policy_error_lists_valid_names() {
+    let err = "definitely-not-a-policy".parse::<PolicyKind>().unwrap_err();
+    for expected in ["sentinel", "ial", "lru", "fast-only", "slow-only", "mi:"] {
+        assert!(err.contains(expected), "error should list '{expected}': {err}");
+    }
+}
+
+#[test]
+fn validation_rejects_zero_steps() {
+    let err = RunSpec::for_model(Model::Dcgan).steps(0).validate().unwrap_err();
+    assert_eq!(err, SpecError::ZeroSteps);
+    assert!(RunSpec::for_model(Model::Dcgan).steps(0).run().is_err());
+}
+
+#[test]
+fn validation_rejects_unknown_model() {
+    let err = RunSpec::model("alexnet-4096").validate().unwrap_err();
+    assert_eq!(err, SpecError::UnknownModel("alexnet-4096".into()));
+    // The error message points at the zoo.
+    assert!(err.to_string().contains("resnet32"), "{err}");
+}
+
+#[test]
+fn validation_rejects_fast_larger_than_slow_tier() {
+    let err = RunSpec::for_model(Model::Dcgan)
+        .fast_bytes(1 << 30)
+        .slow_bytes(1 << 20)
+        .validate()
+        .unwrap_err();
+    assert_eq!(
+        err,
+        SpecError::FastExceedsSlow { fast: 1 << 30, slow: 1 << 20 }
+    );
+}
+
+#[test]
+fn validation_rejects_degenerate_fast_sizes() {
+    assert!(matches!(
+        RunSpec::for_model(Model::Dcgan).fast_bytes(0).validate(),
+        Err(SpecError::BadFastSize(_))
+    ));
+    assert!(matches!(
+        RunSpec::for_model(Model::Dcgan).fast_fraction(0.0).validate(),
+        Err(SpecError::BadFastSize(_))
+    ));
+    assert!(matches!(
+        RunSpec::for_model(Model::Dcgan).fast_fraction(1.5).validate(),
+        Err(SpecError::BadFastSize(_))
+    ));
+    assert!(matches!(
+        RunSpec::for_model(Model::Dcgan).fast_pct(0).validate(),
+        Err(SpecError::BadFastSize(_))
+    ));
+    // Fast-only ignores the fast size, so 0 is fine there.
+    assert!(RunSpec::for_model(Model::Dcgan)
+        .policy(PolicyKind::FastOnly)
+        .fast_bytes(0)
+        .validate()
+        .is_ok());
+}
+
+#[test]
+fn outcomes_serialize_to_wellformed_json() {
+    for policy in [
+        PolicyKind::Sentinel(Default::default()),
+        PolicyKind::Ial,
+        PolicyKind::FastOnly,
+    ] {
+        let out = RunSpec::for_model(Model::Dcgan)
+            .policy(policy)
+            .steps(6)
+            .run()
+            .expect("run");
+        let doc = out.to_json();
+        assert!(json::is_valid(&doc), "invalid JSON for {}: {doc}", out.policy);
+        assert!(doc.contains("\"model\":\"DCGAN\""), "{doc}");
+        assert!(doc.contains("\"per_step\":["), "{doc}");
+    }
+}
+
+#[test]
+fn sentinel_outcome_carries_tuning_metadata() {
+    let out = RunSpec::for_model(Model::Dcgan).steps(10).run().expect("run");
+    assert_eq!(out.policy, "sentinel");
+    assert!(out.cases.is_some());
+    assert!(out.chosen_mi.is_some());
+    assert!(out.profile.is_some());
+    assert!(out.warmup_steps >= 2, "profiling + ≥1 measured candidate");
+    let fast_only = RunSpec::for_model(Model::Dcgan)
+        .policy(PolicyKind::FastOnly)
+        .steps(4)
+        .run()
+        .expect("run");
+    assert!(fast_only.cases.is_none());
+    assert_eq!(fast_only.warmup_steps, 1);
+}
+
+/// The acceptance bar: a 4-thread `run_batch` over a compare-style grid
+/// must be bit-identical to the serial path (JSON uses shortest-round-
+/// trip float formatting, so string equality is bit equality).
+#[test]
+fn run_batch_is_bit_identical_to_serial() {
+    let models = [Model::ResNetV1 { depth: 32 }, Model::Dcgan];
+    let policies = [
+        PolicyKind::FastOnly,
+        PolicyKind::Sentinel(Default::default()),
+        PolicyKind::Ial,
+    ];
+    let specs: Vec<RunSpec> = models
+        .iter()
+        .flat_map(|&m| {
+            policies
+                .iter()
+                .map(move |&p| RunSpec::for_model(m).fast_pct(20).policy(p).steps(8))
+        })
+        .collect();
+    let serial: Vec<String> = specs
+        .iter()
+        .map(|s| s.run().expect("serial run").to_json())
+        .collect();
+    let parallel = run_batch(specs, 4);
+    assert_eq!(serial.len(), parallel.len());
+    for (i, (s, p)) in serial.iter().zip(&parallel).enumerate() {
+        let p = p.as_ref().expect("parallel run").to_json();
+        assert_eq!(s, &p, "spec {i} diverged between serial and 4-thread batch");
+    }
+}
+
+#[test]
+fn named_and_enum_specs_agree() {
+    let by_name = RunSpec::model("dcgan")
+        .policy(PolicyKind::FastOnly)
+        .steps(3)
+        .run()
+        .expect("by-name run");
+    let by_enum = RunSpec::for_model(Model::Dcgan)
+        .policy(PolicyKind::FastOnly)
+        .steps(3)
+        .run()
+        .expect("by-enum run");
+    assert_eq!(by_name.to_json(), by_enum.to_json());
+}

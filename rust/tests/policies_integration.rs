@@ -1,38 +1,29 @@
 //! Cross-policy integration tests over the full simulator stack: every
 //! model in the zoo, every policy, checking the orderings the paper's
-//! evaluation establishes.
+//! evaluation establishes. All runs go through the `api` front door.
 
-use sentinel_hm::coordinator::sentinel::{run_fast_only, run_sentinel, SentinelConfig};
+use sentinel_hm::api::{PolicyKind, RunOutcome, RunSpec};
+use sentinel_hm::coordinator::sentinel::SentinelConfig;
 use sentinel_hm::dnn::zoo::Model;
-use sentinel_hm::dnn::StepTrace;
-use sentinel_hm::figures::{run_ial, run_lru};
-use sentinel_hm::sim::{Engine, EngineConfig, Machine, MachineSpec, Tier};
 
 const STEPS: u32 = 14;
 
-fn slow_only(g: &sentinel_hm::dnn::ModelGraph) -> f64 {
-    let trace = StepTrace::from_graph(g);
-    let mut m = Machine::new(MachineSpec::slow_only());
-    let e = Engine::new(EngineConfig { steps: 3, ..Default::default() });
-    e.run(
-        g,
-        &trace,
-        &mut m,
-        &mut sentinel_hm::sim::engine::StaticPolicy { tier: Tier::Slow },
-    )
-    .throughput(1)
+fn run(model: Model, policy: PolicyKind, steps: u32) -> RunOutcome {
+    RunSpec::for_model(model)
+        .fast_pct(20)
+        .policy(policy)
+        .steps(steps)
+        .run()
+        .expect("run")
 }
 
 #[test]
 fn all_models_policy_ordering_at_20pct() {
     for model in Model::paper_five() {
-        let g = model.build(0x5E17);
-        let fast = model.peak_memory_target() / 5;
-        let fthr = run_fast_only(&g, 5).throughput(1);
-        let (s, _, tuning) = run_sentinel(&g, fast, STEPS, SentinelConfig::default());
-        let sthr = s.throughput(tuning as usize);
-        let ithr = run_ial(&g, fast, STEPS).throughput(3);
-        let slow = slow_only(&g);
+        let fthr = run(model, PolicyKind::FastOnly, 5).throughput();
+        let sthr = run(model, PolicyKind::Sentinel(Default::default()), STEPS).throughput();
+        let ithr = run(model, PolicyKind::Ial, STEPS).throughput();
+        let slow = run(model, PolicyKind::SlowOnly, 3).throughput();
         let name = model.name();
         // Paper Fig. 10 orderings.
         assert!(sthr <= fthr * 1.02, "{name}: Sentinel can't beat fast-only");
@@ -52,11 +43,9 @@ fn sentinel_beats_ial_by_meaningful_margin() {
     // Paper: +18% on average. Require ≥ +5% on average across models.
     let mut ratios = Vec::new();
     for model in Model::paper_five() {
-        let g = model.build(0x5E17);
-        let fast = model.peak_memory_target() / 5;
-        let (s, _, t) = run_sentinel(&g, fast, STEPS, SentinelConfig::default());
-        let i = run_ial(&g, fast, STEPS);
-        ratios.push(s.throughput(t as usize) / i.throughput(3));
+        let s = run(model, PolicyKind::Sentinel(Default::default()), STEPS);
+        let i = run(model, PolicyKind::Ial, STEPS);
+        ratios.push(s.throughput() / i.throughput());
     }
     let avg = ratios.iter().sum::<f64>() / ratios.len() as f64;
     assert!(avg > 1.05, "Sentinel/IAL avg {avg:.3} (paper: 1.18)");
@@ -68,11 +57,9 @@ fn sentinel_migrates_more_than_ial() {
     // well-overlapped migration is the design, not a bug.
     let mut more = 0;
     for model in Model::paper_five() {
-        let g = model.build(0x5E17);
-        let fast = model.peak_memory_target() / 5;
-        let (s, _, _) = run_sentinel(&g, fast, STEPS, SentinelConfig::default());
-        let i = run_ial(&g, fast, STEPS);
-        if s.total_migrations() > i.total_migrations() {
+        let s = run(model, PolicyKind::Sentinel(Default::default()), STEPS);
+        let i = run(model, PolicyKind::Ial, STEPS);
+        if s.result.total_migrations() > i.result.total_migrations() {
             more += 1;
         }
     }
@@ -82,11 +69,9 @@ fn sentinel_migrates_more_than_ial() {
 #[test]
 fn lru_is_between_slow_and_fast() {
     let model = Model::ResNetV1 { depth: 32 };
-    let g = model.build(0x5E17);
-    let fast = model.peak_memory_target() / 5;
-    let fthr = run_fast_only(&g, 5).throughput(1);
-    let lthr = run_lru(&g, fast, STEPS).throughput(3);
-    let slow = slow_only(&g);
+    let fthr = run(model, PolicyKind::FastOnly, 5).throughput();
+    let lthr = run(model, PolicyKind::Lru, STEPS).throughput();
+    let slow = run(model, PolicyKind::SlowOnly, 3).throughput();
     assert!(lthr < fthr * 1.01);
     assert!(lthr > slow);
 }
@@ -94,12 +79,14 @@ fn lru_is_between_slow_and_fast() {
 #[test]
 fn fig12_larger_fast_memory_never_hurts_much() {
     for model in [Model::ResNetV1 { depth: 32 }, Model::Dcgan] {
-        let g = model.build(0x5E17);
         let mut prev = 0.0;
-        for pct in [10u64, 20, 40, 60] {
-            let fast = model.peak_memory_target() * pct / 100;
-            let (r, _, t) = run_sentinel(&g, fast, STEPS, SentinelConfig::default());
-            let thr = r.throughput(t as usize);
+        for pct in [10u32, 20, 40, 60] {
+            let thr = RunSpec::for_model(model)
+                .fast_pct(pct)
+                .steps(STEPS)
+                .run()
+                .expect("run")
+                .throughput();
             assert!(
                 thr >= prev * 0.97,
                 "{}: throughput dropped {prev:.3} → {thr:.3} at {pct}%",
@@ -126,37 +113,34 @@ fn fig13_required_fast_share_does_not_grow_with_depth() {
 #[test]
 fn ablations_cost_performance() {
     let model = Model::ResNetV1 { depth: 32 };
-    let g = model.build(0x5E17);
-    let fast = model.peak_memory_target() / 5;
-    let (full, _, t) = run_sentinel(&g, fast, STEPS, SentinelConfig::default());
-    let base = full.throughput(t as usize);
-    let (no_rs, _, t2) = run_sentinel(
-        &g,
-        fast,
+    let base = run(model, PolicyKind::Sentinel(Default::default()), STEPS).throughput();
+    let no_rs = run(
+        model,
+        PolicyKind::Sentinel(SentinelConfig { reserve_space: false, ..Default::default() }),
         STEPS,
-        SentinelConfig { reserve_space: false, ..Default::default() },
     );
-    let (no_fs, _, t3) = run_sentinel(
-        &g,
-        fast,
+    let no_fs = run(
+        model,
+        PolicyKind::Sentinel(SentinelConfig {
+            handle_false_sharing: false,
+            ..Default::default()
+        }),
         STEPS,
-        SentinelConfig { handle_false_sharing: false, ..Default::default() },
     );
-    assert!(no_rs.throughput(t2 as usize) <= base * 1.02);
-    assert!(no_fs.throughput(t3 as usize) <= base * 1.02);
+    assert!(no_rs.throughput() <= base * 1.02);
+    assert!(no_fs.throughput() <= base * 1.02);
 }
 
 #[test]
 fn tuning_steps_are_bounded_like_table3() {
     // Paper Table 3: 2–8 steps for profiling + MI search + trial.
     for model in Model::paper_five() {
-        let g = model.build(0x5E17);
-        let fast = model.peak_memory_target() / 5;
-        let (_, _, tuning) = run_sentinel(&g, fast, STEPS, SentinelConfig::default());
+        let out = run(model, PolicyKind::Sentinel(Default::default()), STEPS);
         assert!(
-            (2..=10).contains(&tuning),
-            "{}: tuning steps {tuning} out of Table-3 range",
-            model.name()
+            (2..=10).contains(&out.warmup_steps),
+            "{}: tuning steps {} out of Table-3 range",
+            model.name(),
+            out.warmup_steps
         );
     }
 }

@@ -1,0 +1,32 @@
+#!/usr/bin/env bash
+# Pre-PR verification: build, test, format check (when available), and a
+# CLI smoke run exercising the batched compare path and the JSON writer.
+# Documented in README.md — run before every PR.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+if cargo fmt --version >/dev/null 2>&1; then
+  echo "== cargo fmt --check =="
+  cargo fmt --check || echo "warning: rustfmt differences (non-fatal)"
+else
+  echo "== cargo fmt not installed; skipping format check =="
+fi
+
+echo "== smoke: sentinel compare --steps 4 --json =="
+out="$(./target/release/sentinel compare --steps 4 --json)"
+if command -v python3 >/dev/null 2>&1; then
+  printf '%s' "$out" | python3 -c 'import json,sys; json.load(sys.stdin)'
+else
+  case "$out" in
+    "{"*"}") ;;
+    *) echo "compare --json did not emit a JSON object" >&2; exit 1 ;;
+  esac
+fi
+
+echo "verify: OK"
