@@ -5,6 +5,7 @@
 //!
 //! Run: `cargo run --release --example mi_tuning`
 
+use sentinel_hm::api::shared_workload;
 use sentinel_hm::coordinator::interval::{candidate_intervals, estimate};
 use sentinel_hm::dnn::zoo::Model;
 use sentinel_hm::figures::{fig7_mi_sweep, fig8_cases};
@@ -14,7 +15,10 @@ use sentinel_hm::util::table::{fmt_bytes, Table};
 fn main() {
     let fast = 1u64 << 30; // the paper's Fig. 7 configuration
     let model = Model::ResNetV1 { depth: 32 };
-    let g = model.build(0x5E17);
+    // Same seed as the figure suite, so the MI sweep below reuses the
+    // cached graph instead of rebuilding it.
+    let w = shared_workload(model, 0x5E17);
+    let g = &w.graph;
     let spec = MachineSpec::paper_testbed(fast);
 
     println!("== Eq. 1/2 constraint values (S = {}) ==\n", fmt_bytes(fast));
@@ -22,7 +26,7 @@ fn main() {
         "MI", "Data(MI)", "RS(MI)", "T(MI)", "space ok", "time ok",
     ]);
     for mi in 1..=16 {
-        let e = estimate(&g, mi, &spec, fast);
+        let e = estimate(g, mi, &spec, fast);
         t.row(vec![
             mi.to_string(),
             fmt_bytes(e.data_bytes),
@@ -33,7 +37,7 @@ fn main() {
         ]);
     }
     t.print();
-    let candidates = candidate_intervals(&g, &spec, fast, 5);
+    let candidates = candidate_intervals(g, &spec, fast, 5);
     println!("\nonline candidates (≤5, evenly sampled): {candidates:?}");
 
     let mis: Vec<u32> = (1..=16).collect();

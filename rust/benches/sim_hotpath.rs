@@ -1,18 +1,19 @@
-//! Bench: the L3 hot paths themselves — trace replay rate, migration-lane
-//! throughput, plan construction, and the end-to-end figure-suite cost.
+//! Bench: the L3 hot paths themselves — trace compile + replay rate
+//! (compiled vs legacy), migration-lane throughput, plan construction,
+//! machine alloc/access/free, and the end-to-end figure-suite cost.
 //! This is the §Perf driver: EXPERIMENTS.md records the before/after of
 //! each optimization against these numbers, and the final JSON summary
-//! line is what future PRs diff against `BENCH_*.json` to catch
-//! engine-hot-path regressions.
+//! line is what `scripts/bench_check.sh` diffs against `BENCH_*.json`
+//! to catch engine-hot-path regressions.
 //!
 //! Run: `cargo bench --bench sim_hotpath`
 
-use sentinel_hm::api::{json, PolicyKind, RunSpec};
+use sentinel_hm::api::{json, workload_cache_stats, PolicyKind, RunSpec};
 use sentinel_hm::coordinator::plan::MigrationPlan;
 use sentinel_hm::dnn::zoo::Model;
 use sentinel_hm::dnn::StepTrace;
 use sentinel_hm::mem::ObjectId;
-use sentinel_hm::sim::{Engine, Machine, MachineSpec, Tier};
+use sentinel_hm::sim::{CompiledTrace, Engine, Machine, MachineSpec, Tier};
 use sentinel_hm::util::bench::time_it;
 
 fn main() {
@@ -31,16 +32,25 @@ fn main() {
     let t = time_it(5, || StepTrace::from_graph(&g));
     t.report("trace build");
 
-    // --- engine replay rate (events/s, ns/step) ----------------------
-    let steps = 10u32;
     let fast_only = PolicyKind::FastOnly;
+    let engine_cfg = fast_only.engine_config(10);
+    let t = time_it(5, || {
+        CompiledTrace::compile(&g, &trace, MachineSpec::fast_only().compute_gflops, engine_cfg.profiling_fault_ns)
+    });
+    t.report("trace compile (CompiledTrace lowering)");
+    let trace_compile_ns = t.median_ns as f64;
+
+    // --- engine replay rate (events/s, ns/step) ----------------------
+    // Compiled fast path (what Engine::run does) vs the legacy
+    // event-by-event reference loop, same machine/policy/workload.
+    let steps = 10u32;
     let t = time_it(5, || {
         let mut m = Machine::new(MachineSpec::fast_only());
         let mut p = fast_only.construct(&g, &trace, MachineSpec::fast_only());
         let e = Engine::new(fast_only.engine_config(steps));
         e.run(&g, &trace, &mut m, p.as_mut())
     });
-    t.report("engine replay (10 steps, static policy)");
+    t.report("engine replay (10 steps, compiled, static policy)");
     let engine_ns_per_step = t.median_ns as f64 / steps as f64;
     let events_per_s = (n_events as f64 * steps as f64) / (t.median_ns as f64 / 1e9);
     println!(
@@ -48,12 +58,32 @@ fn main() {
         events_per_s / 1e6
     );
 
-    // --- full Sentinel run through the API (incl. graph build) -------
+    let t = time_it(5, || {
+        let mut m = Machine::new(MachineSpec::fast_only());
+        let mut p = fast_only.construct(&g, &trace, MachineSpec::fast_only());
+        let e = Engine::new(fast_only.engine_config(steps));
+        e.run_legacy(&g, &trace, &mut m, p.as_mut())
+    });
+    t.report("engine replay (10 steps, legacy event loop)");
+    let events_per_s_legacy = (n_events as f64 * steps as f64) / (t.median_ns as f64 / 1e9);
+    println!(
+        "  → {:.1} M events/s | compiled speedup {:.2}×",
+        events_per_s_legacy / 1e6,
+        events_per_s / events_per_s_legacy
+    );
+
+    // --- full Sentinel run through the API ---------------------------
+    // First call builds the workload; later iterations hit the shared
+    // cache, as a sweep's grid points do.
     let sentinel_spec = RunSpec::for_model(RN32).seed(1).fast_pct(20).steps(14);
     let t = time_it(5, || sentinel_spec.run().expect("sentinel run"));
-    t.report("sentinel end-to-end (RunSpec: build+tune+14 steps)");
+    t.report("sentinel end-to-end (RunSpec, cached workload)");
     let sentinel_ns_per_step = t.median_ns as f64 / 14.0;
-    println!("  → {sentinel_ns_per_step:.0} ns/step (wall, incl. setup)");
+    let cache = workload_cache_stats();
+    println!(
+        "  → {sentinel_ns_per_step:.0} ns/step (wall) | workload cache: {} hits / {} misses",
+        cache.hits, cache.misses
+    );
 
     // --- plan construction --------------------------------------------
     let fast = RN32.peak_memory_target() / 5;
@@ -62,6 +92,7 @@ fn main() {
     t.report("migration-plan build (MI=8)");
 
     // --- machine microbench: lane throughput ---------------------------
+    const LANE_PAGES: u64 = 32_000; // 1000 objects × 32 pages
     let t = time_it(5, || {
         let mut m = Machine::new(MachineSpec::paper_testbed(1 << 30));
         for i in 0..1000u32 {
@@ -77,9 +108,13 @@ fn main() {
         m.stats.pages_in
     });
     t.report("migration lane (32k pages through promote)");
+    let lane_pages_per_s = LANE_PAGES as f64 / (t.median_ns as f64 / 1e9);
 
+    // --- machine microbench: alloc/access/free -------------------------
+    const AAF_OPS: f64 = 30_000.0; // 10k × (alloc + access + free)
     let t = time_it(5, || {
         let mut m = Machine::new(MachineSpec::fast_only());
+        m.reserve_objects(10_000);
         for i in 0..10_000u32 {
             m.alloc(ObjectId(i), 4, Tier::Fast);
         }
@@ -91,13 +126,19 @@ fn main() {
         }
     });
     t.report("machine alloc/access/free (10k objects)");
+    let alloc_access_free_ns_per_op = t.median_ns as f64 / AAF_OPS;
 
     // Machine-readable summary for regression tracking (BENCH_*.json).
     let summary = json::Obj::new()
         .field_str("bench", "sim_hotpath")
         .field_f64("engine_ns_per_step", engine_ns_per_step)
         .field_f64("engine_events_per_s", events_per_s)
+        .field_f64("engine_events_per_s_legacy", events_per_s_legacy)
+        .field_f64("engine_speedup_vs_legacy", events_per_s / events_per_s_legacy)
+        .field_f64("trace_compile_ns", trace_compile_ns)
         .field_f64("sentinel_e2e_ns_per_step", sentinel_ns_per_step)
+        .field_f64("lane_pages_per_s", lane_pages_per_s)
+        .field_f64("alloc_access_free_ns_per_op", alloc_access_free_ns_per_op)
         .end();
     println!("\n{summary}");
 }

@@ -15,6 +15,9 @@
 //!   hand-rolled JSON serializer (`--json` on the CLI).
 //! * [`run_batch`] — a `std::thread` worker pool that fans a
 //!   `Vec<RunSpec>` across cores, bit-identical to the serial loop.
+//! * [`workload`] — the process-wide `(model, seed)` → graph + trace
+//!   cache every spec, batch worker, and figure shares (§Perf: a sweep
+//!   builds its ~12k-object graph once, not once per grid point).
 //! * [`json`] — the serde-less JSON building blocks and validator.
 //!
 //! ```no_run
@@ -43,8 +46,12 @@ pub mod json;
 pub mod outcome;
 pub mod policy;
 pub mod spec;
+pub mod workload;
 
 pub use batch::{default_threads, run_batch};
 pub use outcome::{ProfileSummary, RunOutcome};
 pub use policy::PolicyKind;
 pub use spec::{RunSpec, SpecError, DEFAULT_SEED, DEFAULT_STEPS};
+pub use workload::{
+    clear_workload_cache, shared_workload, workload_cache_stats, Workload, WorkloadCacheStats,
+};

@@ -7,8 +7,11 @@
 //! Specs are plain data (`Clone + Send + Sync`), so
 //! [`crate::api::run_batch`] can fan a grid of them across threads.
 
+use std::sync::Arc;
+
 use crate::api::outcome::{ProfileSummary, RunOutcome};
 use crate::api::policy::PolicyKind;
+use crate::api::workload::{shared_workload, Workload};
 use crate::coordinator::sentinel::SentinelPolicy;
 use crate::dnn::zoo::Model;
 use crate::dnn::{ModelGraph, StepTrace};
@@ -246,18 +249,24 @@ impl RunSpec {
         self.check_fast(None)
     }
 
-    /// Execute the run: build the graph and trace, size and construct
-    /// the machine, construct the policy from the registry, simulate,
-    /// and package the outcome.
+    /// Execute the run: resolve the workload (graph + trace, shared
+    /// through the process-wide cache for zoo models — an MI sweep
+    /// builds its graph once, not once per grid point), size and
+    /// construct the machine, construct the policy from the registry,
+    /// simulate, and package the outcome.
     pub fn run(&self) -> Result<RunOutcome, SpecError> {
         self.validate()?;
         let zoo = self.zoo_model()?;
-        let built;
-        let g: &ModelGraph = match (&self.model, zoo) {
-            (ModelSel::Graph(g), _) => &**g,
+        let local;
+        let cached: Arc<Workload>;
+        let (g, trace): (&ModelGraph, &StepTrace) = match (&self.model, zoo) {
+            (ModelSel::Graph(g), _) => {
+                local = StepTrace::from_graph(g);
+                (&**g, &local)
+            }
             (_, Some(m)) => {
-                built = m.build(self.seed);
-                &built
+                cached = shared_workload(m, self.seed);
+                (&cached.graph, &cached.trace)
             }
             _ => unreachable!("non-graph specs always resolve a zoo model"),
         };
@@ -266,15 +275,14 @@ impl RunSpec {
             None => Model::reported_peak(g.peak_live_bytes()),
         };
         let fast_bytes = self.resolve_fast(reported_peak)?;
-        let trace = StepTrace::from_graph(g);
-        let mut spec = self.policy.machine_spec(g, &trace, fast_bytes);
+        let mut spec = self.policy.machine_spec(g, trace, fast_bytes);
         if let Some(slow) = self.slow_bytes {
             spec.slow.capacity_bytes = slow;
         }
-        let mut policy = self.policy.construct(g, &trace, spec);
+        let mut policy = self.policy.construct(g, trace, spec);
         let engine = Engine::new(self.policy.engine_config(self.steps));
         let mut machine = Machine::new(spec);
-        let result = engine.run(&g, &trace, &mut machine, policy.as_mut());
+        let result = engine.run(g, trace, &mut machine, policy.as_mut());
         let (cases, chosen_mi, warmup, profile) =
             match policy.as_any().downcast_ref::<SentinelPolicy>() {
                 Some(p) => (

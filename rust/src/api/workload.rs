@@ -1,0 +1,150 @@
+//! Process-wide cache of built workloads (graph + trace), shared across
+//! runs via `Arc`.
+//!
+//! A zoo model's graph is a pure function of `(model, seed)`, and its
+//! canonical [`StepTrace`] is a pure function of the graph — yet every
+//! [`crate::api::RunSpec::run`] used to rebuild both. An MI sweep over
+//! ResNet_v2-152 built its ~12k-object graph once per grid point (30+
+//! times); with this cache the whole figure suite builds each distinct
+//! workload exactly once and every spec, batch worker, and figure shares
+//! the same immutable `Arc<Workload>` (§Perf, EXPERIMENTS.md).
+//!
+//! The cache only ever holds one entry per distinct `(model, seed)`
+//! pair, so its footprint is bounded by the experiment grid's variety,
+//! not its size. Entries are immutable; sharing across `run_batch`
+//! worker threads cannot perturb determinism.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::dnn::zoo::Model;
+use crate::dnn::{ModelGraph, StepTrace};
+
+/// A built workload: the seeded graph and its canonical step trace.
+#[derive(Debug)]
+pub struct Workload {
+    pub graph: ModelGraph,
+    pub trace: StepTrace,
+}
+
+impl Workload {
+    /// Build from a graph (the uncached path for caller-supplied graphs).
+    pub fn from_graph(graph: ModelGraph) -> Self {
+        let trace = StepTrace::from_graph(&graph);
+        Workload { graph, trace }
+    }
+}
+
+/// Hit/miss counters for the shared cache (observability + tests).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WorkloadCacheStats {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+/// One cache slot: a per-key `OnceLock` so concurrent first requests
+/// for the *same* key block on one build, while different keys build in
+/// parallel (the map mutex is only held long enough to fetch the slot).
+type Slot = Arc<OnceLock<Arc<Workload>>>;
+
+static CACHE: OnceLock<Mutex<HashMap<(Model, u64), Slot>>> = OnceLock::new();
+static HITS: AtomicU64 = AtomicU64::new(0);
+static MISSES: AtomicU64 = AtomicU64::new(0);
+
+/// The shared workload for `(model, seed)`: built on first request,
+/// served from the cache thereafter. When a batch fans 30 same-key
+/// specs across workers, the first builds and the rest wait for the
+/// `Arc`; specs with different keys build concurrently.
+pub fn shared_workload(model: Model, seed: u64) -> Arc<Workload> {
+    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    let slot: Slot = {
+        let mut map = cache.lock().unwrap();
+        Arc::clone(map.entry((model, seed)).or_default())
+    };
+    let mut built_here = false;
+    let w = slot.get_or_init(|| {
+        built_here = true;
+        Arc::new(Workload::from_graph(model.build(seed)))
+    });
+    if built_here {
+        MISSES.fetch_add(1, Ordering::Relaxed);
+    } else {
+        HITS.fetch_add(1, Ordering::Relaxed);
+    }
+    Arc::clone(w)
+}
+
+/// Snapshot of the cache's hit/miss counters.
+pub fn workload_cache_stats() -> WorkloadCacheStats {
+    WorkloadCacheStats {
+        hits: HITS.load(Ordering::Relaxed),
+        misses: MISSES.load(Ordering::Relaxed),
+    }
+}
+
+/// Drop every cached workload (the counters keep running). Useful for
+/// memory-sensitive embedders and for tests that need a cold cache.
+pub fn clear_workload_cache() {
+    if let Some(cache) = CACHE.get() {
+        cache.lock().unwrap().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The cache is process-global and the test harness is parallel:
+    /// `clear_workload_cache` in one test would race the `Arc::ptr_eq`
+    /// assertions in another, so these tests serialize on this lock.
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    fn serialized() -> std::sync::MutexGuard<'static, ()> {
+        TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn same_key_shares_one_arc() {
+        let _guard = serialized();
+        let a = shared_workload(Model::Dcgan, 77);
+        let b = shared_workload(Model::Dcgan, 77);
+        assert!(Arc::ptr_eq(&a, &b), "same (model, seed) must share");
+        assert_eq!(a.trace.n_events(), StepTrace::from_graph(&a.graph).n_events());
+    }
+
+    #[test]
+    fn distinct_keys_do_not_alias() {
+        let _guard = serialized();
+        let a = shared_workload(Model::Dcgan, 78);
+        let b = shared_workload(Model::Dcgan, 79);
+        let c = shared_workload(Model::MobileNet, 78);
+        assert!(!Arc::ptr_eq(&a, &b));
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(a.graph.name, b.graph.name);
+        assert_ne!(a.graph.name, c.graph.name);
+    }
+
+    #[test]
+    fn stats_count_hits_and_misses() {
+        let _guard = serialized();
+        let before = workload_cache_stats();
+        let _ = shared_workload(Model::Lstm, 0xC0FFEE);
+        let _ = shared_workload(Model::Lstm, 0xC0FFEE);
+        let after = workload_cache_stats();
+        assert!(after.misses >= before.misses + 1);
+        assert!(after.hits >= before.hits + 1);
+    }
+
+    #[test]
+    fn clear_forces_rebuild_into_fresh_arc() {
+        let _guard = serialized();
+        let a = shared_workload(Model::Dcgan, 80);
+        clear_workload_cache();
+        let b = shared_workload(Model::Dcgan, 80);
+        assert!(!Arc::ptr_eq(&a, &b), "cleared cache must rebuild");
+        // Determinism: the rebuilt workload is identical in shape.
+        assert_eq!(a.graph.objects.len(), b.graph.objects.len());
+        assert_eq!(a.trace.n_events(), b.trace.n_events());
+    }
+}

@@ -160,8 +160,8 @@ impl IalPolicy {
 }
 
 impl Policy for IalPolicy {
-    fn name(&self) -> String {
-        "IAL".into()
+    fn name(&self) -> &str {
+        "IAL"
     }
 
     fn as_any(&self) -> &dyn std::any::Any {

@@ -59,8 +59,8 @@ impl Default for LruPolicy {
 }
 
 impl Policy for LruPolicy {
-    fn name(&self) -> String {
-        "LRU".into()
+    fn name(&self) -> &str {
+        "LRU"
     }
 
     fn as_any(&self) -> &dyn std::any::Any {

@@ -115,6 +115,9 @@ pub struct SentinelPolicy {
     pub graph_name: String,
     /// Layer count of the graph (reporting).
     pub n_layers: u32,
+    /// Display name with ablation suffixes, rendered once at
+    /// construction so `Policy::name` can borrow it.
+    display_name: String,
 }
 
 impl SentinelPolicy {
@@ -129,7 +132,18 @@ impl SentinelPolicy {
         };
         let first_mi = candidates[0];
         let plan = MigrationPlan::build(g, first_mi, &spec);
+        let mut display_name = "sentinel".to_string();
+        if !cfg.handle_false_sharing {
+            display_name.push_str("(false-sharing)");
+        }
+        if !cfg.reserve_space {
+            display_name.push_str("(no-reserve)");
+        }
+        if !cfg.test_and_trial {
+            display_name.push_str("(no-t&t)");
+        }
         SentinelPolicy {
+            display_name,
             cfg,
             spec,
             phase: Phase::Profiling,
@@ -230,18 +244,8 @@ impl Policy for SentinelPolicy {
         self
     }
 
-    fn name(&self) -> String {
-        let mut name = "sentinel".to_string();
-        if !self.cfg.handle_false_sharing {
-            name.push_str("(false-sharing)");
-        }
-        if !self.cfg.reserve_space {
-            name.push_str("(no-reserve)");
-        }
-        if !self.cfg.test_and_trial {
-            name.push_str("(no-t&t)");
-        }
-        name
+    fn name(&self) -> &str {
+        &self.display_name
     }
 
     fn place(&mut self, obj: &DataObject, m: &Machine) -> Tier {

@@ -19,7 +19,7 @@ use crate::dnn::layer::LayerKind;
 use crate::util::Rng;
 
 /// The models evaluated in the paper, plus ResNet_v1 depth variants.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Model {
     /// ResNet_v1 on CIFAR-10; depth ∈ {20, 32, 44, 56, 110} (6n+2).
     ResNetV1 { depth: u32 },

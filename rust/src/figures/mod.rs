@@ -27,10 +27,9 @@
 //! | Fig. 12 (fast-size sens.) | [`fig12_sensitivity`] |
 //! | Fig. 13 (ResNet variants) | [`fig13_variants`] |
 
-use crate::api::{default_threads, run_batch, PolicyKind, RunSpec};
+use crate::api::{default_threads, run_batch, shared_workload, PolicyKind, RunSpec};
 use crate::coordinator::sentinel::SentinelConfig;
 use crate::dnn::zoo::Model;
-use crate::dnn::StepTrace;
 use crate::mem::{AllocMode, Allocator};
 use crate::profiler::profile;
 use crate::util::table::{fmt_bytes, Table};
@@ -51,9 +50,8 @@ fn seed() -> u64 {
 
 /// Fig. 1: lifetime distribution of data objects and their sizes.
 pub fn fig1_lifetime(model: Model) -> (Table, f64) {
-    let g = model.build(seed());
-    let t = StepTrace::from_graph(&g);
-    let r = profile(&g, &t);
+    let w = shared_workload(model, seed());
+    let r = profile(&w.graph, &w.trace);
     let mut table = Table::new(vec!["lifetime (layers)", "objects", "% objects", "bytes"]);
     let total: u64 = r.objects.len() as u64;
     for b in r.lifetime_histogram() {
@@ -70,9 +68,8 @@ pub fn fig1_lifetime(model: Model) -> (Table, f64) {
 /// Fig. 2 (all objects) and Fig. 3 (small objects only): distribution of
 /// main-memory access counts.
 pub fn fig2_fig3_access(model: Model, small_only: bool) -> Table {
-    let g = model.build(seed());
-    let t = StepTrace::from_graph(&g);
-    let r = profile(&g, &t);
+    let w = shared_workload(model, seed());
+    let r = profile(&w.graph, &w.trace);
     let hist = r.access_histogram(small_only);
     let total: u64 = hist.iter().map(|b| b.objects).sum();
     let mut table = Table::new(vec!["accesses", "objects", "% objects", "bytes"]);
@@ -90,9 +87,9 @@ pub fn fig2_fig3_access(model: Model, small_only: bool) -> Table {
 /// Fig. 4: page-level vs object-level access distributions under the
 /// original (shared) allocator — page-level false sharing made visible.
 pub fn fig4_false_sharing(model: Model) -> (Table, u64) {
-    let g = model.build(seed());
-    let shared = Allocator::replay(AllocMode::Shared, &g);
-    let grouped = Allocator::replay(AllocMode::Grouped, &g);
+    let w = shared_workload(model, seed());
+    let shared = Allocator::replay(AllocMode::Shared, &w.graph);
+    let grouped = Allocator::replay(AllocMode::Grouped, &w.graph);
     let mut table = Table::new(vec![
         "access bucket",
         "pages (orig alloc)",
@@ -120,9 +117,8 @@ pub fn fig4_false_sharing(model: Model) -> (Table, u64) {
 /// Table 1: memory consumption, original execution vs one-object-per-page
 /// profiling.
 pub fn table1_memory(model: Model) -> Table {
-    let g = model.build(seed());
-    let t = StepTrace::from_graph(&g);
-    let r = profile(&g, &t);
+    let w = shared_workload(model, seed());
+    let r = profile(&w.graph, &w.trace);
     let (prof_small, orig_small) = r.small_object_footprint();
     let mut table = Table::new(vec!["memory consumption", "in prof.", "orig. exe."]);
     table.row(vec![
@@ -275,9 +271,10 @@ pub fn table4_migrations(rows: &[OverallRow]) -> Table {
 /// Table 5 from the same sweep: reported peak memory with/without
 /// Sentinel (profiling inflation is what the paper measures).
 pub fn table5_peak_memory(model: Model) -> (u64, u64) {
-    let g = model.build(seed());
-    let without = Allocator::replay(AllocMode::Shared, &g).peak_pages * crate::PAGE_SIZE;
-    let with = Allocator::replay(AllocMode::OneObjectPerPage, &g).peak_pages * crate::PAGE_SIZE;
+    let w = shared_workload(model, seed());
+    let without = Allocator::replay(AllocMode::Shared, &w.graph).peak_pages * crate::PAGE_SIZE;
+    let with =
+        Allocator::replay(AllocMode::OneObjectPerPage, &w.graph).peak_pages * crate::PAGE_SIZE;
     // Scale to reported level, as Table 5 prints RSS-level numbers.
     (
         Model::reported_peak(without),

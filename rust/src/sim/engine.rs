@@ -14,6 +14,7 @@ use crate::dnn::{ModelGraph, StepTrace, TraceEvent};
 use crate::mem::DataObject;
 use crate::sim::device::Tier;
 use crate::sim::machine::Machine;
+use crate::sim::replay::{CompiledOp, CompiledTrace};
 
 /// A data-management policy: decides placement at allocation time and may
 /// queue migrations at layer/step boundaries or after accesses.
@@ -22,7 +23,10 @@ use crate::sim::machine::Machine;
 /// registry; `as_any` lets the API recover policy-specific metadata
 /// (tuning steps, case counts) from the trait object after a run.
 pub trait Policy {
-    fn name(&self) -> String;
+    /// Display name. Borrowed so per-run result packaging does not
+    /// allocate; policies with configuration-dependent names cache the
+    /// rendered string at construction.
+    fn name(&self) -> &str;
 
     /// Downcast support for post-run metadata extraction.
     fn as_any(&self) -> &dyn std::any::Any;
@@ -103,21 +107,21 @@ impl TrainResult {
     /// Steady-state throughput in steps/s, excluding the first
     /// `skip` warm-up/profiling steps.
     pub fn throughput(&self, skip: usize) -> f64 {
-        let steady: Vec<&StepStats> = self.steps.iter().skip(skip).collect();
-        if steady.is_empty() {
+        let n = self.steps.len().saturating_sub(skip);
+        if n == 0 {
             return 0.0;
         }
-        let total: f64 = steady.iter().map(|s| s.time_ns).sum();
-        steady.len() as f64 / (total / 1e9)
+        let total: f64 = self.steps.iter().skip(skip).map(|s| s.time_ns).sum();
+        n as f64 / (total / 1e9)
     }
 
     /// Mean steady-state step time in ns (same skip semantics).
     pub fn mean_step_ns(&self, skip: usize) -> f64 {
-        let steady: Vec<&StepStats> = self.steps.iter().skip(skip).collect();
-        if steady.is_empty() {
+        let n = self.steps.len().saturating_sub(skip);
+        if n == 0 {
             return 0.0;
         }
-        steady.iter().map(|s| s.time_ns).sum::<f64>() / steady.len() as f64
+        self.steps.iter().skip(skip).map(|s| s.time_ns).sum::<f64>() / n as f64
     }
 
     /// Total pages migrated (both directions) — the paper's Table 4.
@@ -137,6 +141,12 @@ impl Engine {
     }
 
     /// Simulate `config.steps` training steps of `graph` under `policy`.
+    ///
+    /// §Perf: lowers the trace once into a [`CompiledTrace`] and replays
+    /// the flat op stream — per-event object resolution, size math, and
+    /// fault-cost computation are paid once per run, not once per event
+    /// per step. Bit-identical to [`Engine::run_legacy`] (proven by
+    /// `rust/tests/replay_equivalence.rs`).
     pub fn run(
         &self,
         graph: &ModelGraph,
@@ -144,6 +154,100 @@ impl Engine {
         machine: &mut Machine,
         policy: &mut dyn Policy,
     ) -> TrainResult {
+        let compiled = CompiledTrace::compile(
+            graph,
+            trace,
+            machine.spec.compute_gflops,
+            self.config.profiling_fault_ns,
+        );
+        self.run_compiled(graph, &compiled, machine, policy)
+    }
+
+    /// Replay an already-compiled trace. Callers replaying the same
+    /// workload on identically-configured machines (benches, sweeps at
+    /// fixed machine spec) can compile once and amortize further.
+    pub fn run_compiled(
+        &self,
+        graph: &ModelGraph,
+        compiled: &CompiledTrace,
+        machine: &mut Machine,
+        policy: &mut dyn Policy,
+    ) -> TrainResult {
+        machine.reserve_objects(compiled.n_objects);
+        // Allocate persistent objects (weights, optimizer state) once.
+        for &(oid, pages) in &compiled.persistent {
+            let pref = policy.place(&graph.objects[oid.index()], machine);
+            machine.alloc(oid, pages, pref);
+        }
+
+        let objects = &graph.objects[..];
+        let mut steps = Vec::with_capacity(self.config.steps as usize);
+        for step in 0..self.config.steps {
+            let profiling = step < self.config.profiling_steps;
+            let t0 = machine.now_ns();
+            let in0 = machine.stats.pages_in;
+            let out0 = machine.stats.pages_out;
+            policy.step_start(step, machine, graph);
+            for lt in &compiled.layers {
+                policy.layer_start(lt.layer, machine, graph);
+                let mut mem_ns = 0.0;
+                for op in compiled.layer_ops(lt) {
+                    match *op {
+                        CompiledOp::Alloc { obj, pages } => {
+                            let pref = policy.place(&objects[obj.index()], machine);
+                            machine.alloc(obj, pages, pref);
+                        }
+                        CompiledOp::Access { obj, bytes, count, fault_ns } => {
+                            let mut dt = machine.access_time_ns(obj, bytes, count);
+                            if profiling {
+                                // The precompiled poison → fault → flush
+                                // cost of §3.1 (see CompiledTrace).
+                                dt += fault_ns;
+                            }
+                            machine.exec(dt);
+                            mem_ns += dt;
+                            policy.after_access(&objects[obj.index()], machine);
+                        }
+                        CompiledOp::Free { obj } => {
+                            machine.free(obj);
+                            policy.after_free(&objects[obj.index()], machine);
+                        }
+                    }
+                }
+                // Roofline: top up to the layer's compute time.
+                if lt.compute_ns > mem_ns {
+                    machine.exec(lt.compute_ns - mem_ns);
+                }
+                let stall = policy.layer_end(lt.layer, machine, graph);
+                if stall > 0.0 {
+                    machine.exec(stall);
+                }
+            }
+            policy.step_end(step, machine, graph);
+            steps.push(StepStats {
+                step,
+                time_ns: machine.now_ns() - t0,
+                pages_in: machine.stats.pages_in - in0,
+                pages_out: machine.stats.pages_out - out0,
+            });
+        }
+
+        self.package(graph, machine, policy, steps)
+    }
+
+    /// The pre-compilation event-by-event replay, kept verbatim as the
+    /// reference semantics. Test-only in spirit: `run` must stay
+    /// bit-identical to this (`rust/tests/replay_equivalence.rs` and the
+    /// `sim_hotpath` bench are the only intended callers).
+    #[doc(hidden)]
+    pub fn run_legacy(
+        &self,
+        graph: &ModelGraph,
+        trace: &StepTrace,
+        machine: &mut Machine,
+        policy: &mut dyn Policy,
+    ) -> TrainResult {
+        machine.reserve_objects(graph.objects.len());
         // Allocate persistent objects (weights, optimizer state) once.
         for &oid in &trace.persistent {
             let obj = &graph.objects[oid.index()];
@@ -212,8 +316,19 @@ impl Engine {
             });
         }
 
+        self.package(graph, machine, policy, steps)
+    }
+
+    /// Shared result packaging for both replay paths.
+    fn package(
+        &self,
+        graph: &ModelGraph,
+        machine: &Machine,
+        policy: &dyn Policy,
+        steps: Vec<StepStats>,
+    ) -> TrainResult {
         TrainResult {
-            policy: policy.name(),
+            policy: policy.name().to_string(),
             model: graph.name.clone(),
             total_time_ns: machine.now_ns(),
             peak_fast_bytes: machine.stats.peak_fast_bytes,
@@ -233,10 +348,10 @@ pub struct StaticPolicy {
 }
 
 impl Policy for StaticPolicy {
-    fn name(&self) -> String {
+    fn name(&self) -> &str {
         match self.tier {
-            Tier::Fast => "fast-only".into(),
-            Tier::Slow => "slow-only".into(),
+            Tier::Fast => "fast-only",
+            Tier::Slow => "slow-only",
         }
     }
 
@@ -322,6 +437,35 @@ mod tests {
             .map(|o| o.pages() * crate::PAGE_SIZE)
             .sum();
         assert_eq!(m.used_bytes(Tier::Fast) + m.used_bytes(Tier::Slow), persistent_bytes);
+    }
+
+    #[test]
+    fn compiled_replay_matches_legacy_bitwise() {
+        // The full cross-registry property lives in
+        // rust/tests/replay_equivalence.rs; this is the fast smoke
+        // version over the static policies.
+        let (g, t) = small_model();
+        let engine = Engine::new(EngineConfig {
+            steps: 4,
+            profiling_steps: 1,
+            ..Default::default()
+        });
+        for tier in [Tier::Fast, Tier::Slow] {
+            let spec = match tier {
+                Tier::Fast => MachineSpec::fast_only(),
+                Tier::Slow => MachineSpec::slow_only(),
+            };
+            let mut m1 = Machine::new(spec);
+            let r1 = engine.run(&g, &t, &mut m1, &mut StaticPolicy { tier });
+            let mut m2 = Machine::new(spec);
+            let r2 = engine.run_legacy(&g, &t, &mut m2, &mut StaticPolicy { tier });
+            assert_eq!(r1.total_time_ns.to_bits(), r2.total_time_ns.to_bits());
+            assert_eq!(r1.peak_total_bytes, r2.peak_total_bytes);
+            assert_eq!(r1.steps.len(), r2.steps.len());
+            for (a, b) in r1.steps.iter().zip(&r2.steps) {
+                assert_eq!(a.time_ns.to_bits(), b.time_ns.to_bits());
+            }
+        }
     }
 
     #[test]

@@ -90,6 +90,12 @@ impl Lane {
             }
         });
         self.pending_pages -= cancelled;
+        if self.queue.is_empty() {
+            // An empty lane cannot be stalled: clearing here keeps the
+            // flag fresh even when the machine's idle fast path skips
+            // the next `advance` (see `Machine::exec`).
+            self.stalled = false;
+        }
         cancelled
     }
 
@@ -112,11 +118,24 @@ impl Lane {
         self.queue.is_empty()
     }
 
+    /// Account an idle interval: exactly what [`Lane::advance`] does
+    /// when the queue is empty, without the loop — credit tops up to at
+    /// most one page's worth and the stall flag clears. Lets the
+    /// machine's idle fast path (§Perf) stay bit-identical to running
+    /// `advance` with no work queued.
+    #[inline]
+    pub fn idle_tick(&mut self, dt: f64, ns_per_page: f64) {
+        debug_assert!(self.queue.is_empty());
+        self.credit_ns = (self.credit_ns + dt).min(ns_per_page);
+        self.stalled = false;
+    }
+
     /// Time (ns) needed to drain the current queue at `ns_per_page`,
-    /// ignoring capacity stalls. Used by the coordinator's Case-3
-    /// "continue migration" arm to decide how long to block.
+    /// ignoring capacity stalls, clamped at 0 (banked credit can cover
+    /// the whole queue). Used by the coordinator's Case-3 "continue
+    /// migration" arm to decide how long to block.
     pub fn drain_time_ns(&self, ns_per_page: f64) -> f64 {
-        self.pending_pages as f64 * ns_per_page - self.credit_ns
+        (self.pending_pages as f64 * ns_per_page - self.credit_ns).max(0.0)
     }
 
     /// Grant `dt` nanoseconds of bandwidth and move pages. For each head
@@ -285,5 +304,42 @@ mod tests {
         assert!((lane.drain_time_ns(NSPP) - 1000.0).abs() < 1e-9);
         lane.advance(250.0, NSPP, |_, w| MoveOutcome::Moved(w));
         assert!((lane.drain_time_ns(NSPP) - 750.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn drain_time_is_clamped_at_zero() {
+        // Banked fractional credit can exceed the queue's remaining cost;
+        // the wait time must never go negative.
+        let mut lane = Lane::new(Direction::In);
+        lane.push(ObjectId(1), 2);
+        lane.advance(150.0, NSPP, |_, w| MoveOutcome::Moved(w.min(1)));
+        assert!(lane.drain_time_ns(NSPP) >= 0.0);
+        let mut empty = Lane::new(Direction::In);
+        empty.credit_ns = 50.0;
+        assert_eq!(empty.drain_time_ns(NSPP), 0.0);
+    }
+
+    #[test]
+    fn idle_tick_matches_advance_on_empty_queue() {
+        let mut ticked = Lane::new(Direction::In);
+        let mut advanced = Lane::new(Direction::In);
+        for dt in [0.0, 30.0, 1e6, 12.5] {
+            ticked.idle_tick(dt, NSPP);
+            advanced.advance(dt, NSPP, |_, _| unreachable!("queue is empty"));
+            assert_eq!(ticked.credit_ns.to_bits(), advanced.credit_ns.to_bits());
+            assert_eq!(ticked.stalled, advanced.stalled);
+        }
+        // Banked idle credit is capped at one page in both.
+        assert!(ticked.credit_ns <= NSPP);
+    }
+
+    #[test]
+    fn cancel_to_empty_clears_stall() {
+        let mut lane = Lane::new(Direction::In);
+        lane.push(ObjectId(1), 4);
+        lane.advance(1000.0, NSPP, |_, _| MoveOutcome::Blocked);
+        assert!(lane.stalled);
+        lane.cancel(ObjectId(1));
+        assert!(!lane.stalled, "empty lane cannot be stalled");
     }
 }

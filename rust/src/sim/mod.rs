@@ -19,8 +19,10 @@ pub mod device;
 pub mod engine;
 pub mod machine;
 pub mod migration;
+pub mod replay;
 
 pub use device::{DeviceSpec, MachineSpec, Tier};
 pub use engine::{Engine, EngineConfig, Policy, StepStats, TrainResult};
 pub use machine::{Machine, Residency};
 pub use migration::{Direction, Lane, MoveRequest};
+pub use replay::{CompiledLayer, CompiledOp, CompiledTrace};

@@ -1,0 +1,188 @@
+//! Compiled trace replay: the simulator's own use of the paper's
+//! repeatability insight (§2.1).
+//!
+//! A [`StepTrace`] is replayed unchanged every training step, yet the
+//! old hot loop re-resolved each event's [`DataObject`], recomputed its
+//! page count, byte traffic, and profiling-fault cost on every step of
+//! every run. [`CompiledTrace`] lowers the trace **once per run** into a
+//! flat, cache-friendly op stream with all of that precomputed — the
+//! engine then replays plain data (see `EXPERIMENTS.md` §Perf for the
+//! before/after).
+//!
+//! Lowering is *semantics-preserving to the bit*: every arithmetic
+//! expression here mirrors the legacy event loop's operand order, so
+//! [`crate::sim::Engine::run`] (compiled) and
+//! [`crate::sim::Engine::run_legacy`] produce identical `TrainResult`s —
+//! the property `rust/tests/replay_equivalence.rs` proves across the
+//! whole policy registry.
+//!
+//! [`DataObject`]: crate::mem::DataObject
+
+use crate::dnn::{ModelGraph, StepTrace, TraceEvent};
+use crate::mem::ObjectId;
+
+/// One lowered trace event. `Access` carries everything the engine's
+/// timing model needs, so replay touches no graph metadata at all.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CompiledOp {
+    /// Allocate `pages` whole pages for the object (placement is still
+    /// the policy's runtime decision).
+    Alloc { obj: ObjectId, pages: u64 },
+    /// An access burst: `bytes` of traffic over `count` operations, plus
+    /// the fully precomputed profiling-fault surcharge (charged only
+    /// while profiling steps run).
+    Access { obj: ObjectId, bytes: u64, count: u32, fault_ns: f64 },
+    /// Free the object.
+    Free { obj: ObjectId },
+}
+
+/// One layer's slice of the op stream plus its precomputed compute time.
+#[derive(Clone, Copy, Debug)]
+pub struct CompiledLayer {
+    /// Layer index (as the policy callbacks see it).
+    pub layer: u32,
+    /// `flops / gflops` for the machine this trace was compiled for.
+    pub compute_ns: f64,
+    /// Start of this layer's ops in [`CompiledTrace::ops`].
+    pub start: u32,
+    /// One past the end of this layer's ops.
+    pub end: u32,
+}
+
+/// A [`StepTrace`] lowered against one (machine, engine-config) pair:
+/// a flat op stream, per-layer compute times, and the persistent-object
+/// prologue, all precomputed.
+#[derive(Clone, Debug)]
+pub struct CompiledTrace {
+    /// Persistent objects with precomputed page counts, allocated once
+    /// before step 0.
+    pub persistent: Vec<(ObjectId, u64)>,
+    /// Every event of one step, flattened in replay order.
+    pub ops: Vec<CompiledOp>,
+    /// Layer windows over `ops`, in step order.
+    pub layers: Vec<CompiledLayer>,
+    /// Object count of the source graph (pre-sizes the residency table).
+    pub n_objects: usize,
+}
+
+impl CompiledTrace {
+    /// Lower `trace` for a machine with `gflops` of compute and a
+    /// profiling fault cost of `profiling_fault_ns` per captured page
+    /// access.
+    ///
+    /// Every precomputed value reproduces the legacy loop's expression
+    /// with identical operand order, keeping replay bit-identical:
+    /// bytes = `size_bytes * count`, fault = `fault_ns * count * pages`,
+    /// compute = `flops / gflops`.
+    pub fn compile(
+        g: &ModelGraph,
+        trace: &StepTrace,
+        gflops: f64,
+        profiling_fault_ns: f64,
+    ) -> CompiledTrace {
+        let mut ops = Vec::with_capacity(trace.n_events());
+        let mut layers = Vec::with_capacity(trace.layers.len());
+        for lt in &trace.layers {
+            let start = ops.len() as u32;
+            for ev in &lt.events {
+                ops.push(match *ev {
+                    TraceEvent::Alloc(obj) => CompiledOp::Alloc {
+                        obj,
+                        pages: g.objects[obj.index()].pages(),
+                    },
+                    TraceEvent::Access { obj, count } => {
+                        let o = &g.objects[obj.index()];
+                        CompiledOp::Access {
+                            obj,
+                            bytes: o.size_bytes * count as u64,
+                            count,
+                            fault_ns: profiling_fault_ns * count as f64 * o.pages() as f64,
+                        }
+                    }
+                    TraceEvent::Free(obj) => CompiledOp::Free { obj },
+                });
+            }
+            layers.push(CompiledLayer {
+                layer: lt.layer,
+                compute_ns: lt.flops / gflops,
+                start,
+                end: ops.len() as u32,
+            });
+        }
+        let persistent = trace
+            .persistent
+            .iter()
+            .map(|&obj| (obj, g.objects[obj.index()].pages()))
+            .collect();
+        CompiledTrace { persistent, ops, layers, n_objects: g.objects.len() }
+    }
+
+    /// Total number of ops in one step (matches `StepTrace::n_events`).
+    pub fn n_events(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// The ops of one compiled layer.
+    pub fn layer_ops(&self, l: &CompiledLayer) -> &[CompiledOp] {
+        &self.ops[l.start as usize..l.end as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::zoo::Model;
+
+    #[test]
+    fn compile_preserves_event_count_and_order() {
+        let g = Model::Dcgan.build(3);
+        let t = StepTrace::from_graph(&g);
+        let ct = CompiledTrace::compile(&g, &t, 600.0, 1_000.0);
+        assert_eq!(ct.n_events(), t.n_events());
+        assert_eq!(ct.layers.len(), t.layers.len());
+        assert_eq!(ct.persistent.len(), t.persistent.len());
+        // Windows tile the op stream exactly, in order.
+        let mut cursor = 0u32;
+        for (cl, lt) in ct.layers.iter().zip(&t.layers) {
+            assert_eq!(cl.start, cursor);
+            assert_eq!((cl.end - cl.start) as usize, lt.events.len());
+            assert_eq!(cl.layer, lt.layer);
+            cursor = cl.end;
+        }
+        assert_eq!(cursor as usize, ct.ops.len());
+        // Spot-check lowering of each event kind.
+        for (cl, lt) in ct.layers.iter().zip(&t.layers) {
+            for (op, ev) in ct.layer_ops(cl).iter().zip(&lt.events) {
+                match (*op, *ev) {
+                    (CompiledOp::Alloc { obj, pages }, TraceEvent::Alloc(e)) => {
+                        assert_eq!(obj, e);
+                        assert_eq!(pages, g.objects[e.index()].pages());
+                    }
+                    (
+                        CompiledOp::Access { obj, bytes, count, fault_ns },
+                        TraceEvent::Access { obj: e, count: c },
+                    ) => {
+                        assert_eq!(obj, e);
+                        assert_eq!(count, c);
+                        let o = &g.objects[e.index()];
+                        assert_eq!(bytes, o.size_bytes * c as u64);
+                        assert_eq!(fault_ns.to_bits(), (1_000.0 * c as f64 * o.pages() as f64).to_bits());
+                    }
+                    (CompiledOp::Free { obj }, TraceEvent::Free(e)) => assert_eq!(obj, e),
+                    (op, ev) => panic!("lowering changed event kind: {op:?} vs {ev:?}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn compute_time_matches_legacy_division() {
+        let g = Model::Dcgan.build(1);
+        let t = StepTrace::from_graph(&g);
+        let gflops = 600.0;
+        let ct = CompiledTrace::compile(&g, &t, gflops, 0.0);
+        for (cl, lt) in ct.layers.iter().zip(&t.layers) {
+            assert_eq!(cl.compute_ns.to_bits(), (lt.flops / gflops).to_bits());
+        }
+    }
+}

@@ -1,0 +1,116 @@
+//! The compiled-replay equivalence proof: [`Engine::run`] (CompiledTrace
+//! fast path) must produce **bit-identical** `TrainResult`s to
+//! [`Engine::run_legacy`] (the pre-compilation event-by-event loop) for
+//! every policy in the registry.
+//!
+//! Two parts:
+//! * an exhaustive grid over `PolicyKind::all()` × {DCGAN, ResNet_v1-32}
+//!   × fast-pct {15, 20, 35} (the ISSUE-2 acceptance matrix), and
+//! * a property test (via `util::prop`) over random fast sizes, step
+//!   counts, seeds and policies.
+
+use sentinel_hm::api::PolicyKind;
+use sentinel_hm::dnn::zoo::Model;
+use sentinel_hm::dnn::StepTrace;
+use sentinel_hm::sim::{Engine, Machine, TrainResult};
+use sentinel_hm::util::prop::check;
+
+const MODELS: [Model; 2] = [Model::Dcgan, Model::ResNetV1 { depth: 32 }];
+
+/// Exact (bit-level for floats) equality of two results.
+fn assert_bit_identical(a: &TrainResult, b: &TrainResult, ctx: &str) {
+    assert_eq!(a.policy, b.policy, "{ctx}: policy");
+    assert_eq!(a.model, b.model, "{ctx}: model");
+    assert_eq!(
+        a.total_time_ns.to_bits(),
+        b.total_time_ns.to_bits(),
+        "{ctx}: total_time_ns {} vs {}",
+        a.total_time_ns,
+        b.total_time_ns
+    );
+    assert_eq!(a.peak_fast_bytes, b.peak_fast_bytes, "{ctx}: peak_fast_bytes");
+    assert_eq!(a.peak_total_bytes, b.peak_total_bytes, "{ctx}: peak_total_bytes");
+    assert_eq!(a.pages_migrated_in, b.pages_migrated_in, "{ctx}: pages_in");
+    assert_eq!(a.pages_migrated_out, b.pages_migrated_out, "{ctx}: pages_out");
+    assert_eq!(a.alloc_spills, b.alloc_spills, "{ctx}: alloc_spills");
+    assert_eq!(a.steps.len(), b.steps.len(), "{ctx}: step count");
+    for (sa, sb) in a.steps.iter().zip(&b.steps) {
+        assert_eq!(sa.step, sb.step, "{ctx}: step index");
+        assert_eq!(
+            sa.time_ns.to_bits(),
+            sb.time_ns.to_bits(),
+            "{ctx}: step {} time {} vs {}",
+            sa.step,
+            sa.time_ns,
+            sb.time_ns
+        );
+        assert_eq!(sa.pages_in, sb.pages_in, "{ctx}: step {} pages_in", sa.step);
+        assert_eq!(sa.pages_out, sb.pages_out, "{ctx}: step {} pages_out", sa.step);
+    }
+}
+
+/// Run one configuration through both replay paths on fresh, identical
+/// machines/policies and compare.
+fn check_equivalence(
+    g: &sentinel_hm::dnn::ModelGraph,
+    trace: &StepTrace,
+    kind: PolicyKind,
+    fast_bytes: u64,
+    steps: u32,
+    ctx: &str,
+) {
+    let spec = kind.machine_spec(g, trace, fast_bytes);
+    let engine = Engine::new(kind.engine_config(steps));
+
+    let mut m_new = Machine::new(spec);
+    let mut p_new = kind.construct(g, trace, spec);
+    let compiled = engine.run(g, trace, &mut m_new, p_new.as_mut());
+
+    let mut m_old = Machine::new(spec);
+    let mut p_old = kind.construct(g, trace, spec);
+    let legacy = engine.run_legacy(g, trace, &mut m_old, p_old.as_mut());
+
+    assert_bit_identical(&compiled, &legacy, ctx);
+}
+
+#[test]
+fn compiled_replay_is_bit_identical_across_registry_grid() {
+    for model in MODELS {
+        let g = model.build(1);
+        let trace = StepTrace::from_graph(&g);
+        let peak = model.peak_memory_target();
+        for kind in PolicyKind::all() {
+            for pct in [15u64, 20, 35] {
+                let fast = peak * pct / 100;
+                let ctx = format!("{} / {} / fast={pct}%", model.name(), kind.name());
+                check_equivalence(&g, &trace, kind, fast, 8, &ctx);
+            }
+        }
+    }
+}
+
+#[test]
+fn compiled_replay_equivalence_property() {
+    // Random fast sizes (including degenerate slivers), step counts and
+    // seeds. DCGAN only: the property runs many cases.
+    let g_cache: Vec<(u64, sentinel_hm::dnn::ModelGraph, StepTrace)> = [2u64, 9]
+        .iter()
+        .map(|&seed| {
+            let g = Model::Dcgan.build(seed);
+            let t = StepTrace::from_graph(&g);
+            (seed, g, t)
+        })
+        .collect();
+    let peak = Model::Dcgan.peak_memory_target();
+    check("compiled replay ≡ legacy replay", 24, |tc| {
+        let (_, g, trace) = &g_cache[tc.range(0, 1) as usize];
+        let kinds = PolicyKind::all();
+        let kind = kinds[tc.range(0, (kinds.len() - 1) as u64) as usize];
+        // 5%..=60% of reported peak, and 2..=10 steps.
+        let pct = tc.range(5, 60);
+        let steps = tc.range(2, 10) as u32;
+        let fast = (peak * pct / 100).max(1);
+        let ctx = format!("prop: {} fast={pct}% steps={steps}", kind.name());
+        check_equivalence(g, trace, kind, fast, steps, &ctx);
+    });
+}

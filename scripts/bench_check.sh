@@ -1,0 +1,99 @@
+#!/usr/bin/env bash
+# Hot-path regression check: run the sim_hotpath bench, extract its JSON
+# summary line, and diff it against the committed baseline
+# (BENCH_2.json by default; override with BENCH_BASELINE=<path>).
+#
+#   scripts/bench_check.sh            # compare a fresh run to the baseline
+#   scripts/bench_check.sh --update   # re-measure and rewrite the baseline
+#
+# Checks applied in compare mode:
+#   * absolute: engine_events_per_s must meet the ≥ 10 M events/s target
+#     that rust/benches/sim_hotpath.rs prints;
+#   * relative: rate fields must be ≥ RATIO× the baseline (default 0.5 —
+#     generous, because baselines travel between machines; tighten with
+#     BENCH_MIN_RATIO for same-machine CI).
+# A baseline marked "provisional": true reports relative drift without
+# failing on it (the absolute target still gates).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+BASELINE="${BENCH_BASELINE:-BENCH_2.json}"
+MIN_RATIO="${BENCH_MIN_RATIO:-0.5}"
+TARGET_EVENTS_PER_S="${BENCH_TARGET_EVENTS_PER_S:-10000000}"
+
+echo "== cargo bench --bench sim_hotpath =="
+out="$(cargo bench --bench sim_hotpath 2>&1)" || { printf '%s\n' "$out"; exit 1; }
+printf '%s\n' "$out"
+summary="$(printf '%s\n' "$out" | grep '^{' | tail -n 1)"
+if [ -z "$summary" ]; then
+  echo "bench_check: no JSON summary line in bench output" >&2
+  exit 1
+fi
+
+if [ "${1:-}" = "--update" ]; then
+  printf '%s\n' "$summary" > "$BASELINE"
+  echo "bench_check: baseline updated → $BASELINE"
+  exit 0
+fi
+
+if [ ! -f "$BASELINE" ]; then
+  echo "bench_check: no baseline at $BASELINE (run with --update to create one)" >&2
+  exit 1
+fi
+
+if ! command -v python3 >/dev/null 2>&1; then
+  echo "bench_check: python3 not available; skipping numeric comparison" >&2
+  exit 0
+fi
+
+python3 - "$BASELINE" "$MIN_RATIO" "$TARGET_EVENTS_PER_S" "$summary" <<'PY'
+import json, sys
+
+baseline_path, min_ratio, target = sys.argv[1], float(sys.argv[2]), float(sys.argv[3])
+fresh = json.loads(sys.argv[4])
+with open(baseline_path) as f:
+    base = json.load(f)
+provisional = bool(base.get("provisional"))
+
+failures, notes = [], []
+
+ev = fresh.get("engine_events_per_s", 0.0)
+if ev < target:
+    failures.append(
+        f"engine_events_per_s = {ev/1e6:.1f} M/s below the {target/1e6:.0f} M/s target"
+    )
+
+# Higher-is-better rates: fresh must hold MIN_RATIO of the baseline.
+for key in ("engine_events_per_s", "lane_pages_per_s"):
+    b, f_ = base.get(key), fresh.get(key)
+    if not b or not f_:
+        continue
+    ratio = f_ / b
+    line = f"{key}: fresh {f_:.3g} vs baseline {b:.3g} (ratio {ratio:.2f})"
+    if ratio < min_ratio:
+        (notes if provisional else failures).append(line)
+    else:
+        notes.append(line)
+
+# Lower-is-better times: fresh must stay within 1/MIN_RATIO of baseline.
+for key in ("engine_ns_per_step", "sentinel_e2e_ns_per_step", "alloc_access_free_ns_per_op"):
+    b, f_ = base.get(key), fresh.get(key)
+    if not b or not f_:
+        continue
+    ratio = f_ / b
+    line = f"{key}: fresh {f_:.3g} vs baseline {b:.3g} (ratio {ratio:.2f})"
+    if ratio > 1.0 / min_ratio:
+        (notes if provisional else failures).append(line)
+    else:
+        notes.append(line)
+
+for n in notes:
+    print(f"bench_check: {n}")
+if provisional:
+    print("bench_check: baseline is provisional — relative drift is informational")
+if failures:
+    for f_ in failures:
+        print(f"bench_check: FAIL {f_}", file=sys.stderr)
+    sys.exit(1)
+print("bench_check: OK")
+PY

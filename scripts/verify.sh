@@ -5,7 +5,11 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-echo "== cargo build --release =="
+# Warnings are errors: the offline crate is std-only and warning-free,
+# and CI (.github/workflows/ci.yml) runs this same script.
+export RUSTFLAGS="${RUSTFLAGS:--Dwarnings}"
+
+echo "== cargo build --release (RUSTFLAGS=$RUSTFLAGS) =="
 cargo build --release
 
 echo "== cargo test -q =="
