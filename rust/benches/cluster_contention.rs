@@ -1,0 +1,52 @@
+//! Bench: multi-tenant co-scheduling cost — how much the virtual-clock
+//! driver and arbitration add on top of the solo replay engine, and the
+//! wall cost of a contention sweep cell.
+//!
+//! Run: `cargo bench --bench cluster_contention`
+
+use sentinel_hm::api::{json, Arbitration, ClusterSpec, PolicyKind, TenantSpec};
+use sentinel_hm::dnn::zoo::Model;
+use sentinel_hm::util::bench::time_it;
+
+fn dcgan_cluster(n: usize, arb: Arbitration, steps: u32) -> ClusterSpec {
+    let mut cs = ClusterSpec::new().arbitration(arb).fast_pct(20).steps(steps);
+    for i in 0..n {
+        cs = cs.tenant(
+            TenantSpec::for_model(Model::Dcgan)
+                .policy(PolicyKind::Sentinel(Default::default()))
+                .priority(if i == 0 { 1 } else { 0 }),
+        );
+    }
+    cs
+}
+
+fn main() {
+    // Warm the shared workload cache so the numbers measure the driver,
+    // not graph construction.
+    dcgan_cluster(1, Arbitration::StaticPartition, 2)
+        .run()
+        .expect("warm-up cluster");
+
+    let mut summary = json::Obj::new().field_str("bench", "cluster_contention");
+    for (key, n, arb) in [
+        ("cluster_1t_static_ns", 1usize, Arbitration::StaticPartition),
+        ("cluster_2t_static_ns", 2, Arbitration::StaticPartition),
+        ("cluster_4t_proportional_ns", 4, Arbitration::ProportionalByPeak),
+        ("cluster_4t_priority_ns", 4, Arbitration::Priority),
+    ] {
+        let cs = dcgan_cluster(n, arb, 6);
+        let t = time_it(3, || cs.run().expect("cluster run"));
+        t.report(&format!("cluster {n}x DCGAN ({}, 6 steps + solos)", arb.name()));
+        summary = summary.field_f64(key, t.median_ns as f64);
+    }
+
+    // Shape sanity on the priority cell: shares conserved, metrics
+    // present.
+    let out = dcgan_cluster(4, Arbitration::Priority, 6).run().unwrap();
+    assert_eq!(out.tenants.len(), 4);
+    let share_sum: u64 = out.tenants.iter().map(|t| t.share_final).sum();
+    assert!(share_sum <= out.fast_bytes_total, "shares exceed the machine");
+    assert!(out.makespan_ns() > 0.0);
+
+    println!("\n{}", summary.end());
+}

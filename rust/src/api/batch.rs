@@ -20,18 +20,35 @@ pub fn default_threads() -> usize {
 /// batch size; `1` degrades to a plain serial loop). The result vector
 /// is index-aligned with `specs`.
 pub fn run_batch(specs: Vec<RunSpec>, threads: usize) -> Vec<Result<RunOutcome, SpecError>> {
-    let n = specs.len();
+    par_map(&specs, threads, RunSpec::run)
+}
+
+/// Map `f` over `items` across `threads` scoped workers (clamped to the
+/// item count; `1` degrades to a plain serial loop). Results are
+/// index-aligned with `items` regardless of scheduling.
+///
+/// This is a worker pool *spawned per call* (workers self-schedule off
+/// an atomic cursor), not a process-wide shared pool: nested calls
+/// multiply OS threads, so inner levels should pass a small `threads`
+/// bound (see the solo-baseline fan-out in `api/cluster.rs`). Behind
+/// [`run_batch`] and the figure suite's contention sweep.
+pub fn par_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = items.len();
     if n == 0 {
         return Vec::new();
     }
     let threads = threads.clamp(1, n);
     if threads == 1 {
-        return specs.iter().map(RunSpec::run).collect();
+        return items.iter().map(|item| f(item)).collect();
     }
     let next = AtomicUsize::new(0);
-    let slots: Vec<Mutex<Option<Result<RunOutcome, SpecError>>>> =
-        (0..n).map(|_| Mutex::new(None)).collect();
-    let (specs_ref, slots_ref, next_ref) = (&specs, &slots, &next);
+    let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let (next_ref, slots_ref, f_ref) = (&next, &slots, &f);
     std::thread::scope(|scope| {
         for _ in 0..threads {
             scope.spawn(move || loop {
@@ -39,7 +56,7 @@ pub fn run_batch(specs: Vec<RunSpec>, threads: usize) -> Vec<Result<RunOutcome, 
                 if i >= n {
                     break;
                 }
-                let out = specs_ref[i].run();
+                let out = f_ref(&items[i]);
                 *slots_ref[i].lock().unwrap() = Some(out);
             });
         }
@@ -59,6 +76,16 @@ mod tests {
     #[test]
     fn empty_batch_is_fine() {
         assert!(run_batch(Vec::new(), 4).is_empty());
+    }
+
+    #[test]
+    fn par_map_is_order_stable_across_thread_counts() {
+        let items: Vec<u64> = (0..23).collect();
+        let expect: Vec<u64> = items.iter().map(|x| x * 3 + 1).collect();
+        for threads in [1, 2, 8, 64] {
+            assert_eq!(par_map(&items, threads, |&x| x * 3 + 1), expect);
+        }
+        assert!(par_map(&[] as &[u64], 4, |&x| x).is_empty());
     }
 
     #[test]

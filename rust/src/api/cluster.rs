@@ -1,0 +1,859 @@
+//! Multi-tenant cluster experiments: the declarative layer over
+//! [`crate::sim::cluster`].
+//!
+//! A [`ClusterSpec`] names N tenants (each a zoo model + a policy from
+//! the [`PolicyKind`] registry, like a [`crate::api::RunSpec`] without
+//! its own machine), a total fast-memory size for the one shared
+//! machine, and an [`Arbitration`] policy that divides that fast memory
+//! among the tenants. [`ClusterSpec::run`] resolves every workload
+//! through the process-wide cache (co-scheduling a model already built
+//! for a solo run costs nothing), compiles each distinct trace once,
+//! interleaves the tenants on the shared machine, runs each tenant's
+//! *solo* baseline (same policy, the whole fast tier to itself), and
+//! packages per-tenant contention metrics: slowdown vs solo, fast-memory
+//! occupancy over time, and migration traffic attributable to
+//! contention.
+//!
+//! ```no_run
+//! use sentinel_hm::api::{Arbitration, ClusterSpec, TenantSpec};
+//!
+//! let out = ClusterSpec::new()
+//!     .tenant(TenantSpec::model("dcgan").priority(1))
+//!     .tenant(TenantSpec::model("resnet32"))
+//!     .arbitration(Arbitration::ProportionalByPeak)
+//!     .fast_pct(20)
+//!     .steps(14)
+//!     .run()
+//!     .unwrap();
+//! for t in &out.tenants {
+//!     println!("{}: slowdown {:.3}x vs solo", t.model, t.slowdown_vs_solo);
+//! }
+//! println!("{}", out.to_json());
+//! ```
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::api::batch::{default_threads, par_map};
+use crate::api::json::{Arr, Obj};
+use crate::api::policy::PolicyKind;
+use crate::api::spec::{DEFAULT_SEED, DEFAULT_STEPS};
+use crate::api::workload::shared_workload;
+use crate::coordinator::sentinel::{CaseCounts, SentinelPolicy};
+use crate::dnn::zoo::Model;
+use crate::sim::cluster::{run_cluster, ClusterTenant};
+use crate::sim::replay::CompiledTrace;
+use crate::sim::{Engine, Machine, MachineSpec, TrainResult};
+use crate::util::table::{fmt_bytes, Table};
+
+pub use crate::sim::cluster::Arbitration;
+
+/// Tenant model selector (zoo by value or by CLI name).
+#[derive(Clone, Debug)]
+enum TenantModel {
+    Zoo(Model),
+    Named(String),
+}
+
+/// One tenant of a [`ClusterSpec`]: a workload, a policy, and a
+/// scheduling priority. Fast-memory sizing is *not* per-tenant — the
+/// cluster's arbitration policy decides each tenant's share.
+#[derive(Clone, Debug)]
+pub struct TenantSpec {
+    model: TenantModel,
+    policy: PolicyKind,
+    priority: u32,
+    steps: Option<u32>,
+}
+
+impl TenantSpec {
+    /// Tenant running a zoo model by CLI name (validated at run time).
+    pub fn model(name: impl Into<String>) -> Self {
+        TenantSpec {
+            model: TenantModel::Named(name.into()),
+            policy: PolicyKind::Sentinel(Default::default()),
+            priority: 0,
+            steps: None,
+        }
+    }
+
+    /// Tenant running a zoo model by value.
+    pub fn for_model(model: Model) -> Self {
+        TenantSpec {
+            model: TenantModel::Zoo(model),
+            policy: PolicyKind::Sentinel(Default::default()),
+            priority: 0,
+            steps: None,
+        }
+    }
+
+    /// Which policy this tenant runs (default: full Sentinel).
+    /// Fast-only / slow-only are rejected at validation — they bypass
+    /// arbitration and cannot share a machine.
+    pub fn policy(mut self, policy: PolicyKind) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Scheduling priority; higher preempts lower under
+    /// [`Arbitration::Priority`] (default: 0).
+    pub fn priority(mut self, priority: u32) -> Self {
+        self.priority = priority;
+        self
+    }
+
+    /// Per-tenant step-count override (default: the cluster's step
+    /// count).
+    pub fn steps(mut self, steps: u32) -> Self {
+        self.steps = Some(steps);
+        self
+    }
+}
+
+/// Parse a comma-separated tenant list, as the CLI's `--tenants` flag
+/// accepts it. Entry grammar: `model[:policy][:priority][*N]` —
+/// unordered policy/priority segments (a segment that parses as an
+/// integer is the priority), and an optional `*N` replica suffix.
+///
+/// Examples: `dcgan`, `resnet32:ial`, `dcgan:sentinel:2`,
+/// `dcgan*4,resnet32:lru*2`.
+pub fn parse_tenant_list(s: &str) -> Result<Vec<TenantSpec>, String> {
+    let mut out = Vec::new();
+    for raw in s.split(',') {
+        let raw = raw.trim();
+        if raw.is_empty() {
+            return Err("empty tenant entry (grammar: model[:policy][:priority][*N])".into());
+        }
+        let (spec_s, count) = match raw.split_once('*') {
+            Some((l, r)) => (
+                l.trim(),
+                r.trim()
+                    .parse::<usize>()
+                    .map_err(|_| format!("tenant '{raw}': '*N' wants a number"))?,
+            ),
+            None => (raw, 1),
+        };
+        if count == 0 || count > 64 {
+            return Err(format!("tenant '{raw}': replica count must be 1..=64"));
+        }
+        let segs: Vec<&str> = spec_s.split(':').map(str::trim).collect();
+        let model = segs[0];
+        if model.is_empty() {
+            return Err(format!("tenant '{raw}': missing model name"));
+        }
+        let mut t = TenantSpec::model(model);
+        let mut k = 1;
+        while k < segs.len() {
+            let part = segs[k];
+            // `mi:<K>` spells a policy with a ':' in it — rejoin it.
+            if part == "mi" && k + 1 < segs.len() {
+                t = t.policy(format!("mi:{}", segs[k + 1]).parse::<PolicyKind>()?);
+                k += 2;
+                continue;
+            }
+            if let Ok(p) = part.parse::<u32>() {
+                t = t.priority(p);
+            } else {
+                t = t.policy(part.parse::<PolicyKind>()?);
+            }
+            k += 1;
+        }
+        for _ in 0..count {
+            out.push(t.clone());
+        }
+    }
+    Ok(out)
+}
+
+/// Total-fast-memory sizing rule for the shared machine.
+#[derive(Clone, Copy, Debug)]
+enum ClusterFast {
+    /// Absolute bytes.
+    Bytes(u64),
+    /// Integer percent of the tenants' combined reported peak memory.
+    PctOfCombinedPeak(u32),
+}
+
+/// Errors a cluster spec can fail with.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ClusterError {
+    /// The spec names no tenants.
+    NoTenants,
+    /// A step count (cluster-wide or per-tenant) is zero.
+    ZeroSteps,
+    /// A tenant's model name is not in the zoo.
+    UnknownModel(String),
+    /// A tenant policy that bypasses fast-memory arbitration
+    /// (fast-only / slow-only cannot share a machine).
+    UnmanagedPolicy(String),
+    /// The total fast-memory sizing rule is out of range.
+    BadFastSize(String),
+}
+
+impl std::fmt::Display for ClusterError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClusterError::NoTenants => write!(f, "a cluster needs at least 1 tenant"),
+            ClusterError::ZeroSteps => write!(f, "every tenant needs at least 1 step"),
+            ClusterError::UnknownModel(name) => write!(
+                f,
+                "unknown model '{name}' (try: {})",
+                crate::dnn::zoo::model_names().join(", ")
+            ),
+            ClusterError::UnmanagedPolicy(p) => write!(
+                f,
+                "policy '{p}' bypasses fast-memory arbitration and cannot be a tenant \
+                 (pick a managed policy: sentinel, mi:<K>, ial, lru)"
+            ),
+            ClusterError::BadFastSize(msg) => write!(f, "bad total fast-memory size: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ClusterError {}
+
+/// A declarative multi-tenant experiment: N tenants co-scheduled on one
+/// shared machine under an arbitration policy. Build with the fluent
+/// setters, execute with [`ClusterSpec::run`].
+#[derive(Clone, Debug)]
+pub struct ClusterSpec {
+    tenants: Vec<TenantSpec>,
+    arbitration: Arbitration,
+    fast: ClusterFast,
+    steps: u32,
+    seed: u64,
+}
+
+impl Default for ClusterSpec {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A validated tenant, ready to run.
+struct ResolvedTenant {
+    model: Model,
+    kind: PolicyKind,
+    priority: u32,
+    steps: u32,
+}
+
+impl ClusterSpec {
+    /// An empty cluster: static partitioning, fast = 20% of the
+    /// tenants' combined reported peak, [`DEFAULT_STEPS`] steps,
+    /// [`DEFAULT_SEED`].
+    pub fn new() -> Self {
+        ClusterSpec {
+            tenants: Vec::new(),
+            arbitration: Arbitration::StaticPartition,
+            fast: ClusterFast::PctOfCombinedPeak(20),
+            steps: DEFAULT_STEPS,
+            seed: DEFAULT_SEED,
+        }
+    }
+
+    /// Add a tenant.
+    pub fn tenant(mut self, tenant: TenantSpec) -> Self {
+        self.tenants.push(tenant);
+        self
+    }
+
+    /// How fast memory is divided among tenants (default: static
+    /// partition).
+    pub fn arbitration(mut self, arbitration: Arbitration) -> Self {
+        self.arbitration = arbitration;
+        self
+    }
+
+    /// Total fast memory of the shared machine, in absolute bytes.
+    pub fn fast_bytes(mut self, bytes: u64) -> Self {
+        self.fast = ClusterFast::Bytes(bytes);
+        self
+    }
+
+    /// Total fast memory as an integer percent of the tenants' combined
+    /// reported peak memory (default: 20, the paper's headline point).
+    pub fn fast_pct(mut self, pct: u32) -> Self {
+        self.fast = ClusterFast::PctOfCombinedPeak(pct);
+        self
+    }
+
+    /// Training steps every tenant simulates, unless overridden
+    /// per-tenant (default: [`DEFAULT_STEPS`]).
+    pub fn steps(mut self, steps: u32) -> Self {
+        self.steps = steps;
+        self
+    }
+
+    /// Graph seed shared by every tenant workload (default:
+    /// [`DEFAULT_SEED`]).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    fn resolve(&self) -> Result<Vec<ResolvedTenant>, ClusterError> {
+        if self.tenants.is_empty() {
+            return Err(ClusterError::NoTenants);
+        }
+        if self.steps == 0 {
+            return Err(ClusterError::ZeroSteps);
+        }
+        match self.fast {
+            ClusterFast::Bytes(0) => {
+                return Err(ClusterError::BadFastSize("0 bytes".into()));
+            }
+            ClusterFast::PctOfCombinedPeak(p) if p == 0 || p > 100 => {
+                return Err(ClusterError::BadFastSize(format!(
+                    "percent {p} must be in 1..=100"
+                )));
+            }
+            _ => {}
+        }
+        let mut resolved = Vec::with_capacity(self.tenants.len());
+        for t in &self.tenants {
+            let model = match &t.model {
+                TenantModel::Zoo(m) => *m,
+                TenantModel::Named(n) => Model::from_name(n)
+                    .ok_or_else(|| ClusterError::UnknownModel(n.clone()))?,
+            };
+            if matches!(t.policy, PolicyKind::FastOnly | PolicyKind::SlowOnly) {
+                return Err(ClusterError::UnmanagedPolicy(t.policy.name()));
+            }
+            let steps = t.steps.unwrap_or(self.steps);
+            if steps == 0 {
+                return Err(ClusterError::ZeroSteps);
+            }
+            resolved.push(ResolvedTenant { model, kind: t.policy, priority: t.priority, steps });
+        }
+        Ok(resolved)
+    }
+
+    /// Check everything that can be checked without building graphs.
+    pub fn validate(&self) -> Result<(), ClusterError> {
+        self.resolve().map(|_| ())
+    }
+
+    /// Execute the cluster: resolve workloads (shared cache), size the
+    /// shared fast tier and each tenant's initial share, compile each
+    /// distinct trace once, co-schedule everything on the virtual clock,
+    /// run solo baselines, and package per-tenant contention metrics.
+    pub fn run(&self) -> Result<ClusterOutcome, ClusterError> {
+        let resolved = self.resolve()?;
+        let n = resolved.len();
+        let workloads: Vec<_> = resolved
+            .iter()
+            .map(|t| shared_workload(t.model, self.seed))
+            .collect();
+        let peaks: Vec<u64> = resolved.iter().map(|t| t.model.peak_memory_target()).collect();
+        let combined_peak: u64 = peaks.iter().sum();
+        let fast_total = match self.fast {
+            ClusterFast::Bytes(b) => b,
+            ClusterFast::PctOfCombinedPeak(p) => {
+                (combined_peak as u128 * p as u128 / 100) as u64
+            }
+        };
+        if fast_total == 0 {
+            return Err(ClusterError::BadFastSize(
+                "resolves to 0 bytes of fast memory".into(),
+            ));
+        }
+        let shares = initial_shares(self.arbitration, fast_total, &peaks);
+
+        // Per-tenant machine specs and engine configs; distinct traces
+        // compiled exactly once (keyed on everything lowering reads).
+        let mut specs: Vec<MachineSpec> = Vec::with_capacity(n);
+        let mut configs = Vec::with_capacity(n);
+        let mut compiled: Vec<CompiledTrace> = Vec::new();
+        let mut keys: Vec<(Model, u64, u64, u64)> = Vec::new();
+        let mut comp_of: Vec<usize> = Vec::with_capacity(n);
+        for i in 0..n {
+            let w = &workloads[i];
+            let spec = resolved[i].kind.machine_spec(&w.graph, &w.trace, shares[i]);
+            let cfg = resolved[i].kind.engine_config(resolved[i].steps);
+            let key = (
+                resolved[i].model,
+                self.seed,
+                spec.compute_gflops.to_bits(),
+                cfg.profiling_fault_ns.to_bits(),
+            );
+            let idx = match keys.iter().position(|k| *k == key) {
+                Some(p) => p,
+                None => {
+                    keys.push(key);
+                    compiled.push(CompiledTrace::compile(
+                        &w.graph,
+                        &w.trace,
+                        spec.compute_gflops,
+                        cfg.profiling_fault_ns,
+                    ));
+                    keys.len() - 1
+                }
+            };
+            comp_of.push(idx);
+            specs.push(spec);
+            configs.push(cfg);
+        }
+
+        let mut cluster_tenants = Vec::with_capacity(n);
+        for i in 0..n {
+            let w = &workloads[i];
+            cluster_tenants.push(ClusterTenant {
+                graph: &w.graph,
+                compiled: &compiled[comp_of[i]],
+                policy: resolved[i].kind.construct(&w.graph, &w.trace, specs[i]),
+                config: configs[i],
+                machine: Machine::new(specs[i]),
+                priority: resolved[i].priority,
+                share: shares[i],
+            });
+        }
+        let results = run_cluster(cluster_tenants, self.arbitration);
+
+        // Solo baselines: the same (policy, workload, steps) with the
+        // whole fast tier to itself — fanned across cores and served
+        // from the process-wide cache, so distinct baselines run in
+        // parallel and the contention sweep's three arbitration
+        // policies (identical tenants, identical total fast) pay for
+        // each baseline once, not three times. The fan-out is capped at
+        // the number of *distinct* baselines: duplicates would only
+        // block on the same cache slot, and a caller like the
+        // contention sweep may already be running whole clusters in
+        // parallel (par_map pools are per-call — nesting multiplies
+        // threads).
+        let keys: Vec<SoloKey> = (0..n)
+            .map(|i| {
+                (
+                    resolved[i].model,
+                    self.seed,
+                    format!("{:?}", resolved[i].kind),
+                    resolved[i].steps,
+                    fast_total,
+                )
+            })
+            .collect();
+        let distinct = keys.iter().collect::<std::collections::HashSet<_>>().len();
+        let idxs: Vec<usize> = (0..n).collect();
+        let solo: Vec<(TrainResult, u32)> = par_map(&idxs, default_threads().min(distinct.max(1)), |&i| {
+            let key = keys[i].clone();
+            let w = &workloads[i];
+            solo_baseline(key, || {
+                let spec = resolved[i].kind.machine_spec(&w.graph, &w.trace, fast_total);
+                let mut machine = Machine::new(spec);
+                let mut policy = resolved[i].kind.construct(&w.graph, &w.trace, spec);
+                let engine = Engine::new(configs[i]);
+                let r = engine.run_compiled(
+                    &w.graph,
+                    &compiled[comp_of[i]],
+                    &mut machine,
+                    policy.as_mut(),
+                );
+                // The solo run's own warm-up accounting: contention can
+                // change how long the co-scheduled Sentinel tunes, so
+                // each side's steady state is measured past its own
+                // tuning, not the other's.
+                let warmup = match policy.as_any().downcast_ref::<SentinelPolicy>() {
+                    Some(p) => p.tuning_steps(),
+                    None => resolved[i].kind.default_warmup(),
+                };
+                (r, warmup)
+            })
+        });
+
+        let tenants = results
+            .into_iter()
+            .enumerate()
+            .map(|(i, res)| {
+                let (cases, chosen_mi, warmup) =
+                    match res.policy.as_any().downcast_ref::<SentinelPolicy>() {
+                        Some(p) => (Some(p.cases_total), Some(p.chosen_mi), p.tuning_steps()),
+                        None => (None, None, resolved[i].kind.default_warmup()),
+                    };
+                let thr = res.result.throughput(warmup as usize);
+                let solo_thr = solo[i].0.throughput(solo[i].1 as usize);
+                let slowdown = if thr > 0.0 && solo_thr > 0.0 {
+                    solo_thr / thr
+                } else {
+                    f64::NAN
+                };
+                TenantOutcome {
+                    model: res.result.model.clone(),
+                    policy: resolved[i].kind.name(),
+                    policy_detail: res.result.policy.clone(),
+                    priority: resolved[i].priority,
+                    steps: resolved[i].steps,
+                    warmup_steps: warmup,
+                    share_initial: res.share_initial,
+                    share_final: res.share_final,
+                    solo_throughput: solo_thr,
+                    slowdown_vs_solo: slowdown,
+                    contention_migrations: res
+                        .result
+                        .total_migrations()
+                        .saturating_sub(solo[i].0.total_migrations()),
+                    preemptions_won: res.preemptions_won,
+                    preemptions_suffered: res.preemptions_suffered,
+                    pages_force_demoted: res.pages_force_demoted,
+                    fast_occupancy_per_step: res.fast_occupancy_per_step,
+                    cases,
+                    chosen_mi,
+                    result: res.result,
+                }
+            })
+            .collect();
+
+        Ok(ClusterOutcome {
+            arbitration: self.arbitration,
+            fast_bytes_total: fast_total,
+            seed: self.seed,
+            tenants,
+        })
+    }
+}
+
+/// Everything a solo-baseline simulation depends on: model, graph seed,
+/// the policy (its `Debug` rendering covers ablation configs), step
+/// count, and the machine's total fast bytes.
+type SoloKey = (Model, u64, String, u32, u64);
+
+/// Cached value: the solo `TrainResult` plus the solo run's own warm-up
+/// step count (tuning length can differ between the solo and the
+/// contended run of the same policy).
+type SoloValue = (TrainResult, u32);
+
+/// One cache slot: a per-key `OnceLock`, so concurrent first requests
+/// for the *same* key block on one computation while different keys
+/// compute in parallel — the same pattern as the workload cache
+/// (`crate::api::workload`), and what keeps the parallel contention
+/// sweep from re-simulating a baseline once per arbitration policy.
+type SoloSlot = Arc<OnceLock<SoloValue>>;
+
+static SOLO_CACHE: OnceLock<Mutex<HashMap<SoloKey, SoloSlot>>> = OnceLock::new();
+
+/// The solo baseline for `key`, computed by `run` on the first request
+/// and served from the process-wide cache thereafter.
+fn solo_baseline(key: SoloKey, run: impl FnOnce() -> SoloValue) -> SoloValue {
+    let cache = SOLO_CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    let slot: SoloSlot = {
+        let mut map = cache.lock().unwrap();
+        Arc::clone(map.entry(key).or_default())
+    };
+    slot.get_or_init(run).clone()
+}
+
+/// Drop every cached solo-baseline result (the companion of
+/// [`crate::api::clear_workload_cache`]). Useful for memory-sensitive
+/// embedders sweeping many distinct `(model, seed, policy, steps,
+/// fast)` combinations, and for tests that need a cold cache.
+pub fn clear_solo_baseline_cache() {
+    if let Some(cache) = SOLO_CACHE.get() {
+        cache.lock().unwrap().clear();
+    }
+}
+
+/// Initial per-tenant shares of `total` fast bytes. Static: an even
+/// split. Proportional (and the priority arbiter's starting point):
+/// sized by each tenant's reported peak.
+fn initial_shares(arb: Arbitration, total: u64, peaks: &[u64]) -> Vec<u64> {
+    let n = peaks.len().max(1) as u64;
+    match arb {
+        Arbitration::StaticPartition => peaks.iter().map(|_| (total / n).max(1)).collect(),
+        Arbitration::ProportionalByPeak | Arbitration::Priority => {
+            let sum: u128 = peaks.iter().map(|&p| p as u128).sum::<u128>().max(1);
+            peaks
+                .iter()
+                .map(|&p| ((total as u128 * p as u128 / sum) as u64).max(1))
+                .collect()
+        }
+    }
+}
+
+/// Everything one tenant's co-scheduled run produced, plus its solo
+/// baseline comparison.
+#[derive(Clone, Debug)]
+pub struct TenantOutcome {
+    /// Model name (as the graph reports it).
+    pub model: String,
+    /// Registry name of the policy.
+    pub policy: String,
+    /// The policy's own display name (ablation suffixes included).
+    pub policy_detail: String,
+    /// Scheduling priority the tenant ran with.
+    pub priority: u32,
+    /// Training steps simulated.
+    pub steps: u32,
+    /// Warm-up steps excluded from steady-state throughput (the same
+    /// accounting as [`crate::api::RunOutcome::warmup_steps`]).
+    pub warmup_steps: u32,
+    /// Fast-memory share at the start of the run (bytes).
+    pub share_initial: u64,
+    /// Fast-memory share at the end of the run (bytes; moves only under
+    /// priority arbitration).
+    pub share_final: u64,
+    /// Steady-state throughput of the solo baseline (steps/s): same
+    /// policy and workload with the whole fast tier to itself, measured
+    /// past the solo run's *own* warm-up (tuning length can differ
+    /// between the solo and contended runs).
+    pub solo_throughput: f64,
+    /// Contention slowdown: solo throughput divided by co-scheduled
+    /// throughput (1.0 = contention-free; NaN when a run is too short
+    /// to have a steady state).
+    pub slowdown_vs_solo: f64,
+    /// Migration traffic attributable to contention: co-scheduled page
+    /// migrations minus the solo run's (both directions, saturating).
+    pub contention_migrations: u64,
+    /// Times this tenant preempted share from a lower-priority tenant.
+    pub preemptions_won: u64,
+    /// Times this tenant lost share to a higher-priority tenant.
+    pub preemptions_suffered: u64,
+    /// Pages the arbiter force-demoted out of this tenant's share.
+    pub pages_force_demoted: u64,
+    /// Fast-memory bytes in use at the end of every step.
+    pub fast_occupancy_per_step: Vec<u64>,
+    /// End-of-interval migration-case counts (Sentinel-family tenants).
+    pub cases: Option<CaseCounts>,
+    /// Migration interval the online search settled on.
+    pub chosen_mi: Option<u32>,
+    /// The engine's full per-step record for the co-scheduled run.
+    pub result: TrainResult,
+}
+
+impl TenantOutcome {
+    /// Steady-state co-scheduled throughput in steps/s (warm-up
+    /// excluded).
+    pub fn throughput(&self) -> f64 {
+        self.result.throughput(self.warmup_steps as usize)
+    }
+
+    /// Serialize this tenant's row to JSON.
+    pub fn to_json(&self) -> String {
+        let mut occupancy = Arr::new();
+        for &b in &self.fast_occupancy_per_step {
+            let lit = b.to_string();
+            occupancy = occupancy.push_raw(&lit);
+        }
+        let cases = match &self.cases {
+            Some(c) => Obj::new()
+                .field_u64("case1", c.case1)
+                .field_u64("case2", c.case2)
+                .field_u64("case3", c.case3)
+                .end(),
+            None => "null".into(),
+        };
+        let chosen_mi = match self.chosen_mi {
+            Some(mi) => mi.to_string(),
+            None => "null".into(),
+        };
+        Obj::new()
+            .field_str("model", &self.model)
+            .field_str("policy", &self.policy)
+            .field_str("policy_detail", &self.policy_detail)
+            .field_u64("priority", self.priority as u64)
+            .field_u64("steps", self.steps as u64)
+            .field_u64("warmup_steps", self.warmup_steps as u64)
+            .field_u64("share_initial_bytes", self.share_initial)
+            .field_u64("share_final_bytes", self.share_final)
+            .field_f64("throughput_steps_per_s", self.throughput())
+            .field_f64("solo_throughput_steps_per_s", self.solo_throughput)
+            .field_f64("slowdown_vs_solo", self.slowdown_vs_solo)
+            .field_u64("pages_migrated_in", self.result.pages_migrated_in)
+            .field_u64("pages_migrated_out", self.result.pages_migrated_out)
+            .field_u64("contention_migrations", self.contention_migrations)
+            .field_u64("preemptions_won", self.preemptions_won)
+            .field_u64("preemptions_suffered", self.preemptions_suffered)
+            .field_u64("pages_force_demoted", self.pages_force_demoted)
+            .field_u64("peak_fast_bytes", self.result.peak_fast_bytes)
+            .field_u64("alloc_spills", self.result.alloc_spills)
+            .field_raw("chosen_mi", &chosen_mi)
+            .field_raw("cases", &cases)
+            .field_raw("fast_occupancy_per_step", &occupancy.end())
+            .end()
+    }
+}
+
+/// Everything one cluster run produced.
+#[derive(Clone, Debug)]
+pub struct ClusterOutcome {
+    /// The arbitration policy the cluster ran under.
+    pub arbitration: Arbitration,
+    /// Total fast memory of the shared machine (bytes).
+    pub fast_bytes_total: u64,
+    /// Graph seed shared by every tenant workload.
+    pub seed: u64,
+    /// Per-tenant outcomes, in spec order.
+    pub tenants: Vec<TenantOutcome>,
+}
+
+impl ClusterOutcome {
+    /// Simulated time at which the last tenant finished (ns).
+    pub fn makespan_ns(&self) -> f64 {
+        self.tenants
+            .iter()
+            .map(|t| t.result.total_time_ns)
+            .fold(0.0, f64::max)
+    }
+
+    /// Mean slowdown-vs-solo across tenants with a measurable steady
+    /// state (NaN when none have one).
+    pub fn mean_slowdown(&self) -> f64 {
+        let vals: Vec<f64> = self
+            .tenants
+            .iter()
+            .map(|t| t.slowdown_vs_solo)
+            .filter(|s| s.is_finite())
+            .collect();
+        if vals.is_empty() {
+            f64::NAN
+        } else {
+            vals.iter().sum::<f64>() / vals.len() as f64
+        }
+    }
+
+    /// Worst slowdown-vs-solo across tenants with a measurable steady
+    /// state (NaN when none have one).
+    pub fn max_slowdown(&self) -> f64 {
+        let worst = self
+            .tenants
+            .iter()
+            .map(|t| t.slowdown_vs_solo)
+            .filter(|s| s.is_finite())
+            .fold(f64::NEG_INFINITY, f64::max);
+        if worst.is_finite() {
+            worst
+        } else {
+            f64::NAN
+        }
+    }
+
+    /// Serialize the whole cluster outcome to JSON.
+    pub fn to_json(&self) -> String {
+        let mut tenants = Arr::new();
+        for t in &self.tenants {
+            let row = t.to_json();
+            tenants = tenants.push_raw(&row);
+        }
+        Obj::new()
+            .field_str("arbitration", self.arbitration.name())
+            .field_u64("fast_bytes_total", self.fast_bytes_total)
+            .field_u64("seed", self.seed)
+            .field_f64("makespan_ns", self.makespan_ns())
+            .field_f64("mean_slowdown_vs_solo", self.mean_slowdown())
+            .field_raw("tenants", &tenants.end())
+            .end()
+    }
+
+    /// Render a per-tenant summary table (the CLI's text output).
+    pub fn summary_table(&self) -> Table {
+        let mut t = Table::new(vec![
+            "#",
+            "model",
+            "policy",
+            "prio",
+            "share",
+            "steps/s",
+            "slowdown",
+            "contention pages",
+            "demoted pages",
+        ]);
+        for (i, ten) in self.tenants.iter().enumerate() {
+            t.row(vec![
+                i.to_string(),
+                ten.model.clone(),
+                ten.policy_detail.clone(),
+                ten.priority.to_string(),
+                fmt_bytes(ten.share_final),
+                format!("{:.3}", ten.throughput()),
+                format!("{:.3}", ten.slowdown_vs_solo),
+                ten.contention_migrations.to_string(),
+                ten.pages_force_demoted.to_string(),
+            ]);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::json;
+
+    #[test]
+    fn validation_catches_bad_specs() {
+        assert_eq!(ClusterSpec::new().validate(), Err(ClusterError::NoTenants));
+        assert_eq!(
+            ClusterSpec::new()
+                .tenant(TenantSpec::for_model(Model::Dcgan))
+                .steps(0)
+                .validate(),
+            Err(ClusterError::ZeroSteps)
+        );
+        assert!(matches!(
+            ClusterSpec::new()
+                .tenant(TenantSpec::model("not-a-model"))
+                .validate(),
+            Err(ClusterError::UnknownModel(_))
+        ));
+        assert!(matches!(
+            ClusterSpec::new()
+                .tenant(TenantSpec::for_model(Model::Dcgan).policy(PolicyKind::FastOnly))
+                .validate(),
+            Err(ClusterError::UnmanagedPolicy(_))
+        ));
+        assert!(matches!(
+            ClusterSpec::new()
+                .tenant(TenantSpec::for_model(Model::Dcgan))
+                .fast_pct(0)
+                .validate(),
+            Err(ClusterError::BadFastSize(_))
+        ));
+        assert!(ClusterSpec::new()
+            .tenant(TenantSpec::for_model(Model::Dcgan))
+            .validate()
+            .is_ok());
+    }
+
+    #[test]
+    fn tenant_list_parsing() {
+        let ts = parse_tenant_list("dcgan*2,resnet32:lru,lstm:mi:4:7").unwrap();
+        assert_eq!(ts.len(), 4);
+        assert!(matches!(ts[3].policy, PolicyKind::StaticInterval(4)));
+        assert_eq!(ts[3].priority, 7);
+        assert!(parse_tenant_list("").is_err());
+        assert!(parse_tenant_list("dcgan*0").is_err());
+        assert!(parse_tenant_list("dcgan:bogus-policy").is_err());
+    }
+
+    #[test]
+    fn static_shares_split_evenly_and_proportional_follow_peaks() {
+        let peaks = [100u64 << 20, 300 << 20];
+        let s = initial_shares(Arbitration::StaticPartition, 200 << 20, &peaks);
+        assert_eq!(s, vec![100 << 20, 100 << 20]);
+        let p = initial_shares(Arbitration::ProportionalByPeak, 200 << 20, &peaks);
+        assert_eq!(p, vec![50 << 20, 150 << 20]);
+        assert!(p.iter().sum::<u64>() <= 200 << 20);
+    }
+
+    #[test]
+    fn two_tenant_cluster_reports_contention_metrics_and_valid_json() {
+        let out = ClusterSpec::new()
+            .tenant(TenantSpec::for_model(Model::Dcgan).policy(PolicyKind::Lru))
+            .tenant(TenantSpec::for_model(Model::Dcgan).policy(PolicyKind::StaticInterval(4)))
+            .fast_pct(15)
+            .steps(6)
+            .run()
+            .unwrap();
+        assert_eq!(out.tenants.len(), 2);
+        let j = out.to_json();
+        assert!(json::is_valid(&j), "{j}");
+        assert!(j.contains("\"slowdown_vs_solo\""));
+        assert!(out.makespan_ns() > 0.0);
+        for t in &out.tenants {
+            assert_eq!(t.result.steps.len(), 6);
+            assert_eq!(t.fast_occupancy_per_step.len(), 6);
+            assert!(t.share_initial > 0);
+        }
+        // mi:4 is Sentinel-family: it must report cases and a chosen MI.
+        assert!(out.tenants[1].cases.is_some());
+        assert_eq!(out.tenants[1].chosen_mi, Some(4));
+    }
+}

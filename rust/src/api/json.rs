@@ -50,6 +50,7 @@ pub struct Obj {
 }
 
 impl Obj {
+    /// Start an empty object (`{`).
     pub fn new() -> Self {
         Obj { buf: String::from("{"), empty: true }
     }
@@ -70,25 +71,30 @@ impl Obj {
         self
     }
 
+    /// Add a string field (escaped and quoted).
     pub fn field_str(self, k: &str, v: &str) -> Self {
         let lit = string(v);
         self.field_raw(k, &lit)
     }
 
+    /// Add an unsigned-integer field.
     pub fn field_u64(self, k: &str, v: u64) -> Self {
         let lit = v.to_string();
         self.field_raw(k, &lit)
     }
 
+    /// Add a float field (shortest-round-trip; non-finite → `null`).
     pub fn field_f64(self, k: &str, v: f64) -> Self {
         let lit = number(v);
         self.field_raw(k, &lit)
     }
 
+    /// Add a boolean field.
     pub fn field_bool(self, k: &str, v: bool) -> Self {
         self.field_raw(k, if v { "true" } else { "false" })
     }
 
+    /// Close the object and return the rendered JSON.
     pub fn end(mut self) -> String {
         self.buf.push('}');
         self.buf
@@ -108,6 +114,7 @@ pub struct Arr {
 }
 
 impl Arr {
+    /// Start an empty array (`[`).
     pub fn new() -> Self {
         Arr { buf: String::from("["), empty: true }
     }
@@ -122,11 +129,13 @@ impl Arr {
         self
     }
 
+    /// Push a string element (escaped and quoted).
     pub fn push_str_val(self, v: &str) -> Self {
         let lit = string(v);
         self.push_raw(&lit)
     }
 
+    /// Close the array and return the rendered JSON.
     pub fn end(mut self) -> String {
         self.buf.push(']');
         self.buf

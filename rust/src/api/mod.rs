@@ -19,6 +19,11 @@
 //!   cache every spec, batch worker, and figure shares (§Perf: a sweep
 //!   builds its ~12k-object graph once, not once per grid point).
 //! * [`json`] — the serde-less JSON building blocks and validator.
+//! * [`cluster`] — multi-tenant co-scheduling: [`ClusterSpec`] runs N
+//!   tenants (each a model + policy, like a [`RunSpec`] without its own
+//!   machine) against one shared machine under an [`Arbitration`]
+//!   policy, reporting per-tenant slowdown vs solo, occupancy over
+//!   time, and contention-attributable migration traffic.
 //!
 //! ```no_run
 //! use sentinel_hm::api::{run_batch, PolicyKind, RunSpec};
@@ -41,14 +46,21 @@
 //! }
 //! ```
 
+#![warn(missing_docs)]
+
 pub mod batch;
+pub mod cluster;
 pub mod json;
 pub mod outcome;
 pub mod policy;
 pub mod spec;
 pub mod workload;
 
-pub use batch::{default_threads, run_batch};
+pub use batch::{default_threads, par_map, run_batch};
+pub use cluster::{
+    clear_solo_baseline_cache, parse_tenant_list, Arbitration, ClusterError, ClusterOutcome,
+    ClusterSpec, TenantOutcome, TenantSpec,
+};
 pub use outcome::{ProfileSummary, RunOutcome};
 pub use policy::PolicyKind;
 pub use spec::{RunSpec, SpecError, DEFAULT_SEED, DEFAULT_STEPS};

@@ -24,7 +24,9 @@ use crate::dnn::{ModelGraph, StepTrace};
 /// A built workload: the seeded graph and its canonical step trace.
 #[derive(Debug)]
 pub struct Workload {
+    /// The seeded model graph.
     pub graph: ModelGraph,
+    /// The canonical one-step trace derived from `graph`.
     pub trace: StepTrace,
 }
 
@@ -39,7 +41,9 @@ impl Workload {
 /// Hit/miss counters for the shared cache (observability + tests).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct WorkloadCacheStats {
+    /// Requests served from an already-built workload.
     pub hits: u64,
+    /// Requests that built (or waited on the first build of) a workload.
     pub misses: u64,
 }
 

@@ -286,6 +286,16 @@ impl Policy for SentinelPolicy {
         }
     }
 
+    /// Multi-tenant co-scheduling: the arbiter resized this tenant's
+    /// fast-memory share. Sentinel never owned fast memory exclusively —
+    /// placement and prefetch already read free space live off the
+    /// machine — but the *plan-level* quantities (Eq. 1/2 feasibility,
+    /// `RS(k)` reasoning) were sized from the construction-time capacity,
+    /// so track the grant for future plan rebuilds.
+    fn fast_share_changed(&mut self, new_fast_bytes: u64, _m: &Machine) {
+        self.spec.fast.capacity_bytes = new_fast_bytes;
+    }
+
     fn step_start(&mut self, step: u32, m: &mut Machine, g: &ModelGraph) {
         self.step_start_ns = m.now_ns();
         self.cases_this_step = CaseCounts::default();

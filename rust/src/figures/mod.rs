@@ -27,7 +27,10 @@
 //! | Fig. 12 (fast-size sens.) | [`fig12_sensitivity`] |
 //! | Fig. 13 (ResNet variants) | [`fig13_variants`] |
 
-use crate::api::{default_threads, run_batch, shared_workload, PolicyKind, RunSpec};
+use crate::api::{
+    default_threads, par_map, run_batch, shared_workload, Arbitration, ClusterSpec, PolicyKind,
+    RunSpec, TenantSpec,
+};
 use crate::coordinator::sentinel::SentinelConfig;
 use crate::dnn::zoo::Model;
 use crate::mem::{AllocMode, Allocator};
@@ -384,6 +387,70 @@ pub fn fig13_variants(steps: u32) -> Vec<(String, u64, u64)> {
         .collect()
 }
 
+// ---------------------------------------------------------------------
+// Multi-tenant contention (beyond the paper: the ROADMAP's
+// production-scale direction)
+// ---------------------------------------------------------------------
+
+/// Contention sweep: N co-located jobs (alternating DCGAN and
+/// ResNet_v1-32, tenant 0 at elevated priority) sharing one machine
+/// whose fast tier is `pct`% of the tenants' combined reported peak,
+/// under every arbitration policy. One row per (tenant count ×
+/// fast-pct × arbitration): mean and worst slowdown vs each tenant's
+/// solo run, plus the high-priority tenant's slowdown (what the
+/// priority arbiter protects).
+///
+/// Regenerate with `sentinel figure ct` (see EXPERIMENTS.md
+/// §Multi-tenant contention for the expected shape).
+///
+/// Grid cells are independent cluster simulations, so they fan out
+/// across [`default_threads`] workers like every other multi-run
+/// figure (the workload and solo-baseline caches are already
+/// concurrency-safe); rows come back in grid order regardless of
+/// scheduling.
+pub fn contention_table(counts: &[usize], pcts: &[u32], steps: u32) -> Table {
+    let cells: Vec<(usize, u32, Arbitration)> = counts
+        .iter()
+        .flat_map(|&n| {
+            pcts.iter()
+                .flat_map(move |&pct| Arbitration::all().into_iter().map(move |arb| (n, pct, arb)))
+        })
+        .collect();
+    let run_cell = |&(n, pct, arb): &(usize, u32, Arbitration)| {
+        let mut cs = ClusterSpec::new()
+            .arbitration(arb)
+            .fast_pct(pct)
+            .steps(steps)
+            .seed(seed());
+        for i in 0..n {
+            let model = if i % 2 == 0 { Model::Dcgan } else { RN32 };
+            let priority = if i == 0 { 1 } else { 0 };
+            cs = cs.tenant(TenantSpec::for_model(model).priority(priority));
+        }
+        cs.run().expect("contention sweep cluster")
+    };
+    let outs = par_map(&cells, default_threads(), run_cell);
+    let mut t = Table::new(vec![
+        "tenants",
+        "fast",
+        "arbitration",
+        "mean slowdown",
+        "worst slowdown",
+        "hi-prio slowdown",
+    ]);
+    for ((n, pct, arb), out) in cells.iter().zip(&outs) {
+        t.row(vec![
+            n.to_string(),
+            format!("{pct}%"),
+            arb.name().to_string(),
+            format!("{:.3}", out.mean_slowdown()),
+            format!("{:.3}", out.max_slowdown()),
+            format!("{:.3}", out.tenants[0].slowdown_vs_solo),
+        ]);
+    }
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -401,6 +468,12 @@ mod tests {
         let (rows, sp) = fig7_mi_sweep(1 << 30, &mis);
         assert_eq!(rows.len(), mis.len());
         assert!(sp > mis[0] || sp < *mis.last().unwrap(), "sweet spot {sp}");
+    }
+
+    #[test]
+    fn contention_table_has_one_row_per_grid_cell() {
+        let t = contention_table(&[1, 2], &[30], 8);
+        assert_eq!(t.rows().len(), 2 * 3, "counts × pcts × arbitrations");
     }
 
     #[test]

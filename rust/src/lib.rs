@@ -21,10 +21,17 @@
 //! cores with [`api::run_batch`], and serialize the [`api::RunOutcome`]
 //! with its hand-rolled JSON writer.
 //!
+//! For many jobs sharing one machine, [`api::ClusterSpec`] co-schedules
+//! N tenants (each a model + policy) against one shared fast tier under
+//! an [`api::Arbitration`] policy — static partition, proportional by
+//! peak, or priority-preemptive — and reports per-tenant slowdown vs
+//! solo (see `ARCHITECTURE.md` for where the tenancy layer sits).
+//!
 //! The layers underneath:
 //!
 //! * [`sim`] — discrete-event heterogeneous-memory machine model
-//!   (the paper's 2-socket NUMA testbed, Table 2).
+//!   (the paper's 2-socket NUMA testbed, Table 2), plus
+//!   [`sim::cluster`], the multi-tenant virtual-clock driver.
 //! * [`mem`] — data objects, object→page allocators, short-lived pool.
 //! * [`profiler`] — one-training-step object-granularity profiling
 //!   (the paper's PTE-poisoning channel, §3.1).

@@ -19,7 +19,7 @@
 use std::collections::HashMap;
 use std::process::ExitCode;
 
-use sentinel_hm::api::{json, PolicyKind, RunSpec};
+use sentinel_hm::api::{json, parse_tenant_list, ClusterSpec, PolicyKind, RunSpec};
 use sentinel_hm::dnn::zoo::{model_names, Model};
 use sentinel_hm::figures;
 use sentinel_hm::metrics::peak_memory_table;
@@ -37,6 +37,7 @@ fn main() -> ExitCode {
         "profile" => cmd_profile(&args),
         "train" => cmd_train(&args),
         "sweep-mi" => cmd_sweep_mi(&args),
+        "cluster" => cmd_cluster(&args),
         "compare" => cmd_compare(&args),
         "figure" => cmd_figure(&args),
         "e2e" => cmd_e2e(&args),
@@ -65,8 +66,10 @@ fn print_usage() {
            sentinel profile <model> [--json]\n\
            sentinel train <model> [--policy <P>] [--fast-pct 20] [--fast-mb N] [--steps 14] [--mi K] [--seed S] [--json]\n\
            sentinel sweep-mi [--fast-mb 1024] [--json]\n\
+           sentinel cluster --tenants <model[:policy][:prio][*N],...> [--arb static|proportional|priority]\n\
+                            [--fast-pct 20|--fast-mb N] [--steps 14] [--seed S] [--json]\n\
            sentinel compare [--steps 14] [--json]\n\
-           sentinel figure <1|2|3|4|7|8|10|11|12|13|t1|t4|t5|all> [--steps N] [--fast-mb N] [--json]\n\
+           sentinel figure <1|2|3|4|7|8|10|11|12|13|t1|t4|t5|ct|all> [--steps N] [--fast-mb N] [--json]\n\
            sentinel e2e [--steps 300] [--artifacts artifacts] [--lr 0.05]   (needs the `pjrt` feature)\n\
            sentinel models [--json]\n\
          \n\
@@ -301,6 +304,53 @@ fn cmd_sweep_mi(args: &[String]) -> Result<(), String> {
     Ok(())
 }
 
+/// `sentinel cluster`: co-schedule N tenants on one shared machine.
+fn cmd_cluster(args: &[String]) -> Result<(), String> {
+    let opts = parse_opts(
+        "cluster",
+        &args[1..],
+        &["tenants", "arb", "steps", "fast-pct", "fast-mb", "seed"],
+        &["json"],
+    )?;
+    let tenants = opts
+        .get("tenants")
+        .ok_or("cluster wants --tenants <model[:policy][:priority][*N],...>")?;
+    let mut spec = ClusterSpec::new();
+    for t in parse_tenant_list(tenants)? {
+        spec = spec.tenant(t);
+    }
+    if let Some(a) = opts.get("arb") {
+        spec = spec.arbitration(a.parse()?);
+    }
+    if opts.contains_key("fast-mb") && opts.contains_key("fast-pct") {
+        return Err("--fast-mb and --fast-pct both size fast memory; pass only one".into());
+    }
+    if let Some(mb) = opts.get("fast-mb") {
+        let mb: u64 = mb.parse().map_err(|_| "--fast-mb wants a number".to_string())?;
+        spec = spec.fast_bytes(mb << 20);
+    } else {
+        spec = spec.fast_pct(opt_u64(&opts, "fast-pct", 20)? as u32);
+    }
+    spec = spec.steps(opt_u64(&opts, "steps", u64::from(figures::RUN_STEPS))? as u32);
+    if let Some(seed) = opts.get("seed") {
+        spec = spec.seed(seed.parse().map_err(|_| "--seed wants a number".to_string())?);
+    }
+    let out = spec.run().map_err(|e| e.to_string())?;
+    if want_json(&opts) {
+        println!("{}", out.to_json());
+        return Ok(());
+    }
+    println!(
+        "cluster: {} tenants | arbitration = {} | fast = {} total | makespan = {:.3} ms",
+        out.tenants.len(),
+        out.arbitration.name(),
+        fmt_bytes(out.fast_bytes_total),
+        out.makespan_ns() / 1e6,
+    );
+    out.summary_table().print();
+    Ok(())
+}
+
 fn t5_section() -> (String, Table) {
     let t5: Vec<(String, u64, u64)> = Model::paper_five()
         .into_iter()
@@ -405,6 +455,12 @@ fn figure_sections(id: &str, steps: u32, fast_bytes: u64) -> Result<Vec<(String,
             }
             vec![("Fig 13 — peak memory vs min fast size (ResNet variants)".into(), t)]
         }
+        // Beyond the paper: multi-tenant contention sweep (1/2/4/8
+        // co-located DCGAN/ResNet jobs × fast-pct × arbitration).
+        "ct" => vec![(
+            "Contention — co-located jobs sharing one machine (slowdown vs solo)".into(),
+            figures::contention_table(&[1, 2, 4, 8], &[20, 35], steps),
+        )],
         other => return Err(format!("unknown figure '{other}'")),
     };
     Ok(sections)
@@ -419,7 +475,11 @@ fn cmd_figure(args: &[String]) -> Result<(), String> {
         .clone();
     let steps = opt_u64(&opts, "steps", u64::from(figures::RUN_STEPS))? as u32;
     let fast = opt_u64(&opts, "fast-mb", 1024)? << 20;
-    // "7" covers Fig 8 and "10" covers Table 4 (shared sweeps).
+    // "7" covers Fig 8 and "10" covers Table 4 (shared sweeps). "ct"
+    // (the beyond-paper contention sweep) is deliberately NOT in "all":
+    // "all" regenerates the paper's artifacts, and the 24-cell cluster
+    // grid is the most expensive figure — run `sentinel figure ct`
+    // explicitly.
     let ids: Vec<&str> = if id == "all" {
         vec!["1", "2", "3", "4", "t1", "7", "10", "t5", "11", "12", "13"]
     } else {

@@ -1,0 +1,550 @@
+//! Multi-tenant co-scheduling: N independent training jobs replayed
+//! against **one shared heterogeneous-memory machine**.
+//!
+//! The solo engine assumes one job owns fast memory. A production-scale
+//! deployment co-locates many jobs, turning fast memory into a
+//! *contended* resource that must be partitioned and arbitrated — the
+//! gap framed by Olson et al.'s *Online Application Guidance for
+//! Heterogeneous Memory Systems* (whole-application tiering) and RIMMS
+//! (runtime memory coordination for multiple accelerator clients).
+//!
+//! This module is the simulation half of that story:
+//!
+//! * each tenant is an existing [`CompiledTrace`] + [`Policy`] pair,
+//!   exactly as the solo engine runs them;
+//! * tenants interleave on a **virtual clock**: the driver always
+//!   advances the tenant whose private machine clock is furthest behind,
+//!   one layer at a time, so the per-tenant op order is identical to a
+//!   solo run and cross-tenant progress tracks simulated time;
+//! * fast-memory capacity is arbitrated by an [`Arbitration`] policy —
+//!   each tenant's machine is capped at its current *share* of the one
+//!   physical fast tier, and the priority arbiter can move share between
+//!   tenants mid-run (forcing demotion of a victim's cold pages).
+//!
+//! Because a tenant's replay is driven through the same
+//! [`replay_layer`] the solo engine uses, an N=1 cluster is
+//! **bit-identical** to [`crate::sim::Engine::run`] — the anchor proven
+//! by `rust/tests/cluster_tenancy.rs`.
+//!
+//! ## Modeling scope
+//!
+//! **Fast-memory capacity is the contended resource; nothing else is
+//! shared.** Each tenant keeps private migration lanes (the paper's
+//! per-job helper threads), private slow-tier bandwidth, and private
+//! compute — the deployment assumption is one job per socket-worth of
+//! cores with fast memory as the single shared pool. Consequences:
+//! under the *fixed-share* arbiters (static, proportional) a tenant's
+//! result is exactly a solo run at `fast = share`, so its reported
+//! slowdown-vs-solo measures the cost of the capacity split, not
+//! bandwidth interference; the virtual-clock interleaving becomes
+//! results-relevant under [`Arbitration::Priority`], where cross-tenant
+//! timing decides when shares move and demotions fire.
+//!
+//! [`replay_layer`]: crate::sim::engine::replay_layer
+
+use crate::dnn::ModelGraph;
+use crate::sim::device::Tier;
+use crate::sim::engine::{replay_layer, EngineConfig, Policy, StepStats, TrainResult};
+use crate::sim::machine::Machine;
+use crate::sim::replay::CompiledTrace;
+use crate::PAGE_SIZE;
+
+/// How the cluster divides the physical fast tier among tenants.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Arbitration {
+    /// Every tenant gets `fast_total / N`, fixed for the whole run.
+    StaticPartition,
+    /// Shares sized proportionally to each tenant's profiled peak
+    /// memory, fixed for the whole run.
+    ProportionalByPeak,
+    /// Starts from proportional shares; a higher-priority tenant under
+    /// memory pressure (allocation spills or stalled promotions) can
+    /// preempt share from the lowest-priority tenant, forcing demotion
+    /// of the victim's cold fast-resident pages.
+    Priority,
+}
+
+impl Arbitration {
+    /// Canonical CLI name (`--arb` spellings round-trip through
+    /// `FromStr`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Arbitration::StaticPartition => "static",
+            Arbitration::ProportionalByPeak => "proportional",
+            Arbitration::Priority => "priority",
+        }
+    }
+
+    /// Every arbitration policy, in presentation order.
+    pub fn all() -> [Arbitration; 3] {
+        [
+            Arbitration::StaticPartition,
+            Arbitration::ProportionalByPeak,
+            Arbitration::Priority,
+        ]
+    }
+}
+
+impl std::fmt::Display for Arbitration {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+impl std::str::FromStr for Arbitration {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "static" => Ok(Arbitration::StaticPartition),
+            "proportional" | "prop" => Ok(Arbitration::ProportionalByPeak),
+            "priority" | "prio" => Ok(Arbitration::Priority),
+            other => Err(format!(
+                "unknown arbitration '{other}' (valid: static, proportional, priority)"
+            )),
+        }
+    }
+}
+
+/// One tenant handed to [`run_cluster`]: a prepared workload, policy,
+/// and a machine whose fast capacity is already set to the tenant's
+/// initial share.
+pub struct ClusterTenant<'a> {
+    /// The tenant's model graph (object metadata for policy callbacks).
+    pub graph: &'a ModelGraph,
+    /// The tenant's compiled op stream (one training step).
+    pub compiled: &'a CompiledTrace,
+    /// The data-management policy driving placement/migration.
+    pub policy: Box<dyn Policy>,
+    /// Engine knobs (step count, profiling schedule).
+    pub config: EngineConfig,
+    /// The tenant's machine view: private clock, private residency, fast
+    /// capacity capped at the tenant's arbitrated share.
+    pub machine: Machine,
+    /// Scheduling priority (higher preempts lower under
+    /// [`Arbitration::Priority`]).
+    pub priority: u32,
+    /// Initial fast-memory share in bytes (must match the machine's fast
+    /// capacity).
+    pub share: u64,
+}
+
+/// What one tenant's run produced.
+pub struct TenantRunResult {
+    /// The per-step record, exactly as the solo engine would package it.
+    pub result: TrainResult,
+    /// The policy object after the run (callers downcast via
+    /// [`Policy::as_any`] for Sentinel case counts / tuning metadata).
+    pub policy: Box<dyn Policy>,
+    /// Fast-memory bytes in use at the end of every step (occupancy
+    /// over time — the contention-visibility metric).
+    pub fast_occupancy_per_step: Vec<u64>,
+    /// Share at the start of the run.
+    pub share_initial: u64,
+    /// Share at the end of the run (differs only under priority
+    /// arbitration).
+    pub share_final: u64,
+    /// Times this tenant took share from a lower-priority tenant.
+    pub preemptions_won: u64,
+    /// Times this tenant lost share to a higher-priority tenant.
+    pub preemptions_suffered: u64,
+    /// Pages the arbiter force-demoted out of this tenant's fast share.
+    pub pages_force_demoted: u64,
+}
+
+/// Driver state for one tenant: a resumable layer-granular cursor over
+/// the same replay loop `Engine::run_compiled` runs in one go.
+///
+/// KEEP IN SYNC: `prologue`, `advance_layer`'s step bookkeeping, and
+/// `finish` mirror `Engine::run_compiled`/`Engine::package` — the solo
+/// loop stays a straight-line hot path (§Perf), so the mirroring is
+/// deliberate and pinned by the N=1 bit-identity test.
+struct ActiveTenant<'a> {
+    graph: &'a ModelGraph,
+    compiled: &'a CompiledTrace,
+    policy: Box<dyn Policy>,
+    config: EngineConfig,
+    machine: Machine,
+    priority: u32,
+    share: u64,
+    share_initial: u64,
+    /// Preemption never shrinks a tenant below this floor (a quarter of
+    /// its initial share), so low-priority tenants starve slowly, not
+    /// completely.
+    floor: u64,
+    step: u32,
+    layer: usize,
+    t0: f64,
+    in0: u64,
+    out0: u64,
+    /// Spill count at the last arbitration review (pressure detection).
+    spills_seen: u64,
+    /// Sticky promote-stall flag, set at any layer boundary since the
+    /// last review: `Machine::promote_stalled` only reflects the last
+    /// exec, so a mid-step stall that drains before step end would be
+    /// invisible to an instantaneous sample at the review point.
+    stalled_since_review: bool,
+    steps_out: Vec<StepStats>,
+    occupancy: Vec<u64>,
+    preemptions_won: u64,
+    preemptions_suffered: u64,
+    pages_force_demoted: u64,
+    done: bool,
+}
+
+impl<'a> ActiveTenant<'a> {
+    fn new(t: ClusterTenant<'a>) -> Self {
+        let done = t.config.steps == 0 || t.compiled.layers.is_empty();
+        ActiveTenant {
+            share_initial: t.share,
+            floor: t.share / 4 / PAGE_SIZE * PAGE_SIZE,
+            steps_out: Vec::with_capacity(t.config.steps as usize),
+            occupancy: Vec::with_capacity(t.config.steps as usize),
+            graph: t.graph,
+            compiled: t.compiled,
+            policy: t.policy,
+            config: t.config,
+            machine: t.machine,
+            priority: t.priority,
+            share: t.share,
+            step: 0,
+            layer: 0,
+            t0: 0.0,
+            in0: 0,
+            out0: 0,
+            spills_seen: 0,
+            stalled_since_review: false,
+            preemptions_won: 0,
+            preemptions_suffered: 0,
+            pages_force_demoted: 0,
+            done,
+        }
+    }
+
+    /// Allocate persistent objects once, exactly as the solo engine's
+    /// prologue does.
+    fn prologue(&mut self) {
+        self.machine.reserve_objects(self.compiled.n_objects);
+        for &(oid, pages) in &self.compiled.persistent {
+            let pref = self
+                .policy
+                .place(&self.graph.objects[oid.index()], &self.machine);
+            self.machine.alloc(oid, pages, pref);
+        }
+    }
+
+    /// Replay the next layer. Returns `true` when this call completed a
+    /// training step (the arbitration review point).
+    fn advance_layer(&mut self) -> bool {
+        if self.layer == 0 {
+            self.t0 = self.machine.now_ns();
+            self.in0 = self.machine.stats.pages_in;
+            self.out0 = self.machine.stats.pages_out;
+            self.policy.step_start(self.step, &mut self.machine, self.graph);
+        }
+        let lt = self.compiled.layers[self.layer];
+        let profiling = self.step < self.config.profiling_steps;
+        replay_layer(
+            self.compiled,
+            &lt,
+            self.graph,
+            &mut self.machine,
+            self.policy.as_mut(),
+            profiling,
+        );
+        self.layer += 1;
+        if self.machine.promote_stalled() {
+            self.stalled_since_review = true;
+        }
+        if self.layer < self.compiled.layers.len() {
+            return false;
+        }
+        self.layer = 0;
+        self.policy.step_end(self.step, &mut self.machine, self.graph);
+        self.steps_out.push(StepStats {
+            step: self.step,
+            time_ns: self.machine.now_ns() - self.t0,
+            pages_in: self.machine.stats.pages_in - self.in0,
+            pages_out: self.machine.stats.pages_out - self.out0,
+        });
+        self.occupancy.push(self.machine.used_bytes(Tier::Fast));
+        self.step += 1;
+        if self.step >= self.config.steps {
+            self.done = true;
+        }
+        true
+    }
+
+    fn finish(self) -> TenantRunResult {
+        let result = TrainResult {
+            policy: self.policy.name().to_string(),
+            model: self.graph.name.clone(),
+            total_time_ns: self.machine.now_ns(),
+            peak_fast_bytes: self.machine.stats.peak_fast_bytes,
+            peak_total_bytes: self.machine.stats.peak_total_bytes,
+            pages_migrated_in: self.machine.stats.pages_in,
+            pages_migrated_out: self.machine.stats.pages_out,
+            alloc_spills: self.machine.stats.alloc_spills,
+            steps: self.steps_out,
+        };
+        TenantRunResult {
+            result,
+            policy: self.policy,
+            fast_occupancy_per_step: self.occupancy,
+            share_initial: self.share_initial,
+            share_final: self.share,
+            preemptions_won: self.preemptions_won,
+            preemptions_suffered: self.preemptions_suffered,
+            pages_force_demoted: self.pages_force_demoted,
+        }
+    }
+}
+
+/// Run every tenant to completion against one shared machine,
+/// interleaving their op streams on a virtual clock (always advance the
+/// tenant whose private clock is furthest behind; ties go to the lower
+/// index, so scheduling is deterministic).
+///
+/// Static and proportional shares are fixed for the whole run; under
+/// [`Arbitration::Priority`], every completed tenant step is a review
+/// point at which a pressured higher-priority tenant may take one
+/// quantum of share from the lowest-priority tenant above its floor.
+///
+/// Results come back in tenant order.
+pub fn run_cluster(tenants: Vec<ClusterTenant<'_>>, arbitration: Arbitration) -> Vec<TenantRunResult> {
+    let n = tenants.len();
+    let total_share: u64 = tenants.iter().map(|t| t.share).sum();
+    // One preemption moves 1/(8N) of the pool, page-rounded (≥ 1 page).
+    let quantum = (total_share / (8 * n.max(1) as u64))
+        .max(PAGE_SIZE)
+        / PAGE_SIZE
+        * PAGE_SIZE;
+    let mut active: Vec<ActiveTenant<'_>> = tenants.into_iter().map(ActiveTenant::new).collect();
+    for t in &mut active {
+        t.prologue();
+    }
+    let mut remaining = active.iter().filter(|t| !t.done).count();
+    while remaining > 0 {
+        let mut pick = 0usize;
+        let mut best = f64::INFINITY;
+        for (i, t) in active.iter().enumerate() {
+            if !t.done && t.machine.now_ns() < best {
+                best = t.machine.now_ns();
+                pick = i;
+            }
+        }
+        let step_done = active[pick].advance_layer();
+        if active[pick].done {
+            remaining -= 1;
+        }
+        // Review only for tenants that will keep running: a tenant
+        // that just finished has no use for more share.
+        if step_done && !active[pick].done && arbitration == Arbitration::Priority {
+            review_priority(&mut active, pick, quantum);
+        }
+    }
+    active.into_iter().map(ActiveTenant::finish).collect()
+}
+
+/// Priority review point: tenant `i` just finished a step. If it saw
+/// memory pressure since its last review (allocation spills or a stalled
+/// promotion lane), move one share quantum from the lowest-priority
+/// tenant that still sits above its floor, force-demoting the victim's
+/// coldest fast-resident pages to fit the shrunk share.
+///
+/// "Coldest" is approximated as *largest fast-resident first*: under
+/// Sentinel the bulk fast residents are the long-lived prefetched
+/// masses, while the reserved short-lived pool stays small — so demoting
+/// the biggest residents first touches the least-urgent data.
+fn review_priority(tenants: &mut [ActiveTenant<'_>], i: usize, quantum: u64) {
+    let (pressure, prio_i) = {
+        let t = &mut tenants[i];
+        let spills = t.machine.stats.alloc_spills;
+        let pressure = spills > t.spills_seen || t.stalled_since_review;
+        t.spills_seen = spills;
+        t.stalled_since_review = false;
+        (pressure, t.priority)
+    };
+    if !pressure {
+        return;
+    }
+    // Victim: still running (a finished tenant's machine never execs
+    // again, so its demote lane would never drain the forced
+    // demotions), strictly lower priority, share above floor; lowest
+    // priority first, then largest share, then lowest index.
+    let mut victim: Option<usize> = None;
+    for (j, t) in tenants.iter().enumerate() {
+        if j == i || t.done || t.priority >= prio_i || t.share <= t.floor {
+            continue;
+        }
+        let better = match victim {
+            None => true,
+            Some(v) => {
+                let tv = &tenants[v];
+                (t.priority, std::cmp::Reverse(t.share)) < (tv.priority, std::cmp::Reverse(tv.share))
+            }
+        };
+        if better {
+            victim = Some(j);
+        }
+    }
+    let Some(j) = victim else { return };
+    let q = quantum.min(tenants[j].share - tenants[j].floor) / PAGE_SIZE * PAGE_SIZE;
+    if q == 0 {
+        return;
+    }
+    {
+        let t = &mut tenants[j];
+        t.share -= q;
+        t.machine.set_fast_capacity(t.share);
+        t.preemptions_suffered += 1;
+        let used = t.machine.used_bytes(Tier::Fast);
+        if used > t.share {
+            // Pages already queued for demotion count against the
+            // shortfall: a victim preempted twice before its own clock
+            // advances (its demote lane only drains on its own exec)
+            // must not have the same pages demoted twice over.
+            let mut overage = (used - t.share)
+                .div_ceil(PAGE_SIZE)
+                .saturating_sub(t.machine.pending_out_pages());
+            let mut resident = t.machine.fast_resident();
+            resident.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+            for (oid, pages) in resident {
+                if overage == 0 {
+                    break;
+                }
+                // Discount pages of this object already queued for
+                // demotion (e.g. by the victim's own policy): a second
+                // request for them would drain as a no-op and the
+                // intended shortfall would never be covered.
+                let movable = pages.saturating_sub(t.machine.pending_out_pages_for(oid));
+                if movable == 0 {
+                    continue;
+                }
+                let take = movable.min(overage);
+                t.machine.request_demote(oid, take);
+                t.pages_force_demoted += take;
+                overage -= take;
+            }
+        }
+        let share = t.share;
+        t.policy.fast_share_changed(share, &t.machine);
+    }
+    {
+        let t = &mut tenants[i];
+        t.share += q;
+        t.machine.set_fast_capacity(t.share);
+        t.preemptions_won += 1;
+        let share = t.share;
+        t.policy.fast_share_changed(share, &t.machine);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::PolicyKind;
+    use crate::api::workload::shared_workload;
+    use crate::dnn::zoo::Model;
+
+    fn tenant<'a>(
+        w: &'a crate::api::Workload,
+        compiled: &'a CompiledTrace,
+        kind: PolicyKind,
+        share: u64,
+        priority: u32,
+        steps: u32,
+    ) -> ClusterTenant<'a> {
+        let spec = kind.machine_spec(&w.graph, &w.trace, share);
+        ClusterTenant {
+            graph: &w.graph,
+            compiled,
+            policy: kind.construct(&w.graph, &w.trace, spec),
+            config: kind.engine_config(steps),
+            machine: Machine::new(spec),
+            priority,
+            share,
+        }
+    }
+
+    #[test]
+    fn arbitration_names_round_trip() {
+        for arb in Arbitration::all() {
+            let parsed: Arbitration = arb.name().parse().unwrap();
+            assert_eq!(parsed, arb);
+        }
+        assert!("bogus".parse::<Arbitration>().is_err());
+    }
+
+    #[test]
+    fn empty_cluster_is_fine() {
+        assert!(run_cluster(Vec::new(), Arbitration::StaticPartition).is_empty());
+    }
+
+    #[test]
+    fn two_static_tenants_complete_within_their_shares() {
+        let w = shared_workload(Model::Dcgan, 5);
+        let kind = PolicyKind::Lru;
+        let cfg = kind.engine_config(4);
+        let spec = kind.machine_spec(&w.graph, &w.trace, 1);
+        let compiled = CompiledTrace::compile(
+            &w.graph,
+            &w.trace,
+            spec.compute_gflops,
+            cfg.profiling_fault_ns,
+        );
+        let share = Model::Dcgan.peak_memory_target() / 10;
+        let tenants = vec![
+            tenant(&w, &compiled, kind, share, 0, 4),
+            tenant(&w, &compiled, kind, share, 0, 4),
+        ];
+        let results = run_cluster(tenants, Arbitration::StaticPartition);
+        assert_eq!(results.len(), 2);
+        for r in &results {
+            assert_eq!(r.result.steps.len(), 4);
+            assert_eq!(r.share_initial, r.share_final);
+            assert!(
+                r.result.peak_fast_bytes <= r.share_initial,
+                "peak {} exceeds share {}",
+                r.result.peak_fast_bytes,
+                r.share_initial
+            );
+            assert_eq!(r.fast_occupancy_per_step.len(), 4);
+            for &occ in &r.fast_occupancy_per_step {
+                assert!(occ <= r.share_initial);
+            }
+        }
+        // Identical tenants on identical shares behave identically.
+        assert_eq!(
+            results[0].result.total_time_ns.to_bits(),
+            results[1].result.total_time_ns.to_bits()
+        );
+    }
+
+    #[test]
+    fn priority_preemption_conserves_total_share() {
+        let w = shared_workload(Model::Dcgan, 5);
+        let kind = PolicyKind::StaticInterval(4);
+        let cfg = kind.engine_config(6);
+        let total = Model::Dcgan.peak_memory_target() / 8;
+        let spec = kind.machine_spec(&w.graph, &w.trace, total / 2);
+        let compiled = CompiledTrace::compile(
+            &w.graph,
+            &w.trace,
+            spec.compute_gflops,
+            cfg.profiling_fault_ns,
+        );
+        let tenants = vec![
+            tenant(&w, &compiled, kind, total / 2, 1, 6),
+            tenant(&w, &compiled, kind, total / 2, 0, 6),
+        ];
+        let results = run_cluster(tenants, Arbitration::Priority);
+        let share_sum: u64 = results.iter().map(|r| r.share_final).sum();
+        assert!(share_sum <= total, "shares grew: {share_sum} > {total}");
+        let won: u64 = results.iter().map(|r| r.preemptions_won).sum();
+        let lost: u64 = results.iter().map(|r| r.preemptions_suffered).sum();
+        assert_eq!(won, lost, "every preemption has one winner and one victim");
+        // The low-priority tenant can never end above its initial share.
+        assert!(results[1].share_final <= results[1].share_initial);
+    }
+}

@@ -55,6 +55,13 @@ pub trait Policy {
 
     /// Called when a step ends.
     fn step_end(&mut self, _step: u32, _m: &mut Machine, _g: &ModelGraph) {}
+
+    /// Called when a co-scheduling arbiter resizes the fast-memory share
+    /// this policy's machine runs against (multi-tenant clusters only —
+    /// the solo engine never calls it). `new_fast_bytes` is the machine's
+    /// new fast capacity. The default ignores the event: most policies
+    /// read capacity live off the machine and adapt on their own.
+    fn fast_share_changed(&mut self, _new_fast_bytes: u64, _m: &Machine) {}
 }
 
 /// Engine knobs.
@@ -166,6 +173,12 @@ impl Engine {
     /// Replay an already-compiled trace. Callers replaying the same
     /// workload on identically-configured machines (benches, sweeps at
     /// fixed machine spec) can compile once and amortize further.
+    ///
+    /// KEEP IN SYNC: the multi-tenant driver
+    /// (`sim/cluster.rs::ActiveTenant`) carries a layer-resumable copy
+    /// of this prologue and per-step bookkeeping; any change to either
+    /// must land in both (N=1 bit-identity is pinned by
+    /// `rust/tests/cluster_tenancy.rs`).
     pub fn run_compiled(
         &self,
         graph: &ModelGraph,
@@ -180,7 +193,6 @@ impl Engine {
             machine.alloc(oid, pages, pref);
         }
 
-        let objects = &graph.objects[..];
         let mut steps = Vec::with_capacity(self.config.steps as usize);
         for step in 0..self.config.steps {
             let profiling = step < self.config.profiling_steps;
@@ -189,39 +201,7 @@ impl Engine {
             let out0 = machine.stats.pages_out;
             policy.step_start(step, machine, graph);
             for lt in &compiled.layers {
-                policy.layer_start(lt.layer, machine, graph);
-                let mut mem_ns = 0.0;
-                for op in compiled.layer_ops(lt) {
-                    match *op {
-                        CompiledOp::Alloc { obj, pages } => {
-                            let pref = policy.place(&objects[obj.index()], machine);
-                            machine.alloc(obj, pages, pref);
-                        }
-                        CompiledOp::Access { obj, bytes, count, fault_ns } => {
-                            let mut dt = machine.access_time_ns(obj, bytes, count);
-                            if profiling {
-                                // The precompiled poison → fault → flush
-                                // cost of §3.1 (see CompiledTrace).
-                                dt += fault_ns;
-                            }
-                            machine.exec(dt);
-                            mem_ns += dt;
-                            policy.after_access(&objects[obj.index()], machine);
-                        }
-                        CompiledOp::Free { obj } => {
-                            machine.free(obj);
-                            policy.after_free(&objects[obj.index()], machine);
-                        }
-                    }
-                }
-                // Roofline: top up to the layer's compute time.
-                if lt.compute_ns > mem_ns {
-                    machine.exec(lt.compute_ns - mem_ns);
-                }
-                let stall = policy.layer_end(lt.layer, machine, graph);
-                if stall > 0.0 {
-                    machine.exec(stall);
-                }
+                replay_layer(compiled, lt, graph, machine, policy, profiling);
             }
             policy.step_end(step, machine, graph);
             steps.push(StepStats {
@@ -338,6 +318,57 @@ impl Engine {
             alloc_spills: machine.stats.alloc_spills,
             steps,
         }
+    }
+}
+
+/// Replay one compiled layer: policy callbacks, the op stream, the
+/// compute-time roofline top-up, and any policy-requested stall.
+///
+/// This is the one copy of the per-layer replay semantics — shared
+/// verbatim by [`Engine::run_compiled`] and the multi-tenant driver in
+/// [`crate::sim::cluster`], which is what makes an N=1 cluster replay
+/// bit-identical to the solo engine (`rust/tests/cluster_tenancy.rs`).
+pub fn replay_layer(
+    compiled: &CompiledTrace,
+    lt: &crate::sim::replay::CompiledLayer,
+    graph: &ModelGraph,
+    machine: &mut Machine,
+    policy: &mut dyn Policy,
+    profiling: bool,
+) {
+    let objects = &graph.objects[..];
+    policy.layer_start(lt.layer, machine, graph);
+    let mut mem_ns = 0.0;
+    for op in compiled.layer_ops(lt) {
+        match *op {
+            CompiledOp::Alloc { obj, pages } => {
+                let pref = policy.place(&objects[obj.index()], machine);
+                machine.alloc(obj, pages, pref);
+            }
+            CompiledOp::Access { obj, bytes, count, fault_ns } => {
+                let mut dt = machine.access_time_ns(obj, bytes, count);
+                if profiling {
+                    // The precompiled poison → fault → flush
+                    // cost of §3.1 (see CompiledTrace).
+                    dt += fault_ns;
+                }
+                machine.exec(dt);
+                mem_ns += dt;
+                policy.after_access(&objects[obj.index()], machine);
+            }
+            CompiledOp::Free { obj } => {
+                machine.free(obj);
+                policy.after_free(&objects[obj.index()], machine);
+            }
+        }
+    }
+    // Roofline: top up to the layer's compute time.
+    if lt.compute_ns > mem_ns {
+        machine.exec(lt.compute_ns - mem_ns);
+    }
+    let stall = policy.layer_end(lt.layer, machine, graph);
+    if stall > 0.0 {
+        machine.exec(stall);
     }
 }
 

@@ -118,6 +118,30 @@ impl Machine {
         self.spec.fast.capacity_bytes.saturating_sub(self.used_fast)
     }
 
+    /// Resize the fast tier's capacity mid-run (multi-tenant
+    /// arbitration: a tenant's share grew or shrank). Only the capacity
+    /// moves — the cached timing parameters (`ns_per_page`, the inverse
+    /// bandwidths) are untouched, and capacity is read live by `alloc`
+    /// / the lanes, so no other state needs refreshing. Shrinking below
+    /// current usage is legal: resident pages stay where they are until
+    /// demoted, new fast allocations spill, and promotions stall.
+    pub fn set_fast_capacity(&mut self, bytes: u64) {
+        self.spec.fast.capacity_bytes = bytes;
+    }
+
+    /// Objects currently holding pages in fast memory, as
+    /// `(id, pages_fast)` in ascending id order. O(objects); used by the
+    /// cluster arbiter to pick forced-demotion victims when a tenant's
+    /// share shrinks below its usage.
+    pub fn fast_resident(&self) -> Vec<(ObjectId, u64)> {
+        self.res
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.alive && r.pages_fast > 0)
+            .map(|(i, r)| (ObjectId(i as u32), r.pages_fast))
+            .collect()
+    }
+
     /// Residency of an object (zeroed default if never allocated).
     pub fn residency(&self, obj: ObjectId) -> Residency {
         self.res.get(obj.index()).copied().unwrap_or_default()
@@ -235,6 +259,11 @@ impl Machine {
     /// Pages queued for demotion (fast→slow) not yet moved.
     pub fn pending_out_pages(&self) -> u64 {
         self.lane_out.pending_pages()
+    }
+
+    /// Pages of one object queued for demotion and not yet moved.
+    pub fn pending_out_pages_for(&self, obj: ObjectId) -> u64 {
+        self.lane_out.pending_pages_for(obj)
     }
 
     /// Did the promotion lane stall on fast-memory capacity during the
@@ -588,6 +617,23 @@ mod tests {
         m.exec(123.0);
         m.exec(77.0);
         assert!((m.now_ns() - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shrinking_fast_capacity_spills_and_keeps_residents() {
+        let mut m = Machine::new(MachineSpec::paper_testbed(8 * PAGE_SIZE));
+        m.alloc(ObjectId(0), 6, Tier::Fast);
+        m.set_fast_capacity(4 * PAGE_SIZE);
+        // Resident pages stay put; new fast allocations spill.
+        assert_eq!(m.residency(ObjectId(0)).pages_fast, 6);
+        assert_eq!(m.alloc(ObjectId(1), 1, Tier::Fast), Tier::Slow);
+        assert_eq!(m.stats.alloc_spills, 1);
+        assert_eq!(m.fast_resident(), vec![(ObjectId(0), 6)]);
+        // Demotion drains usage back under the new cap.
+        m.request_demote(ObjectId(0), 6);
+        m.exec(100.0 * m.ns_per_page());
+        assert_eq!(m.used_bytes(Tier::Fast), 0);
+        assert!(m.fast_resident().is_empty());
     }
 
     #[test]

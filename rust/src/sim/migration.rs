@@ -104,6 +104,16 @@ impl Lane {
         self.pending_pages
     }
 
+    /// Pages still queued for one object (O(queue); used by the cluster
+    /// arbiter to avoid re-requesting moves that are already pending).
+    pub fn pending_pages_for(&self, obj: ObjectId) -> u64 {
+        self.queue
+            .iter()
+            .filter(|r| r.obj == obj)
+            .map(|r| r.pages)
+            .sum()
+    }
+
     /// Drop the whole queue (the Case-3 "leave data in slow memory" arm).
     /// Returns the number of pages cancelled.
     pub fn clear(&mut self) -> u64 {

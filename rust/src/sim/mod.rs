@@ -15,12 +15,14 @@
 //! Time is in **nanoseconds**; bandwidth in **GB/s**, which conveniently
 //! equals **bytes/ns** (1 GB/s = 1e9 B / 1e9 ns).
 
+pub mod cluster;
 pub mod device;
 pub mod engine;
 pub mod machine;
 pub mod migration;
 pub mod replay;
 
+pub use cluster::{run_cluster, Arbitration, ClusterTenant, TenantRunResult};
 pub use device::{DeviceSpec, MachineSpec, Tier};
 pub use engine::{Engine, EngineConfig, Policy, StepStats, TrainResult};
 pub use machine::{Machine, Residency};

@@ -1,0 +1,198 @@
+//! Tenancy invariants for the multi-tenant co-scheduling subsystem.
+//!
+//! * **N=1 anchor**: a single-tenant cluster replay is *bit-identical*
+//!   to the solo `Engine::run` path (same spec construction, same
+//!   compiled trace, same per-layer replay function), for every managed
+//!   policy family.
+//! * **Share containment**: under the static-partition arbitration, a
+//!   tenant's fast-memory occupancy never exceeds its arbitrated share
+//!   — checked as a property over random tenant mixes.
+//! * **Arbitration sanity**: all three policies run 2+ tenants to
+//!   completion, conserve total share, and report valid JSON with
+//!   per-tenant slowdown-vs-solo.
+
+use sentinel_hm::api::{
+    json, Arbitration, ClusterSpec, PolicyKind, RunSpec, TenantSpec,
+};
+use sentinel_hm::dnn::zoo::Model;
+use sentinel_hm::sim::TrainResult;
+use sentinel_hm::util::prop::check;
+
+/// Exact (bit-level for floats) equality of two results.
+fn assert_bit_identical(a: &TrainResult, b: &TrainResult, ctx: &str) {
+    assert_eq!(a.policy, b.policy, "{ctx}: policy");
+    assert_eq!(a.model, b.model, "{ctx}: model");
+    assert_eq!(
+        a.total_time_ns.to_bits(),
+        b.total_time_ns.to_bits(),
+        "{ctx}: total_time_ns {} vs {}",
+        a.total_time_ns,
+        b.total_time_ns
+    );
+    assert_eq!(a.peak_fast_bytes, b.peak_fast_bytes, "{ctx}: peak_fast_bytes");
+    assert_eq!(a.peak_total_bytes, b.peak_total_bytes, "{ctx}: peak_total_bytes");
+    assert_eq!(a.pages_migrated_in, b.pages_migrated_in, "{ctx}: pages_in");
+    assert_eq!(a.pages_migrated_out, b.pages_migrated_out, "{ctx}: pages_out");
+    assert_eq!(a.alloc_spills, b.alloc_spills, "{ctx}: alloc_spills");
+    assert_eq!(a.steps.len(), b.steps.len(), "{ctx}: step count");
+    for (sa, sb) in a.steps.iter().zip(&b.steps) {
+        assert_eq!(
+            sa.time_ns.to_bits(),
+            sb.time_ns.to_bits(),
+            "{ctx}: step {} time {} vs {}",
+            sa.step,
+            sa.time_ns,
+            sb.time_ns
+        );
+        assert_eq!(sa.pages_in, sb.pages_in, "{ctx}: step {} pages_in", sa.step);
+        assert_eq!(sa.pages_out, sb.pages_out, "{ctx}: step {} pages_out", sa.step);
+    }
+}
+
+#[test]
+fn single_tenant_cluster_is_bit_identical_to_solo_engine() {
+    let fast = Model::Dcgan.peak_memory_target() / 5;
+    for kind in [
+        PolicyKind::Sentinel(Default::default()),
+        PolicyKind::StaticInterval(6),
+        PolicyKind::Ial,
+        PolicyKind::Lru,
+    ] {
+        let solo = RunSpec::for_model(Model::Dcgan)
+            .policy(kind)
+            .steps(12)
+            .fast_bytes(fast)
+            .run()
+            .unwrap();
+        let cluster = ClusterSpec::new()
+            .tenant(TenantSpec::for_model(Model::Dcgan).policy(kind))
+            .fast_bytes(fast)
+            .steps(12)
+            .run()
+            .unwrap();
+        assert_eq!(cluster.tenants.len(), 1);
+        let t = &cluster.tenants[0];
+        let ctx = format!("N=1 cluster vs solo / {}", kind.name());
+        assert_bit_identical(&solo.result, &t.result, &ctx);
+        // The solo baseline inside the cluster is the same configuration,
+        // so the reported slowdown is exactly 1.
+        assert!(
+            (t.slowdown_vs_solo - 1.0).abs() < 1e-12,
+            "{ctx}: slowdown {}",
+            t.slowdown_vs_solo
+        );
+        assert_eq!(t.contention_migrations, 0, "{ctx}: contention migrations");
+        assert_eq!(t.warmup_steps, solo.warmup_steps, "{ctx}: warmup");
+    }
+}
+
+#[test]
+fn all_three_arbitrations_run_two_tenants_to_completion() {
+    for arb in Arbitration::all() {
+        let out = ClusterSpec::new()
+            .tenant(TenantSpec::for_model(Model::Dcgan).priority(1))
+            .tenant(
+                TenantSpec::for_model(Model::ResNetV1 { depth: 32 })
+                    .policy(PolicyKind::StaticInterval(8)),
+            )
+            .arbitration(arb)
+            .fast_pct(20)
+            .steps(10)
+            .run()
+            .unwrap();
+        assert_eq!(out.tenants.len(), 2, "{arb}");
+        let share_sum: u64 = out.tenants.iter().map(|t| t.share_final).sum();
+        assert!(
+            share_sum <= out.fast_bytes_total,
+            "{arb}: shares {share_sum} exceed the machine's {}",
+            out.fast_bytes_total
+        );
+        for t in &out.tenants {
+            assert_eq!(t.result.steps.len(), 10, "{arb}/{}", t.model);
+            assert_eq!(t.fast_occupancy_per_step.len(), 10, "{arb}/{}", t.model);
+            // No tenant's capacity ever exceeds the whole machine, so
+            // neither can its occupancy.
+            assert!(t.result.peak_fast_bytes <= out.fast_bytes_total);
+            assert!(t.solo_throughput > 0.0, "{arb}/{}: solo baseline ran", t.model);
+        }
+        let won: u64 = out.tenants.iter().map(|t| t.preemptions_won).sum();
+        let lost: u64 = out.tenants.iter().map(|t| t.preemptions_suffered).sum();
+        assert_eq!(won, lost, "{arb}: preemption bookkeeping");
+        if arb != Arbitration::Priority {
+            assert_eq!(won, 0, "{arb}: only the priority arbiter preempts");
+            for t in &out.tenants {
+                assert_eq!(t.share_initial, t.share_final, "{arb}: fixed shares");
+            }
+        }
+        let j = out.to_json();
+        assert!(json::is_valid(&j), "{arb}: {j}");
+        assert!(j.contains("\"slowdown_vs_solo\""), "{arb}");
+        assert!(j.contains("\"fast_occupancy_per_step\""), "{arb}");
+    }
+}
+
+#[test]
+fn static_partition_occupancy_never_exceeds_share_property() {
+    check("per-tenant fast occupancy ≤ static share", 10, |g| {
+        let n = g.range(2, 4) as usize;
+        let steps = g.range(3, 6) as u32;
+        let pct = g.range(10, 40) as u32;
+        let mut cs = ClusterSpec::new().fast_pct(pct).steps(steps);
+        for i in 0..n {
+            let kind = match g.range(0, 2) {
+                0 => PolicyKind::Lru,
+                1 => PolicyKind::StaticInterval(g.range(2, 8) as u32),
+                _ => PolicyKind::Ial,
+            };
+            cs = cs.tenant(
+                TenantSpec::for_model(Model::Dcgan)
+                    .policy(kind)
+                    .priority(i as u32),
+            );
+        }
+        let out = cs.run().unwrap();
+        assert_eq!(out.tenants.len(), n);
+        for t in &out.tenants {
+            assert_eq!(
+                t.share_initial, t.share_final,
+                "static shares never move"
+            );
+            assert!(
+                t.result.peak_fast_bytes <= t.share_initial,
+                "{}: peak fast {} exceeds share {}",
+                t.model,
+                t.result.peak_fast_bytes,
+                t.share_initial
+            );
+            for &occ in &t.fast_occupancy_per_step {
+                assert!(
+                    occ <= t.share_initial,
+                    "{}: occupancy {occ} exceeds share {}",
+                    t.model,
+                    t.share_initial
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn priority_arbitration_moves_share_toward_higher_priority() {
+    // Tight fast memory so the high-priority tenant feels pressure.
+    let out = ClusterSpec::new()
+        .tenant(TenantSpec::for_model(Model::Dcgan).priority(2))
+        .tenant(TenantSpec::for_model(Model::Dcgan).priority(0))
+        .arbitration(Arbitration::Priority)
+        .fast_pct(10)
+        .steps(8)
+        .run()
+        .unwrap();
+    let hi = &out.tenants[0];
+    let lo = &out.tenants[1];
+    // Share can only flow low → high, never the other way.
+    assert!(hi.share_final >= hi.share_initial, "high-priority share shrank");
+    assert!(lo.share_final <= lo.share_initial, "low-priority share grew");
+    assert_eq!(hi.preemptions_suffered, 0, "nothing outranks priority 2");
+    assert_eq!(lo.preemptions_won, 0, "priority 0 cannot preempt");
+    assert_eq!(hi.preemptions_won, lo.preemptions_suffered);
+}

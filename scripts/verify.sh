@@ -15,6 +15,13 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
+# Docs must stay warning-free (broken intra-doc links, missing docs on
+# the api surface, malformed HTML in doc comments all fail here) — the
+# companion of ARCHITECTURE.md's documentation invariants.
+export RUSTDOCFLAGS="${RUSTDOCFLAGS:--Dwarnings}"
+echo "== cargo doc --no-deps (RUSTDOCFLAGS=$RUSTDOCFLAGS) =="
+cargo doc --no-deps
+
 if cargo fmt --version >/dev/null 2>&1; then
   echo "== cargo fmt --check =="
   cargo fmt --check || echo "warning: rustfmt differences (non-fatal)"
