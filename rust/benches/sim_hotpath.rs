@@ -41,16 +41,21 @@ fn main() {
     let trace_compile_ns = t.median_ns as f64;
 
     // --- engine replay rate (events/s, ns/step) ----------------------
-    // Compiled fast path (what Engine::run does) vs the legacy
-    // event-by-event reference loop, same machine/policy/workload.
+    // Tier 2 (compiled live loop) vs tier 1 (the legacy event-by-event
+    // reference loop), same machine/policy/workload. Sealing is
+    // disabled here on purpose: a static policy seals after two steps,
+    // which would quietly turn this into a tier-3 measurement — the
+    // sealed tier is measured separately below.
     let steps = 10u32;
+    let mut compiled_cfg = fast_only.engine_config(steps);
+    compiled_cfg.seal_steady = false;
     let t = time_it(5, || {
         let mut m = Machine::new(MachineSpec::fast_only());
         let mut p = fast_only.construct(&g, &trace, MachineSpec::fast_only());
-        let e = Engine::new(fast_only.engine_config(steps));
+        let e = Engine::new(compiled_cfg);
         e.run(&g, &trace, &mut m, p.as_mut())
     });
-    t.report("engine replay (10 steps, compiled, static policy)");
+    t.report("engine replay (10 steps, compiled live loop, static policy)");
     let engine_ns_per_step = t.median_ns as f64 / steps as f64;
     let events_per_s = (n_events as f64 * steps as f64) / (t.median_ns as f64 / 1e9);
     println!(
@@ -70,6 +75,85 @@ fn main() {
         "  → {:.1} M events/s | compiled speedup {:.2}×",
         events_per_s_legacy / 1e6,
         events_per_s / events_per_s_legacy
+    );
+
+    // --- tier 3: sealed steady-state replay ---------------------------
+    // A 100-step Sentinel run at the paper's headline 20%-of-peak fast
+    // size: the live compiled loop pays O(events) per step forever; the
+    // sealed path records two converged steps, seals a CompiledSchedule,
+    // and replays the remainder at O(1) per step with zero policy
+    // dispatch. Policy construction (profile + plan build) is timed
+    // separately and subtracted, so the reported ratio compares the
+    // replay loops themselves.
+    let sealed_steps_total = 100u32;
+    let sentinel = PolicyKind::Sentinel(Default::default());
+    let fast20 = RN32.peak_memory_target() / 5;
+    let sealed_spec = sentinel.machine_spec(&g, &trace, fast20);
+    let sealed_cfg = sentinel.engine_config(sealed_steps_total);
+    let mut live_cfg = sealed_cfg;
+    live_cfg.seal_steady = false;
+    let sealed_compiled = CompiledTrace::compile(
+        &g,
+        &trace,
+        sealed_spec.compute_gflops,
+        sealed_cfg.profiling_fault_ns,
+    );
+    let t = time_it(3, || sentinel.construct(&g, &trace, sealed_spec));
+    let construct_ns = t.median_ns as f64;
+    t.report("sentinel policy construction (profile + plan)");
+    let t = time_it(5, || {
+        let mut m = Machine::new(sealed_spec);
+        let mut p = sentinel.construct(&g, &trace, sealed_spec);
+        Engine::new(sealed_cfg).run_compiled(&g, &sealed_compiled, &mut m, p.as_mut())
+    });
+    t.report("engine replay (100 steps, sentinel, sealed schedule)");
+    let sealed_run_ns = t.median_ns as f64 - construct_ns;
+    let t = time_it(5, || {
+        let mut m = Machine::new(sealed_spec);
+        let mut p = sentinel.construct(&g, &trace, sealed_spec);
+        Engine::new(live_cfg).run_compiled(&g, &sealed_compiled, &mut m, p.as_mut())
+    });
+    t.report("engine replay (100 steps, sentinel, live compiled loop)");
+    let live_run_ns = t.median_ns as f64 - construct_ns;
+    let probe = {
+        let mut m = Machine::new(sealed_spec);
+        let mut p = sentinel.construct(&g, &trace, sealed_spec);
+        Engine::new(sealed_cfg).run_compiled(&g, &sealed_compiled, &mut m, p.as_mut())
+    };
+    // The construct median comes from separate runs: if it lands above
+    // a timed median (possible on a noisy machine), the subtraction is
+    // meaningless — report 0.0 (which bench_check treats as "absent")
+    // and say so loudly rather than fabricating a speedup.
+    let measurement_valid = sealed_run_ns > 0.0 && live_run_ns > 0.0;
+    let (sealed_speedup_vs_compiled, events_per_s_sealed_equiv, sealed_steps_per_s) =
+        if measurement_valid {
+            (
+                live_run_ns / sealed_run_ns,
+                (n_events as f64 * sealed_steps_total as f64) / (sealed_run_ns / 1e9),
+                sealed_steps_total as f64 / (sealed_run_ns / 1e9),
+            )
+        } else {
+            (0.0, 0.0, 0.0)
+        };
+    if measurement_valid {
+        println!(
+            "  → sealed from step {:?}: {} of {sealed_steps_total} steps as deltas | \
+             {:.1} M equiv events/s | sealed/compiled speedup {sealed_speedup_vs_compiled:.2}× \
+             (target ≥ 5×)",
+            probe.steady_from_step,
+            probe.sealed_steps,
+            events_per_s_sealed_equiv / 1e6,
+        );
+    } else {
+        println!(
+            "  → WARNING: policy-construction time dominated the run timings \
+             (construct {construct_ns:.0} ns ≥ run median); sealed-tier rates \
+             reported as 0.0 — rerun on a quieter machine"
+        );
+    }
+    println!(
+        "  → CompiledOp is {} bytes (packed; enum layout was 32)",
+        std::mem::size_of::<sentinel_hm::sim::CompiledOp>()
     );
 
     // --- full Sentinel run through the API ---------------------------
@@ -135,6 +219,11 @@ fn main() {
         .field_f64("engine_events_per_s", events_per_s)
         .field_f64("engine_events_per_s_legacy", events_per_s_legacy)
         .field_f64("engine_speedup_vs_legacy", events_per_s / events_per_s_legacy)
+        .field_f64("engine_events_per_s_sealed_equiv", events_per_s_sealed_equiv)
+        .field_f64("sealed_steps_per_s", sealed_steps_per_s)
+        .field_f64("sealed_speedup_vs_compiled", sealed_speedup_vs_compiled)
+        .field_u64("sealed_steps_of_100", probe.sealed_steps as u64)
+        .field_u64("compiled_op_bytes", std::mem::size_of::<sentinel_hm::sim::CompiledOp>() as u64)
         .field_f64("trace_compile_ns", trace_compile_ns)
         .field_f64("sentinel_e2e_ns_per_step", sentinel_ns_per_step)
         .field_f64("lane_pages_per_s", lane_pages_per_s)

@@ -494,6 +494,8 @@ impl ClusterSpec {
                     preemptions_won: res.preemptions_won,
                     preemptions_suffered: res.preemptions_suffered,
                     pages_force_demoted: res.pages_force_demoted,
+                    seal_invalidations: res.seal_invalidations,
+                    seal_segments: res.seal_segments,
                     fast_occupancy_per_step: res.fast_occupancy_per_step,
                     cases,
                     chosen_mi,
@@ -608,6 +610,13 @@ pub struct TenantOutcome {
     pub preemptions_suffered: u64,
     /// Pages the arbiter force-demoted out of this tenant's share.
     pub pages_force_demoted: u64,
+    /// Times an arbitration event invalidated this tenant's *sealed*
+    /// steady-state schedule (`sim/schedule.rs`), forcing it back onto
+    /// the live replay loop.
+    pub seal_invalidations: u64,
+    /// Times this tenant sealed a steady-state schedule (≥ 2 means it
+    /// re-sealed after an invalidation).
+    pub seal_segments: u64,
     /// Fast-memory bytes in use at the end of every step.
     pub fast_occupancy_per_step: Vec<u64>,
     /// End-of-interval migration-case counts (Sentinel-family tenants).
@@ -662,6 +671,9 @@ impl TenantOutcome {
             .field_u64("preemptions_won", self.preemptions_won)
             .field_u64("preemptions_suffered", self.preemptions_suffered)
             .field_u64("pages_force_demoted", self.pages_force_demoted)
+            .field_u64("sealed_steps", self.result.sealed_steps as u64)
+            .field_u64("seal_invalidations", self.seal_invalidations)
+            .field_u64("seal_segments", self.seal_segments)
             .field_u64("peak_fast_bytes", self.result.peak_fast_bytes)
             .field_u64("alloc_spills", self.result.alloc_spills)
             .field_raw("chosen_mi", &chosen_mi)

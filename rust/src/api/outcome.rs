@@ -37,6 +37,14 @@ pub struct RunOutcome {
     /// steps for Sentinel-family policies ("p, m & t" of Table 3), a
     /// fixed policy-specific count otherwise.
     pub warmup_steps: u32,
+    /// First step the engine replayed from a sealed steady-state
+    /// schedule (`sim/schedule.rs`); `None` when the run never sealed
+    /// (policy never declared steadiness, or steps never proved
+    /// bit-repeatable).
+    pub steady_from_step: Option<u32>,
+    /// Steps replayed as sealed deltas — O(1) per step, zero policy
+    /// dispatch — rather than through the live loop.
+    pub sealed_steps: u32,
     /// End-of-interval migration-case counts (Sentinel-family only).
     pub cases: Option<CaseCounts>,
     /// Migration interval the online search settled on.
@@ -85,6 +93,10 @@ impl RunOutcome {
             Some(mi) => mi.to_string(),
             None => "null".into(),
         };
+        let steady_from = match self.steady_from_step {
+            Some(s) => s.to_string(),
+            None => "null".into(),
+        };
         let profile = match &self.profile {
             Some(p) => Obj::new()
                 .field_u64("n_objects", p.n_objects)
@@ -100,6 +112,8 @@ impl RunOutcome {
             .field_u64("steps", self.steps as u64)
             .field_u64("fast_bytes", self.fast_bytes)
             .field_u64("warmup_steps", self.warmup_steps as u64)
+            .field_raw("steady_from_step", &steady_from)
+            .field_u64("sealed_steps", self.sealed_steps as u64)
             .field_f64("throughput_steps_per_s", self.throughput())
             .field_f64("mean_step_ns", self.mean_step_ns())
             .field_f64("total_time_ns", self.result.total_time_ns)

@@ -307,6 +307,8 @@ impl RunSpec {
             // it would misstate the normalization baseline.
             fast_bytes: spec.fast.capacity_bytes,
             warmup_steps: warmup,
+            steady_from_step: result.steady_from_step,
+            sealed_steps: result.sealed_steps,
             cases,
             chosen_mi,
             profile,

@@ -41,9 +41,12 @@ impl Workload {
 /// Hit/miss counters for the shared cache (observability + tests).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct WorkloadCacheStats {
-    /// Requests served from an already-built workload.
+    /// Requests served from an already-built workload — including
+    /// racing first requests that blocked on another thread's build.
     pub hits: u64,
-    /// Requests that built (or waited on the first build of) a workload.
+    /// Requests that performed a build: exactly one per distinct key,
+    /// even under contention, so this doubles as the build counter the
+    /// contention tests (`rust/tests/workload_cache.rs`) assert on.
     pub misses: u64,
 }
 

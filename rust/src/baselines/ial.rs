@@ -218,6 +218,15 @@ impl Policy for IalPolicy {
         }
         0.0
     }
+
+    /// Never steady: the 5-second epoch timer runs on the wall clock,
+    /// not the step counter, so an epoch can fire at a different layer
+    /// of every step — two adjacent steps matching bit-for-bit proves
+    /// nothing about when the *next* epoch lands. IAL therefore stays
+    /// on the live loop for the whole run; correctness over speed.
+    fn is_steady(&self, _step: u32) -> bool {
+        false
+    }
 }
 
 #[cfg(test)]

@@ -96,6 +96,19 @@ impl Policy for LruPolicy {
     fn layer_end(&mut self, _layer: u32, _m: &mut Machine, _g: &ModelGraph) -> f64 {
         0.0
     }
+
+    /// Steady-state memoization opt-in: LRU's only internal state is
+    /// the recency *order* of live objects, and the tick values behind
+    /// it never feed a decision — `make_room` sorts victims, it never
+    /// thresholds. After any full step the order is `[objects untouched
+    /// since warm-up, frozen] ++ [objects the step touched, in trace
+    /// order]`, both of which are pure functions of the replayed trace,
+    /// so the order (hence every placement and eviction) cycles with
+    /// the step. The engine's fixed-point check on machine residency
+    /// supplies the remaining premise.
+    fn is_steady(&self, _step: u32) -> bool {
+        true
+    }
 }
 
 #[cfg(test)]

@@ -266,6 +266,13 @@ fn cmd_train(args: &[String]) -> Result<(), String> {
         out.result.pages_migrated_out,
         fmt_bytes(out.result.peak_fast_bytes),
     );
+    if let Some(s0) = out.steady_from_step {
+        println!(
+            "sealed schedule: {} of {} steps replayed as deltas from step {s0} \
+             (zero policy dispatch)",
+            out.sealed_steps, out.steps
+        );
+    }
     Ok(())
 }
 

@@ -26,6 +26,18 @@
 //! **bit-identical** to [`crate::sim::Engine::run`] — the anchor proven
 //! by `rust/tests/cluster_tenancy.rs`.
 //!
+//! Tenants also run the engine's steady-state sealing tier
+//! (`sim/schedule.rs`): once a tenant's post-warm-up steps prove
+//! bit-repeatable it replays whole steps as sealed deltas *between
+//! arbitration events*; any share resize (either side of a preemption)
+//! invalidates the seal and the tenant falls back to the live loop
+//! until it re-converges and re-seals. Under the fixed-share arbiters a
+//! tenant is never resized, so its sealed replay is exactly the solo
+//! engine's. Under [`Arbitration::Priority`] sealing coarsens a sealed
+//! tenant's interleaving from layer- to step-granularity — reshare
+//! events land at its step boundaries rather than mid-step, an explicit
+//! modeling trade documented with the tier itself.
+//!
 //! ## Modeling scope
 //!
 //! **Fast-memory capacity is the contended resource; nothing else is
@@ -47,6 +59,7 @@ use crate::sim::device::Tier;
 use crate::sim::engine::{replay_layer, EngineConfig, Policy, StepStats, TrainResult};
 use crate::sim::machine::Machine;
 use crate::sim::replay::CompiledTrace;
+use crate::sim::schedule::{Sealer, StepRecorder};
 use crate::PAGE_SIZE;
 
 /// How the cluster divides the physical fast tier among tenants.
@@ -150,6 +163,13 @@ pub struct TenantRunResult {
     pub preemptions_suffered: u64,
     /// Pages the arbiter force-demoted out of this tenant's fast share.
     pub pages_force_demoted: u64,
+    /// Times a *sealed* steady-state schedule was invalidated by an
+    /// arbitration event (share resize); candidates dropped before
+    /// sealing are not counted.
+    pub seal_invalidations: u64,
+    /// Times a steady-state schedule was sealed (≥ 2 proves the tenant
+    /// re-sealed after an invalidation).
+    pub seal_segments: u64,
 }
 
 /// Driver state for one tenant: a resumable layer-granular cursor over
@@ -174,7 +194,6 @@ struct ActiveTenant<'a> {
     floor: u64,
     step: u32,
     layer: usize,
-    t0: f64,
     in0: u64,
     out0: u64,
     /// Spill count at the last arbitration review (pressure detection).
@@ -189,6 +208,21 @@ struct ActiveTenant<'a> {
     preemptions_won: u64,
     preemptions_suffered: u64,
     pages_force_demoted: u64,
+    /// Steady-state sealing, exactly as the solo engine runs it: record
+    /// steps the policy declares steady, seal on two bit-identical
+    /// records, replay whole steps as deltas. Arbitration events
+    /// invalidate the seal (`invalidate_seal`), which is what keeps a
+    /// sealed tenant correct under the priority arbiter.
+    sealer: Sealer,
+    /// In-flight recording of the current step (spans layer advances).
+    rec: Option<StepRecorder>,
+    /// Counter baselines for the recorded step's deltas.
+    sp0: u64,
+    steady_from: Option<u32>,
+    sealed_steps: u32,
+    /// Sealed steps of the current segment, flushed to
+    /// `Policy::on_sealed_replay` at invalidation or finish.
+    sealed_in_segment: u32,
     done: bool,
 }
 
@@ -202,6 +236,7 @@ impl<'a> ActiveTenant<'a> {
             occupancy: Vec::with_capacity(t.config.steps as usize),
             graph: t.graph,
             compiled: t.compiled,
+            sealer: Sealer::new(t.config.seal_steady),
             policy: t.policy,
             config: t.config,
             machine: t.machine,
@@ -209,7 +244,6 @@ impl<'a> ActiveTenant<'a> {
             share: t.share,
             step: 0,
             layer: 0,
-            t0: 0.0,
             in0: 0,
             out0: 0,
             spills_seen: 0,
@@ -217,6 +251,11 @@ impl<'a> ActiveTenant<'a> {
             preemptions_won: 0,
             preemptions_suffered: 0,
             pages_force_demoted: 0,
+            rec: None,
+            sp0: 0,
+            steady_from: None,
+            sealed_steps: 0,
+            sealed_in_segment: 0,
             done,
         }
     }
@@ -233,13 +272,55 @@ impl<'a> ActiveTenant<'a> {
         }
     }
 
-    /// Replay the next layer. Returns `true` when this call completed a
-    /// training step (the arbitration review point).
+    /// Replay the next layer — or, when a sealed schedule is active,
+    /// one whole step as a delta. Returns `true` when this call
+    /// completed a training step (the arbitration review point).
     fn advance_layer(&mut self) -> bool {
         if self.layer == 0 {
-            self.t0 = self.machine.now_ns();
+            // Sealed fast path: the whole step is one delta. Sealed
+            // tenants always sit at a step boundary, so an arbitration
+            // event can only reach them between steps — the seal is
+            // invalidated there and the tenant resumes the live loop.
+            if let Some(s) = self.sealer.sealed() {
+                self.machine.apply_sealed_step(
+                    s.step_time_ns,
+                    s.pages_in,
+                    s.pages_out,
+                    s.alloc_spills,
+                );
+                if s.stalled_any {
+                    // The periodic step includes a promotion-lane
+                    // capacity stall: keep signaling pressure to the
+                    // arbiter exactly as the live step would.
+                    self.stalled_since_review = true;
+                }
+                self.steps_out.push(StepStats {
+                    step: self.step,
+                    time_ns: s.step_time_ns,
+                    pages_in: s.pages_in,
+                    pages_out: s.pages_out,
+                });
+                self.occupancy.push(self.machine.used_bytes(Tier::Fast));
+                if self.steady_from.is_none() {
+                    self.steady_from = Some(self.step);
+                }
+                self.sealed_steps += 1;
+                self.sealed_in_segment += 1;
+                self.step += 1;
+                if self.step >= self.config.steps {
+                    self.done = true;
+                }
+                return true;
+            }
+            self.machine.fold_step();
             self.in0 = self.machine.stats.pages_in;
             self.out0 = self.machine.stats.pages_out;
+            self.sp0 = self.machine.stats.alloc_spills;
+            let profiling = self.step < self.config.profiling_steps;
+            self.rec = (self.sealer.recording()
+                && !profiling
+                && self.policy.is_steady(self.step))
+            .then(|| StepRecorder::new(self.compiled.layers.len()));
             self.policy.step_start(self.step, &mut self.machine, self.graph);
         }
         let lt = self.compiled.layers[self.layer];
@@ -251,6 +332,7 @@ impl<'a> ActiveTenant<'a> {
             &mut self.machine,
             self.policy.as_mut(),
             profiling,
+            self.rec.as_mut(),
         );
         self.layer += 1;
         if self.machine.promote_stalled() {
@@ -261,13 +343,29 @@ impl<'a> ActiveTenant<'a> {
         }
         self.layer = 0;
         self.policy.step_end(self.step, &mut self.machine, self.graph);
+        let time_ns = self.machine.step_elapsed_ns();
+        let pages_in = self.machine.stats.pages_in - self.in0;
+        let pages_out = self.machine.stats.pages_out - self.out0;
         self.steps_out.push(StepStats {
             step: self.step,
-            time_ns: self.machine.now_ns() - self.t0,
-            pages_in: self.machine.stats.pages_in - self.in0,
-            pages_out: self.machine.stats.pages_out - self.out0,
+            time_ns,
+            pages_in,
+            pages_out,
         });
         self.occupancy.push(self.machine.used_bytes(Tier::Fast));
+        match self.rec.take() {
+            Some(r) => {
+                let record = r.finish(
+                    time_ns,
+                    pages_in,
+                    pages_out,
+                    self.machine.stats.alloc_spills - self.sp0,
+                    self.machine.steady_snapshot(),
+                );
+                self.sealer.offer(record);
+            }
+            None => self.sealer.observe_unsteady(),
+        }
         self.step += 1;
         if self.step >= self.config.steps {
             self.done = true;
@@ -275,7 +373,25 @@ impl<'a> ActiveTenant<'a> {
         true
     }
 
-    fn finish(self) -> TenantRunResult {
+    /// Arbitration touched this tenant (share resize, forced demotion):
+    /// the sealed schedule and any in-flight recording are stale. Flush
+    /// the finished sealed segment to the policy's metadata hook and
+    /// fall back to the live loop; the tenant re-seals once it proves
+    /// steady at its new share.
+    fn invalidate_seal(&mut self) {
+        if self.sealed_in_segment > 0 {
+            self.policy.on_sealed_replay(self.sealed_in_segment);
+            self.sealed_in_segment = 0;
+        }
+        self.sealer.invalidate();
+        self.rec = None;
+    }
+
+    fn finish(mut self) -> TenantRunResult {
+        if self.sealed_in_segment > 0 {
+            self.policy.on_sealed_replay(self.sealed_in_segment);
+            self.sealed_in_segment = 0;
+        }
         let result = TrainResult {
             policy: self.policy.name().to_string(),
             model: self.graph.name.clone(),
@@ -285,6 +401,8 @@ impl<'a> ActiveTenant<'a> {
             pages_migrated_in: self.machine.stats.pages_in,
             pages_migrated_out: self.machine.stats.pages_out,
             alloc_spills: self.machine.stats.alloc_spills,
+            steady_from_step: self.steady_from,
+            sealed_steps: self.sealed_steps,
             steps: self.steps_out,
         };
         TenantRunResult {
@@ -296,6 +414,8 @@ impl<'a> ActiveTenant<'a> {
             preemptions_won: self.preemptions_won,
             preemptions_suffered: self.preemptions_suffered,
             pages_force_demoted: self.pages_force_demoted,
+            seal_invalidations: self.sealer.invalidations,
+            seal_segments: self.sealer.seals,
         }
     }
 }
@@ -429,6 +549,10 @@ fn review_priority(tenants: &mut [ActiveTenant<'_>], i: usize, quantum: u64) {
         }
         let share = t.share;
         t.policy.fast_share_changed(share, &t.machine);
+        // The victim's steady state no longer exists at this share:
+        // drop the sealed schedule (and any half-built recording) and
+        // fall back to the live loop until it re-converges.
+        t.invalidate_seal();
     }
     {
         let t = &mut tenants[i];
@@ -437,6 +561,8 @@ fn review_priority(tenants: &mut [ActiveTenant<'_>], i: usize, quantum: u64) {
         t.preemptions_won += 1;
         let share = t.share;
         t.policy.fast_share_changed(share, &t.machine);
+        // The winner's capacity changed too — same invalidation rule.
+        t.invalidate_seal();
     }
 }
 

@@ -14,7 +14,8 @@ use crate::dnn::{ModelGraph, StepTrace, TraceEvent};
 use crate::mem::DataObject;
 use crate::sim::device::Tier;
 use crate::sim::machine::Machine;
-use crate::sim::replay::{CompiledOp, CompiledTrace};
+use crate::sim::replay::{CompiledOpKind, CompiledTrace};
+use crate::sim::schedule::{Sealer, StepRecorder};
 
 /// A data-management policy: decides placement at allocation time and may
 /// queue migrations at layer/step boundaries or after accesses.
@@ -62,6 +63,30 @@ pub trait Policy {
     /// new fast capacity. The default ignores the event: most policies
     /// read capacity live off the machine and adapt on their own.
     fn fast_share_changed(&mut self, _new_fast_bytes: u64, _m: &Machine) {}
+
+    /// Steady-state memoization opt-in (`sim/schedule.rs`): return
+    /// `true` when, from `step` on, this policy's decision-relevant
+    /// internal state is **step-periodic** — its placements, migration
+    /// requests, and stalls depend only on the (periodic) machine state
+    /// and the replayed trace, never on a wall clock, a one-shot
+    /// trigger still pending, or any other quantity that evolves across
+    /// steps. The engine only *records* when this returns `true`, and
+    /// only *seals* after two consecutive recorded steps prove
+    /// bit-identical with the machine at a fixed point — so a policy
+    /// answering `true` too eagerly costs recording work but never
+    /// correctness, while answering `false` (the default) keeps the
+    /// policy on the live loop forever.
+    fn is_steady(&self, _step: u32) -> bool {
+        false
+    }
+
+    /// Called once when a run (or a cluster tenant's sealed segment)
+    /// finishes replaying `sealed_steps` steps from a sealed schedule.
+    /// Sealed replay performs **zero** per-event policy dispatch, so a
+    /// policy that keeps per-step metadata (Sentinel's migration-case
+    /// counters) folds `sealed_steps` copies of its last live step's
+    /// worth here. The default is a no-op.
+    fn on_sealed_replay(&mut self, _sealed_steps: u32) {}
 }
 
 /// Engine knobs.
@@ -75,6 +100,15 @@ pub struct EngineConfig {
     pub profiling_fault_ns: f64,
     /// The first `profiling_steps` steps run with profiling overhead.
     pub profiling_steps: u32,
+    /// Steady-state schedule memoization (`sim/schedule.rs`): record
+    /// post-warm-up steps of steadiness-declaring policies and, once
+    /// two consecutive steps prove bit-identical, replay the remainder
+    /// by applying the sealed delta — O(1) per step, zero policy
+    /// dispatch, bit-identical to the live loop
+    /// (`rust/tests/schedule_equivalence.rs`). On by default; the
+    /// equivalence tests switch it off to produce the live reference
+    /// arm.
+    pub seal_steady: bool,
 }
 
 impl Default for EngineConfig {
@@ -83,6 +117,7 @@ impl Default for EngineConfig {
             steps: 10,
             profiling_fault_ns: 1_000.0,
             profiling_steps: 0,
+            seal_steady: true,
         }
     }
 }
@@ -108,26 +143,45 @@ pub struct TrainResult {
     pub pages_migrated_in: u64,
     pub pages_migrated_out: u64,
     pub alloc_spills: u64,
+    /// First step replayed from a sealed [`crate::sim::schedule::CompiledSchedule`]
+    /// (`None` when the whole run executed live).
+    pub steady_from_step: Option<u32>,
+    /// Steps replayed by applying the sealed schedule's delta instead
+    /// of running the live loop.
+    pub sealed_steps: u32,
 }
 
 impl TrainResult {
     /// Steady-state throughput in steps/s, excluding the first
     /// `skip` warm-up/profiling steps.
+    ///
+    /// When `skip` would exclude *every* recorded step (a run shorter
+    /// than its warm-up), the window clamps to the final step: the last
+    /// step is the closest available steady-state estimate, and a real
+    /// number beats the silent `0.0` this used to return — which
+    /// `figures` would happily plot as a genuine data point. Returns
+    /// `0.0` (never NaN/inf) only for a run with no steps at all.
     pub fn throughput(&self, skip: usize) -> f64 {
-        let n = self.steps.len().saturating_sub(skip);
-        if n == 0 {
+        if self.steps.is_empty() {
             return 0.0;
         }
+        let skip = skip.min(self.steps.len() - 1);
+        let n = self.steps.len() - skip;
         let total: f64 = self.steps.iter().skip(skip).map(|s| s.time_ns).sum();
+        if total <= 0.0 {
+            return 0.0;
+        }
         n as f64 / (total / 1e9)
     }
 
-    /// Mean steady-state step time in ns (same skip semantics).
+    /// Mean steady-state step time in ns (same skip-clamping semantics
+    /// as [`TrainResult::throughput`]; `0.0` only for an empty run).
     pub fn mean_step_ns(&self, skip: usize) -> f64 {
-        let n = self.steps.len().saturating_sub(skip);
-        if n == 0 {
+        if self.steps.is_empty() {
             return 0.0;
         }
+        let skip = skip.min(self.steps.len() - 1);
+        let n = self.steps.len() - skip;
         self.steps.iter().skip(skip).map(|s| s.time_ns).sum::<f64>() / n as f64
     }
 
@@ -152,8 +206,12 @@ impl Engine {
     /// §Perf: lowers the trace once into a [`CompiledTrace`] and replays
     /// the flat op stream — per-event object resolution, size math, and
     /// fault-cost computation are paid once per run, not once per event
-    /// per step. Bit-identical to [`Engine::run_legacy`] (proven by
-    /// `rust/tests/replay_equivalence.rs`).
+    /// per step. Once a steadiness-declaring policy's steps prove
+    /// bit-repeatable, the remainder replays from a sealed schedule at
+    /// O(1) per step with zero policy dispatch (`sim/schedule.rs`).
+    /// Both tiers are bit-identical to [`Engine::run_legacy`] (proven
+    /// by `rust/tests/replay_equivalence.rs` and
+    /// `rust/tests/schedule_equivalence.rs`).
     pub fn run(
         &self,
         graph: &ModelGraph,
@@ -194,25 +252,65 @@ impl Engine {
         }
 
         let mut steps = Vec::with_capacity(self.config.steps as usize);
+        let mut sealer = Sealer::new(self.config.seal_steady);
+        let mut steady_from: Option<u32> = None;
+        let mut sealed_steps = 0u32;
         for step in 0..self.config.steps {
+            // Tier 3: a sealed schedule replays the step as a delta —
+            // one clock fold, three counter bumps, one stats push.
+            if let Some(s) = sealer.sealed() {
+                machine.apply_sealed_step(
+                    s.step_time_ns,
+                    s.pages_in,
+                    s.pages_out,
+                    s.alloc_spills,
+                );
+                steps.push(StepStats {
+                    step,
+                    time_ns: s.step_time_ns,
+                    pages_in: s.pages_in,
+                    pages_out: s.pages_out,
+                });
+                if steady_from.is_none() {
+                    steady_from = Some(step);
+                }
+                sealed_steps += 1;
+                continue;
+            }
+
+            // Tier 2: the live compiled loop, optionally recording.
             let profiling = step < self.config.profiling_steps;
-            let t0 = machine.now_ns();
+            machine.fold_step();
             let in0 = machine.stats.pages_in;
             let out0 = machine.stats.pages_out;
+            let sp0 = machine.stats.alloc_spills;
+            let mut rec = (sealer.recording() && !profiling && policy.is_steady(step))
+                .then(|| StepRecorder::new(compiled.layers.len()));
             policy.step_start(step, machine, graph);
             for lt in &compiled.layers {
-                replay_layer(compiled, lt, graph, machine, policy, profiling);
+                replay_layer(compiled, lt, graph, machine, policy, profiling, rec.as_mut());
             }
             policy.step_end(step, machine, graph);
-            steps.push(StepStats {
-                step,
-                time_ns: machine.now_ns() - t0,
-                pages_in: machine.stats.pages_in - in0,
-                pages_out: machine.stats.pages_out - out0,
-            });
+            let time_ns = machine.step_elapsed_ns();
+            let pages_in = machine.stats.pages_in - in0;
+            let pages_out = machine.stats.pages_out - out0;
+            steps.push(StepStats { step, time_ns, pages_in, pages_out });
+            match rec {
+                Some(r) => sealer.offer(r.finish(
+                    time_ns,
+                    pages_in,
+                    pages_out,
+                    machine.stats.alloc_spills - sp0,
+                    machine.steady_snapshot(),
+                )),
+                None => sealer.observe_unsteady(),
+            }
+        }
+        if sealed_steps > 0 {
+            policy.on_sealed_replay(sealed_steps);
         }
 
-        self.package(graph, machine, policy, steps)
+        self.package(graph, machine, policy, steps, steady_from, sealed_steps)
     }
 
     /// The pre-compilation event-by-event replay, kept verbatim as the
@@ -239,7 +337,11 @@ impl Engine {
         let mut steps = Vec::with_capacity(self.config.steps as usize);
         for step in 0..self.config.steps {
             let profiling = step < self.config.profiling_steps;
-            let t0 = machine.now_ns();
+            // Clock parity with the compiled path: fold at the step
+            // boundary and report the step-local elapsed time, so the
+            // reference loop accumulates time through the exact same
+            // additions the sealed replay re-applies.
+            machine.fold_step();
             let in0 = machine.stats.pages_in;
             let out0 = machine.stats.pages_out;
             policy.step_start(step, machine, graph);
@@ -290,13 +392,13 @@ impl Engine {
             policy.step_end(step, machine, graph);
             steps.push(StepStats {
                 step,
-                time_ns: machine.now_ns() - t0,
+                time_ns: machine.step_elapsed_ns(),
                 pages_in: machine.stats.pages_in - in0,
                 pages_out: machine.stats.pages_out - out0,
             });
         }
 
-        self.package(graph, machine, policy, steps)
+        self.package(graph, machine, policy, steps, None, 0)
     }
 
     /// Shared result packaging for both replay paths.
@@ -306,6 +408,8 @@ impl Engine {
         machine: &Machine,
         policy: &dyn Policy,
         steps: Vec<StepStats>,
+        steady_from_step: Option<u32>,
+        sealed_steps: u32,
     ) -> TrainResult {
         TrainResult {
             policy: policy.name().to_string(),
@@ -316,6 +420,8 @@ impl Engine {
             pages_migrated_in: machine.stats.pages_in,
             pages_migrated_out: machine.stats.pages_out,
             alloc_spills: machine.stats.alloc_spills,
+            steady_from_step,
+            sealed_steps,
             steps,
         }
     }
@@ -328,6 +434,14 @@ impl Engine {
 /// verbatim by [`Engine::run_compiled`] and the multi-tenant driver in
 /// [`crate::sim::cluster`], which is what makes an N=1 cluster replay
 /// bit-identical to the solo engine (`rust/tests/cluster_tenancy.rs`).
+///
+/// `rec` is the optional steady-state recorder (`sim/schedule.rs`):
+/// while a candidate step is being recorded it captures every
+/// placement decision, the per-layer elapsed/stall bits, and the
+/// promotion-lane stall signal. Access events need no recording — their
+/// timing is fully determined by machine state, which the recorder's
+/// end-of-step snapshot pins. The only hot-path cost when not
+/// recording is one branch per alloc and one per layer.
 pub fn replay_layer(
     compiled: &CompiledTrace,
     lt: &crate::sim::replay::CompiledLayer,
@@ -335,17 +449,21 @@ pub fn replay_layer(
     machine: &mut Machine,
     policy: &mut dyn Policy,
     profiling: bool,
+    mut rec: Option<&mut StepRecorder>,
 ) {
     let objects = &graph.objects[..];
     policy.layer_start(lt.layer, machine, graph);
     let mut mem_ns = 0.0;
     for op in compiled.layer_ops(lt) {
-        match *op {
-            CompiledOp::Alloc { obj, pages } => {
+        match op.kind() {
+            CompiledOpKind::Alloc { obj, pages } => {
                 let pref = policy.place(&objects[obj.index()], machine);
                 machine.alloc(obj, pages, pref);
+                if let Some(r) = rec.as_deref_mut() {
+                    r.placements.push(pref);
+                }
             }
-            CompiledOp::Access { obj, bytes, count, fault_ns } => {
+            CompiledOpKind::Access { obj, bytes, count, fault_ns } => {
                 let mut dt = machine.access_time_ns(obj, bytes, count);
                 if profiling {
                     // The precompiled poison → fault → flush
@@ -356,7 +474,7 @@ pub fn replay_layer(
                 mem_ns += dt;
                 policy.after_access(&objects[obj.index()], machine);
             }
-            CompiledOp::Free { obj } => {
+            CompiledOpKind::Free { obj } => {
                 machine.free(obj);
                 policy.after_free(&objects[obj.index()], machine);
             }
@@ -369,6 +487,11 @@ pub fn replay_layer(
     let stall = policy.layer_end(lt.layer, machine, graph);
     if stall > 0.0 {
         machine.exec(stall);
+    }
+    if let Some(r) = rec {
+        r.layer_marks
+            .push((machine.step_elapsed_ns().to_bits(), stall.to_bits()));
+        r.stalled_any |= machine.promote_stalled();
     }
 }
 
@@ -392,6 +515,13 @@ impl Policy for StaticPolicy {
 
     fn place(&mut self, _obj: &DataObject, _m: &Machine) -> Tier {
         self.tier
+    }
+
+    /// Static placement holds no internal state at all: every decision
+    /// is a constant, so steps are periodic as soon as the machine's
+    /// residency is — which the sealer's fixed-point check verifies.
+    fn is_steady(&self, _step: u32) -> bool {
+        true
     }
 }
 
@@ -443,6 +573,7 @@ mod tests {
             steps: 3,
             profiling_steps: 1,
             profiling_fault_ns: 2_000.0,
+            ..Default::default()
         });
         let mut m = Machine::new(MachineSpec::fast_only());
         let r = engine.run(&g, &t, &mut m, &mut StaticPolicy { tier: Tier::Fast });
@@ -506,9 +637,101 @@ mod tests {
             steps: 3,
             profiling_steps: 1,
             profiling_fault_ns: 5_000.0,
+            ..Default::default()
         });
         let mut m = Machine::new(MachineSpec::fast_only());
         let r = engine.run(&g, &t, &mut m, &mut StaticPolicy { tier: Tier::Fast });
         assert!(r.throughput(1) > r.throughput(0));
+    }
+
+    fn result_with_steps(times: &[f64]) -> TrainResult {
+        TrainResult {
+            policy: "test".into(),
+            model: "test".into(),
+            steps: times
+                .iter()
+                .enumerate()
+                .map(|(i, &t)| StepStats {
+                    step: i as u32,
+                    time_ns: t,
+                    pages_in: 0,
+                    pages_out: 0,
+                })
+                .collect(),
+            total_time_ns: times.iter().sum(),
+            peak_fast_bytes: 0,
+            peak_total_bytes: 0,
+            pages_migrated_in: 0,
+            pages_migrated_out: 0,
+            alloc_spills: 0,
+            steady_from_step: None,
+            sealed_steps: 0,
+        }
+    }
+
+    #[test]
+    fn throughput_clamps_oversized_skip_to_last_step() {
+        // A run shorter than its warm-up must report the final step's
+        // rate, not a silent 0.0 that figures would plot as real.
+        let r = result_with_steps(&[4e9, 2e9]);
+        let last_step_rate = 1.0 / 2.0; // 2e9 ns → 0.5 steps/s
+        for skip in [2usize, 3, 100] {
+            let thr = r.throughput(skip);
+            assert!(thr.is_finite(), "skip={skip}: {thr}");
+            assert!((thr - last_step_rate).abs() < 1e-12, "skip={skip}: {thr}");
+            let mean = r.mean_step_ns(skip);
+            assert!((mean - 2e9).abs() < 1e-3, "skip={skip}: {mean}");
+        }
+        // In-range skips are untouched.
+        assert!((r.throughput(1) - last_step_rate).abs() < 1e-12);
+        assert!((r.throughput(0) - 2.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn throughput_of_empty_run_is_zero_not_nan() {
+        let r = result_with_steps(&[]);
+        for skip in [0usize, 1, 10] {
+            assert_eq!(r.throughput(skip), 0.0);
+            assert_eq!(r.mean_step_ns(skip), 0.0);
+        }
+    }
+
+    #[test]
+    fn static_policy_seals_after_two_steady_steps() {
+        let (g, t) = small_model();
+        let engine = Engine::new(EngineConfig { steps: 10, ..Default::default() });
+        let mut m = Machine::new(MachineSpec::fast_only());
+        let r = engine.run(&g, &t, &mut m, &mut StaticPolicy { tier: Tier::Fast });
+        // Records at steps 0 and 1, seals at the end of step 1, replays
+        // steps 2..10 as deltas.
+        assert_eq!(r.steady_from_step, Some(2));
+        assert_eq!(r.sealed_steps, 8);
+        let t1 = r.steps[1].time_ns;
+        for s in &r.steps[2..] {
+            assert_eq!(s.time_ns.to_bits(), t1.to_bits(), "sealed step repeats bits");
+        }
+    }
+
+    #[test]
+    fn sealing_disabled_runs_live_with_same_bits() {
+        let (g, t) = small_model();
+        let mut sealed_cfg = EngineConfig { steps: 6, ..Default::default() };
+        let mut live_cfg = sealed_cfg;
+        live_cfg.seal_steady = false;
+        sealed_cfg.seal_steady = true;
+        let mut m1 = Machine::new(MachineSpec::fast_only());
+        let r1 = Engine::new(sealed_cfg).run(&g, &t, &mut m1, &mut StaticPolicy {
+            tier: Tier::Fast,
+        });
+        let mut m2 = Machine::new(MachineSpec::fast_only());
+        let r2 = Engine::new(live_cfg).run(&g, &t, &mut m2, &mut StaticPolicy {
+            tier: Tier::Fast,
+        });
+        assert!(r1.steady_from_step.is_some());
+        assert_eq!(r2.steady_from_step, None);
+        assert_eq!(r1.total_time_ns.to_bits(), r2.total_time_ns.to_bits());
+        for (a, b) in r1.steps.iter().zip(&r2.steps) {
+            assert_eq!(a.time_ns.to_bits(), b.time_ns.to_bits());
+        }
     }
 }

@@ -8,12 +8,12 @@
 
 use crate::mem::ObjectId;
 use crate::sim::device::{MachineSpec, Tier};
-use crate::sim::migration::{Direction, Lane};
+use crate::sim::migration::{Direction, Lane, LaneSnapshot};
 use crate::PAGE_SIZE;
 
 /// Per-object page residency. Objects may be split across tiers while a
 /// migration is in flight.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct Residency {
     pub pages_total: u64,
     pub pages_fast: u64,
@@ -46,15 +46,50 @@ pub struct MachineStats {
     pub peak_total_bytes: u64,
 }
 
+/// Bit-comparable snapshot of every replay-relevant piece of machine
+/// state, **excluding** the clock and the monotone counters in
+/// [`MachineStats`]: residency, per-tier usage, the fast capacity, and
+/// both lane states (queues, banked credit, stall flags).
+///
+/// Two equal snapshots at consecutive step boundaries mean the machine
+/// is at a *fixed point*: replaying the same decision stream from
+/// either produces the same evolution, which is the machine half of the
+/// steady-state seal proof in `sim/schedule.rs` (the policy half is the
+/// [`crate::sim::Policy::is_steady`] contract).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SteadySnapshot {
+    res: Vec<Residency>,
+    used_fast: u64,
+    used_slow: u64,
+    fast_capacity: u64,
+    lane_in: LaneSnapshot,
+    lane_out: LaneSnapshot,
+}
+
 /// The simulated machine.
 ///
 /// §Perf: the per-device timing parameters are cached at construction
 /// (`ns_per_page`, the inverse bandwidths) — mutating `spec`'s bandwidth
 /// fields after `Machine::new` has no effect on timing.
+///
+/// ## The two-part clock
+///
+/// Simulated time is `base_ns + local_ns`: `base_ns` is the clock as of
+/// the last step boundary ([`Machine::fold_step`]) and `local_ns`
+/// accumulates the `exec` deltas of the step in flight. The split is
+/// what makes steady-state steps **bit-exactly periodic**: each step's
+/// elapsed time is a float sum starting from `0.0`, so two steps that
+/// charge the same delta sequence report the same
+/// [`Machine::step_elapsed_ns`] bits regardless of how large the global
+/// clock has grown — float addition is not associative, so a single
+/// accumulator could never promise that. The sealed-schedule replay
+/// (`sim/schedule.rs`) leans on exactly this: it re-applies the folded
+/// step time once per step and stays bit-identical to the live loop.
 #[derive(Clone, Debug)]
 pub struct Machine {
     pub spec: MachineSpec,
-    now_ns: f64,
+    base_ns: f64,
+    local_ns: f64,
     res: Vec<Residency>,
     used_fast: u64,
     used_slow: u64,
@@ -81,7 +116,8 @@ impl Machine {
             inv_bw_fast: 1.0 / spec.fast.bandwidth_gbps,
             inv_bw_slow: 1.0 / spec.slow.bandwidth_gbps,
             spec,
-            now_ns: 0.0,
+            base_ns: 0.0,
+            local_ns: 0.0,
             res: Vec::new(),
             used_fast: 0,
             used_slow: 0,
@@ -102,7 +138,63 @@ impl Machine {
 
     /// Current simulated time in nanoseconds.
     pub fn now_ns(&self) -> f64 {
-        self.now_ns
+        self.base_ns + self.local_ns
+    }
+
+    /// Time elapsed since the last [`Machine::fold_step`] (the step in
+    /// flight). This is the per-step time both replay loops report:
+    /// accumulated from `0.0`, so it is bit-exactly periodic across
+    /// identical steady-state steps (see the type-level clock notes).
+    pub fn step_elapsed_ns(&self) -> f64 {
+        self.local_ns
+    }
+
+    /// Step boundary: fold the step-local clock into the base. Called
+    /// by the engine (and the cluster driver) at the start of every
+    /// step, so one run performs one base addition per step — exactly
+    /// the addition sequence the sealed replay reproduces.
+    pub fn fold_step(&mut self) {
+        self.base_ns += self.local_ns;
+        self.local_ns = 0.0;
+    }
+
+    /// Replay one sealed steady-state step by applying its machine
+    /// delta: fold the previous step's time into the base (the same
+    /// addition the live loop's [`Machine::fold_step`] would perform —
+    /// `local_ns` holds bits identical to `step_time_ns` once sealed),
+    /// set the step-local clock to the recorded step time, and bump the
+    /// monotone counters. Residency, usage, capacity, and both lanes
+    /// are untouched: the seal's fixed-point check proved they return
+    /// to this exact state every step, and the peak watermarks cannot
+    /// grow past the recorded step's maximum (already folded into
+    /// `stats` when the step was recorded live).
+    pub fn apply_sealed_step(
+        &mut self,
+        step_time_ns: f64,
+        pages_in: u64,
+        pages_out: u64,
+        alloc_spills: u64,
+    ) {
+        self.base_ns += self.local_ns;
+        self.local_ns = step_time_ns;
+        self.stats.pages_in += pages_in;
+        self.stats.pages_out += pages_out;
+        self.stats.alloc_spills += alloc_spills;
+    }
+
+    /// Capture the replay-relevant machine state (clock and monotone
+    /// counters excluded) for the sealer's fixed-point comparison.
+    /// O(objects); called once per recorded steady-state candidate
+    /// step, never on the per-event hot path.
+    pub fn steady_snapshot(&self) -> SteadySnapshot {
+        SteadySnapshot {
+            res: self.res.clone(),
+            used_fast: self.used_fast,
+            used_slow: self.used_slow,
+            fast_capacity: self.spec.fast.capacity_bytes,
+            lane_in: self.lane_in.snapshot(),
+            lane_out: self.lane_out.snapshot(),
+        }
     }
 
     /// Bytes currently allocated in a tier.
@@ -318,7 +410,7 @@ impl Machine {
     #[inline]
     pub fn exec(&mut self, dt: f64) {
         debug_assert!(dt >= 0.0);
-        self.now_ns += dt;
+        self.local_ns += dt;
         if self.lanes_idle {
             self.lane_out.idle_tick(dt, self.ns_per_page);
             self.lane_in.idle_tick(dt, self.ns_per_page);
@@ -368,7 +460,8 @@ impl Machine {
     /// Reset clock and counters but keep residency (used between a
     /// measurement step and the next when searching migration intervals).
     pub fn reset_clock(&mut self) {
-        self.now_ns = 0.0;
+        self.base_ns = 0.0;
+        self.local_ns = 0.0;
     }
 
     /// Drop every object and empty both lanes (fresh training run).
@@ -379,7 +472,8 @@ impl Machine {
         self.lane_in = Lane::new(Direction::In);
         self.lane_out = Lane::new(Direction::Out);
         self.lanes_idle = true;
-        self.now_ns = 0.0;
+        self.base_ns = 0.0;
+        self.local_ns = 0.0;
         self.stats = MachineStats::default();
     }
 }
@@ -642,5 +736,98 @@ mod tests {
         let mut m = machine_1gb();
         m.alloc(ObjectId(0), 1, Tier::Fast);
         m.alloc(ObjectId(0), 1, Tier::Fast);
+    }
+
+    #[test]
+    fn fold_step_makes_step_times_bit_periodic() {
+        // The same dt sequence must report the same step-elapsed bits
+        // regardless of how large the base clock has grown — the
+        // property the steady-state sealer depends on.
+        let mut m = machine_1gb();
+        let dts = [123.456, 0.000_1, 9.75e6, 33.3];
+        let mut elapsed = Vec::new();
+        for _ in 0..3 {
+            m.fold_step();
+            for &dt in &dts {
+                m.exec(dt);
+            }
+            elapsed.push(m.step_elapsed_ns().to_bits());
+        }
+        assert_eq!(elapsed[0], elapsed[1]);
+        assert_eq!(elapsed[1], elapsed[2]);
+        // And the global clock still accumulates everything.
+        let step = f64::from_bits(elapsed[0]);
+        assert!((m.now_ns() - 3.0 * step).abs() / m.now_ns() < 1e-12);
+    }
+
+    #[test]
+    fn apply_sealed_step_matches_live_fold_bitwise() {
+        // Applying the recorded step time must leave the clock exactly
+        // where running the step live would have.
+        let dts = [517.25, 88.0, 1.5e5];
+        let mut live = machine_1gb();
+        let mut sealed = machine_1gb();
+        // One live step on both, to seed identical (base, local) state.
+        for m in [&mut live, &mut sealed] {
+            m.fold_step();
+            for &dt in &dts {
+                m.exec(dt);
+            }
+        }
+        let step_time = live.step_elapsed_ns();
+        // Two more steps: live re-runs the dts, sealed applies deltas.
+        for _ in 0..2 {
+            live.fold_step();
+            for &dt in &dts {
+                live.exec(dt);
+            }
+            sealed.apply_sealed_step(step_time, 0, 0, 0);
+        }
+        assert_eq!(live.now_ns().to_bits(), sealed.now_ns().to_bits());
+        assert_eq!(
+            live.step_elapsed_ns().to_bits(),
+            sealed.step_elapsed_ns().to_bits()
+        );
+    }
+
+    #[test]
+    fn apply_sealed_step_bumps_monotone_counters_only() {
+        let mut m = machine_1gb();
+        m.alloc(ObjectId(0), 8, Tier::Fast);
+        let before = m.steady_snapshot();
+        m.apply_sealed_step(1_000.0, 3, 2, 1);
+        assert_eq!(m.stats.pages_in, 3);
+        assert_eq!(m.stats.pages_out, 2);
+        assert_eq!(m.stats.alloc_spills, 1);
+        assert_eq!(before, m.steady_snapshot(), "state must be untouched");
+    }
+
+    #[test]
+    fn steady_snapshot_equality_tracks_replay_relevant_state() {
+        let mut a = machine_1gb();
+        let mut b = machine_1gb();
+        for m in [&mut a, &mut b] {
+            m.alloc(ObjectId(0), 16, Tier::Fast);
+            m.alloc(ObjectId(1), 16, Tier::Slow);
+        }
+        assert_eq!(a.steady_snapshot(), b.steady_snapshot());
+        // Advance both identically (banked idle credit matches), then
+        // fold one side's step clock: the clock is excluded, so the
+        // snapshots still compare equal.
+        a.exec(1e6);
+        b.exec(1e6);
+        a.fold_step();
+        assert_eq!(a.steady_snapshot(), b.steady_snapshot());
+        // Residency / lane queues / capacity are NOT excluded.
+        a.request_promote(ObjectId(1), 4);
+        assert_ne!(a.steady_snapshot(), b.steady_snapshot());
+        a.cancel_all_promotions();
+        assert_eq!(a.steady_snapshot(), b.steady_snapshot());
+        b.set_fast_capacity(123 * PAGE_SIZE);
+        assert_ne!(
+            a.steady_snapshot(),
+            b.steady_snapshot(),
+            "capacity resize must be visible"
+        );
     }
 }

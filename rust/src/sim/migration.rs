@@ -41,6 +41,18 @@ pub enum MoveOutcome {
     Blocked,
 }
 
+/// Bit-comparable snapshot of a lane's replay-relevant state: the queue
+/// contents in FIFO order, the banked credit (as raw bits, so two
+/// snapshots compare exactly), and the stall flag. Part of
+/// [`crate::sim::machine::SteadySnapshot`] — the fixed-point check the
+/// steady-state sealer (`sim/schedule.rs`) runs at step boundaries.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LaneSnapshot {
+    queue: Vec<(ObjectId, u64)>,
+    credit_ns_bits: u64,
+    stalled: bool,
+}
+
 /// A migration lane: FIFO of requests plus accumulated bandwidth credit.
 #[derive(Clone, Debug)]
 pub struct Lane {
@@ -126,6 +138,17 @@ impl Lane {
 
     pub fn is_empty(&self) -> bool {
         self.queue.is_empty()
+    }
+
+    /// Capture the lane's replay-relevant state for a fixed-point
+    /// comparison (see [`LaneSnapshot`]). O(queue), which in steady
+    /// state is at most the pending prefetches of one interval.
+    pub fn snapshot(&self) -> LaneSnapshot {
+        LaneSnapshot {
+            queue: self.queue.iter().map(|r| (r.obj, r.pages)).collect(),
+            credit_ns_bits: self.credit_ns.to_bits(),
+            stalled: self.stalled,
+        }
     }
 
     /// Account an idle interval: exactly what [`Lane::advance`] does

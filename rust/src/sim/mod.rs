@@ -21,10 +21,12 @@ pub mod engine;
 pub mod machine;
 pub mod migration;
 pub mod replay;
+pub mod schedule;
 
 pub use cluster::{run_cluster, Arbitration, ClusterTenant, TenantRunResult};
 pub use device::{DeviceSpec, MachineSpec, Tier};
 pub use engine::{Engine, EngineConfig, Policy, StepStats, TrainResult};
-pub use machine::{Machine, Residency};
-pub use migration::{Direction, Lane, MoveRequest};
-pub use replay::{CompiledLayer, CompiledOp, CompiledTrace};
+pub use machine::{Machine, Residency, SteadySnapshot};
+pub use migration::{Direction, Lane, LaneSnapshot, MoveRequest};
+pub use replay::{CompiledLayer, CompiledOp, CompiledOpKind, CompiledTrace};
+pub use schedule::{CompiledSchedule, Sealer, StepRecord, StepRecorder};

@@ -1,0 +1,345 @@
+//! Steady-state schedule memoization: compile the *policy*, not just
+//! the trace.
+//!
+//! The paper's core insight (§2.1, §3.2) is that DNN training steps are
+//! repeatable: once profiling and warm-up converge, every subsequent
+//! step makes the *same* placement and migration decisions.
+//! [`CompiledTrace`] exploited this for the event stream; this module
+//! exploits it for the **decisions**. While the engine runs normally it
+//! records, for each candidate step, the policy's decision stream
+//! (placements, per-layer stalls), the machine delta (step time, pages
+//! in/out, spills), and the machine's end-of-step state. When two
+//! consecutive post-warm-up steps produce bit-identical records *and*
+//! the machine state is a fixed point, the [`Sealer`] seals a
+//! [`CompiledSchedule`]: every remaining step is replayed by applying
+//! the delta — O(1) per step, zero `dyn Policy` dispatch, no per-event
+//! work at all. ATMem and AutoTM lower profiled phase behavior into a
+//! fixed plan the same way; here the lowering happens at data-object
+//! granularity inside the simulator's own hot loop.
+//!
+//! ## Why sealing is sound
+//!
+//! The simulator is deterministic: given identical (machine state,
+//! policy state), a step evolves identically. The seal fires only when
+//!
+//! 1. the policy *promises* steadiness ([`Policy::is_steady`]): its
+//!    decision-relevant internal state is step-periodic from here on
+//!    (Sentinel after its tuning window, LRU once recency order cycles
+//!    with the trace; IAL never — its wall-clock epochs are not
+//!    step-periodic);
+//! 2. two consecutive recorded steps are **bit-identical** — placements
+//!    in call order, per-layer elapsed/stall bits, step-time bits, and
+//!    counter deltas (this is the observable check that the policy's
+//!    internal evolution changed nothing); and
+//! 3. the machine's end-of-step [`SteadySnapshot`]s compare equal (the
+//!    machine is at a fixed point, so the recorded step starts from the
+//!    state it ends in).
+//!
+//! Under 1–3 every future step replays the recorded one exactly, so
+//! applying the delta is bit-identical to running it live — the
+//! property `rust/tests/schedule_equivalence.rs` proves across the
+//! whole policy registry. Step *times* stay bit-identical because the
+//! machine clock accumulates per step from `0.0` (see
+//! [`Machine::fold_step`]); without that split, float rounding at a
+//! growing clock magnitude would make even genuinely periodic steps
+//! drift in their last ULP and the seal could never fire.
+//!
+//! Anything that perturbs the fixed point — a multi-tenant arbiter
+//! resizing the fast share mid-run — must invalidate the seal
+//! ([`Sealer::invalidate`]); the cluster driver does so on every
+//! `fast_share_changed`, falls back to the live loop, and re-seals once
+//! the tenant converges again.
+//!
+//! [`CompiledTrace`]: crate::sim::replay::CompiledTrace
+//! [`Policy::is_steady`]: crate::sim::Policy::is_steady
+//! [`Machine::fold_step`]: crate::sim::Machine::fold_step
+//! [`SteadySnapshot`]: crate::sim::machine::SteadySnapshot
+
+use crate::sim::device::Tier;
+use crate::sim::machine::SteadySnapshot;
+
+/// In-flight recording of one candidate steady-state step. Filled by
+/// the replay loop (`replay_layer` pushes placements and layer marks)
+/// and finished into a [`StepRecord`] at the step boundary.
+#[derive(Clone, Debug, Default)]
+pub struct StepRecorder {
+    /// Tier returned by every `Policy::place` call, in call order.
+    pub placements: Vec<Tier>,
+    /// Per layer: (step-elapsed bits at layer end, stall bits returned
+    /// by `Policy::layer_end`).
+    pub layer_marks: Vec<(u64, u64)>,
+    /// Whether the promotion lane reported a capacity stall at any
+    /// layer boundary of this step (the multi-tenant pressure signal —
+    /// carried into the sealed schedule so a sealed tenant keeps
+    /// reporting the pressure its periodic step exhibits).
+    pub stalled_any: bool,
+}
+
+impl StepRecorder {
+    /// Recorder pre-sized for a trace of `n_layers` layers.
+    pub fn new(n_layers: usize) -> Self {
+        StepRecorder {
+            placements: Vec::new(),
+            layer_marks: Vec::with_capacity(n_layers),
+            stalled_any: false,
+        }
+    }
+
+    /// Close the recording at a step boundary.
+    pub fn finish(
+        self,
+        time_ns: f64,
+        pages_in: u64,
+        pages_out: u64,
+        alloc_spills: u64,
+        end_state: SteadySnapshot,
+    ) -> StepRecord {
+        StepRecord {
+            placements: self.placements,
+            layer_marks: self.layer_marks,
+            stalled_any: self.stalled_any,
+            time_ns_bits: time_ns.to_bits(),
+            pages_in,
+            pages_out,
+            alloc_spills,
+            end_state,
+        }
+    }
+}
+
+/// One fully recorded step: the decision stream, the machine delta, and
+/// the end-of-step machine state. Two consecutive equal records seal a
+/// [`CompiledSchedule`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StepRecord {
+    /// Placement decisions in `Policy::place` call order.
+    pub placements: Vec<Tier>,
+    /// Per layer: (step-elapsed bits at layer end, stall bits).
+    pub layer_marks: Vec<(u64, u64)>,
+    /// Promotion-lane capacity stall seen at any layer boundary.
+    pub stalled_any: bool,
+    /// Step wall time, as raw bits (exact comparison).
+    pub time_ns_bits: u64,
+    /// Pages promoted during the step.
+    pub pages_in: u64,
+    /// Pages demoted during the step.
+    pub pages_out: u64,
+    /// Allocation spills during the step.
+    pub alloc_spills: u64,
+    /// Machine state at the step boundary (clock/counters excluded).
+    pub end_state: SteadySnapshot,
+}
+
+/// A sealed steady-state step: the machine delta applied per replayed
+/// step. O(1) per step — one clock fold, three counter bumps, one
+/// `StepStats` push — versus O(events) for the compiled live loop.
+#[derive(Clone, Copy, Debug)]
+pub struct CompiledSchedule {
+    /// Step wall time (bits identical to every live steady step).
+    pub step_time_ns: f64,
+    /// Pages promoted per step.
+    pub pages_in: u64,
+    /// Pages demoted per step.
+    pub pages_out: u64,
+    /// Allocation spills per step.
+    pub alloc_spills: u64,
+    /// The periodic step includes a promotion-lane capacity stall
+    /// (multi-tenant pressure signal).
+    pub stalled_any: bool,
+}
+
+/// The seal state machine one run (or one cluster tenant) carries:
+///
+/// ```text
+///            offer(r), r == prev                       (replay deltas,
+///  recording ────────────────────────▶ sealed ──────▶   O(1)/step)
+///   ▲  │ offer(r), r != prev: prev = r   │
+///   │  └──────────────────────────────┐  │ invalidate()   (share resize,
+///   │     observe_unsteady(): prev=None  │                 forced demotion)
+///   └────────────────────────────────────┘
+/// ```
+///
+/// Disabled sealers (`Sealer::new(false)`) never record and never seal
+/// — the engine's plain live loop, used by the equivalence tests as the
+/// reference arm.
+#[derive(Clone, Debug)]
+pub struct Sealer {
+    enabled: bool,
+    prev: Option<StepRecord>,
+    sealed: Option<CompiledSchedule>,
+    /// Times a sealed schedule was dropped by [`Sealer::invalidate`].
+    pub invalidations: u64,
+    /// Times a schedule was sealed (≥ 2 after an invalidate + re-seal).
+    pub seals: u64,
+}
+
+impl Sealer {
+    /// A sealer; `enabled == false` makes every method a no-op (the
+    /// always-live reference configuration).
+    pub fn new(enabled: bool) -> Self {
+        Sealer { enabled, prev: None, sealed: None, invalidations: 0, seals: 0 }
+    }
+
+    /// Should the caller record the upcoming step? True while enabled
+    /// and not already sealed (the policy's `is_steady` and the
+    /// profiling schedule gate the final decision).
+    pub fn recording(&self) -> bool {
+        self.enabled && self.sealed.is_none()
+    }
+
+    /// The sealed schedule to replay, if any.
+    pub fn sealed(&self) -> Option<CompiledSchedule> {
+        self.sealed
+    }
+
+    /// Offer a recorded step. Seals when it is bit-identical to the
+    /// previous offer (and the machine end-states agree — part of the
+    /// record); otherwise it becomes the new candidate.
+    pub fn offer(&mut self, record: StepRecord) {
+        if !self.enabled || self.sealed.is_some() {
+            return;
+        }
+        if self.prev.as_ref() == Some(&record) {
+            self.sealed = Some(CompiledSchedule {
+                step_time_ns: f64::from_bits(record.time_ns_bits),
+                pages_in: record.pages_in,
+                pages_out: record.pages_out,
+                alloc_spills: record.alloc_spills,
+                stalled_any: record.stalled_any,
+            });
+            self.seals += 1;
+            self.prev = None;
+        } else {
+            self.prev = Some(record);
+        }
+    }
+
+    /// A non-recordable step ran (policy not steady, profiling, or the
+    /// caller skipped recording): any partial match is void.
+    pub fn observe_unsteady(&mut self) {
+        self.prev = None;
+    }
+
+    /// External state change (fast-share resize, forced demotion):
+    /// drop the sealed schedule and any candidate; the caller resumes
+    /// the live loop and may re-seal once steady again.
+    pub fn invalidate(&mut self) {
+        if self.sealed.take().is_some() {
+            self.invalidations += 1;
+        }
+        self.prev = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::device::MachineSpec;
+    use crate::sim::machine::Machine;
+
+    fn record(time: f64, placements: &[Tier], snapshot: &SteadySnapshot) -> StepRecord {
+        StepRecord {
+            placements: placements.to_vec(),
+            layer_marks: vec![(time.to_bits(), 0)],
+            stalled_any: false,
+            time_ns_bits: time.to_bits(),
+            pages_in: 4,
+            pages_out: 4,
+            alloc_spills: 0,
+            end_state: snapshot.clone(),
+        }
+    }
+
+    fn snapshot() -> SteadySnapshot {
+        Machine::new(MachineSpec::paper_testbed(1 << 30)).steady_snapshot()
+    }
+
+    #[test]
+    fn two_identical_offers_seal() {
+        let snap = snapshot();
+        let mut s = Sealer::new(true);
+        assert!(s.recording());
+        s.offer(record(100.0, &[Tier::Fast], &snap));
+        assert!(s.sealed().is_none(), "one record is not a proof");
+        s.offer(record(100.0, &[Tier::Fast], &snap));
+        let sched = s.sealed().expect("two identical records seal");
+        assert_eq!(sched.step_time_ns.to_bits(), 100.0f64.to_bits());
+        assert_eq!(sched.pages_in, 4);
+        assert_eq!(s.seals, 1);
+        assert!(!s.recording(), "sealed runs stop recording");
+    }
+
+    #[test]
+    fn any_divergence_restarts_the_match() {
+        let snap = snapshot();
+        let mut s = Sealer::new(true);
+        s.offer(record(100.0, &[Tier::Fast], &snap));
+        // Different placement stream: candidate is replaced, not sealed.
+        s.offer(record(100.0, &[Tier::Slow], &snap));
+        assert!(s.sealed().is_none());
+        // Different time bits: still no seal.
+        s.offer(record(100.0 + 1e-9, &[Tier::Slow], &snap));
+        assert!(s.sealed().is_none());
+        // Two matching in a row now seal.
+        s.offer(record(100.0 + 1e-9, &[Tier::Slow], &snap));
+        assert!(s.sealed().is_some());
+    }
+
+    #[test]
+    fn unsteady_steps_void_candidates() {
+        let snap = snapshot();
+        let mut s = Sealer::new(true);
+        s.offer(record(100.0, &[Tier::Fast], &snap));
+        s.observe_unsteady();
+        s.offer(record(100.0, &[Tier::Fast], &snap));
+        assert!(
+            s.sealed().is_none(),
+            "records separated by an unsteady step must not pair"
+        );
+    }
+
+    #[test]
+    fn end_state_divergence_blocks_the_seal() {
+        let mut m = Machine::new(MachineSpec::paper_testbed(1 << 30));
+        let a = m.steady_snapshot();
+        m.alloc(crate::mem::ObjectId(0), 8, Tier::Fast);
+        let b = m.steady_snapshot();
+        let mut s = Sealer::new(true);
+        s.offer(record(100.0, &[Tier::Fast], &a));
+        s.offer(record(100.0, &[Tier::Fast], &b));
+        assert!(s.sealed().is_none(), "no machine fixed point, no seal");
+    }
+
+    #[test]
+    fn invalidate_reopens_recording_and_counts() {
+        let snap = snapshot();
+        let mut s = Sealer::new(true);
+        s.offer(record(100.0, &[], &snap));
+        s.offer(record(100.0, &[], &snap));
+        assert!(s.sealed().is_some());
+        s.invalidate();
+        assert!(s.sealed().is_none());
+        assert!(s.recording());
+        assert_eq!(s.invalidations, 1);
+        // Invalidating an unsealed sealer only drops the candidate.
+        s.offer(record(50.0, &[], &snap));
+        s.invalidate();
+        assert_eq!(s.invalidations, 1);
+        // Re-seal after invalidation.
+        s.offer(record(70.0, &[], &snap));
+        s.offer(record(70.0, &[], &snap));
+        assert!(s.sealed().is_some());
+        assert_eq!(s.seals, 2);
+    }
+
+    #[test]
+    fn disabled_sealer_is_inert() {
+        let snap = snapshot();
+        let mut s = Sealer::new(false);
+        assert!(!s.recording());
+        s.offer(record(100.0, &[], &snap));
+        s.offer(record(100.0, &[], &snap));
+        assert!(s.sealed().is_none());
+        assert_eq!(s.seals, 0);
+    }
+}

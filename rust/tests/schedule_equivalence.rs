@@ -1,0 +1,310 @@
+//! The sealed-schedule equivalence proof: [`Engine::run`] with
+//! steady-state sealing enabled (the default — record two steady steps,
+//! seal a `CompiledSchedule`, replay the remainder as O(1) deltas) must
+//! produce **bit-identical** `TrainResult`s to the same engine with
+//! sealing disabled (the pure live compiled loop), for every policy in
+//! the registry.
+//!
+//! Three parts:
+//! * an exhaustive grid over `PolicyKind::all()` × {DCGAN, ResNet_v1-32}
+//!   × fast-pct {15, 20, 35} (the ISSUE-4 acceptance matrix), with step
+//!   counts long enough for every steady policy to actually seal;
+//! * a property test over random fast sizes, step counts and seeds; and
+//! * a cluster case (in `sim::cluster` terms) where priority
+//!   arbitration invalidates a tenant's sealed schedule mid-run and the
+//!   tenant provably re-seals afterwards.
+
+use sentinel_hm::api::PolicyKind;
+use sentinel_hm::dnn::zoo::Model;
+use sentinel_hm::dnn::{ModelGraph, StepTrace};
+use sentinel_hm::mem::{DataObject, ObjectId};
+use sentinel_hm::sim::cluster::{run_cluster, Arbitration, ClusterTenant};
+use sentinel_hm::sim::engine::StaticPolicy;
+use sentinel_hm::sim::{
+    CompiledTrace, Engine, EngineConfig, Machine, MachineSpec, Policy, Tier, TrainResult,
+};
+use sentinel_hm::util::prop::check;
+use sentinel_hm::PAGE_SIZE;
+
+const MODELS: [Model; 2] = [Model::Dcgan, Model::ResNetV1 { depth: 32 }];
+
+/// Exact (bit-level for floats) equality of two results. The seal
+/// metadata (`steady_from_step` / `sealed_steps`) is intentionally
+/// excluded — it *describes which tier executed*, and differs between
+/// the arms by construction.
+fn assert_bit_identical(a: &TrainResult, b: &TrainResult, ctx: &str) {
+    assert_eq!(a.policy, b.policy, "{ctx}: policy");
+    assert_eq!(a.model, b.model, "{ctx}: model");
+    assert_eq!(
+        a.total_time_ns.to_bits(),
+        b.total_time_ns.to_bits(),
+        "{ctx}: total_time_ns {} vs {}",
+        a.total_time_ns,
+        b.total_time_ns
+    );
+    assert_eq!(a.peak_fast_bytes, b.peak_fast_bytes, "{ctx}: peak_fast_bytes");
+    assert_eq!(a.peak_total_bytes, b.peak_total_bytes, "{ctx}: peak_total_bytes");
+    assert_eq!(a.pages_migrated_in, b.pages_migrated_in, "{ctx}: pages_in");
+    assert_eq!(a.pages_migrated_out, b.pages_migrated_out, "{ctx}: pages_out");
+    assert_eq!(a.alloc_spills, b.alloc_spills, "{ctx}: alloc_spills");
+    assert_eq!(a.steps.len(), b.steps.len(), "{ctx}: step count");
+    for (sa, sb) in a.steps.iter().zip(&b.steps) {
+        assert_eq!(sa.step, sb.step, "{ctx}: step index");
+        assert_eq!(
+            sa.time_ns.to_bits(),
+            sb.time_ns.to_bits(),
+            "{ctx}: step {} time {} vs {}",
+            sa.step,
+            sa.time_ns,
+            sb.time_ns
+        );
+        assert_eq!(sa.pages_in, sb.pages_in, "{ctx}: step {} pages_in", sa.step);
+        assert_eq!(sa.pages_out, sb.pages_out, "{ctx}: step {} pages_out", sa.step);
+    }
+}
+
+fn run_arm(
+    seal: bool,
+    g: &ModelGraph,
+    trace: &StepTrace,
+    kind: PolicyKind,
+    fast_bytes: u64,
+    steps: u32,
+) -> TrainResult {
+    let spec = kind.machine_spec(g, trace, fast_bytes);
+    let mut cfg = kind.engine_config(steps);
+    cfg.seal_steady = seal;
+    let engine = Engine::new(cfg);
+    let mut machine = Machine::new(spec);
+    let mut policy = kind.construct(g, trace, spec);
+    engine.run(g, trace, &mut machine, policy.as_mut())
+}
+
+fn check_equivalence(
+    g: &ModelGraph,
+    trace: &StepTrace,
+    kind: PolicyKind,
+    fast_bytes: u64,
+    steps: u32,
+    ctx: &str,
+) -> TrainResult {
+    let sealed = run_arm(true, g, trace, kind, fast_bytes, steps);
+    let live = run_arm(false, g, trace, kind, fast_bytes, steps);
+    assert_eq!(live.steady_from_step, None, "{ctx}: live arm must not seal");
+    assert_eq!(live.sealed_steps, 0, "{ctx}: live arm must not seal");
+    assert_bit_identical(&sealed, &live, ctx);
+    sealed
+}
+
+#[test]
+fn sealed_replay_is_bit_identical_across_registry_grid() {
+    for model in MODELS {
+        let g = model.build(1);
+        let trace = StepTrace::from_graph(&g);
+        let peak = model.peak_memory_target();
+        for kind in PolicyKind::all() {
+            for pct in [15u64, 20, 35] {
+                let fast = peak * pct / 100;
+                let ctx = format!("{} / {} / fast={pct}%", model.name(), kind.name());
+                // 20 steps: room for Sentinel's tuning window plus a
+                // sealable steady tail on every grid point.
+                let sealed = check_equivalence(&g, &trace, kind, fast, 20, &ctx);
+                // The static references have constant decision streams:
+                // if even they failed to seal, the sealed arm silently
+                // ran fully live and the grid would prove nothing.
+                if matches!(kind, PolicyKind::FastOnly | PolicyKind::SlowOnly) {
+                    assert_eq!(
+                        sealed.steady_from_step,
+                        Some(2),
+                        "{ctx}: static policies must seal after two records"
+                    );
+                    assert_eq!(sealed.sealed_steps, 18, "{ctx}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn sealed_replay_equivalence_property() {
+    // Random fast sizes (including degenerate slivers), step counts and
+    // seeds. DCGAN only: the property runs many cases.
+    let g_cache: Vec<(u64, ModelGraph, StepTrace)> = [3u64, 11]
+        .iter()
+        .map(|&seed| {
+            let g = Model::Dcgan.build(seed);
+            let t = StepTrace::from_graph(&g);
+            (seed, g, t)
+        })
+        .collect();
+    let peak = Model::Dcgan.peak_memory_target();
+    check("sealed replay ≡ live replay", 24, |tc| {
+        let (_, g, trace) = &g_cache[tc.range(0, 1) as usize];
+        let kinds = PolicyKind::all();
+        let kind = kinds[tc.range(0, (kinds.len() - 1) as u64) as usize];
+        // 5%..=60% of reported peak, and 2..=14 steps.
+        let pct = tc.range(5, 60);
+        let steps = tc.range(2, 14) as u32;
+        let fast = (peak * pct / 100).max(1);
+        let ctx = format!("prop: {} fast={pct}% steps={steps}", kind.name());
+        check_equivalence(g, trace, kind, fast, steps, &ctx);
+    });
+}
+
+/// A policy that places everything slow and, from `from_step` on, keeps
+/// queueing an unfinishable promotion — a deterministic memory-pressure
+/// faucet (the promotion lane stalls on fast capacity at every layer)
+/// that switches on at a step of our choosing. Never steady, so its own
+/// behavior stays on the live loop.
+struct PressureFrom {
+    from_step: u32,
+    target: ObjectId,
+    pages: u64,
+    step: u32,
+}
+
+impl Policy for PressureFrom {
+    fn name(&self) -> &str {
+        "pressure-from"
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
+    fn place(&mut self, _obj: &DataObject, _m: &Machine) -> Tier {
+        Tier::Slow
+    }
+
+    fn step_start(&mut self, step: u32, _m: &mut Machine, _g: &ModelGraph) {
+        self.step = step;
+    }
+
+    fn layer_start(&mut self, _layer: u32, m: &mut Machine, _g: &ModelGraph) {
+        if self.step >= self.from_step {
+            m.request_promote(self.target, self.pages);
+        }
+    }
+}
+
+/// Priority arbitration must invalidate a sealed tenant's schedule and
+/// the tenant must re-seal afterwards.
+///
+/// Construction: the low-priority victim is a static fast-placing
+/// tenant with an ample share — it seals at its step 2. The
+/// high-priority aggressor runs everything from slow memory (slower
+/// steps than the victim's fast ones, so the victim is sealed well
+/// before the first review) and starts stalling its promotion lane at
+/// step 6, producing pressure at every later review. Each preemption
+/// resizes the victim's share → seal invalidated. When the aggressor
+/// finishes, the victim's remaining steps re-converge and re-seal.
+#[test]
+fn priority_reshare_invalidates_and_reseals() {
+    let g = Model::Dcgan.build(5);
+    let trace = StepTrace::from_graph(&g);
+    let spec_base = MachineSpec::paper_testbed(1 << 30);
+    let compiled = CompiledTrace::compile(&g, &trace, spec_base.compute_gflops, 1_000.0);
+
+    // The biggest persistent object: promoting it into a sliver of fast
+    // memory can never finish — a guaranteed stall.
+    let target = g
+        .objects
+        .iter()
+        .filter(|o| o.persistent)
+        .max_by_key(|o| (o.pages(), o.id))
+        .expect("graph has persistent objects");
+
+    let victim_share = g.peak_live_bytes() * 2 / PAGE_SIZE * PAGE_SIZE;
+    let aggressor_share = 4 * PAGE_SIZE;
+
+    let tenant = |policy: Box<dyn Policy>, share: u64, priority: u32, steps: u32| {
+        let mut spec = spec_base;
+        spec.fast.capacity_bytes = share;
+        ClusterTenant {
+            graph: &g,
+            compiled: &compiled,
+            policy,
+            config: EngineConfig { steps, ..Default::default() },
+            machine: Machine::new(spec),
+            priority,
+            share,
+        }
+    };
+
+    let aggressor = tenant(
+        Box::new(PressureFrom {
+            from_step: 6,
+            target: target.id,
+            pages: target.pages(),
+            step: 0,
+        }),
+        aggressor_share,
+        1,
+        12,
+    );
+    let victim = tenant(Box::new(StaticPolicy { tier: Tier::Fast }), victim_share, 0, 60);
+
+    let results = run_cluster(vec![aggressor, victim], Arbitration::Priority);
+    let (agg, vic) = (&results[0], &results[1]);
+
+    assert_eq!(vic.result.steps.len(), 60);
+    assert!(
+        agg.preemptions_won >= 1,
+        "aggressor pressure must trigger at least one preemption"
+    );
+    assert_eq!(agg.preemptions_won, vic.preemptions_suffered);
+    assert!(
+        vic.seal_invalidations >= 1,
+        "a preemption must have dropped a live sealed schedule \
+         (invalidations={}, segments={})",
+        vic.seal_invalidations,
+        vic.seal_segments
+    );
+    assert!(
+        vic.seal_segments >= 2,
+        "the victim must re-seal after invalidation (segments={})",
+        vic.seal_segments
+    );
+    assert!(vic.result.sealed_steps > 0);
+    assert_eq!(vic.result.steady_from_step, Some(2), "ample share seals at step 2");
+    // Sealed or not, per-step accounting stays complete and consistent.
+    let step_pages: u64 = vic.result.steps.iter().map(|s| s.pages_in + s.pages_out).sum();
+    assert_eq!(step_pages, vic.result.pages_migrated_in + vic.result.pages_migrated_out);
+    // The aggressor itself never seals: its pressure policy never
+    // declares steadiness.
+    assert_eq!(agg.result.steady_from_step, None);
+    assert_eq!(agg.seal_segments, 0);
+}
+
+/// N=1 sanity at the sim level: a sealed single-tenant cluster must
+/// match the sealed solo engine bit-for-bit (the api-level anchor lives
+/// in `cluster_tenancy.rs`; this pins the sealing tier specifically).
+#[test]
+fn single_sealed_tenant_matches_solo_engine() {
+    let g = Model::Dcgan.build(7);
+    let trace = StepTrace::from_graph(&g);
+    let kind = PolicyKind::Lru;
+    let fast = Model::Dcgan.peak_memory_target() / 5;
+    let spec = kind.machine_spec(&g, &trace, fast);
+    let cfg = kind.engine_config(12);
+    let compiled =
+        CompiledTrace::compile(&g, &trace, spec.compute_gflops, cfg.profiling_fault_ns);
+
+    let mut m = Machine::new(spec);
+    let mut p = kind.construct(&g, &trace, spec);
+    let solo = Engine::new(cfg).run_compiled(&g, &compiled, &mut m, p.as_mut());
+
+    let tenants = vec![ClusterTenant {
+        graph: &g,
+        compiled: &compiled,
+        policy: kind.construct(&g, &trace, spec),
+        config: cfg,
+        machine: Machine::new(spec),
+        priority: 0,
+        share: fast,
+    }];
+    let cluster = run_cluster(tenants, Arbitration::Priority);
+    assert_bit_identical(&solo, &cluster[0].result, "N=1 sealed cluster");
+    assert_eq!(solo.steady_from_step, cluster[0].result.steady_from_step);
+    assert_eq!(solo.sealed_steps, cluster[0].result.sealed_steps);
+}

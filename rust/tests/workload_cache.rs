@@ -1,0 +1,106 @@
+//! Contention coverage for the process-wide workload cache
+//! (`api/workload.rs`): same-key racers must block on exactly one
+//! build, distinct keys must build independently, and the miss counter
+//! must be an exact build counter under both patterns.
+//!
+//! Lives in its own integration binary so its global-counter deltas
+//! cannot race other test files' cache traffic (each test binary is a
+//! separate process); the tests within still serialize on a lock.
+
+use std::sync::{Arc, Barrier, Mutex, MutexGuard};
+use std::thread;
+
+use sentinel_hm::api::{shared_workload, workload_cache_stats, Workload};
+use sentinel_hm::dnn::zoo::Model;
+
+static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+fn serialized() -> MutexGuard<'static, ()> {
+    TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Fan `n` threads through `shared_workload`, all released by one
+/// barrier so the first requests genuinely race.
+fn race(
+    n: usize,
+    key: impl Fn(usize) -> (Model, u64) + Send + Sync + 'static,
+) -> Vec<Arc<Workload>> {
+    let barrier = Arc::new(Barrier::new(n));
+    let key = Arc::new(key);
+    let handles: Vec<_> = (0..n)
+        .map(|i| {
+            let barrier = Arc::clone(&barrier);
+            let key = Arc::clone(&key);
+            thread::spawn(move || {
+                let (model, seed) = key(i);
+                barrier.wait();
+                shared_workload(model, seed)
+            })
+        })
+        .collect();
+    handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+}
+
+#[test]
+fn same_key_racers_block_on_one_build() {
+    let _guard = serialized();
+    let before = workload_cache_stats();
+    let workloads = race(8, |_| (Model::Dcgan, 0xC0117E57));
+    // Every racer got the same Arc.
+    for w in &workloads[1..] {
+        assert!(
+            Arc::ptr_eq(&workloads[0], w),
+            "same-key racers must share one workload"
+        );
+    }
+    let after = workload_cache_stats();
+    assert_eq!(
+        after.misses - before.misses,
+        1,
+        "8 same-key racers must trigger exactly one build"
+    );
+    assert_eq!(
+        after.hits - before.hits,
+        7,
+        "the 7 losers of the build race count as hits"
+    );
+}
+
+#[test]
+fn distinct_keys_build_independently_in_parallel() {
+    let _guard = serialized();
+    let before = workload_cache_stats();
+    let workloads = race(8, |i| (Model::Dcgan, 0xD15_000 + i as u64));
+    // Eight distinct keys → eight builds, no waiting-as-hit.
+    let after = workload_cache_stats();
+    assert_eq!(after.misses - before.misses, 8, "one build per distinct key");
+    assert_eq!(after.hits - before.hits, 0);
+    for (i, a) in workloads.iter().enumerate() {
+        for b in &workloads[i + 1..] {
+            assert!(!Arc::ptr_eq(a, b), "distinct keys must not alias");
+        }
+    }
+    // Re-requesting any of them is now a pure hit.
+    let again = shared_workload(Model::Dcgan, 0xD15_000);
+    assert!(Arc::ptr_eq(&workloads[0], &again));
+    let final_stats = workload_cache_stats();
+    assert_eq!(final_stats.misses - before.misses, 8);
+    assert_eq!(final_stats.hits - before.hits, 1);
+}
+
+#[test]
+fn mixed_contention_keeps_the_build_counter_exact() {
+    let _guard = serialized();
+    let before = workload_cache_stats();
+    // 12 threads over 3 distinct keys (4 racers each).
+    let workloads = race(12, |i| (Model::Dcgan, 0xABC_000 + (i % 3) as u64));
+    let after = workload_cache_stats();
+    assert_eq!(after.misses - before.misses, 3, "one build per distinct key");
+    assert_eq!(after.hits - before.hits, 9);
+    for i in 0..12 {
+        assert!(
+            Arc::ptr_eq(&workloads[i], &workloads[i % 3]),
+            "thread {i} must share its key group's workload"
+        );
+    }
+}
