@@ -1,0 +1,67 @@
+//! Bench: fleet-scale churn — what an open-loop serving simulation
+//! costs end to end (arrival generation, admission, join/leave
+//! re-arbitration, sealed-schedule replay, solo baselines), and how the
+//! per-round machine fan-out scales with worker threads.
+//!
+//! Run: `cargo bench --bench fleet_churn`
+//!
+//! The headline scenario is a 10,000-tenant fleet (override with
+//! `FLEET_BENCH_TENANTS`); the acceptance bar is "simulates in
+//! seconds", reported as `fleet_tenants_per_s` in the JSON summary
+//! line.
+
+use sentinel_hm::api::{json, Admission, FleetSpec};
+use sentinel_hm::util::bench::time_it;
+
+fn fleet(tenants: usize, machines: usize, threads: usize) -> FleetSpec {
+    FleetSpec::new()
+        .tenants(tenants)
+        .rate_per_s(2.0)
+        .machines(machines)
+        .machine_fast_bytes(2 << 30)
+        .admission(Admission::Queue)
+        .threads(threads)
+        .seed(7)
+}
+
+fn main() {
+    let big: usize = std::env::var("FLEET_BENCH_TENANTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(10_000);
+
+    // Warm the workload, trace, and solo-baseline caches so the numbers
+    // measure the fleet driver, not graph construction.
+    fleet(16, 2, 1).run().expect("warm-up fleet");
+
+    let mut summary = json::Obj::new().field_str("bench", "fleet_churn");
+    for (key, tenants, machines, threads) in [
+        ("fleet_200t_2m_serial_ns", 200usize, 2usize, 1usize),
+        ("fleet_1k_8m_par_ns", 1_000, 8, 0),
+    ] {
+        let spec = fleet(tenants, machines, threads);
+        let t = time_it(3, || spec.run().expect("fleet run"));
+        t.report(&format!("fleet {tenants} jobs / {machines} machines (threads={threads})"));
+        summary = summary.field_f64(key, t.median_ns as f64);
+    }
+
+    // Headline: the 10k-tenant churn scenario, once (three timed reps
+    // would dominate the suite).
+    let spec = fleet(big, 16, 0);
+    let t = time_it(1, || spec.run().expect("10k fleet run"));
+    t.report(&format!("fleet {big} jobs / 16 machines (threads=auto)"));
+    let tenants_per_s = big as f64 / (t.median_ns as f64 / 1e9);
+    summary = summary
+        .field_f64("fleet_10k_ns", t.median_ns as f64)
+        .field_f64("fleet_tenants_per_s", tenants_per_s);
+
+    // Shape sanity: every offered job is accounted for, and the churn
+    // counters moved.
+    let out = fleet(200, 2, 0).run().unwrap();
+    assert_eq!(out.completed + out.rejected, out.jobs_offered);
+    assert!(out.makespan_ns > 0.0);
+    assert!(out.fleet_events > 0);
+    assert!(!out.samples.is_empty());
+
+    println!("\n{}", summary.end());
+}

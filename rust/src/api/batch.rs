@@ -67,6 +67,63 @@ where
         .collect()
 }
 
+/// Map `f` over `items` **in place** across `threads` scoped workers
+/// (clamped to the item count; `1` degrades to a plain serial loop) —
+/// the mutable companion of [`par_map`]. Each item is visited exactly
+/// once by exactly one worker, so as long as `f` touches only its item
+/// (no shared state), the mutations are bit-identical to a serial loop
+/// and independent of the worker count. Results are index-aligned with
+/// `items`.
+///
+/// Built for the fleet driver (`sim::fleet`): each machine's
+/// virtual-clock advance mutates that machine's tenants, and the
+/// machines are independent between fleet events, so a 10k-tenant fleet
+/// round fans its machines across cores.
+pub fn par_map_mut<T, R, F>(items: &mut [T], threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(&mut T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.clamp(1, n);
+    if threads == 1 {
+        return items.iter_mut().map(|item| f(item)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    // Hand each worker exclusive access to one item at a time: the
+    // cursor assigns every index to exactly one worker, and the mutex
+    // per cell keeps the compiler convinced no `&mut` aliases.
+    let cells: Vec<Mutex<Option<&mut T>>> =
+        items.iter_mut().map(|item| Mutex::new(Some(item))).collect();
+    let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let (next_ref, cells_ref, slots_ref, f_ref) = (&next, &cells, &slots, &f);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(move || loop {
+                let i = next_ref.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let item = cells_ref[i]
+                    .lock()
+                    .unwrap()
+                    .take()
+                    .expect("each cell claimed exactly once");
+                let out = f_ref(item);
+                *slots_ref[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|slot| slot.into_inner().unwrap().expect("worker filled every slot"))
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -86,6 +143,21 @@ mod tests {
             assert_eq!(par_map(&items, threads, |&x| x * 3 + 1), expect);
         }
         assert!(par_map(&[] as &[u64], 4, |&x| x).is_empty());
+    }
+
+    #[test]
+    fn par_map_mut_visits_every_item_once_across_thread_counts() {
+        for threads in [1, 2, 8, 64] {
+            let mut items: Vec<u64> = (0..23).collect();
+            let outs = par_map_mut(&mut items, threads, |x| {
+                *x += 100;
+                *x
+            });
+            let expect: Vec<u64> = (100..123).collect();
+            assert_eq!(items, expect, "{threads} threads: in-place mutation");
+            assert_eq!(outs, expect, "{threads} threads: results aligned");
+        }
+        assert!(par_map_mut(&mut [] as &mut [u64], 4, |x| *x).is_empty());
     }
 
     #[test]

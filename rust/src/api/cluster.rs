@@ -41,7 +41,7 @@ use crate::api::spec::{DEFAULT_SEED, DEFAULT_STEPS};
 use crate::api::workload::shared_workload;
 use crate::coordinator::sentinel::{CaseCounts, SentinelPolicy};
 use crate::dnn::zoo::Model;
-use crate::sim::cluster::{run_cluster, ClusterTenant};
+use crate::sim::cluster::{arbitration_shares, run_cluster, ClusterTenant};
 use crate::sim::replay::CompiledTrace;
 use crate::sim::{Engine, Machine, MachineSpec, TrainResult};
 use crate::util::table::{fmt_bytes, Table};
@@ -358,13 +358,13 @@ impl ClusterSpec {
                 "resolves to 0 bytes of fast memory".into(),
             ));
         }
-        let shares = initial_shares(self.arbitration, fast_total, &peaks);
+        let shares = arbitration_shares(self.arbitration, fast_total, &peaks);
 
         // Per-tenant machine specs and engine configs; distinct traces
         // compiled exactly once (keyed on everything lowering reads).
         let mut specs: Vec<MachineSpec> = Vec::with_capacity(n);
         let mut configs = Vec::with_capacity(n);
-        let mut compiled: Vec<CompiledTrace> = Vec::new();
+        let mut compiled: Vec<Arc<CompiledTrace>> = Vec::new();
         let mut keys: Vec<(Model, u64, u64, u64)> = Vec::new();
         let mut comp_of: Vec<usize> = Vec::with_capacity(n);
         for i in 0..n {
@@ -381,12 +381,12 @@ impl ClusterSpec {
                 Some(p) => p,
                 None => {
                     keys.push(key);
-                    compiled.push(CompiledTrace::compile(
+                    compiled.push(Arc::new(CompiledTrace::compile(
                         &w.graph,
                         &w.trace,
                         spec.compute_gflops,
                         cfg.profiling_fault_ns,
-                    ));
+                    )));
                     keys.len() - 1
                 }
             };
@@ -399,8 +399,8 @@ impl ClusterSpec {
         for i in 0..n {
             let w = &workloads[i];
             cluster_tenants.push(ClusterTenant {
-                graph: &w.graph,
-                compiled: &compiled[comp_of[i]],
+                workload: Arc::clone(w),
+                compiled: Arc::clone(&compiled[comp_of[i]]),
                 policy: resolved[i].kind.construct(&w.graph, &w.trace, specs[i]),
                 config: configs[i],
                 machine: Machine::new(specs[i]),
@@ -516,12 +516,12 @@ impl ClusterSpec {
 /// Everything a solo-baseline simulation depends on: model, graph seed,
 /// the policy (its `Debug` rendering covers ablation configs), step
 /// count, and the machine's total fast bytes.
-type SoloKey = (Model, u64, String, u32, u64);
+pub(crate) type SoloKey = (Model, u64, String, u32, u64);
 
 /// Cached value: the solo `TrainResult` plus the solo run's own warm-up
 /// step count (tuning length can differ between the solo and the
 /// contended run of the same policy).
-type SoloValue = (TrainResult, u32);
+pub(crate) type SoloValue = (TrainResult, u32);
 
 /// One cache slot: a per-key `OnceLock`, so concurrent first requests
 /// for the *same* key block on one computation while different keys
@@ -533,8 +533,10 @@ type SoloSlot = Arc<OnceLock<SoloValue>>;
 static SOLO_CACHE: OnceLock<Mutex<HashMap<SoloKey, SoloSlot>>> = OnceLock::new();
 
 /// The solo baseline for `key`, computed by `run` on the first request
-/// and served from the process-wide cache thereafter.
-fn solo_baseline(key: SoloKey, run: impl FnOnce() -> SoloValue) -> SoloValue {
+/// and served from the process-wide cache thereafter. `pub(crate)` so
+/// the fleet layer's slowdown-vs-solo accounting shares this cache with
+/// cluster runs (a fleet tenant's baseline is the same simulation).
+pub(crate) fn solo_baseline(key: SoloKey, run: impl FnOnce() -> SoloValue) -> SoloValue {
     let cache = SOLO_CACHE.get_or_init(|| Mutex::new(HashMap::new()));
     let slot: SoloSlot = {
         let mut map = cache.lock().unwrap();
@@ -550,23 +552,6 @@ fn solo_baseline(key: SoloKey, run: impl FnOnce() -> SoloValue) -> SoloValue {
 pub fn clear_solo_baseline_cache() {
     if let Some(cache) = SOLO_CACHE.get() {
         cache.lock().unwrap().clear();
-    }
-}
-
-/// Initial per-tenant shares of `total` fast bytes. Static: an even
-/// split. Proportional (and the priority arbiter's starting point):
-/// sized by each tenant's reported peak.
-fn initial_shares(arb: Arbitration, total: u64, peaks: &[u64]) -> Vec<u64> {
-    let n = peaks.len().max(1) as u64;
-    match arb {
-        Arbitration::StaticPartition => peaks.iter().map(|_| (total / n).max(1)).collect(),
-        Arbitration::ProportionalByPeak | Arbitration::Priority => {
-            let sum: u128 = peaks.iter().map(|&p| p as u128).sum::<u128>().max(1);
-            peaks
-                .iter()
-                .map(|&p| ((total as u128 * p as u128 / sum) as u64).max(1))
-                .collect()
-        }
     }
 }
 
@@ -838,9 +823,9 @@ mod tests {
     #[test]
     fn static_shares_split_evenly_and_proportional_follow_peaks() {
         let peaks = [100u64 << 20, 300 << 20];
-        let s = initial_shares(Arbitration::StaticPartition, 200 << 20, &peaks);
+        let s = arbitration_shares(Arbitration::StaticPartition, 200 << 20, &peaks);
         assert_eq!(s, vec![100 << 20, 100 << 20]);
-        let p = initial_shares(Arbitration::ProportionalByPeak, 200 << 20, &peaks);
+        let p = arbitration_shares(Arbitration::ProportionalByPeak, 200 << 20, &peaks);
         assert_eq!(p, vec![50 << 20, 150 << 20]);
         assert!(p.iter().sum::<u64>() <= 200 << 20);
     }

@@ -1,0 +1,981 @@
+//! Fleet-scale serving experiments: the declarative layer over
+//! [`crate::sim::fleet`].
+//!
+//! A [`FleetSpec`] describes an *open-loop* serving scenario: jobs
+//! arrive by a seeded Poisson process whose rate follows a diurnal
+//! curve, each job drawn from a training/inference mix over the model
+//! zoo, and the fleet places them onto an (optionally autoscaled) pool
+//! of heterogeneous-memory machines under an [`Admission`] policy.
+//! [`FleetSpec::run`] generates the workload, builds each distinct
+//! workload/trace once through the process-wide caches, drives
+//! [`run_fleet`], attaches slowdown-vs-solo to every completed tenant
+//! (baselines come from the same cache [`ClusterSpec`][csp] runs use),
+//! and packages fleet observability: p50/p99 slowdown, utilization over
+//! virtual time, admission and autoscale counters, and seal-thrash
+//! totals.
+//!
+//! [csp]: crate::api::ClusterSpec
+//!
+//! ```no_run
+//! use sentinel_hm::api::{Admission, FleetSpec};
+//!
+//! let out = FleetSpec::new()
+//!     .tenants(500)
+//!     .rate_per_s(0.8)
+//!     .machines(4)
+//!     .admission(Admission::Queue)
+//!     .run()
+//!     .unwrap();
+//! println!("p99 slowdown {:.3}x, {} rejected", out.p99_slowdown, out.rejected);
+//! println!("{}", out.to_json());
+//! ```
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::api::batch::{default_threads, par_map};
+use crate::api::cluster::{solo_baseline, SoloKey};
+use crate::api::json::{Arr, Obj};
+use crate::api::policy::PolicyKind;
+use crate::api::spec::DEFAULT_SEED;
+use crate::api::workload::shared_workload;
+use crate::coordinator::sentinel::SentinelPolicy;
+use crate::dnn::workload::Workload;
+use crate::dnn::zoo::Model;
+use crate::sim::cluster::ClusterTenant;
+use crate::sim::fleet::{
+    run_fleet, FleetArrival, FleetConfig, FleetMachineStats, UtilSample,
+};
+use crate::sim::replay::CompiledTrace;
+use crate::sim::{Engine, Machine, TrainResult};
+use crate::util::table::{fmt_bytes, Table};
+use crate::util::Rng;
+use crate::PAGE_SIZE;
+
+pub use crate::sim::cluster::Arbitration;
+pub use crate::sim::fleet::{Admission, Autoscale};
+
+/// Every solo baseline runs this many steps, whatever the fleet job ran:
+/// steady-state throughput does not depend on the step count, and a
+/// canonical length collapses 10k jobs' baselines onto a handful of
+/// cache entries (one per distinct model × policy).
+const SOLO_STEPS: u32 = 12;
+
+/// What a generated job does for a living — decides its model pool,
+/// policy, length, priority, and declared fast-memory demand.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum JobClass {
+    /// Long job, large footprint, Sentinel-managed: the paper's subject.
+    Training,
+    /// Short job, small footprint, latency-sensitive (higher priority).
+    Inference,
+}
+
+impl JobClass {
+    /// Lowercase display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobClass::Training => "training",
+            JobClass::Inference => "inference",
+        }
+    }
+
+    /// Declared fast-memory demand as a fraction of the model's reported
+    /// peak: what admission control charges against machine capacity.
+    /// Training jobs promise more residency than inference jobs.
+    fn demand_fraction(&self) -> f64 {
+        match self {
+            JobClass::Training => 0.2,
+            JobClass::Inference => 0.1,
+        }
+    }
+}
+
+impl std::fmt::Display for JobClass {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+/// One fully-specified job offered to the fleet. [`FleetSpec::run`]
+/// normally generates these from the seeded arrival process; tests and
+/// embedders can inject an explicit list with [`FleetSpec::with_jobs`].
+#[derive(Clone, Debug)]
+pub struct FleetJob {
+    /// Stable job id (results are reported against it).
+    pub id: u64,
+    /// Arrival time on the fleet's virtual clock (ns).
+    pub arrival_ns: f64,
+    /// Zoo model the job trains or serves.
+    pub model: Model,
+    /// Data-management policy the job runs under (fast-only/slow-only
+    /// are rejected — they bypass arbitration).
+    pub policy: PolicyKind,
+    /// Training steps the job simulates (≥ 1).
+    pub steps: u32,
+    /// Scheduling priority (higher preempts lower under
+    /// [`Arbitration::Priority`]).
+    pub priority: u32,
+    /// Job class: sizes the declared demand and labels the row.
+    pub class: JobClass,
+}
+
+/// Errors a fleet spec can fail with.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FleetError {
+    /// The spec offers no jobs (zero tenants and no injected list).
+    NoJobs,
+    /// The machine pool is empty.
+    NoMachines,
+    /// A machine's fast tier is zero bytes.
+    ZeroFast,
+    /// The arrival rate is not positive and finite.
+    BadRate(String),
+    /// The diurnal amplitude is outside [0, 1].
+    BadAmplitude(String),
+    /// The diurnal period is not positive.
+    BadPeriod(String),
+    /// The training fraction is outside [0, 1].
+    BadFraction(String),
+    /// An injected job has zero steps.
+    ZeroSteps(u64),
+    /// An injected job's policy bypasses fast-memory arbitration.
+    UnmanagedPolicy(String),
+}
+
+impl std::fmt::Display for FleetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FleetError::NoJobs => write!(f, "a fleet needs at least 1 job"),
+            FleetError::NoMachines => write!(f, "a fleet needs at least 1 machine"),
+            FleetError::ZeroFast => write!(f, "machines need a non-zero fast tier"),
+            FleetError::BadRate(m) => write!(f, "bad arrival rate: {m}"),
+            FleetError::BadAmplitude(m) => write!(f, "bad diurnal amplitude: {m}"),
+            FleetError::BadPeriod(m) => write!(f, "bad diurnal period: {m}"),
+            FleetError::BadFraction(m) => write!(f, "bad training fraction: {m}"),
+            FleetError::ZeroSteps(id) => write!(f, "job {id} has 0 steps"),
+            FleetError::UnmanagedPolicy(p) => write!(
+                f,
+                "policy '{p}' bypasses fast-memory arbitration and cannot be a fleet job \
+                 (pick a managed policy: sentinel, mi:<K>, ial, lru)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for FleetError {}
+
+/// A declarative fleet-serving experiment. Build with the fluent
+/// setters, execute with [`FleetSpec::run`].
+#[derive(Clone, Debug)]
+pub struct FleetSpec {
+    seed: u64,
+    tenants: usize,
+    rate_per_s: f64,
+    diurnal_amplitude: f64,
+    diurnal_period_s: f64,
+    training_fraction: f64,
+    machines: usize,
+    machine_fast_bytes: u64,
+    arbitration: Arbitration,
+    admission: Admission,
+    autoscale: Option<Autoscale>,
+    threads: usize,
+    jobs: Option<Vec<FleetJob>>,
+}
+
+impl Default for FleetSpec {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FleetSpec {
+    /// Defaults: 200 tenants at 0.4 jobs/s (diurnal amplitude 0.5,
+    /// period 600 s), 35% training, 2 machines of 4 GiB fast each,
+    /// static partitioning, queueing admission, no autoscale,
+    /// [`DEFAULT_SEED`].
+    pub fn new() -> Self {
+        FleetSpec {
+            seed: DEFAULT_SEED,
+            tenants: 200,
+            rate_per_s: 0.4,
+            diurnal_amplitude: 0.5,
+            diurnal_period_s: 600.0,
+            training_fraction: 0.35,
+            machines: 2,
+            machine_fast_bytes: 4 << 30,
+            arbitration: Arbitration::StaticPartition,
+            admission: Admission::Queue,
+            autoscale: None,
+            threads: 0,
+            jobs: None,
+        }
+    }
+
+    /// Graph seed *and* workload-generator seed (default:
+    /// [`DEFAULT_SEED`]). Same seed + same spec ⇒ bit-identical outcome.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// How many jobs the arrival process generates (default: 200).
+    pub fn tenants(mut self, tenants: usize) -> Self {
+        self.tenants = tenants;
+        self
+    }
+
+    /// Mean arrival rate in jobs per virtual second (default: 0.4).
+    pub fn rate_per_s(mut self, rate: f64) -> Self {
+        self.rate_per_s = rate;
+        self
+    }
+
+    /// Diurnal rate curve: the instantaneous rate is
+    /// `rate · (1 + amplitude · sin(2πt / period))`, sampled by Poisson
+    /// thinning (default: amplitude 0.5, period 600 s).
+    pub fn diurnal(mut self, amplitude: f64, period_s: f64) -> Self {
+        self.diurnal_amplitude = amplitude;
+        self.diurnal_period_s = period_s;
+        self
+    }
+
+    /// Fraction of jobs that are training jobs (default: 0.35); the
+    /// rest are inference jobs.
+    pub fn training_fraction(mut self, fraction: f64) -> Self {
+        self.training_fraction = fraction;
+        self
+    }
+
+    /// Machines in the pool at start (default: 2).
+    pub fn machines(mut self, machines: usize) -> Self {
+        self.machines = machines;
+        self
+    }
+
+    /// Fast-tier bytes per machine (default: 4 GiB).
+    pub fn machine_fast_bytes(mut self, bytes: u64) -> Self {
+        self.machine_fast_bytes = bytes;
+        self
+    }
+
+    /// Per-machine fast-memory arbitration (default: static partition).
+    pub fn arbitration(mut self, arbitration: Arbitration) -> Self {
+        self.arbitration = arbitration;
+        self
+    }
+
+    /// What happens to jobs that fit nowhere (default: queue).
+    pub fn admission(mut self, admission: Admission) -> Self {
+        self.admission = admission;
+        self
+    }
+
+    /// Autoscale the pool on sustained fast-memory pressure (default:
+    /// fixed pool).
+    pub fn autoscale(mut self, autoscale: Autoscale) -> Self {
+        self.autoscale = Some(autoscale);
+        self
+    }
+
+    /// Worker threads for the per-round machine fan-out; 0 means one
+    /// per core (default: 0). The outcome is bit-identical for any
+    /// value.
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    /// Bypass the generator and offer exactly these jobs — the parity
+    /// and determinism tests' hook, and an embedder's replay input.
+    pub fn with_jobs(mut self, jobs: Vec<FleetJob>) -> Self {
+        self.jobs = Some(jobs);
+        self
+    }
+
+    /// Check everything that can be checked without building graphs.
+    pub fn validate(&self) -> Result<(), FleetError> {
+        if self.machines == 0 {
+            return Err(FleetError::NoMachines);
+        }
+        if self.machine_fast_bytes == 0 {
+            return Err(FleetError::ZeroFast);
+        }
+        match &self.jobs {
+            Some(jobs) => {
+                if jobs.is_empty() {
+                    return Err(FleetError::NoJobs);
+                }
+                for j in jobs {
+                    if j.steps == 0 {
+                        return Err(FleetError::ZeroSteps(j.id));
+                    }
+                    if matches!(j.policy, PolicyKind::FastOnly | PolicyKind::SlowOnly) {
+                        return Err(FleetError::UnmanagedPolicy(j.policy.name()));
+                    }
+                }
+            }
+            None => {
+                if self.tenants == 0 {
+                    return Err(FleetError::NoJobs);
+                }
+                if !(self.rate_per_s.is_finite() && self.rate_per_s > 0.0) {
+                    return Err(FleetError::BadRate(format!("{}", self.rate_per_s)));
+                }
+                if !(0.0..=1.0).contains(&self.diurnal_amplitude) {
+                    return Err(FleetError::BadAmplitude(format!("{}", self.diurnal_amplitude)));
+                }
+                if !(self.diurnal_period_s.is_finite() && self.diurnal_period_s > 0.0) {
+                    return Err(FleetError::BadPeriod(format!("{}", self.diurnal_period_s)));
+                }
+                if !(0.0..=1.0).contains(&self.training_fraction) {
+                    return Err(FleetError::BadFraction(format!("{}", self.training_fraction)));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Generate the job list from the seeded arrival process: Poisson
+    /// arrivals thinned against the diurnal rate curve, each job drawn
+    /// from the training/inference mix. Pure function of the spec — the
+    /// same spec always generates the same jobs.
+    pub fn generate_jobs(&self) -> Vec<FleetJob> {
+        // A generator-private stream: perturbing the seed keeps job
+        // randomness decoupled from the graph builder's use of the same
+        // user-facing seed.
+        let mut rng = Rng::new(self.seed ^ 0x5EED_F1EE7);
+        let lambda_max = self.rate_per_s * (1.0 + self.diurnal_amplitude);
+        let omega = std::f64::consts::TAU / self.diurnal_period_s;
+        let training_models = [Model::Dcgan, Model::ResNetV1 { depth: 32 }, Model::Lstm];
+        let inference_models = [Model::MobileNet, Model::ResNetV1 { depth: 32 }];
+        let intervals: [u32; 3] = [2, 4, 8];
+        let mut t_s = 0.0f64;
+        let mut jobs = Vec::with_capacity(self.tenants);
+        for id in 0..self.tenants as u64 {
+            // Thinning: draw from the homogeneous λ_max process, accept
+            // with probability rate(t)/λ_max.
+            loop {
+                t_s += -(1.0 - rng.f64()).ln() / lambda_max;
+                let rate_t =
+                    self.rate_per_s * (1.0 + self.diurnal_amplitude * (omega * t_s).sin());
+                if rng.f64() < rate_t / lambda_max {
+                    break;
+                }
+            }
+            let job = if rng.chance(self.training_fraction) {
+                let model = *rng.choose(&training_models);
+                // Mostly full Sentinel; a slice of fixed-MI jobs keeps
+                // the ablation path exercised at fleet scale.
+                let policy = if rng.chance(0.7) {
+                    PolicyKind::Sentinel(Default::default())
+                } else {
+                    PolicyKind::StaticInterval(*rng.choose(&intervals))
+                };
+                let steps = rng.log_uniform(8.0, 120.0).round().max(1.0) as u32;
+                // A few urgent training jobs outrank even inference.
+                let priority = if rng.chance(0.1) { 2 } else { 0 };
+                FleetJob {
+                    id,
+                    arrival_ns: t_s * 1e9,
+                    model,
+                    policy,
+                    steps,
+                    priority,
+                    class: JobClass::Training,
+                }
+            } else {
+                FleetJob {
+                    id,
+                    arrival_ns: t_s * 1e9,
+                    model: *rng.choose(&inference_models),
+                    policy: PolicyKind::Lru,
+                    steps: rng.log_uniform(3.0, 16.0).round().max(1.0) as u32,
+                    priority: 1,
+                    class: JobClass::Inference,
+                }
+            };
+            jobs.push(job);
+        }
+        jobs
+    }
+
+    /// Execute the fleet: generate (or take) the jobs, build each
+    /// distinct workload and compiled trace once, drive the event loop,
+    /// attach slowdown-vs-solo to every completed tenant, and package
+    /// the fleet-level observability.
+    pub fn run(&self) -> Result<FleetOutcome, FleetError> {
+        self.validate()?;
+        let jobs = match &self.jobs {
+            Some(j) => j.clone(),
+            None => self.generate_jobs(),
+        };
+        let threads = if self.threads == 0 { default_threads() } else { self.threads };
+
+        // Distinct workloads once (process-wide cache), distinct traces
+        // compiled once — keyed exactly as the cluster layer keys them
+        // (compute rate and profiling fault cost are what lowering
+        // reads, and neither depends on the fast-tier size).
+        let mut workloads: HashMap<Model, Arc<Workload>> = HashMap::new();
+        for j in &jobs {
+            workloads
+                .entry(j.model)
+                .or_insert_with(|| shared_workload(j.model, self.seed));
+        }
+        let mut comp_keys: Vec<(Model, u64, u64)> = Vec::new();
+        let mut compiled: Vec<Arc<CompiledTrace>> = Vec::new();
+        let mut comp_of: Vec<usize> = Vec::with_capacity(jobs.len());
+        for j in &jobs {
+            let w = &workloads[&j.model];
+            let spec = j.policy.machine_spec(&w.graph, &w.trace, self.machine_fast_bytes);
+            let cfg = j.policy.engine_config(j.steps);
+            let key = (j.model, spec.compute_gflops.to_bits(), cfg.profiling_fault_ns.to_bits());
+            let idx = match comp_keys.iter().position(|k| *k == key) {
+                Some(p) => p,
+                None => {
+                    comp_keys.push(key);
+                    compiled.push(Arc::new(CompiledTrace::compile(
+                        &w.graph,
+                        &w.trace,
+                        spec.compute_gflops,
+                        cfg.profiling_fault_ns,
+                    )));
+                    comp_keys.len() - 1
+                }
+            };
+            comp_of.push(idx);
+        }
+
+        let arrivals: Vec<FleetArrival> = jobs
+            .iter()
+            .enumerate()
+            .map(|(i, j)| {
+                let peak = j.model.peak_memory_target();
+                let demand = ((peak as f64 * j.class.demand_fraction()) as u64)
+                    .clamp(PAGE_SIZE, self.machine_fast_bytes)
+                    / PAGE_SIZE
+                    * PAGE_SIZE;
+                let w = Arc::clone(&workloads[&j.model]);
+                let comp = Arc::clone(&compiled[comp_of[i]]);
+                let (kind, steps, priority) = (j.policy, j.steps, j.priority);
+                FleetArrival {
+                    id: j.id,
+                    arrival_ns: j.arrival_ns,
+                    demand_bytes: demand.max(PAGE_SIZE),
+                    peak_bytes: peak,
+                    priority,
+                    build: Box::new(move |share| {
+                        let spec = kind.machine_spec(&w.graph, &w.trace, share);
+                        ClusterTenant {
+                            policy: kind.construct(&w.graph, &w.trace, spec),
+                            config: kind.engine_config(steps),
+                            machine: Machine::new(spec),
+                            priority,
+                            share,
+                            workload: w,
+                            compiled: comp,
+                        }
+                    }),
+                }
+            })
+            .collect();
+
+        let sim = run_fleet(
+            arrivals,
+            FleetConfig {
+                machines: self.machines,
+                machine_fast_bytes: self.machine_fast_bytes,
+                arbitration: self.arbitration,
+                admission: self.admission,
+                autoscale: self.autoscale,
+                threads,
+            },
+        );
+
+        // Solo baselines for every distinct (model, policy) at canonical
+        // length with a whole machine's fast tier — the same cache
+        // cluster runs fill, so a fleet sweep after a cluster sweep pays
+        // nothing here.
+        let job_of: HashMap<u64, &FleetJob> = jobs.iter().map(|j| (j.id, j)).collect();
+        let mut solo_keys: Vec<(Model, PolicyKind)> = Vec::new();
+        for d in &sim.completed {
+            let j = job_of[&d.tenant_id];
+            if !solo_keys.iter().any(|(m, k)| *m == j.model && *k == j.policy) {
+                solo_keys.push((j.model, j.policy));
+            }
+        }
+        let solos: Vec<(TrainResult, u32)> =
+            par_map(&solo_keys, default_threads().min(solo_keys.len().max(1)), |&(model, kind)| {
+                let key: SoloKey = (
+                    model,
+                    self.seed,
+                    format!("{kind:?}"),
+                    SOLO_STEPS,
+                    self.machine_fast_bytes,
+                );
+                let w = Arc::clone(&workloads[&model]);
+                solo_baseline(key, || {
+                    let spec = kind.machine_spec(&w.graph, &w.trace, self.machine_fast_bytes);
+                    let cfg = kind.engine_config(SOLO_STEPS);
+                    let comp = CompiledTrace::compile(
+                        &w.graph,
+                        &w.trace,
+                        spec.compute_gflops,
+                        cfg.profiling_fault_ns,
+                    );
+                    let mut machine = Machine::new(spec);
+                    let mut policy = kind.construct(&w.graph, &w.trace, spec);
+                    let engine = Engine::new(cfg);
+                    let r = engine.run_compiled(&w.graph, &comp, &mut machine, policy.as_mut());
+                    let warmup = match policy.as_any().downcast_ref::<SentinelPolicy>() {
+                        Some(p) => p.tuning_steps(),
+                        None => kind.default_warmup(),
+                    };
+                    (r, warmup)
+                })
+            });
+        let solo_of = |model: Model, kind: PolicyKind| -> &(TrainResult, u32) {
+            let i = solo_keys
+                .iter()
+                .position(|(m, k)| *m == model && *k == kind)
+                .expect("every completed job has a baseline");
+            &solos[i]
+        };
+
+        let mut tenants: Vec<FleetTenantSummary> = Vec::with_capacity(sim.completed.len());
+        let mut seal_invalidations = 0u64;
+        let mut seal_segments = 0u64;
+        let mut pages_force_demoted = 0u64;
+        for d in sim.completed {
+            let j = job_of[&d.tenant_id];
+            let warmup = match d.result.policy.as_any().downcast_ref::<SentinelPolicy>() {
+                Some(p) => p.tuning_steps(),
+                None => j.policy.default_warmup(),
+            };
+            let thr = d.result.result.throughput(warmup as usize);
+            let (solo_r, solo_warmup) = solo_of(j.model, j.policy);
+            let solo_thr = solo_r.throughput(*solo_warmup as usize);
+            let slowdown = if thr > 0.0 && solo_thr > 0.0 { solo_thr / thr } else { f64::NAN };
+            seal_invalidations += d.result.seal_invalidations;
+            seal_segments += d.result.seal_segments;
+            pages_force_demoted += d.result.pages_force_demoted;
+            tenants.push(FleetTenantSummary {
+                id: d.tenant_id,
+                model: j.model.name(),
+                policy: j.policy.name(),
+                class: j.class,
+                priority: j.priority,
+                steps: j.steps,
+                arrival_ns: d.arrival_ns,
+                join_ns: d.join_ns,
+                finish_ns: d.finish_ns,
+                machine: d.machine,
+                share_initial: d.result.share_initial,
+                share_final: d.result.share_final,
+                slowdown_vs_solo: slowdown,
+                seal_invalidations: d.result.seal_invalidations,
+                seal_segments: d.result.seal_segments,
+                pages_force_demoted: d.result.pages_force_demoted,
+                result: d.result.result,
+            });
+        }
+
+        let mut slowdowns: Vec<f64> = tenants
+            .iter()
+            .map(|t| t.slowdown_vs_solo)
+            .filter(|s| s.is_finite())
+            .collect();
+        slowdowns.sort_by(f64::total_cmp);
+        let used_peak = sim.samples.iter().map(|s| s.used_frac).fold(0.0f64, f64::max);
+        let used_mean = if sim.samples.is_empty() {
+            0.0
+        } else {
+            sim.samples.iter().map(|s| s.used_frac).sum::<f64>() / sim.samples.len() as f64
+        };
+
+        Ok(FleetOutcome {
+            seed: self.seed,
+            arbitration: self.arbitration,
+            admission: self.admission,
+            autoscale: self.autoscale,
+            machines_initial: self.machines,
+            machine_fast_bytes: self.machine_fast_bytes,
+            jobs_offered: jobs.len(),
+            completed: tenants.len(),
+            rejected: sim.rejected.len(),
+            spilled: sim.spilled,
+            queued_jobs: sim.queued_jobs,
+            peak_queue_depth: sim.peak_queue_depth,
+            mean_queue_wait_ns: if sim.queued_jobs > 0 {
+                sim.total_queue_wait_ns / sim.queued_jobs as f64
+            } else {
+                0.0
+            },
+            scale_ups: sim.scale_ups,
+            scale_downs: sim.scale_downs,
+            makespan_ns: sim.makespan_ns,
+            fleet_events: sim.fleet_events,
+            p50_slowdown: percentile(&slowdowns, 0.50),
+            p99_slowdown: percentile(&slowdowns, 0.99),
+            max_slowdown: slowdowns.last().copied().unwrap_or(f64::NAN),
+            seal_invalidations,
+            seal_segments,
+            pages_force_demoted,
+            peak_fast_utilization: used_peak,
+            mean_fast_utilization: used_mean,
+            tenants,
+            machines: sim.machines,
+            samples: sim.samples,
+        })
+    }
+}
+
+/// Nearest-rank percentile over an ascending-sorted slice (NaN when
+/// empty). `q` in [0, 1].
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let idx = (q * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// One completed fleet tenant: identity, placement timeline, and the
+/// contention accounting against its solo baseline.
+#[derive(Clone, Debug)]
+pub struct FleetTenantSummary {
+    /// Job id.
+    pub id: u64,
+    /// Model display name.
+    pub model: String,
+    /// Registry name of the policy.
+    pub policy: String,
+    /// Training or inference.
+    pub class: JobClass,
+    /// Scheduling priority the job ran with.
+    pub priority: u32,
+    /// Training steps simulated.
+    pub steps: u32,
+    /// When the job was offered (ns, fleet clock).
+    pub arrival_ns: f64,
+    /// When the job was placed (ns; > `arrival_ns` means it queued).
+    pub join_ns: f64,
+    /// When the job finished (ns, fleet clock).
+    pub finish_ns: f64,
+    /// Machine index it ran on.
+    pub machine: usize,
+    /// Fast-memory share at join (bytes).
+    pub share_initial: u64,
+    /// Fast-memory share at finish (bytes).
+    pub share_final: u64,
+    /// Solo throughput over co-scheduled throughput (NaN when either
+    /// run is too short for a steady state).
+    pub slowdown_vs_solo: f64,
+    /// Times churn or preemption invalidated this tenant's sealed
+    /// schedule.
+    pub seal_invalidations: u64,
+    /// Times this tenant sealed a steady-state schedule.
+    pub seal_segments: u64,
+    /// Pages force-demoted out of this tenant's share by re-arbitration.
+    pub pages_force_demoted: u64,
+    /// The engine's full per-step record.
+    pub result: TrainResult,
+}
+
+/// Everything one fleet run produced.
+#[derive(Clone, Debug)]
+pub struct FleetOutcome {
+    /// Seed the workload and graphs were generated from.
+    pub seed: u64,
+    /// Per-machine arbitration policy.
+    pub arbitration: Arbitration,
+    /// Admission policy.
+    pub admission: Admission,
+    /// Autoscale rule, if the pool scaled.
+    pub autoscale: Option<Autoscale>,
+    /// Machines in the pool at start.
+    pub machines_initial: usize,
+    /// Fast-tier bytes per machine.
+    pub machine_fast_bytes: u64,
+    /// Jobs offered to the fleet.
+    pub jobs_offered: usize,
+    /// Jobs that ran to completion.
+    pub completed: usize,
+    /// Jobs turned away.
+    pub rejected: usize,
+    /// Jobs placed by oversubscription.
+    pub spilled: u64,
+    /// Jobs that waited in the queue.
+    pub queued_jobs: u64,
+    /// Deepest the queue ever got.
+    pub peak_queue_depth: usize,
+    /// Mean queue wait among jobs that queued (ns).
+    pub mean_queue_wait_ns: f64,
+    /// Machines the autoscaler added.
+    pub scale_ups: u64,
+    /// Machines the autoscaler retired.
+    pub scale_downs: u64,
+    /// When the last job finished (ns).
+    pub makespan_ns: f64,
+    /// Fleet event rounds processed.
+    pub fleet_events: u64,
+    /// Median slowdown-vs-solo across completed jobs with a steady
+    /// state.
+    pub p50_slowdown: f64,
+    /// 99th-percentile slowdown-vs-solo (nearest rank).
+    pub p99_slowdown: f64,
+    /// Worst slowdown-vs-solo.
+    pub max_slowdown: f64,
+    /// Total sealed-schedule invalidations across tenants — the churn
+    /// seal-thrash counter.
+    pub seal_invalidations: u64,
+    /// Total schedules sealed across tenants.
+    pub seal_segments: u64,
+    /// Total pages force-demoted by re-arbitration across tenants.
+    pub pages_force_demoted: u64,
+    /// Largest fleet-wide fast-memory residency fraction sampled.
+    pub peak_fast_utilization: f64,
+    /// Mean fast-memory residency fraction across event samples.
+    pub mean_fast_utilization: f64,
+    /// Every completed tenant, sorted by job id.
+    pub tenants: Vec<FleetTenantSummary>,
+    /// Per-machine lifetime stats, pool order.
+    pub machines: Vec<FleetMachineStats>,
+    /// Utilization over virtual time, one sample per fleet event.
+    pub samples: Vec<UtilSample>,
+}
+
+impl FleetOutcome {
+    /// Serialize the outcome to JSON: fleet aggregates, per-machine
+    /// stats, and the utilization curve downsampled to ≤ 200 points
+    /// (per-tenant rows are omitted — at 10k tenants they dwarf
+    /// everything; [`FleetOutcome::tenants_digest`] covers them for
+    /// determinism checks).
+    pub fn to_json(&self) -> String {
+        let autoscale = match self.autoscale {
+            Some(a) => Obj::new()
+                .field_u64("min_machines", a.min_machines as u64)
+                .field_u64("max_machines", a.max_machines as u64)
+                .field_f64("grow_above", a.grow_above)
+                .field_f64("shrink_below", a.shrink_below)
+                .field_u64("sustain_events", a.sustain_events as u64)
+                .end(),
+            None => "null".into(),
+        };
+        let mut machines = Arr::new();
+        for m in &self.machines {
+            let row = Obj::new()
+                .field_u64("fast_bytes", m.fast_bytes)
+                .field_u64("tenants_served", m.tenants_served)
+                .field_u64("peak_residents", m.peak_residents as u64)
+                .field_u64("peak_share_bytes", m.peak_share_bytes)
+                .field_u64("peak_committed_bytes", m.peak_committed_bytes)
+                .field_bool("retired", m.retired)
+                .end();
+            machines = machines.push_raw(&row);
+        }
+        let stride = (self.samples.len() / 200).max(1);
+        let mut samples = Arr::new();
+        for (i, s) in self.samples.iter().enumerate() {
+            if i % stride != 0 && i + 1 != self.samples.len() {
+                continue;
+            }
+            let row = Obj::new()
+                .field_f64("t_ns", s.t_ns)
+                .field_f64("used_frac", s.used_frac)
+                .field_f64("committed_frac", s.committed_frac)
+                .field_u64("queue_depth", s.queue_depth as u64)
+                .field_u64("machines_active", s.machines_active as u64)
+                .end();
+            samples = samples.push_raw(&row);
+        }
+        Obj::new()
+            .field_u64("seed", self.seed)
+            .field_str("arbitration", self.arbitration.name())
+            .field_str("admission", self.admission.name())
+            .field_raw("autoscale", &autoscale)
+            .field_u64("machines_initial", self.machines_initial as u64)
+            .field_u64("machine_fast_bytes", self.machine_fast_bytes)
+            .field_u64("jobs_offered", self.jobs_offered as u64)
+            .field_u64("completed", self.completed as u64)
+            .field_u64("rejected", self.rejected as u64)
+            .field_u64("spilled", self.spilled)
+            .field_u64("queued_jobs", self.queued_jobs)
+            .field_u64("peak_queue_depth", self.peak_queue_depth as u64)
+            .field_f64("mean_queue_wait_ns", self.mean_queue_wait_ns)
+            .field_u64("scale_ups", self.scale_ups)
+            .field_u64("scale_downs", self.scale_downs)
+            .field_f64("makespan_ns", self.makespan_ns)
+            .field_u64("fleet_events", self.fleet_events)
+            .field_f64("p50_slowdown_vs_solo", self.p50_slowdown)
+            .field_f64("p99_slowdown_vs_solo", self.p99_slowdown)
+            .field_f64("max_slowdown_vs_solo", self.max_slowdown)
+            .field_u64("seal_invalidations", self.seal_invalidations)
+            .field_u64("seal_segments", self.seal_segments)
+            .field_u64("pages_force_demoted", self.pages_force_demoted)
+            .field_f64("peak_fast_utilization", self.peak_fast_utilization)
+            .field_f64("mean_fast_utilization", self.mean_fast_utilization)
+            .field_u64("tenants_digest", self.tenants_digest())
+            .field_raw("machines", &machines.end())
+            .field_raw("samples", &samples.end())
+            .end()
+    }
+
+    /// Order-sensitive digest over every per-tenant row (placement
+    /// timeline and slowdown bits included): two runs produce the same
+    /// digest iff their full tenant tables are bit-identical. The
+    /// determinism suite compares this instead of serializing 10k rows.
+    pub fn tenants_digest(&self) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        let mut mix = |v: u64| {
+            h ^= v;
+            h = h.wrapping_mul(0x100_0000_01b3).rotate_left(17);
+        };
+        for t in &self.tenants {
+            mix(t.id);
+            mix(t.machine as u64);
+            mix(t.arrival_ns.to_bits());
+            mix(t.join_ns.to_bits());
+            mix(t.finish_ns.to_bits());
+            mix(t.share_initial);
+            mix(t.share_final);
+            mix(t.slowdown_vs_solo.to_bits());
+            mix(t.seal_invalidations);
+            mix(t.seal_segments);
+            mix(t.pages_force_demoted);
+            mix(t.result.total_time_ns.to_bits());
+        }
+        h
+    }
+
+    /// Render the fleet summary (the CLI's text output).
+    pub fn summary_table(&self) -> Table {
+        let mut t = Table::new(vec!["metric", "value"]);
+        t.row(vec!["jobs offered".into(), self.jobs_offered.to_string()]);
+        t.row(vec!["completed".into(), self.completed.to_string()]);
+        t.row(vec!["rejected".into(), self.rejected.to_string()]);
+        t.row(vec!["spilled".into(), self.spilled.to_string()]);
+        t.row(vec!["queued".into(), self.queued_jobs.to_string()]);
+        t.row(vec!["peak queue depth".into(), self.peak_queue_depth.to_string()]);
+        t.row(vec![
+            "mean queue wait".into(),
+            format!("{:.1} ms", self.mean_queue_wait_ns / 1e6),
+        ]);
+        t.row(vec![
+            "pool".into(),
+            format!(
+                "{} + {} up / {} down",
+                self.machines_initial, self.scale_ups, self.scale_downs
+            ),
+        ]);
+        t.row(vec!["machine fast".into(), fmt_bytes(self.machine_fast_bytes)]);
+        t.row(vec!["p50 slowdown".into(), format!("{:.3}x", self.p50_slowdown)]);
+        t.row(vec!["p99 slowdown".into(), format!("{:.3}x", self.p99_slowdown)]);
+        t.row(vec!["max slowdown".into(), format!("{:.3}x", self.max_slowdown)]);
+        t.row(vec![
+            "fast utilization".into(),
+            format!(
+                "peak {:.1}% / mean {:.1}%",
+                self.peak_fast_utilization * 100.0,
+                self.mean_fast_utilization * 100.0
+            ),
+        ]);
+        t.row(vec!["seal invalidations".into(), self.seal_invalidations.to_string()]);
+        t.row(vec!["seals written".into(), self.seal_segments.to_string()]);
+        t.row(vec!["pages force-demoted".into(), self.pages_force_demoted.to_string()]);
+        t.row(vec!["makespan".into(), format!("{:.2} s", self.makespan_ns / 1e9)]);
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::json;
+
+    #[test]
+    fn validation_catches_bad_specs() {
+        assert_eq!(FleetSpec::new().tenants(0).validate(), Err(FleetError::NoJobs));
+        assert_eq!(FleetSpec::new().machines(0).validate(), Err(FleetError::NoMachines));
+        assert_eq!(FleetSpec::new().machine_fast_bytes(0).validate(), Err(FleetError::ZeroFast));
+        assert!(matches!(
+            FleetSpec::new().rate_per_s(0.0).validate(),
+            Err(FleetError::BadRate(_))
+        ));
+        assert!(matches!(
+            FleetSpec::new().diurnal(1.5, 600.0).validate(),
+            Err(FleetError::BadAmplitude(_))
+        ));
+        assert!(matches!(
+            FleetSpec::new().diurnal(0.5, 0.0).validate(),
+            Err(FleetError::BadPeriod(_))
+        ));
+        assert!(matches!(
+            FleetSpec::new().training_fraction(2.0).validate(),
+            Err(FleetError::BadFraction(_))
+        ));
+        assert!(matches!(
+            FleetSpec::new()
+                .with_jobs(vec![FleetJob {
+                    id: 0,
+                    arrival_ns: 0.0,
+                    model: Model::Dcgan,
+                    policy: PolicyKind::FastOnly,
+                    steps: 3,
+                    priority: 0,
+                    class: JobClass::Inference,
+                }])
+                .validate(),
+            Err(FleetError::UnmanagedPolicy(_))
+        ));
+        assert!(FleetSpec::new().validate().is_ok());
+    }
+
+    #[test]
+    fn generator_is_deterministic_and_shaped() {
+        let spec = FleetSpec::new().tenants(64).seed(9);
+        let a = spec.generate_jobs();
+        let b = spec.generate_jobs();
+        assert_eq!(a.len(), 64);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.arrival_ns.to_bits(), y.arrival_ns.to_bits());
+            assert_eq!(x.model, y.model);
+            assert_eq!(x.steps, y.steps);
+        }
+        // Arrivals are strictly ordered and the mix has both classes.
+        for w in a.windows(2) {
+            assert!(w[0].arrival_ns <= w[1].arrival_ns);
+        }
+        assert!(a.iter().any(|j| j.class == JobClass::Training));
+        assert!(a.iter().any(|j| j.class == JobClass::Inference));
+        // Different seeds draw different workloads.
+        let c = FleetSpec::new().tenants(64).seed(10).generate_jobs();
+        assert!(a.iter().zip(&c).any(|(x, y)| x.arrival_ns != y.arrival_ns));
+    }
+
+    #[test]
+    fn small_fleet_runs_and_serializes() {
+        let out = FleetSpec::new()
+            .tenants(6)
+            .rate_per_s(2.0)
+            .machines(2)
+            .machine_fast_bytes(Model::Dcgan.peak_memory_target() / 2)
+            .admission(Admission::Queue)
+            .seed(11)
+            .run()
+            .unwrap();
+        assert_eq!(out.jobs_offered, 6);
+        assert_eq!(out.completed + out.rejected, 6);
+        assert_eq!(out.tenants.len(), out.completed);
+        assert!(out.makespan_ns > 0.0);
+        let j = out.to_json();
+        assert!(json::is_valid(&j), "{j}");
+        assert!(j.contains("\"p99_slowdown_vs_solo\""));
+        assert!(j.contains("\"tenants_digest\""));
+        assert!(!out.samples.is_empty());
+        let rendered = out.summary_table().render();
+        assert!(rendered.contains("p99 slowdown"));
+    }
+}

@@ -24,6 +24,12 @@
 //!   machine) against one shared machine under an [`Arbitration`]
 //!   policy, reporting per-tenant slowdown vs solo, occupancy over
 //!   time, and contention-attributable migration traffic.
+//! * [`fleet`] — open-loop serving at fleet scale: [`FleetSpec`]
+//!   generates a seeded arrival process (diurnal Poisson, heavy-tailed
+//!   job lengths, a training/inference mix over the zoo) and drives an
+//!   autoscaled pool of machines under an [`Admission`] policy,
+//!   reporting p50/p99 slowdown-vs-solo, utilization over virtual time,
+//!   queue/reject counters, and churn-driven seal thrash.
 //!
 //! ```no_run
 //! use sentinel_hm::api::{run_batch, PolicyKind, RunSpec};
@@ -50,16 +56,21 @@
 
 pub mod batch;
 pub mod cluster;
+pub mod fleet;
 pub mod json;
 pub mod outcome;
 pub mod policy;
 pub mod spec;
 pub mod workload;
 
-pub use batch::{default_threads, par_map, run_batch};
+pub use batch::{default_threads, par_map, par_map_mut, run_batch};
 pub use cluster::{
     clear_solo_baseline_cache, parse_tenant_list, Arbitration, ClusterError, ClusterOutcome,
     ClusterSpec, TenantOutcome, TenantSpec,
+};
+pub use fleet::{
+    Admission, Autoscale, FleetError, FleetJob, FleetOutcome, FleetSpec, FleetTenantSummary,
+    JobClass,
 };
 pub use outcome::{ProfileSummary, RunOutcome};
 pub use policy::PolicyKind;

@@ -19,24 +19,11 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::dnn::zoo::Model;
-use crate::dnn::{ModelGraph, StepTrace};
 
-/// A built workload: the seeded graph and its canonical step trace.
-#[derive(Debug)]
-pub struct Workload {
-    /// The seeded model graph.
-    pub graph: ModelGraph,
-    /// The canonical one-step trace derived from `graph`.
-    pub trace: StepTrace,
-}
-
-impl Workload {
-    /// Build from a graph (the uncached path for caller-supplied graphs).
-    pub fn from_graph(graph: ModelGraph) -> Self {
-        let trace = StepTrace::from_graph(&graph);
-        Workload { graph, trace }
-    }
-}
+// The struct itself lives in the dnn layer (`sim::cluster` and
+// `sim::fleet` own `Arc<Workload>`s per tenant and must not depend on
+// `api`); this module keeps the public path and adds the cache.
+pub use crate::dnn::workload::Workload;
 
 /// Hit/miss counters for the shared cache (observability + tests).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -101,6 +88,7 @@ pub fn clear_workload_cache() {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::dnn::StepTrace;
 
     /// The cache is process-global and the test harness is parallel:
     /// `clear_workload_cache` in one test would race the `Arc::ptr_eq`

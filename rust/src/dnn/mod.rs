@@ -18,9 +18,11 @@
 pub mod graph;
 pub mod layer;
 pub mod trace;
+pub mod workload;
 pub mod zoo;
 
 pub use graph::{GraphBuilder, ModelGraph};
 pub use layer::{Layer, LayerKind};
 pub use trace::{StepTrace, TraceEvent};
+pub use workload::Workload;
 pub use zoo::{build_model, model_names, Model};

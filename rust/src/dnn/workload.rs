@@ -1,0 +1,31 @@
+//! A built workload: a seeded [`ModelGraph`] plus its canonical
+//! [`StepTrace`], bundled so every layer of the stack can share one
+//! immutable allocation.
+//!
+//! The struct lives here (not in `api`) because the simulation layers
+//! also need to *own* workloads: `sim::cluster` and `sim::fleet` keep an
+//! `Arc<Workload>` per tenant so tenants can outlive the scope that
+//! built them (fleet tenants join and leave at runtime — a borrow would
+//! pin every workload to the driver's caller). The process-wide
+//! `(model, seed)` cache that hands out those `Arc`s stays in
+//! [`crate::api::workload`]; this module is only the data type.
+
+use crate::dnn::graph::ModelGraph;
+use crate::dnn::trace::StepTrace;
+
+/// A built workload: the seeded graph and its canonical step trace.
+#[derive(Debug)]
+pub struct Workload {
+    /// The seeded model graph.
+    pub graph: ModelGraph,
+    /// The canonical one-step trace derived from `graph`.
+    pub trace: StepTrace,
+}
+
+impl Workload {
+    /// Build from a graph (the uncached path for caller-supplied graphs).
+    pub fn from_graph(graph: ModelGraph) -> Self {
+        let trace = StepTrace::from_graph(&graph);
+        Workload { graph, trace }
+    }
+}

@@ -28,8 +28,8 @@
 //! | Fig. 13 (ResNet variants) | [`fig13_variants`] |
 
 use crate::api::{
-    default_threads, par_map, run_batch, shared_workload, Arbitration, ClusterSpec, PolicyKind,
-    RunSpec, TenantSpec,
+    default_threads, par_map, run_batch, shared_workload, Admission, Arbitration, ClusterSpec,
+    FleetSpec, PolicyKind, RunSpec, TenantSpec,
 };
 use crate::coordinator::sentinel::SentinelConfig;
 use crate::dnn::zoo::Model;
@@ -451,6 +451,66 @@ pub fn contention_table(counts: &[usize], pcts: &[u32], steps: u32) -> Table {
     t
 }
 
+/// Fleet churn sweep: the same open-loop serving scenario (seeded
+/// diurnal Poisson arrivals, training/inference mix, 2 machines of
+/// 2 GiB fast each) under every admission policy at each arrival rate.
+/// One row per (rate × admission): jobs completed/rejected/queued,
+/// p50/p99 slowdown vs solo, peak fast utilization, and the churn
+/// seal-thrash total.
+///
+/// Regenerate with `sentinel figure fleet` (see EXPERIMENTS.md §Fleet
+/// churn sweep for the expected shape: queueing trades wait time for a
+/// flat p99, spilling trades p99 for zero waiting, rejecting keeps both
+/// flat by shedding load).
+///
+/// Grid cells are independent fleet simulations and fan out across
+/// [`default_threads`] workers; each cell runs its own machine pool
+/// serially (`threads(1)`) so the pools don't nest.
+pub fn fleet_churn_table(rates: &[f64], admissions: &[Admission], tenants: usize) -> Table {
+    let cells: Vec<(f64, Admission)> = rates
+        .iter()
+        .flat_map(|&r| admissions.iter().map(move |&a| (r, a)))
+        .collect();
+    let run_cell = |&(rate, admission): &(f64, Admission)| {
+        FleetSpec::new()
+            .tenants(tenants)
+            .rate_per_s(rate)
+            .machines(2)
+            .machine_fast_bytes(2 << 30)
+            .admission(admission)
+            .threads(1)
+            .seed(seed())
+            .run()
+            .expect("fleet churn sweep")
+    };
+    let outs = par_map(&cells, default_threads(), run_cell);
+    let mut t = Table::new(vec![
+        "rate/s",
+        "admission",
+        "done",
+        "rejected",
+        "queued",
+        "p50 slowdown",
+        "p99 slowdown",
+        "peak util",
+        "seal thrash",
+    ]);
+    for ((rate, admission), out) in cells.iter().zip(&outs) {
+        t.row(vec![
+            format!("{rate:.2}"),
+            admission.name().to_string(),
+            out.completed.to_string(),
+            out.rejected.to_string(),
+            out.queued_jobs.to_string(),
+            format!("{:.3}", out.p50_slowdown),
+            format!("{:.3}", out.p99_slowdown),
+            format!("{:.1}%", out.peak_fast_utilization * 100.0),
+            out.seal_invalidations.to_string(),
+        ]);
+    }
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -474,6 +534,12 @@ mod tests {
     fn contention_table_has_one_row_per_grid_cell() {
         let t = contention_table(&[1, 2], &[30], 8);
         assert_eq!(t.rows().len(), 2 * 3, "counts × pcts × arbitrations");
+    }
+
+    #[test]
+    fn fleet_churn_table_has_one_row_per_grid_cell() {
+        let t = fleet_churn_table(&[0.5], &[Admission::Queue], 4);
+        assert_eq!(t.rows().len(), 1, "rates × admissions");
     }
 
     #[test]

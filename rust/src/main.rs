@@ -19,7 +19,9 @@
 use std::collections::HashMap;
 use std::process::ExitCode;
 
-use sentinel_hm::api::{json, parse_tenant_list, ClusterSpec, PolicyKind, RunSpec};
+use sentinel_hm::api::{
+    json, parse_tenant_list, Admission, Autoscale, ClusterSpec, FleetSpec, PolicyKind, RunSpec,
+};
 use sentinel_hm::dnn::zoo::{model_names, Model};
 use sentinel_hm::figures;
 use sentinel_hm::metrics::peak_memory_table;
@@ -38,6 +40,7 @@ fn main() -> ExitCode {
         "train" => cmd_train(&args),
         "sweep-mi" => cmd_sweep_mi(&args),
         "cluster" => cmd_cluster(&args),
+        "fleet" => cmd_fleet(&args),
         "compare" => cmd_compare(&args),
         "figure" => cmd_figure(&args),
         "e2e" => cmd_e2e(&args),
@@ -68,8 +71,12 @@ fn print_usage() {
            sentinel sweep-mi [--fast-mb 1024] [--json]\n\
            sentinel cluster --tenants <model[:policy][:prio][*N],...> [--arb static|proportional|priority]\n\
                             [--fast-pct 20|--fast-mb N] [--steps 14] [--seed S] [--json]\n\
+           sentinel fleet [--tenants 200] [--rate 0.4] [--amplitude 0.5] [--period 600] [--training-frac 0.35]\n\
+                          [--machines 2] [--fast-mb 4096] [--arb static|proportional|priority]\n\
+                          [--admission reject|queue|spill] [--autoscale] [--max-machines 64]\n\
+                          [--threads N] [--seed S] [--json]\n\
            sentinel compare [--steps 14] [--json]\n\
-           sentinel figure <1|2|3|4|7|8|10|11|12|13|t1|t4|t5|ct|all> [--steps N] [--fast-mb N] [--json]\n\
+           sentinel figure <1|2|3|4|7|8|10|11|12|13|t1|t4|t5|ct|fleet|all> [--steps N] [--fast-mb N] [--json]\n\
            sentinel e2e [--steps 300] [--artifacts artifacts] [--lr 0.05]   (needs the `pjrt` feature)\n\
            sentinel models [--json]\n\
          \n\
@@ -122,6 +129,13 @@ fn parse_opts(
 }
 
 fn opt_u64(opts: &Opts, key: &str, default: u64) -> Result<u64, String> {
+    match opts.get(key) {
+        None => Ok(default),
+        Some(v) => v.parse().map_err(|_| format!("--{key} wants a number, got '{v}'")),
+    }
+}
+
+fn opt_f64(opts: &Opts, key: &str, default: f64) -> Result<f64, String> {
     match opts.get(key) {
         None => Ok(default),
         Some(v) => v.parse().map_err(|_| format!("--{key} wants a number, got '{v}'")),
@@ -327,7 +341,7 @@ fn cmd_cluster(args: &[String]) -> Result<(), String> {
         spec = spec.tenant(t);
     }
     if let Some(a) = opts.get("arb") {
-        spec = spec.arbitration(a.parse()?);
+        spec = spec.arbitration(a.parse().map_err(|e| format!("{e}"))?);
     }
     if opts.contains_key("fast-mb") && opts.contains_key("fast-pct") {
         return Err("--fast-mb and --fast-pct both size fast memory; pass only one".into());
@@ -353,6 +367,69 @@ fn cmd_cluster(args: &[String]) -> Result<(), String> {
         out.arbitration.name(),
         fmt_bytes(out.fast_bytes_total),
         out.makespan_ns() / 1e6,
+    );
+    out.summary_table().print();
+    Ok(())
+}
+
+/// `sentinel fleet`: open-loop serving on an autoscaled machine pool.
+fn cmd_fleet(args: &[String]) -> Result<(), String> {
+    let opts = parse_opts(
+        "fleet",
+        &args[1..],
+        &[
+            "tenants",
+            "rate",
+            "amplitude",
+            "period",
+            "training-frac",
+            "machines",
+            "max-machines",
+            "fast-mb",
+            "arb",
+            "admission",
+            "threads",
+            "seed",
+        ],
+        &["json", "autoscale"],
+    )?;
+    let mut spec = FleetSpec::new()
+        .tenants(opt_u64(&opts, "tenants", 200)? as usize)
+        .rate_per_s(opt_f64(&opts, "rate", 0.4)?)
+        .diurnal(opt_f64(&opts, "amplitude", 0.5)?, opt_f64(&opts, "period", 600.0)?)
+        .training_fraction(opt_f64(&opts, "training-frac", 0.35)?)
+        .machines(opt_u64(&opts, "machines", 2)? as usize)
+        .machine_fast_bytes(opt_u64(&opts, "fast-mb", 4096)? << 20)
+        .threads(opt_u64(&opts, "threads", 0)? as usize);
+    if let Some(a) = opts.get("arb") {
+        spec = spec.arbitration(a.parse().map_err(|e| format!("{e}"))?);
+    }
+    if let Some(a) = opts.get("admission") {
+        spec = spec.admission(a.parse().map_err(|e| format!("{e}"))?);
+    }
+    if opts.contains_key("autoscale") {
+        spec = spec.autoscale(Autoscale {
+            max_machines: opt_u64(&opts, "max-machines", 64)? as usize,
+            ..Default::default()
+        });
+    } else if opts.contains_key("max-machines") {
+        return Err("--max-machines only applies with --autoscale".into());
+    }
+    if let Some(seed) = opts.get("seed") {
+        spec = spec.seed(seed.parse().map_err(|_| "--seed wants a number".to_string())?);
+    }
+    let out = spec.run().map_err(|e| e.to_string())?;
+    if want_json(&opts) {
+        println!("{}", out.to_json());
+        return Ok(());
+    }
+    println!(
+        "fleet: {} jobs | {} machines x {} fast | arbitration = {} | admission = {}",
+        out.jobs_offered,
+        out.machines_initial,
+        fmt_bytes(out.machine_fast_bytes),
+        out.arbitration.name(),
+        out.admission.name(),
     );
     out.summary_table().print();
     Ok(())
@@ -468,6 +545,12 @@ fn figure_sections(id: &str, steps: u32, fast_bytes: u64) -> Result<Vec<(String,
             "Contention — co-located jobs sharing one machine (slowdown vs solo)".into(),
             figures::contention_table(&[1, 2, 4, 8], &[20, 35], steps),
         )],
+        // Beyond the paper: fleet churn sweep (admission policy ×
+        // arrival rate, open-loop serving on a 2-machine pool).
+        "fleet" => vec![(
+            "Fleet — churn sweep (admission × arrival rate, 48 jobs, 2 machines)".into(),
+            figures::fleet_churn_table(&[0.2, 0.8], &Admission::all(), 48),
+        )],
         other => return Err(format!("unknown figure '{other}'")),
     };
     Ok(sections)
@@ -483,10 +566,10 @@ fn cmd_figure(args: &[String]) -> Result<(), String> {
     let steps = opt_u64(&opts, "steps", u64::from(figures::RUN_STEPS))? as u32;
     let fast = opt_u64(&opts, "fast-mb", 1024)? << 20;
     // "7" covers Fig 8 and "10" covers Table 4 (shared sweeps). "ct"
-    // (the beyond-paper contention sweep) is deliberately NOT in "all":
-    // "all" regenerates the paper's artifacts, and the 24-cell cluster
-    // grid is the most expensive figure — run `sentinel figure ct`
-    // explicitly.
+    // and "fleet" (the beyond-paper contention and churn sweeps) are
+    // deliberately NOT in "all": "all" regenerates the paper's
+    // artifacts, and those grids are the most expensive figures — run
+    // `sentinel figure ct` / `sentinel figure fleet` explicitly.
     let ids: Vec<&str> = if id == "all" {
         vec!["1", "2", "3", "4", "t1", "7", "10", "t5", "11", "12", "13"]
     } else {

@@ -54,7 +54,9 @@
 //!
 //! [`replay_layer`]: crate::sim::engine::replay_layer
 
-use crate::dnn::ModelGraph;
+use std::sync::Arc;
+
+use crate::dnn::workload::Workload;
 use crate::sim::device::Tier;
 use crate::sim::engine::{replay_layer, EngineConfig, Policy, StepStats, TrainResult};
 use crate::sim::machine::Machine;
@@ -104,17 +106,67 @@ impl std::fmt::Display for Arbitration {
     }
 }
 
+/// Error returned when parsing an [`Arbitration`] from an unknown name.
+///
+/// A proper error type (rather than a bare `String`) so callers can
+/// match on it, and so the `name()`/`FromStr` round-trip is total:
+/// every [`Arbitration::name`] parses back, and everything else yields
+/// this error instead of a panic.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ParseArbitrationError {
+    got: String,
+}
+
+impl ParseArbitrationError {
+    /// The string that failed to parse.
+    pub fn input(&self) -> &str {
+        &self.got
+    }
+}
+
+impl std::fmt::Display for ParseArbitrationError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "unknown arbitration '{}' (valid: static, proportional, priority)",
+            self.got
+        )
+    }
+}
+
+impl std::error::Error for ParseArbitrationError {}
+
 impl std::str::FromStr for Arbitration {
-    type Err = String;
+    type Err = ParseArbitrationError;
 
     fn from_str(s: &str) -> Result<Self, Self::Err> {
         match s {
             "static" => Ok(Arbitration::StaticPartition),
             "proportional" | "prop" => Ok(Arbitration::ProportionalByPeak),
             "priority" | "prio" => Ok(Arbitration::Priority),
-            other => Err(format!(
-                "unknown arbitration '{other}' (valid: static, proportional, priority)"
-            )),
+            other => Err(ParseArbitrationError { got: other.to_string() }),
+        }
+    }
+}
+
+/// Per-tenant shares of `total` fast bytes under `arb`, given each
+/// tenant's reported peak memory. Static: an even split. Proportional
+/// (and the priority arbiter's starting point): sized by each tenant's
+/// peak. Every share is at least 1 byte so no tenant starts at zero.
+///
+/// Shared by [`crate::api::ClusterSpec`] (initial shares of a fixed
+/// tenant set) and the fleet driver (re-arbitration over residents +
+/// newcomers on every join batch).
+pub fn arbitration_shares(arb: Arbitration, total: u64, peaks: &[u64]) -> Vec<u64> {
+    let n = peaks.len().max(1) as u64;
+    match arb {
+        Arbitration::StaticPartition => peaks.iter().map(|_| (total / n).max(1)).collect(),
+        Arbitration::ProportionalByPeak | Arbitration::Priority => {
+            let sum: u128 = peaks.iter().map(|&p| p as u128).sum::<u128>().max(1);
+            peaks
+                .iter()
+                .map(|&p| ((total as u128 * p as u128 / sum) as u64).max(1))
+                .collect()
         }
     }
 }
@@ -122,11 +174,18 @@ impl std::str::FromStr for Arbitration {
 /// One tenant handed to [`run_cluster`]: a prepared workload, policy,
 /// and a machine whose fast capacity is already set to the tenant's
 /// initial share.
-pub struct ClusterTenant<'a> {
-    /// The tenant's model graph (object metadata for policy callbacks).
-    pub graph: &'a ModelGraph,
+///
+/// The workload and compiled trace are `Arc`-owned (not borrowed) so a
+/// tenant can outlive the scope that built it — the fleet driver admits
+/// and retires tenants at runtime, long after the batch that compiled
+/// their traces returned. Cluster callers share one `Arc` per distinct
+/// workload/trace, so ownership costs a refcount, not a copy.
+pub struct ClusterTenant {
+    /// The tenant's workload (graph object metadata for policy
+    /// callbacks; the trace rides along for policy construction).
+    pub workload: Arc<Workload>,
     /// The tenant's compiled op stream (one training step).
-    pub compiled: &'a CompiledTrace,
+    pub compiled: Arc<CompiledTrace>,
     /// The data-management policy driving placement/migration.
     pub policy: Box<dyn Policy>,
     /// Engine knobs (step count, profiling schedule).
@@ -179,19 +238,25 @@ pub struct TenantRunResult {
 /// `finish` mirror `Engine::run_compiled`/`Engine::package` — the solo
 /// loop stays a straight-line hot path (§Perf), so the mirroring is
 /// deliberate and pinned by the N=1 bit-identity test.
-struct ActiveTenant<'a> {
-    graph: &'a ModelGraph,
-    compiled: &'a CompiledTrace,
+///
+/// `pub(crate)` (with the driver-facing fields below) because the fleet
+/// layer (`sim::fleet`) keeps long-lived `ActiveTenant`s per machine,
+/// advancing them across join/leave events instead of in one
+/// [`run_cluster`] call.
+pub(crate) struct ActiveTenant {
+    workload: Arc<Workload>,
+    compiled: Arc<CompiledTrace>,
     policy: Box<dyn Policy>,
     config: EngineConfig,
-    machine: Machine,
+    pub(crate) machine: Machine,
     priority: u32,
-    share: u64,
+    pub(crate) share: u64,
     share_initial: u64,
     /// Preemption never shrinks a tenant below this floor (a quarter of
     /// its initial share), so low-priority tenants starve slowly, not
-    /// completely.
-    floor: u64,
+    /// completely. The fleet driver re-anchors it when a join batch
+    /// re-arbitrates shares.
+    pub(crate) floor: u64,
     step: u32,
     layer: usize,
     in0: u64,
@@ -223,18 +288,18 @@ struct ActiveTenant<'a> {
     /// Sealed steps of the current segment, flushed to
     /// `Policy::on_sealed_replay` at invalidation or finish.
     sealed_in_segment: u32,
-    done: bool,
+    pub(crate) done: bool,
 }
 
-impl<'a> ActiveTenant<'a> {
-    fn new(t: ClusterTenant<'a>) -> Self {
+impl ActiveTenant {
+    pub(crate) fn new(t: ClusterTenant) -> Self {
         let done = t.config.steps == 0 || t.compiled.layers.is_empty();
         ActiveTenant {
             share_initial: t.share,
             floor: t.share / 4 / PAGE_SIZE * PAGE_SIZE,
             steps_out: Vec::with_capacity(t.config.steps as usize),
             occupancy: Vec::with_capacity(t.config.steps as usize),
-            graph: t.graph,
+            workload: t.workload,
             compiled: t.compiled,
             sealer: Sealer::new(t.config.seal_steady),
             policy: t.policy,
@@ -262,12 +327,12 @@ impl<'a> ActiveTenant<'a> {
 
     /// Allocate persistent objects once, exactly as the solo engine's
     /// prologue does.
-    fn prologue(&mut self) {
+    pub(crate) fn prologue(&mut self) {
         self.machine.reserve_objects(self.compiled.n_objects);
         for &(oid, pages) in &self.compiled.persistent {
             let pref = self
                 .policy
-                .place(&self.graph.objects[oid.index()], &self.machine);
+                .place(&self.workload.graph.objects[oid.index()], &self.machine);
             self.machine.alloc(oid, pages, pref);
         }
     }
@@ -275,7 +340,7 @@ impl<'a> ActiveTenant<'a> {
     /// Replay the next layer — or, when a sealed schedule is active,
     /// one whole step as a delta. Returns `true` when this call
     /// completed a training step (the arbitration review point).
-    fn advance_layer(&mut self) -> bool {
+    pub(crate) fn advance_layer(&mut self) -> bool {
         if self.layer == 0 {
             // Sealed fast path: the whole step is one delta. Sealed
             // tenants always sit at a step boundary, so an arbitration
@@ -321,14 +386,14 @@ impl<'a> ActiveTenant<'a> {
                 && !profiling
                 && self.policy.is_steady(self.step))
             .then(|| StepRecorder::new(self.compiled.layers.len()));
-            self.policy.step_start(self.step, &mut self.machine, self.graph);
+            self.policy.step_start(self.step, &mut self.machine, &self.workload.graph);
         }
         let lt = self.compiled.layers[self.layer];
         let profiling = self.step < self.config.profiling_steps;
         replay_layer(
-            self.compiled,
+            &self.compiled,
             &lt,
-            self.graph,
+            &self.workload.graph,
             &mut self.machine,
             self.policy.as_mut(),
             profiling,
@@ -342,7 +407,7 @@ impl<'a> ActiveTenant<'a> {
             return false;
         }
         self.layer = 0;
-        self.policy.step_end(self.step, &mut self.machine, self.graph);
+        self.policy.step_end(self.step, &mut self.machine, &self.workload.graph);
         let time_ns = self.machine.step_elapsed_ns();
         let pages_in = self.machine.stats.pages_in - self.in0;
         let pages_out = self.machine.stats.pages_out - self.out0;
@@ -387,14 +452,69 @@ impl<'a> ActiveTenant<'a> {
         self.rec = None;
     }
 
-    fn finish(mut self) -> TenantRunResult {
+    /// The arbiter (or the fleet driver's join-time re-arbitration)
+    /// moved this tenant to `new_share`. Applies the resize exactly as
+    /// a priority preemption does: cap the machine, force-demote the
+    /// largest fast residents to cover any shrink overage (discounting
+    /// pages already queued for demotion), notify the policy, and
+    /// invalidate the sealed schedule on *both* shrink and grow — the
+    /// steady state proved at the old share no longer exists.
+    pub(crate) fn resize_share(&mut self, new_share: u64) {
+        if new_share == self.share {
+            return;
+        }
+        let shrinking = new_share < self.share;
+        self.share = new_share;
+        self.machine.set_fast_capacity(new_share);
+        if shrinking {
+            let used = self.machine.used_bytes(Tier::Fast);
+            if used > new_share {
+                // Pages already queued for demotion count against the
+                // shortfall: a victim preempted twice before its own
+                // clock advances (its demote lane only drains on its
+                // own exec) must not have the same pages demoted twice
+                // over.
+                let mut overage = (used - new_share)
+                    .div_ceil(PAGE_SIZE)
+                    .saturating_sub(self.machine.pending_out_pages());
+                let mut resident = self.machine.fast_resident();
+                resident.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+                for (oid, pages) in resident {
+                    if overage == 0 {
+                        break;
+                    }
+                    // Discount pages of this object already queued for
+                    // demotion (e.g. by the tenant's own policy): a
+                    // second request for them would drain as a no-op
+                    // and the intended shortfall would never be
+                    // covered.
+                    let movable = pages.saturating_sub(self.machine.pending_out_pages_for(oid));
+                    if movable == 0 {
+                        continue;
+                    }
+                    let take = movable.min(overage);
+                    self.machine.request_demote(oid, take);
+                    self.pages_force_demoted += take;
+                    overage -= take;
+                }
+            }
+        }
+        let share = self.share;
+        self.policy.fast_share_changed(share, &self.machine);
+        // The tenant's steady state no longer exists at this share:
+        // drop the sealed schedule (and any half-built recording) and
+        // fall back to the live loop until it re-converges.
+        self.invalidate_seal();
+    }
+
+    pub(crate) fn finish(mut self) -> TenantRunResult {
         if self.sealed_in_segment > 0 {
             self.policy.on_sealed_replay(self.sealed_in_segment);
             self.sealed_in_segment = 0;
         }
         let result = TrainResult {
             policy: self.policy.name().to_string(),
-            model: self.graph.name.clone(),
+            model: self.workload.graph.name.clone(),
             total_time_ns: self.machine.now_ns(),
             peak_fast_bytes: self.machine.stats.peak_fast_bytes,
             peak_total_bytes: self.machine.stats.peak_total_bytes,
@@ -431,7 +551,7 @@ impl<'a> ActiveTenant<'a> {
 /// quantum of share from the lowest-priority tenant above its floor.
 ///
 /// Results come back in tenant order.
-pub fn run_cluster(tenants: Vec<ClusterTenant<'_>>, arbitration: Arbitration) -> Vec<TenantRunResult> {
+pub fn run_cluster(tenants: Vec<ClusterTenant>, arbitration: Arbitration) -> Vec<TenantRunResult> {
     let n = tenants.len();
     let total_share: u64 = tenants.iter().map(|t| t.share).sum();
     // One preemption moves 1/(8N) of the pool, page-rounded (≥ 1 page).
@@ -439,7 +559,7 @@ pub fn run_cluster(tenants: Vec<ClusterTenant<'_>>, arbitration: Arbitration) ->
         .max(PAGE_SIZE)
         / PAGE_SIZE
         * PAGE_SIZE;
-    let mut active: Vec<ActiveTenant<'_>> = tenants.into_iter().map(ActiveTenant::new).collect();
+    let mut active: Vec<ActiveTenant> = tenants.into_iter().map(ActiveTenant::new).collect();
     for t in &mut active {
         t.prologue();
     }
@@ -476,7 +596,10 @@ pub fn run_cluster(tenants: Vec<ClusterTenant<'_>>, arbitration: Arbitration) ->
 /// Sentinel the bulk fast residents are the long-lived prefetched
 /// masses, while the reserved short-lived pool stays small — so demoting
 /// the biggest residents first touches the least-urgent data.
-fn review_priority(tenants: &mut [ActiveTenant<'_>], i: usize, quantum: u64) {
+///
+/// `pub(crate)` so the fleet driver can run the same review at its
+/// per-machine step boundaries.
+pub(crate) fn review_priority(tenants: &mut [ActiveTenant], i: usize, quantum: u64) {
     let (pressure, prio_i) = {
         let t = &mut tenants[i];
         let spills = t.machine.stats.alloc_spills;
@@ -513,57 +636,15 @@ fn review_priority(tenants: &mut [ActiveTenant<'_>], i: usize, quantum: u64) {
     if q == 0 {
         return;
     }
-    {
-        let t = &mut tenants[j];
-        t.share -= q;
-        t.machine.set_fast_capacity(t.share);
-        t.preemptions_suffered += 1;
-        let used = t.machine.used_bytes(Tier::Fast);
-        if used > t.share {
-            // Pages already queued for demotion count against the
-            // shortfall: a victim preempted twice before its own clock
-            // advances (its demote lane only drains on its own exec)
-            // must not have the same pages demoted twice over.
-            let mut overage = (used - t.share)
-                .div_ceil(PAGE_SIZE)
-                .saturating_sub(t.machine.pending_out_pages());
-            let mut resident = t.machine.fast_resident();
-            resident.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
-            for (oid, pages) in resident {
-                if overage == 0 {
-                    break;
-                }
-                // Discount pages of this object already queued for
-                // demotion (e.g. by the victim's own policy): a second
-                // request for them would drain as a no-op and the
-                // intended shortfall would never be covered.
-                let movable = pages.saturating_sub(t.machine.pending_out_pages_for(oid));
-                if movable == 0 {
-                    continue;
-                }
-                let take = movable.min(overage);
-                t.machine.request_demote(oid, take);
-                t.pages_force_demoted += take;
-                overage -= take;
-            }
-        }
-        let share = t.share;
-        t.policy.fast_share_changed(share, &t.machine);
-        // The victim's steady state no longer exists at this share:
-        // drop the sealed schedule (and any half-built recording) and
-        // fall back to the live loop until it re-converges.
-        t.invalidate_seal();
-    }
-    {
-        let t = &mut tenants[i];
-        t.share += q;
-        t.machine.set_fast_capacity(t.share);
-        t.preemptions_won += 1;
-        let share = t.share;
-        t.policy.fast_share_changed(share, &t.machine);
-        // The winner's capacity changed too — same invalidation rule.
-        t.invalidate_seal();
-    }
+    // Victim first, then winner — both resizes run the shared
+    // shrink/grow path (forced demotion of the victim's overage, policy
+    // notification, seal invalidation on both sides).
+    let victim_share = tenants[j].share - q;
+    tenants[j].resize_share(victim_share);
+    tenants[j].preemptions_suffered += 1;
+    let winner_share = tenants[i].share + q;
+    tenants[i].resize_share(winner_share);
+    tenants[i].preemptions_won += 1;
 }
 
 #[cfg(test)]
@@ -573,18 +654,18 @@ mod tests {
     use crate::api::workload::shared_workload;
     use crate::dnn::zoo::Model;
 
-    fn tenant<'a>(
-        w: &'a crate::api::Workload,
-        compiled: &'a CompiledTrace,
+    fn tenant(
+        w: &Arc<Workload>,
+        compiled: &Arc<CompiledTrace>,
         kind: PolicyKind,
         share: u64,
         priority: u32,
         steps: u32,
-    ) -> ClusterTenant<'a> {
+    ) -> ClusterTenant {
         let spec = kind.machine_spec(&w.graph, &w.trace, share);
         ClusterTenant {
-            graph: &w.graph,
-            compiled,
+            workload: Arc::clone(w),
+            compiled: Arc::clone(compiled),
             policy: kind.construct(&w.graph, &w.trace, spec),
             config: kind.engine_config(steps),
             machine: Machine::new(spec),
@@ -594,12 +675,25 @@ mod tests {
     }
 
     #[test]
-    fn arbitration_names_round_trip() {
+    fn arbitration_name_from_str_is_a_total_round_trip() {
+        // Every canonical name parses back to its variant — proven
+        // without `unwrap`, so a registry/parser drift fails with a
+        // message instead of a panic backtrace.
         for arb in Arbitration::all() {
-            let parsed: Arbitration = arb.name().parse().unwrap();
-            assert_eq!(parsed, arb);
+            match arb.name().parse::<Arbitration>() {
+                Ok(parsed) => assert_eq!(parsed, arb, "{} round-trip", arb.name()),
+                Err(e) => panic!("canonical name '{}' failed to parse: {e}", arb.name()),
+            }
         }
-        assert!("bogus".parse::<Arbitration>().is_err());
+        // Aliases parse to the same variants.
+        assert_eq!("prop".parse::<Arbitration>(), Ok(Arbitration::ProportionalByPeak));
+        assert_eq!("prio".parse::<Arbitration>(), Ok(Arbitration::Priority));
+        // Unknown names yield the typed error (not a panic), and the
+        // error names the offending input.
+        let err = "bogus".parse::<Arbitration>().unwrap_err();
+        assert_eq!(err.input(), "bogus");
+        assert!(err.to_string().contains("bogus"), "{err}");
+        assert!(err.to_string().contains("static"), "{err}");
     }
 
     #[test]
@@ -613,12 +707,12 @@ mod tests {
         let kind = PolicyKind::Lru;
         let cfg = kind.engine_config(4);
         let spec = kind.machine_spec(&w.graph, &w.trace, 1);
-        let compiled = CompiledTrace::compile(
+        let compiled = Arc::new(CompiledTrace::compile(
             &w.graph,
             &w.trace,
             spec.compute_gflops,
             cfg.profiling_fault_ns,
-        );
+        ));
         let share = Model::Dcgan.peak_memory_target() / 10;
         let tenants = vec![
             tenant(&w, &compiled, kind, share, 0, 4),
@@ -654,12 +748,12 @@ mod tests {
         let cfg = kind.engine_config(6);
         let total = Model::Dcgan.peak_memory_target() / 8;
         let spec = kind.machine_spec(&w.graph, &w.trace, total / 2);
-        let compiled = CompiledTrace::compile(
+        let compiled = Arc::new(CompiledTrace::compile(
             &w.graph,
             &w.trace,
             spec.compute_gflops,
             cfg.profiling_fault_ns,
-        );
+        ));
         let tenants = vec![
             tenant(&w, &compiled, kind, total / 2, 1, 6),
             tenant(&w, &compiled, kind, total / 2, 0, 6),

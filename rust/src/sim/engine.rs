@@ -23,7 +23,12 @@ use crate::sim::schedule::{Sealer, StepRecorder};
 /// Policies are constructed through the [`crate::api::PolicyKind`]
 /// registry; `as_any` lets the API recover policy-specific metadata
 /// (tuning steps, case counts) from the trait object after a run.
-pub trait Policy {
+///
+/// `Send` is a supertrait so a boxed policy can move between worker
+/// threads with the tenant that owns it — the fleet driver fans whole
+/// machines (tenants included) across cores between fleet events. Every
+/// policy is plain owned data, so the bound costs implementors nothing.
+pub trait Policy: Send {
     /// Display name. Borrowed so per-run result packaging does not
     /// allocate; policies with configuration-dependent names cache the
     /// rendered string at construction.

@@ -1,0 +1,888 @@
+//! Fleet-scale serving simulation: tenant churn, admission control, and
+//! an autoscaled machine pool.
+//!
+//! The cluster layer ([`crate::sim::cluster`]) co-schedules a *fixed*
+//! tenant set on one machine. A datacenter serves an *open* workload:
+//! jobs arrive continuously, run to completion, and leave — and the
+//! fleet must decide, per arrival, which machine takes the job (or
+//! whether it waits or is turned away), while each machine's
+//! arbitration re-divides fast memory across every join and leave.
+//! That is the gap framed by Olson et al.'s *Online Application
+//! Guidance* (guidance must survive workload change) and RIMMS
+//! (runtime memory management as a fleet integration problem).
+//!
+//! This module is the event-driven driver above the cluster layer:
+//!
+//! * a **machine pool** — each machine is a shared fast tier running the
+//!   cluster layer's virtual-clock loop over its current residents
+//!   ([`ActiveTenant`]s held *across* events rather than for one
+//!   `run_cluster` call);
+//! * **admission control** ([`Admission`]) — a job whose declared fast
+//!   demand fits nowhere is rejected, queued FIFO, or spilled onto the
+//!   least-loaded machine anyway (oversubscribing its fast tier, the
+//!   slow-tier-backed fallback);
+//! * **join/leave re-arbitration** — every join batch re-runs
+//!   [`arbitration_shares`] over residents + newcomers, resizing
+//!   residents through the same forced-demotion path a priority
+//!   preemption uses and invalidating their sealed schedules on both
+//!   shrink and grow (churn-driven seal thrash is a first-class
+//!   metric); a leave returns the tenant's share to the *admission pool*
+//!   for future joins without resizing survivors, matching the cluster
+//!   layer, where a finished tenant's share also sits idle;
+//! * **autoscaling** ([`Autoscale`]) — sustained fast-memory pressure
+//!   across the pool grows it; sustained idleness retires empty
+//!   machines (indices are stable: retired machines stay in place and
+//!   stop accepting work);
+//! * **parallel rounds** — between fleet events the machines are
+//!   independent, so each round fans them across cores with
+//!   [`crate::api::batch::par_map_mut`] (the one upward import in this
+//!   module: the fleet driver is the orchestration tier, and reusing
+//!   the API's pool beats a second thread-pool implementation).
+//!
+//! ## Time model
+//!
+//! Fleet time is the same virtual nanosecond clock the machines run on.
+//! A tenant's absolute clock is `join_ns + machine.now_ns()`. Arrivals
+//! define the event horizon: every machine advances its residents (via
+//! the cluster layer's lowest-clock-first rule) up to the next arrival
+//! time, then joins are placed, then the next round begins. Once no
+//! arrivals remain but jobs still wait in the queue, rounds advance to
+//! the next *departure* instead, so queued jobs are placed as capacity
+//! frees up. Within one round machines advance independently, so
+//! cross-machine event ordering is approximate by one round — a
+//! deliberate trade that keeps rounds embarrassingly parallel; *per
+//! machine* the interleaving is exactly the cluster layer's, which is
+//! what the single-machine bit-identity test pins.
+
+use std::collections::VecDeque;
+
+use crate::api::batch::par_map_mut;
+use crate::sim::cluster::{
+    arbitration_shares, review_priority, ActiveTenant, Arbitration, ClusterTenant,
+    TenantRunResult,
+};
+use crate::sim::device::Tier;
+use crate::PAGE_SIZE;
+
+/// What the fleet does with a job whose declared fast-memory demand
+/// fits on no machine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Admission {
+    /// Turn the job away; it never runs.
+    Reject,
+    /// Hold the job in a FIFO queue until a machine has room.
+    Queue,
+    /// Place the job on the least-loaded machine anyway, oversubscribing
+    /// its fast tier (the slow tier absorbs the overflow — fast-memory
+    /// shares still come from arbitration, so residents just get less).
+    SpillToSlow,
+}
+
+impl Admission {
+    /// Canonical CLI name (`--admission` spellings round-trip through
+    /// `FromStr`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Admission::Reject => "reject",
+            Admission::Queue => "queue",
+            Admission::SpillToSlow => "spill",
+        }
+    }
+
+    /// Every admission policy, in presentation order.
+    pub fn all() -> [Admission; 3] {
+        [Admission::Reject, Admission::Queue, Admission::SpillToSlow]
+    }
+}
+
+impl std::fmt::Display for Admission {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+/// Error returned when parsing an [`Admission`] from an unknown name —
+/// same total-round-trip contract as
+/// [`crate::sim::cluster::ParseArbitrationError`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ParseAdmissionError {
+    got: String,
+}
+
+impl ParseAdmissionError {
+    /// The string that failed to parse.
+    pub fn input(&self) -> &str {
+        &self.got
+    }
+}
+
+impl std::fmt::Display for ParseAdmissionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "unknown admission policy '{}' (valid: reject, queue, spill)", self.got)
+    }
+}
+
+impl std::error::Error for ParseAdmissionError {}
+
+impl std::str::FromStr for Admission {
+    type Err = ParseAdmissionError;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "reject" => Ok(Admission::Reject),
+            "queue" => Ok(Admission::Queue),
+            "spill" | "spill-to-slow" => Ok(Admission::SpillToSlow),
+            other => Err(ParseAdmissionError { got: other.to_string() }),
+        }
+    }
+}
+
+/// Autoscaling rule: grow/shrink the machine pool on sustained
+/// fast-memory pressure (committed demand over active capacity).
+#[derive(Clone, Copy, Debug)]
+pub struct Autoscale {
+    /// Never shrink below this many active machines.
+    pub min_machines: usize,
+    /// Never grow beyond this many active machines.
+    pub max_machines: usize,
+    /// Grow when pool pressure stays above this fraction.
+    pub grow_above: f64,
+    /// Shrink (retire an idle machine) when pressure stays below this.
+    pub shrink_below: f64,
+    /// Consecutive fleet events the pressure signal must hold before
+    /// acting — the hysteresis that keeps one bursty arrival from
+    /// flapping the pool.
+    pub sustain_events: u32,
+}
+
+impl Default for Autoscale {
+    fn default() -> Self {
+        Autoscale {
+            min_machines: 1,
+            max_machines: 64,
+            grow_above: 0.85,
+            shrink_below: 0.35,
+            sustain_events: 3,
+        }
+    }
+}
+
+/// One job offered to the fleet.
+///
+/// The tenant itself is built lazily: admission and arbitration decide
+/// the job's fast-memory share *before* its policy exists (policies
+/// read fast capacity at construction), so the arrival carries a
+/// one-shot `build` closure from share to a ready [`ClusterTenant`].
+pub struct FleetArrival {
+    /// Stable job id (ties in arrival time break on it, and results are
+    /// reported against it).
+    pub id: u64,
+    /// Arrival time on the fleet's virtual clock (ns).
+    pub arrival_ns: f64,
+    /// Declared fast-memory demand (bytes) — what admission control
+    /// accounts against machine capacity. Clamped to one machine's fast
+    /// tier at offer time so a single job can never deadlock the queue.
+    pub demand_bytes: u64,
+    /// Reported peak memory (bytes) — what proportional arbitration
+    /// sizes shares by.
+    pub peak_bytes: u64,
+    /// Scheduling priority (higher preempts lower under
+    /// [`Arbitration::Priority`]).
+    pub priority: u32,
+    /// Build the tenant at its final admitted share.
+    pub build: Box<dyn FnOnce(u64) -> ClusterTenant + Send>,
+}
+
+/// Fleet-level configuration for [`run_fleet`].
+pub struct FleetConfig {
+    /// Machines in the pool at start (≥ 1).
+    pub machines: usize,
+    /// Fast-tier bytes per machine.
+    pub machine_fast_bytes: u64,
+    /// Per-machine fast-memory arbitration across residents.
+    pub arbitration: Arbitration,
+    /// What happens to jobs that fit nowhere.
+    pub admission: Admission,
+    /// Pool autoscaling; `None` keeps the pool fixed.
+    pub autoscale: Option<Autoscale>,
+    /// Worker threads for the per-round machine fan-out (clamped to the
+    /// machine count; results are identical for any value ≥ 1).
+    pub threads: usize,
+}
+
+/// One completed tenant: when and where it ran, and the full cluster
+/// result.
+pub struct FleetDeparture {
+    /// Job id from the [`FleetArrival`].
+    pub tenant_id: u64,
+    /// When the job was offered (ns, fleet clock).
+    pub arrival_ns: f64,
+    /// When the job was placed on its machine (ns, fleet clock; equals
+    /// `arrival_ns` unless it waited in the queue).
+    pub join_ns: f64,
+    /// When the job finished (ns, fleet clock).
+    pub finish_ns: f64,
+    /// Index of the machine it ran on.
+    pub machine: usize,
+    /// The tenant's full run record, exactly as the cluster layer
+    /// reports it (seal counters included).
+    pub result: TenantRunResult,
+}
+
+/// Per-machine lifetime statistics.
+#[derive(Clone, Copy, Debug)]
+pub struct FleetMachineStats {
+    /// The machine's fast-tier size (bytes).
+    pub fast_bytes: u64,
+    /// Tenants this machine ran over the whole simulation.
+    pub tenants_served: u64,
+    /// Most tenants resident at once.
+    pub peak_residents: usize,
+    /// Largest sum of arbitrated shares ever resident (bytes); never
+    /// exceeds `fast_bytes`.
+    pub peak_share_bytes: u64,
+    /// Largest committed admission demand ever resident (bytes); can
+    /// exceed `fast_bytes` only under [`Admission::SpillToSlow`].
+    pub peak_committed_bytes: u64,
+    /// Whether the autoscaler retired this machine.
+    pub retired: bool,
+}
+
+/// Fleet-wide fast-memory utilization at one event.
+#[derive(Clone, Copy, Debug)]
+pub struct UtilSample {
+    /// Event time (ns, fleet clock).
+    pub t_ns: f64,
+    /// Fast bytes actually resident across active machines, over active
+    /// capacity.
+    pub used_frac: f64,
+    /// Committed admission demand across active machines, over active
+    /// capacity (can exceed 1 under spill).
+    pub committed_frac: f64,
+    /// Jobs waiting in the admission queue.
+    pub queue_depth: usize,
+    /// Machines accepting work.
+    pub machines_active: usize,
+}
+
+/// Everything one fleet simulation produced.
+pub struct FleetSimResult {
+    /// Every job that ran to completion, sorted by job id.
+    pub completed: Vec<FleetDeparture>,
+    /// Ids of jobs turned away (only under [`Admission::Reject`]).
+    pub rejected: Vec<u64>,
+    /// Jobs placed by oversubscription (only under
+    /// [`Admission::SpillToSlow`]).
+    pub spilled: u64,
+    /// Jobs that waited in the queue before placement.
+    pub queued_jobs: u64,
+    /// Deepest the admission queue ever got.
+    pub peak_queue_depth: usize,
+    /// Total time jobs spent queued (ns, summed over jobs).
+    pub total_queue_wait_ns: f64,
+    /// Machines the autoscaler added.
+    pub scale_ups: u64,
+    /// Machines the autoscaler retired.
+    pub scale_downs: u64,
+    /// Per-machine lifetime stats, pool order (grown machines append).
+    pub machines: Vec<FleetMachineStats>,
+    /// Fast-memory utilization over virtual time, one sample per fleet
+    /// event.
+    pub samples: Vec<UtilSample>,
+    /// When the last job finished (ns, fleet clock).
+    pub makespan_ns: f64,
+    /// Fleet event rounds processed.
+    pub fleet_events: u64,
+}
+
+/// Join-time metadata kept per resident, index-aligned with the
+/// machine's tenant vector.
+struct ResidentMeta {
+    id: u64,
+    arrival_ns: f64,
+    join_ns: f64,
+    demand: u64,
+    peak: u64,
+}
+
+/// One machine of the pool: a shared fast tier plus the cluster layer's
+/// driver state for its current residents.
+struct FleetMachine {
+    fast_total: u64,
+    arbitration: Arbitration,
+    /// Preemption quantum, recomputed from the resident set at every
+    /// join batch (the cluster layer computes it once for its fixed
+    /// set — same formula).
+    quantum: u64,
+    /// Admission demand currently committed (bytes).
+    committed: u64,
+    tenants: Vec<ActiveTenant>,
+    meta: Vec<ResidentMeta>,
+    tenants_served: u64,
+    peak_residents: usize,
+    peak_share_bytes: u64,
+    peak_committed_bytes: u64,
+    retired: bool,
+}
+
+impl FleetMachine {
+    fn new(fast_total: u64, arbitration: Arbitration) -> Self {
+        FleetMachine {
+            fast_total,
+            arbitration,
+            quantum: PAGE_SIZE,
+            committed: 0,
+            tenants: Vec::new(),
+            meta: Vec::new(),
+            tenants_served: 0,
+            peak_residents: 0,
+            peak_share_bytes: 0,
+            peak_committed_bytes: 0,
+            retired: false,
+        }
+    }
+
+    fn free_bytes(&self) -> u64 {
+        self.fast_total.saturating_sub(self.committed)
+    }
+
+    /// Advance residents on the cluster layer's lowest-clock-first rule
+    /// until every live clock reaches `horizon` (or, with
+    /// `stop_at_departure`, until the first tenant finishes). Returns
+    /// the departures, in finish order; their `machine` index is filled
+    /// in by the caller.
+    fn advance_until(&mut self, horizon: f64, stop_at_departure: bool) -> Vec<FleetDeparture> {
+        let mut out = Vec::new();
+        loop {
+            let mut pick = usize::MAX;
+            let mut best = f64::INFINITY;
+            for (k, t) in self.tenants.iter().enumerate() {
+                let clock = self.meta[k].join_ns + t.machine.now_ns();
+                if !t.done && clock < best {
+                    best = clock;
+                    pick = k;
+                }
+            }
+            if pick == usize::MAX || best >= horizon {
+                break;
+            }
+            let step_done = self.tenants[pick].advance_layer();
+            if self.tenants[pick].done {
+                // Order-preserving removal keeps the survivors' relative
+                // order — the cluster layer's tie-break (lowest index)
+                // then behaves identically to skipping a done tenant in
+                // place. The departed share is NOT redistributed to
+                // survivors (the cluster layer leaves a finished
+                // tenant's share idle too); it returns to the admission
+                // pool via `committed` for future joins.
+                let t = self.tenants.remove(pick);
+                let m = self.meta.remove(pick);
+                self.committed = self.committed.saturating_sub(m.demand);
+                let finish_ns = m.join_ns + t.machine.now_ns();
+                out.push(FleetDeparture {
+                    tenant_id: m.id,
+                    arrival_ns: m.arrival_ns,
+                    join_ns: m.join_ns,
+                    finish_ns,
+                    machine: usize::MAX,
+                    result: t.finish(),
+                });
+                if stop_at_departure {
+                    break;
+                }
+                continue;
+            }
+            if step_done && self.arbitration == Arbitration::Priority {
+                review_priority(&mut self.tenants, pick, self.quantum);
+            }
+        }
+        out
+    }
+
+    /// Admit a batch of same-time arrivals: re-arbitrate shares over
+    /// residents + newcomers, resize residents (forced demotion on
+    /// shrink, seal invalidation both ways), then build each newcomer
+    /// at its final share and run its prologue. `committed` was already
+    /// charged by the placement decision in [`run_fleet`].
+    fn join_batch(&mut self, now_ns: f64, newcomers: Vec<FleetArrival>) {
+        let n_res = self.tenants.len();
+        let mut peaks: Vec<u64> = self.meta.iter().map(|m| m.peak).collect();
+        peaks.extend(newcomers.iter().map(|a| a.peak_bytes));
+        let shares = arbitration_shares(self.arbitration, self.fast_total, &peaks);
+        for (k, t) in self.tenants.iter_mut().enumerate() {
+            if shares[k] != t.share {
+                t.resize_share(shares[k]);
+                // The priority arbiter's starvation floor re-anchors to
+                // the new arbitrated share.
+                t.floor = shares[k] / 4 / PAGE_SIZE * PAGE_SIZE;
+            }
+        }
+        for (k, a) in newcomers.into_iter().enumerate() {
+            let share = shares[n_res + k];
+            let tenant = (a.build)(share);
+            let mut active = ActiveTenant::new(tenant);
+            active.prologue();
+            self.meta.push(ResidentMeta {
+                id: a.id,
+                arrival_ns: a.arrival_ns,
+                join_ns: now_ns,
+                demand: a.demand_bytes,
+                peak: a.peak_bytes,
+            });
+            self.tenants.push(active);
+            self.tenants_served += 1;
+        }
+        let total_share: u64 = self.tenants.iter().map(|t| t.share).sum();
+        let n = self.tenants.len();
+        // Same quantum formula as the cluster layer: 1/(8N) of the
+        // resident share pool, page-rounded, at least one page.
+        self.quantum = (total_share / (8 * n.max(1) as u64)).max(PAGE_SIZE) / PAGE_SIZE * PAGE_SIZE;
+        self.peak_residents = self.peak_residents.max(n);
+        self.peak_share_bytes = self.peak_share_bytes.max(total_share);
+    }
+
+    fn stats(&self) -> FleetMachineStats {
+        FleetMachineStats {
+            fast_bytes: self.fast_total,
+            tenants_served: self.tenants_served,
+            peak_residents: self.peak_residents,
+            peak_share_bytes: self.peak_share_bytes,
+            peak_committed_bytes: self.peak_committed_bytes,
+            retired: self.retired,
+        }
+    }
+}
+
+/// Best machine for a job of `demand` bytes: the non-retired machine
+/// with the most free admission capacity that still fits the job; ties
+/// go to the lowest index (deterministic).
+fn pick_machine(machines: &[FleetMachine], demand: u64) -> Option<usize> {
+    let mut best: Option<(usize, u64)> = None;
+    for (i, m) in machines.iter().enumerate() {
+        if m.retired {
+            continue;
+        }
+        let free = m.free_bytes();
+        if free < demand {
+            continue;
+        }
+        if best.map_or(true, |(_, bf)| free > bf) {
+            best = Some((i, free));
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
+/// The least-loaded non-retired machine regardless of fit (the spill
+/// target); ties go to the lowest index.
+fn least_loaded(machines: &[FleetMachine]) -> Option<usize> {
+    let mut best: Option<(usize, u64)> = None;
+    for (i, m) in machines.iter().enumerate() {
+        if m.retired {
+            continue;
+        }
+        let free = m.free_bytes();
+        if best.map_or(true, |(_, bf)| free > bf) {
+            best = Some((i, free));
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
+/// Run the fleet: place every arrival per the admission policy, advance
+/// the machine pool between events on the cluster layer's virtual
+/// clock, autoscale on sustained pressure, and collect every completed
+/// tenant plus fleet-level observability.
+///
+/// Deterministic: same arrivals + config produce bit-identical results
+/// for any `threads` value (machines are independent between events,
+/// and every fleet-level decision iterates machines in index order).
+pub fn run_fleet(arrivals: Vec<FleetArrival>, cfg: FleetConfig) -> FleetSimResult {
+    let mut arrivals = arrivals;
+    arrivals.sort_by(|a, b| a.arrival_ns.total_cmp(&b.arrival_ns).then(a.id.cmp(&b.id)));
+    let n_machines = cfg.machines.max(1);
+    let mut machines: Vec<FleetMachine> = (0..n_machines)
+        .map(|_| FleetMachine::new(cfg.machine_fast_bytes, cfg.arbitration))
+        .collect();
+    let threads = cfg.threads.max(1);
+
+    let mut pending: VecDeque<FleetArrival> = arrivals.into();
+    let mut queue: VecDeque<FleetArrival> = VecDeque::new();
+    let mut completed: Vec<FleetDeparture> = Vec::new();
+    let mut rejected: Vec<u64> = Vec::new();
+    let mut samples: Vec<UtilSample> = Vec::new();
+    let mut spilled = 0u64;
+    let mut queued_jobs = 0u64;
+    let mut peak_queue_depth = 0usize;
+    let mut total_queue_wait_ns = 0.0f64;
+    let mut scale_ups = 0u64;
+    let mut scale_downs = 0u64;
+    let mut grow_streak = 0u32;
+    let mut shrink_streak = 0u32;
+    let mut fleet_now = 0.0f64;
+    let mut fleet_events = 0u64;
+
+    loop {
+        let live: usize = machines.iter().map(|m| m.tenants.len()).sum();
+        if pending.is_empty() && queue.is_empty() && live == 0 {
+            break;
+        }
+        fleet_events += 1;
+
+        // 1. Advance every machine to the event horizon: the next
+        //    arrival, or (tail mode: arrivals exhausted, queue waiting)
+        //    each machine's next departure so queued jobs see capacity
+        //    free up.
+        let horizon = pending.front().map_or(f64::INFINITY, |a| a.arrival_ns);
+        let tail = pending.is_empty() && !queue.is_empty();
+        let mut departures: Vec<Vec<FleetDeparture>> =
+            par_map_mut(&mut machines, threads, |m| m.advance_until(horizon, tail));
+        for (mi, deps) in departures.iter_mut().enumerate() {
+            for d in deps.iter_mut() {
+                d.machine = mi;
+            }
+        }
+
+        // 2. Advance fleet time. Finite horizon: arrivals land there.
+        //    Tail mode: time reaches the earliest departure (machines
+        //    past it are ahead by less than one job — the documented
+        //    cross-machine skew of the round model).
+        if horizon.is_finite() {
+            fleet_now = fleet_now.max(horizon);
+        } else {
+            let first_dep = departures
+                .iter()
+                .flatten()
+                .map(|d| d.finish_ns)
+                .fold(f64::INFINITY, f64::min);
+            if first_dep.is_finite() {
+                fleet_now = fleet_now.max(first_dep);
+            }
+        }
+        for deps in departures {
+            completed.extend(deps);
+        }
+
+        // 3. Autoscale on sustained pool pressure (committed demand
+        //    over active capacity), before placement so a grown machine
+        //    absorbs this round's joins.
+        if let Some(auto) = cfg.autoscale {
+            let active: Vec<&FleetMachine> = machines.iter().filter(|m| !m.retired).collect();
+            let cap: u64 = active.iter().map(|m| m.fast_total).sum();
+            let committed: u64 = active.iter().map(|m| m.committed).sum();
+            let pressure = committed as f64 / cap.max(1) as f64;
+            if pressure > auto.grow_above {
+                grow_streak += 1;
+                shrink_streak = 0;
+            } else if pressure < auto.shrink_below {
+                shrink_streak += 1;
+                grow_streak = 0;
+            } else {
+                grow_streak = 0;
+                shrink_streak = 0;
+            }
+            let n_active = active.len();
+            if grow_streak >= auto.sustain_events && n_active < auto.max_machines.max(1) {
+                machines.push(FleetMachine::new(cfg.machine_fast_bytes, cfg.arbitration));
+                scale_ups += 1;
+                grow_streak = 0;
+            } else if shrink_streak >= auto.sustain_events && n_active > auto.min_machines.max(1) {
+                // Retire the highest-index idle machine; it stays in
+                // the pool (stable indices) but accepts no more work.
+                let target = machines
+                    .iter()
+                    .enumerate()
+                    .rev()
+                    .find(|(_, m)| !m.retired && m.tenants.is_empty())
+                    .map(|(i, _)| i);
+                if let Some(mi) = target {
+                    machines[mi].retired = true;
+                    scale_downs += 1;
+                    shrink_streak = 0;
+                }
+            }
+        }
+
+        // 4. Drain the queue FIFO: place heads while they fit. Strict
+        //    FIFO means a big job at the head blocks smaller ones
+        //    behind it (no starvation of large jobs); every job's
+        //    demand is clamped to one machine, so the head always fits
+        //    once some machine drains.
+        let mut joins: Vec<Vec<FleetArrival>> = (0..machines.len()).map(|_| Vec::new()).collect();
+        while let Some(head) = queue.front() {
+            match pick_machine(&machines, head.demand_bytes) {
+                Some(mi) => {
+                    let a = queue.pop_front().unwrap();
+                    total_queue_wait_ns += (fleet_now - a.arrival_ns).max(0.0);
+                    machines[mi].committed += a.demand_bytes;
+                    machines[mi].peak_committed_bytes =
+                        machines[mi].peak_committed_bytes.max(machines[mi].committed);
+                    joins[mi].push(a);
+                }
+                None => break,
+            }
+        }
+
+        // 5. Admit this round's arrivals (everything at the horizon).
+        while pending.front().is_some_and(|a| a.arrival_ns <= horizon) {
+            let mut a = pending.pop_front().unwrap();
+            a.demand_bytes = a.demand_bytes.min(cfg.machine_fast_bytes).max(1);
+            // FIFO fairness under queueing: while older jobs wait, new
+            // arrivals line up behind them even if they would fit.
+            if cfg.admission == Admission::Queue && !queue.is_empty() {
+                queue.push_back(a);
+                queued_jobs += 1;
+                continue;
+            }
+            match pick_machine(&machines, a.demand_bytes) {
+                Some(mi) => {
+                    machines[mi].committed += a.demand_bytes;
+                    machines[mi].peak_committed_bytes =
+                        machines[mi].peak_committed_bytes.max(machines[mi].committed);
+                    joins[mi].push(a);
+                }
+                None => match cfg.admission {
+                    Admission::Reject => rejected.push(a.id),
+                    Admission::Queue => {
+                        queue.push_back(a);
+                        queued_jobs += 1;
+                    }
+                    Admission::SpillToSlow => {
+                        let mi = least_loaded(&machines)
+                            .expect("pool keeps at least one active machine");
+                        machines[mi].committed += a.demand_bytes;
+                        machines[mi].peak_committed_bytes =
+                            machines[mi].peak_committed_bytes.max(machines[mi].committed);
+                        spilled += 1;
+                        joins[mi].push(a);
+                    }
+                },
+            }
+        }
+        peak_queue_depth = peak_queue_depth.max(queue.len());
+
+        // 6. Per-machine join batches, in machine order (deterministic).
+        for (mi, batch) in joins.into_iter().enumerate() {
+            if !batch.is_empty() {
+                machines[mi].join_batch(fleet_now, batch);
+            }
+        }
+
+        // 7. Utilization sample at this event.
+        let mut cap = 0u64;
+        let mut committed = 0u64;
+        let mut used = 0u64;
+        let mut n_active = 0usize;
+        for m in &machines {
+            if m.retired {
+                continue;
+            }
+            n_active += 1;
+            cap += m.fast_total;
+            committed += m.committed;
+            for t in &m.tenants {
+                used += t.machine.used_bytes(Tier::Fast);
+            }
+        }
+        samples.push(UtilSample {
+            t_ns: fleet_now,
+            used_frac: used as f64 / cap.max(1) as f64,
+            committed_frac: committed as f64 / cap.max(1) as f64,
+            queue_depth: queue.len(),
+            machines_active: n_active,
+        });
+    }
+
+    completed.sort_by(|a, b| a.tenant_id.cmp(&b.tenant_id));
+    let makespan_ns = completed.iter().map(|d| d.finish_ns).fold(0.0f64, f64::max);
+    FleetSimResult {
+        completed,
+        rejected,
+        spilled,
+        queued_jobs,
+        peak_queue_depth,
+        total_queue_wait_ns,
+        scale_ups,
+        scale_downs,
+        machines: machines.iter().map(FleetMachine::stats).collect(),
+        samples,
+        makespan_ns,
+        fleet_events,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::api::workload::shared_workload;
+    use crate::api::PolicyKind;
+    use crate::dnn::workload::Workload;
+    use crate::dnn::zoo::Model;
+    use crate::sim::replay::CompiledTrace;
+    use crate::sim::Machine;
+
+    fn arrival(
+        id: u64,
+        arrival_ns: f64,
+        w: &Arc<Workload>,
+        compiled: &Arc<CompiledTrace>,
+        kind: PolicyKind,
+        demand: u64,
+        peak: u64,
+        steps: u32,
+        priority: u32,
+    ) -> FleetArrival {
+        let w = Arc::clone(w);
+        let compiled = Arc::clone(compiled);
+        FleetArrival {
+            id,
+            arrival_ns,
+            demand_bytes: demand,
+            peak_bytes: peak,
+            priority,
+            build: Box::new(move |share| {
+                let spec = kind.machine_spec(&w.graph, &w.trace, share);
+                ClusterTenant {
+                    policy: kind.construct(&w.graph, &w.trace, spec),
+                    config: kind.engine_config(steps),
+                    machine: Machine::new(spec),
+                    priority,
+                    share,
+                    workload: w,
+                    compiled,
+                }
+            }),
+        }
+    }
+
+    fn dcgan_parts(kind: PolicyKind, steps: u32) -> (Arc<Workload>, Arc<CompiledTrace>) {
+        let w = shared_workload(Model::Dcgan, 5);
+        let cfg = kind.engine_config(steps);
+        let spec = kind.machine_spec(&w.graph, &w.trace, 1);
+        let compiled = Arc::new(CompiledTrace::compile(
+            &w.graph,
+            &w.trace,
+            spec.compute_gflops,
+            cfg.profiling_fault_ns,
+        ));
+        (w, compiled)
+    }
+
+    fn config(machines: usize, fast: u64, admission: Admission) -> FleetConfig {
+        FleetConfig {
+            machines,
+            machine_fast_bytes: fast,
+            arbitration: Arbitration::StaticPartition,
+            admission,
+            autoscale: None,
+            threads: 1,
+        }
+    }
+
+    #[test]
+    fn admission_names_round_trip_totally() {
+        for adm in Admission::all() {
+            match adm.name().parse::<Admission>() {
+                Ok(parsed) => assert_eq!(parsed, adm),
+                Err(e) => panic!("canonical name '{}' failed to parse: {e}", adm.name()),
+            }
+        }
+        let err = "bogus".parse::<Admission>().unwrap_err();
+        assert_eq!(err.input(), "bogus");
+        assert!(err.to_string().contains("reject"), "{err}");
+    }
+
+    #[test]
+    fn empty_fleet_terminates_immediately() {
+        let r = run_fleet(Vec::new(), config(2, 1 << 30, Admission::Reject));
+        assert!(r.completed.is_empty());
+        assert_eq!(r.fleet_events, 0);
+        assert_eq!(r.machines.len(), 2);
+    }
+
+    #[test]
+    fn reject_turns_away_what_does_not_fit() {
+        let kind = PolicyKind::Lru;
+        let (w, compiled) = dcgan_parts(kind, 3);
+        let fast = Model::Dcgan.peak_memory_target() / 8;
+        // Two jobs demand 60% of one machine each: the second fits on
+        // neither of... one machine, so it is rejected.
+        let jobs = vec![
+            arrival(0, 0.0, &w, &compiled, kind, fast * 6 / 10, fast, 3, 0),
+            arrival(1, 0.0, &w, &compiled, kind, fast * 6 / 10, fast, 3, 0),
+        ];
+        let r = run_fleet(jobs, config(1, fast, Admission::Reject));
+        assert_eq!(r.completed.len(), 1);
+        assert_eq!(r.completed[0].tenant_id, 0);
+        assert_eq!(r.rejected, vec![1]);
+        assert_eq!(r.machines[0].tenants_served, 1);
+    }
+
+    #[test]
+    fn queue_runs_everything_eventually() {
+        let kind = PolicyKind::Lru;
+        let (w, compiled) = dcgan_parts(kind, 3);
+        let fast = Model::Dcgan.peak_memory_target() / 8;
+        let jobs: Vec<FleetArrival> = (0..3)
+            .map(|i| arrival(i, 0.0, &w, &compiled, kind, fast * 6 / 10, fast, 3, 0))
+            .collect();
+        let r = run_fleet(jobs, config(1, fast, Admission::Queue));
+        assert_eq!(r.completed.len(), 3, "queued jobs all ran");
+        assert_eq!(r.queued_jobs, 2);
+        assert!(r.peak_queue_depth >= 1);
+        assert!(r.total_queue_wait_ns > 0.0);
+        // Queued jobs joined strictly after their arrival.
+        let late: Vec<_> = r.completed.iter().filter(|d| d.join_ns > d.arrival_ns).collect();
+        assert_eq!(late.len(), 2);
+        // Admission accounting never oversubscribed the machine.
+        assert!(r.machines[0].peak_committed_bytes <= fast);
+    }
+
+    #[test]
+    fn spill_admits_everything_immediately() {
+        let kind = PolicyKind::Lru;
+        let (w, compiled) = dcgan_parts(kind, 3);
+        let fast = Model::Dcgan.peak_memory_target() / 8;
+        let jobs: Vec<FleetArrival> = (0..3)
+            .map(|i| arrival(i, 0.0, &w, &compiled, kind, fast * 6 / 10, fast, 3, 0))
+            .collect();
+        let r = run_fleet(jobs, config(1, fast, Admission::SpillToSlow));
+        assert_eq!(r.completed.len(), 3);
+        assert_eq!(r.spilled, 2, "two jobs oversubscribed the one machine");
+        assert!(r.machines[0].peak_committed_bytes > fast);
+        // Arbitrated shares still respect the physical tier.
+        assert!(r.machines[0].peak_share_bytes <= fast);
+    }
+
+    #[test]
+    fn churn_join_rearbitrates_and_thrashes_seals() {
+        // Proportional shares + a mid-run join: the resident must be
+        // resized (seal invalidated) when the newcomer joins.
+        let kind = PolicyKind::StaticInterval(4);
+        let (w, compiled) = dcgan_parts(kind, 10);
+        let fast = Model::Dcgan.peak_memory_target() / 4;
+        let jobs = vec![
+            arrival(0, 0.0, &w, &compiled, kind, fast / 4, fast, 10, 0),
+            // Joins mid-run of job 0 (its steps take ~1e8+ ns each).
+            arrival(1, 2.0e8, &w, &compiled, kind, fast / 4, fast, 4, 0),
+        ];
+        let cfg = FleetConfig {
+            machines: 1,
+            machine_fast_bytes: fast,
+            arbitration: Arbitration::ProportionalByPeak,
+            admission: Admission::Queue,
+            autoscale: None,
+            threads: 1,
+        };
+        let r = run_fleet(jobs, cfg);
+        assert_eq!(r.completed.len(), 2);
+        let first = &r.completed[0];
+        // The resident's share halved at the join (equal peaks).
+        assert_eq!(first.result.share_initial, fast);
+        assert_eq!(first.result.share_final, fast / 2);
+        assert!(first.result.pages_force_demoted > 0 || first.result.seal_invalidations > 0
+            || first.result.seal_segments > 0);
+    }
+}

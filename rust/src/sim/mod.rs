@@ -18,12 +18,20 @@
 pub mod cluster;
 pub mod device;
 pub mod engine;
+pub mod fleet;
 pub mod machine;
 pub mod migration;
 pub mod replay;
 pub mod schedule;
 
-pub use cluster::{run_cluster, Arbitration, ClusterTenant, TenantRunResult};
+pub use cluster::{
+    arbitration_shares, run_cluster, Arbitration, ClusterTenant, ParseArbitrationError,
+    TenantRunResult,
+};
+pub use fleet::{
+    run_fleet, Admission, Autoscale, FleetArrival, FleetConfig, FleetDeparture, FleetMachineStats,
+    FleetSimResult, ParseAdmissionError, UtilSample,
+};
 pub use device::{DeviceSpec, MachineSpec, Tier};
 pub use engine::{Engine, EngineConfig, Policy, StepStats, TrainResult};
 pub use machine::{Machine, Residency, SteadySnapshot};

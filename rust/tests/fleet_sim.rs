@@ -1,0 +1,257 @@
+//! Fleet-layer invariants.
+//!
+//! * **Cluster anchor**: a single-machine, no-churn fleet (every job
+//!   arriving at t=0, spill admission so nothing queues) is
+//!   *bit-identical* to the equivalent [`ClusterSpec`] run — same
+//!   shares, same interleaving, same per-step times, same
+//!   slowdown-vs-solo (the baselines come from the same cache).
+//! * **Determinism**: same seed + same spec ⇒ bit-identical outcome
+//!   JSON and tenant digest, across repeated runs *and* across
+//!   worker-thread counts (the per-round machine fan-out must not leak
+//!   scheduling into results).
+//! * **Admission containment**: under the static arbiter with reject or
+//!   queue admission, no machine's committed demand or arbitrated share
+//!   sum ever exceeds its fast tier — checked as a property over random
+//!   job mixes.
+//! * **Policy behavior**: queueing completes every job eventually,
+//!   spilling admits every job immediately, autoscaling grows the pool
+//!   under sustained pressure.
+
+use sentinel_hm::api::{
+    json, Admission, Autoscale, ClusterSpec, FleetJob, FleetSpec, JobClass, PolicyKind,
+    TenantSpec,
+};
+use sentinel_hm::dnn::zoo::Model;
+use sentinel_hm::sim::TrainResult;
+use sentinel_hm::util::prop::check;
+
+/// Exact (bit-level for floats) equality of two engine results.
+fn assert_bit_identical(a: &TrainResult, b: &TrainResult, ctx: &str) {
+    assert_eq!(a.policy, b.policy, "{ctx}: policy");
+    assert_eq!(a.model, b.model, "{ctx}: model");
+    assert_eq!(
+        a.total_time_ns.to_bits(),
+        b.total_time_ns.to_bits(),
+        "{ctx}: total_time_ns {} vs {}",
+        a.total_time_ns,
+        b.total_time_ns
+    );
+    assert_eq!(a.peak_fast_bytes, b.peak_fast_bytes, "{ctx}: peak_fast_bytes");
+    assert_eq!(a.pages_migrated_in, b.pages_migrated_in, "{ctx}: pages_in");
+    assert_eq!(a.pages_migrated_out, b.pages_migrated_out, "{ctx}: pages_out");
+    assert_eq!(a.alloc_spills, b.alloc_spills, "{ctx}: alloc_spills");
+    assert_eq!(a.steps.len(), b.steps.len(), "{ctx}: step count");
+    for (i, (sa, sb)) in a.steps.iter().zip(&b.steps).enumerate() {
+        assert_eq!(
+            sa.time_ns.to_bits(),
+            sb.time_ns.to_bits(),
+            "{ctx}: step {i} time {} vs {}",
+            sa.time_ns,
+            sb.time_ns
+        );
+    }
+}
+
+fn job(id: u64, arrival_ns: f64, model: Model, policy: PolicyKind, steps: u32) -> FleetJob {
+    FleetJob {
+        id,
+        arrival_ns,
+        model,
+        policy,
+        steps,
+        priority: 0,
+        class: JobClass::Training,
+    }
+}
+
+/// A single-machine fleet with every job present from t=0 must replay
+/// the cluster layer exactly: same shares, same virtual-clock
+/// interleaving, same per-step times, same slowdowns.
+#[test]
+fn no_churn_single_machine_fleet_matches_cluster_run() {
+    let fast = Model::Dcgan.peak_memory_target() * 3 / 10;
+    let steps = 12u32; // == the fleet layer's canonical solo length
+
+    let cluster = ClusterSpec::new()
+        .tenant(TenantSpec::for_model(Model::Dcgan).policy(PolicyKind::Lru))
+        .tenant(TenantSpec::for_model(Model::Dcgan).policy(PolicyKind::StaticInterval(4)))
+        .fast_bytes(fast)
+        .steps(steps)
+        .run()
+        .unwrap();
+
+    let fleet = FleetSpec::new()
+        .with_jobs(vec![
+            job(0, 0.0, Model::Dcgan, PolicyKind::Lru, steps),
+            job(1, 0.0, Model::Dcgan, PolicyKind::StaticInterval(4), steps),
+        ])
+        .machines(1)
+        .machine_fast_bytes(fast)
+        .admission(Admission::SpillToSlow)
+        .threads(1)
+        .run()
+        .unwrap();
+
+    assert_eq!(fleet.tenants.len(), cluster.tenants.len());
+    for (f, c) in fleet.tenants.iter().zip(&cluster.tenants) {
+        assert_eq!(f.join_ns.to_bits(), 0f64.to_bits(), "no-churn job joins at t=0");
+        assert_eq!(f.machine, 0);
+        assert_eq!(f.share_initial, c.share_initial, "{}: initial share", f.model);
+        assert_eq!(f.share_final, c.share_final, "{}: final share", f.model);
+        assert_bit_identical(&f.result, &c.result, &f.model);
+        assert_eq!(
+            f.slowdown_vs_solo.to_bits(),
+            c.slowdown_vs_solo.to_bits(),
+            "{}: slowdown {} vs {}",
+            f.model,
+            f.slowdown_vs_solo,
+            c.slowdown_vs_solo
+        );
+    }
+    // The fleet's finish times are the cluster's per-tenant clocks.
+    let makespan: f64 = fleet.tenants.iter().map(|t| t.finish_ns).fold(0.0, f64::max);
+    assert_eq!(makespan.to_bits(), cluster.makespan_ns().to_bits());
+}
+
+fn churn_spec(threads: usize) -> FleetSpec {
+    FleetSpec::new()
+        .tenants(8)
+        .rate_per_s(2.0)
+        .machines(2)
+        .machine_fast_bytes(3 << 30)
+        .admission(Admission::Queue)
+        .threads(threads)
+        .seed(17)
+}
+
+/// Same seed + same spec ⇒ bit-identical outcome, run to run and for
+/// any worker count.
+#[test]
+fn fleet_outcome_is_deterministic_across_runs_and_thread_counts() {
+    let baseline = churn_spec(1).run().unwrap();
+    let base_json = baseline.to_json();
+    assert!(json::is_valid(&base_json), "{base_json}");
+    assert_eq!(base_json, churn_spec(1).run().unwrap().to_json(), "re-run drifted");
+    for threads in [2, 8] {
+        let out = churn_spec(threads).run().unwrap();
+        assert_eq!(base_json, out.to_json(), "{threads} threads drifted");
+        assert_eq!(
+            baseline.tenants_digest(),
+            out.tenants_digest(),
+            "{threads} threads: tenant table drifted"
+        );
+    }
+}
+
+/// Under reject/queue admission the committed demand never exceeds a
+/// machine's fast tier, and arbitration never hands out more share than
+/// physically exists — over random job mixes.
+#[test]
+fn admission_never_oversubscribes_fast_memory() {
+    check("admission containment", 6, |g| {
+        let n_jobs = 1 + g.range(0, 3);
+        let jobs: Vec<FleetJob> = (0..n_jobs)
+            .map(|id| {
+                let model = if g.bool(0.5) { Model::Dcgan } else { Model::MobileNet };
+                let mut j = job(id, g.f64() * 1e8, model, PolicyKind::Lru, 1 + g.range(0, 1) as u32);
+                if g.bool(0.5) {
+                    j.class = JobClass::Inference;
+                }
+                j
+            })
+            .collect();
+        let admission = if g.bool(0.5) { Admission::Reject } else { Admission::Queue };
+        let fast = (g.range(300, 1200) as u64) << 20;
+        let machines = 1 + g.range(0, 1) as usize;
+        let out = FleetSpec::new()
+            .with_jobs(jobs)
+            .machines(machines)
+            .machine_fast_bytes(fast)
+            .admission(admission)
+            .threads(1)
+            .run()
+            .unwrap();
+        assert_eq!(
+            out.completed + out.rejected,
+            out.jobs_offered,
+            "every job completes or is rejected"
+        );
+        if admission == Admission::Queue {
+            assert_eq!(out.rejected, 0, "queueing never rejects");
+        }
+        for (i, m) in out.machines.iter().enumerate() {
+            assert!(
+                m.peak_committed_bytes <= fast,
+                "machine {i}: committed {} exceeds fast {fast}",
+                m.peak_committed_bytes
+            );
+            assert!(
+                m.peak_share_bytes <= fast,
+                "machine {i}: share sum {} exceeds fast {fast}",
+                m.peak_share_bytes
+            );
+        }
+        for t in &out.tenants {
+            assert!(
+                t.result.peak_fast_bytes <= fast,
+                "job {}: fast residency {} exceeds the machine",
+                t.id,
+                t.result.peak_fast_bytes
+            );
+        }
+    });
+}
+
+/// Spilling admits everything immediately even when the pool is
+/// oversubscribed; shares still respect the physical tier.
+#[test]
+fn spill_admits_all_and_shares_stay_physical() {
+    let fast = Model::Dcgan.peak_memory_target() / 4;
+    let jobs: Vec<FleetJob> =
+        (0..3).map(|id| job(id, 0.0, Model::Dcgan, PolicyKind::Lru, 2)).collect();
+    let out = FleetSpec::new()
+        .with_jobs(jobs)
+        .machines(1)
+        .machine_fast_bytes(fast)
+        .admission(Admission::SpillToSlow)
+        .threads(1)
+        .run()
+        .unwrap();
+    assert_eq!(out.completed, 3);
+    assert_eq!(out.rejected, 0);
+    assert!(out.spilled >= 1, "the pool was oversubscribed");
+    assert!(out.machines[0].peak_committed_bytes > fast);
+    assert!(out.machines[0].peak_share_bytes <= fast);
+}
+
+/// Sustained pressure grows the pool; later jobs land on the new
+/// machines.
+#[test]
+fn autoscale_grows_the_pool_under_sustained_pressure() {
+    let fast = (700u64) << 20; // one 614 MB training DCGAN fills a machine
+    let jobs: Vec<FleetJob> = (0..4)
+        .map(|id| job(id, id as f64 * 1e6, Model::Dcgan, PolicyKind::Lru, 2))
+        .collect();
+    let out = FleetSpec::new()
+        .with_jobs(jobs)
+        .machines(1)
+        .machine_fast_bytes(fast)
+        .admission(Admission::Queue)
+        .autoscale(Autoscale {
+            min_machines: 1,
+            max_machines: 4,
+            grow_above: 0.5,
+            shrink_below: -1.0, // never shrink in this test
+            sustain_events: 1,
+        })
+        .threads(1)
+        .run()
+        .unwrap();
+    assert_eq!(out.completed, 4);
+    assert!(out.scale_ups >= 1, "pool never grew: {}", out.to_json());
+    assert!(out.machines.len() > 1);
+    assert!(
+        out.tenants.iter().any(|t| t.machine > 0),
+        "no job ever landed on a grown machine"
+    );
+}

@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
-# Hot-path regression check: run the sim_hotpath bench, extract its JSON
-# summary line, and diff it against the committed baseline
-# (BENCH_2.json by default; override with BENCH_BASELINE=<path>).
+# Hot-path regression check: run the sim_hotpath and fleet_churn
+# benches, merge their JSON summary lines, and diff the result against
+# the committed baseline (BENCH_2.json by default; override with
+# BENCH_BASELINE=<path>).
 #
 #   scripts/bench_check.sh            # compare a fresh run to the baseline
 #   scripts/bench_check.sh --update   # re-measure and rewrite the baseline
@@ -40,6 +41,30 @@ summary="$(printf '%s\n' "$out" | grep '^{' | tail -n 1)"
 if [ -z "$summary" ]; then
   echo "bench_check: no JSON summary line in bench output" >&2
   exit 1
+fi
+
+# Fleet-scale churn bench: its summary fields (fleet_*_ns,
+# fleet_tenants_per_s) ride in the same baseline object. Keep the
+# headline scenario small here — this script exists for regression
+# signal, not for the acceptance-scale 10k run.
+echo "== cargo bench --bench fleet_churn (FLEET_BENCH_TENANTS=${FLEET_BENCH_TENANTS:-2000}) =="
+fleet_out="$(FLEET_BENCH_TENANTS="${FLEET_BENCH_TENANTS:-2000}" cargo bench --bench fleet_churn 2>&1)" \
+  || { printf '%s\n' "$fleet_out"; exit 1; }
+printf '%s\n' "$fleet_out"
+fleet_summary="$(printf '%s\n' "$fleet_out" | grep '^{' | tail -n 1)"
+if [ -z "$fleet_summary" ]; then
+  echo "bench_check: no JSON summary line in fleet_churn output" >&2
+  exit 1
+fi
+if command -v python3 >/dev/null 2>&1; then
+  summary="$(python3 -c '
+import json, sys
+a = json.loads(sys.argv[1])
+b = json.loads(sys.argv[2])
+a.update({k: v for k, v in b.items() if k != "bench"})
+print(json.dumps(a))' "$summary" "$fleet_summary")"
+else
+  echo "bench_check: python3 not available; baseline keeps sim_hotpath fields only" >&2
 fi
 
 if [ "${1:-}" = "--update" ]; then
@@ -88,6 +113,7 @@ for key in (
     "engine_events_per_s_sealed_equiv",
     "sealed_speedup_vs_compiled",
     "lane_pages_per_s",
+    "fleet_tenants_per_s",
 ):
     b, f_ = base.get(key), fresh.get(key)
     if not b or not f_:
@@ -100,7 +126,13 @@ for key in (
         notes.append(line)
 
 # Lower-is-better times: fresh must stay within 1/MIN_RATIO of baseline.
-for key in ("engine_ns_per_step", "sentinel_e2e_ns_per_step", "alloc_access_free_ns_per_op"):
+for key in (
+    "engine_ns_per_step",
+    "sentinel_e2e_ns_per_step",
+    "alloc_access_free_ns_per_op",
+    "fleet_200t_2m_serial_ns",
+    "fleet_1k_8m_par_ns",
+):
     b, f_ = base.get(key), fresh.get(key)
     if not b or not f_:
         continue

@@ -40,4 +40,18 @@ else
   esac
 fi
 
+echo "== smoke: sentinel fleet --tenants 8 --machines 2 --json =="
+out="$(./target/release/sentinel fleet --tenants 8 --machines 2 --json)"
+if command -v python3 >/dev/null 2>&1; then
+  printf '%s' "$out" | python3 -c 'import json,sys
+o = json.load(sys.stdin)
+assert o["jobs_offered"] == 8, o
+assert o["completed"] + o["rejected"] == 8, o'
+else
+  case "$out" in
+    "{"*"}") ;;
+    *) echo "fleet --json did not emit a JSON object" >&2; exit 1 ;;
+  esac
+fi
+
 echo "verify: OK"
