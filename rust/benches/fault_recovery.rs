@@ -1,0 +1,63 @@
+//! Bench: fault injection & recovery — what the fault hook costs the
+//! healthy path (armed-but-empty plan vs no plan at all), and what a
+//! faulted fleet costs end to end (injection, seal invalidation and
+//! re-convergence, crash displacement, plus the fault-free twin the API
+//! layer runs for the slowdown baseline).
+//!
+//! Run: `cargo bench --bench fault_recovery`
+
+use sentinel_hm::api::{json, Admission, Autoscale, FaultSpec, FleetSpec};
+use sentinel_hm::util::bench::time_it;
+
+fn fleet(tenants: usize, faults: Option<FaultSpec>) -> FleetSpec {
+    let mut s = FleetSpec::new()
+        .tenants(tenants)
+        .rate_per_s(2.0)
+        .machines(2)
+        .machine_fast_bytes(2 << 30)
+        .admission(Admission::Queue)
+        .autoscale(Autoscale::default())
+        .threads(1)
+        .seed(7);
+    if let Some(f) = faults {
+        s = s.faults(f);
+    }
+    s
+}
+
+fn main() {
+    // Warm the workload, trace, and solo-baseline caches so the numbers
+    // measure the fleet and fault drivers, not graph construction.
+    fleet(16, None).run().expect("warm-up fleet");
+
+    let mut summary = json::Obj::new().field_str("bench", "fault_recovery");
+
+    let spec = fleet(200, None);
+    let t = time_it(3, || spec.run().expect("fault-free fleet"));
+    t.report("fleet 200 jobs, no fault plan");
+    summary = summary.field_f64("fleet_200t_fault_free_ns", t.median_ns as f64);
+
+    // Armed but quiet: the per-step fault hook plus the fault-free twin
+    // — the price of *asking* for the degradation report.
+    let spec = fleet(200, Some(FaultSpec::new().rate(0.0)));
+    let t = time_it(3, || spec.run().expect("armed-but-empty fleet"));
+    t.report("fleet 200 jobs, armed but empty plan (hook + twin)");
+    summary = summary.field_f64("fleet_200t_armed_empty_ns", t.median_ns as f64);
+
+    let spec = fleet(200, Some(FaultSpec::new().rate(0.05).crashes(true)));
+    let t = time_it(3, || spec.run().expect("faulted fleet"));
+    t.report("fleet 200 jobs, rate 0.05 with crashes (inject + recover + twin)");
+    summary = summary.field_f64("fleet_200t_faulted_ns", t.median_ns as f64);
+
+    // Shape sanity: the faulted run injected, recovered, and measured
+    // its slowdown against the twin.
+    let out = spec.run().expect("faulted fleet");
+    let report = out.faults.expect("plan armed");
+    assert!(report.injected > 0, "rate 0.05 over 200 jobs injects something");
+    assert!(report.slowdown_vs_fault_free.is_some());
+    summary = summary
+        .field_u64("faults_injected", report.injected)
+        .field_f64("mean_recovery_steps", report.mean_recovery_steps());
+
+    println!("\n{}", summary.end());
+}

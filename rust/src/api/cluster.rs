@@ -35,13 +35,15 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::api::batch::{default_threads, par_map};
+use crate::api::fault::{degradation_json, FaultSpec};
 use crate::api::json::{Arr, Obj};
 use crate::api::policy::PolicyKind;
 use crate::api::spec::{DEFAULT_SEED, DEFAULT_STEPS};
 use crate::api::workload::shared_workload;
 use crate::coordinator::sentinel::{CaseCounts, SentinelPolicy};
 use crate::dnn::zoo::Model;
-use crate::sim::cluster::{arbitration_shares, run_cluster, ClusterTenant};
+use crate::sim::cluster::{arbitration_shares, run_cluster_faulted, ClusterTenant};
+use crate::sim::fault::DegradationReport;
 use crate::sim::replay::CompiledTrace;
 use crate::sim::{Engine, Machine, MachineSpec, TrainResult};
 use crate::util::table::{fmt_bytes, Table};
@@ -188,6 +190,9 @@ pub enum ClusterError {
     UnmanagedPolicy(String),
     /// The total fast-memory sizing rule is out of range.
     BadFastSize(String),
+    /// The fault-injection request is malformed or incompatible with a
+    /// lone cluster (message from the fault layer).
+    BadFaults(String),
 }
 
 impl std::fmt::Display for ClusterError {
@@ -206,6 +211,7 @@ impl std::fmt::Display for ClusterError {
                  (pick a managed policy: sentinel, mi:<K>, ial, lru)"
             ),
             ClusterError::BadFastSize(msg) => write!(f, "bad total fast-memory size: {msg}"),
+            ClusterError::BadFaults(msg) => write!(f, "bad fault injection: {msg}"),
         }
     }
 }
@@ -222,6 +228,7 @@ pub struct ClusterSpec {
     fast: ClusterFast,
     steps: u32,
     seed: u64,
+    faults: Option<FaultSpec>,
 }
 
 impl Default for ClusterSpec {
@@ -249,6 +256,7 @@ impl ClusterSpec {
             fast: ClusterFast::PctOfCombinedPeak(20),
             steps: DEFAULT_STEPS,
             seed: DEFAULT_SEED,
+            faults: None,
         }
     }
 
@@ -292,6 +300,16 @@ impl ClusterSpec {
         self
     }
 
+    /// Arm deterministic fault injection on the shared machine. A
+    /// fault-free twin cluster runs alongside for the makespan
+    /// baseline, and the outcome carries a [`DegradationReport`].
+    /// Crashes are rejected — a lone cluster has no machine pool to
+    /// displace tenants into (that is [`crate::api::FleetSpec`]'s job).
+    pub fn faults(mut self, faults: FaultSpec) -> Self {
+        self.faults = Some(faults);
+        self
+    }
+
     fn resolve(&self) -> Result<Vec<ResolvedTenant>, ClusterError> {
         if self.tenants.is_empty() {
             return Err(ClusterError::NoTenants);
@@ -325,6 +343,16 @@ impl ClusterSpec {
                 return Err(ClusterError::ZeroSteps);
             }
             resolved.push(ResolvedTenant { model, kind: t.policy, priority: t.priority, steps });
+        }
+        if let Some(fs) = &self.faults {
+            fs.validate().map_err(|e| ClusterError::BadFaults(e.to_string()))?;
+            if fs.draws_crashes() {
+                return Err(ClusterError::BadFaults(
+                    "crashes need a fleet to displace tenants into; a lone cluster \
+                     cannot recover from one (use FleetSpec, or disable crashes)"
+                        .into(),
+                ));
+            }
         }
         Ok(resolved)
     }
@@ -395,20 +423,43 @@ impl ClusterSpec {
             configs.push(cfg);
         }
 
-        let mut cluster_tenants = Vec::with_capacity(n);
-        for i in 0..n {
-            let w = &workloads[i];
-            cluster_tenants.push(ClusterTenant {
-                workload: Arc::clone(w),
-                compiled: Arc::clone(&compiled[comp_of[i]]),
-                policy: resolved[i].kind.construct(&w.graph, &w.trace, specs[i]),
-                config: configs[i],
-                machine: Machine::new(specs[i]),
-                priority: resolved[i].priority,
-                share: shares[i],
-            });
-        }
-        let results = run_cluster(cluster_tenants, self.arbitration);
+        // Tenant construction is a closure because a faulted run needs
+        // two fleets of tenants: the faulted one and its fault-free
+        // twin (run_cluster consumes its tenants).
+        let build_tenants = || -> Vec<ClusterTenant> {
+            (0..n)
+                .map(|i| {
+                    let w = &workloads[i];
+                    ClusterTenant {
+                        workload: Arc::clone(w),
+                        compiled: Arc::clone(&compiled[comp_of[i]]),
+                        policy: resolved[i].kind.construct(&w.graph, &w.trace, specs[i]),
+                        config: configs[i],
+                        machine: Machine::new(specs[i]),
+                        priority: resolved[i].priority,
+                        share: shares[i],
+                    }
+                })
+                .collect()
+        };
+        let makespan_of = |rs: &[crate::sim::cluster::TenantRunResult]| -> f64 {
+            rs.iter().map(|r| r.result.total_time_ns).fold(0.0, f64::max)
+        };
+        let (results, fault_report) = match &self.faults {
+            None => (run_cluster_faulted(build_tenants(), self.arbitration, None).0, None),
+            Some(fs) => {
+                let plan = fs.plan(self.seed, 1);
+                let twin = run_cluster_faulted(build_tenants(), self.arbitration, None).0;
+                let (results, report) =
+                    run_cluster_faulted(build_tenants(), self.arbitration, Some(&plan));
+                let mut report = report.unwrap_or_default();
+                let (faulted_ms, twin_ms) = (makespan_of(&results), makespan_of(&twin));
+                if faulted_ms > 0.0 && twin_ms > 0.0 {
+                    report.slowdown_vs_fault_free = Some(faulted_ms / twin_ms);
+                }
+                (results, Some(report))
+            }
+        };
 
         // Solo baselines: the same (policy, workload, steps) with the
         // whole fast tier to itself — fanned across cores and served
@@ -508,6 +559,7 @@ impl ClusterSpec {
             arbitration: self.arbitration,
             fast_bytes_total: fast_total,
             seed: self.seed,
+            faults: fault_report,
             tenants,
         })
     }
@@ -677,6 +729,9 @@ pub struct ClusterOutcome {
     pub fast_bytes_total: u64,
     /// Graph seed shared by every tenant workload.
     pub seed: u64,
+    /// Fault-injection damage report — present exactly when the spec
+    /// armed faults (fault-free outcomes serialize unchanged).
+    pub faults: Option<DegradationReport>,
     /// Per-tenant outcomes, in spec order.
     pub tenants: Vec<TenantOutcome>,
 }
@@ -729,14 +784,17 @@ impl ClusterOutcome {
             let row = t.to_json();
             tenants = tenants.push_raw(&row);
         }
-        Obj::new()
+        let mut obj = Obj::new()
             .field_str("arbitration", self.arbitration.name())
             .field_u64("fast_bytes_total", self.fast_bytes_total)
             .field_u64("seed", self.seed)
             .field_f64("makespan_ns", self.makespan_ns())
-            .field_f64("mean_slowdown_vs_solo", self.mean_slowdown())
-            .field_raw("tenants", &tenants.end())
-            .end()
+            .field_f64("mean_slowdown_vs_solo", self.mean_slowdown());
+        // Appended only when armed: fault-free JSON stays byte-stable.
+        if let Some(r) = &self.faults {
+            obj = obj.field_raw("faults", &degradation_json(r));
+        }
+        obj.field_raw("tenants", &tenants.end()).end()
     }
 
     /// Render a per-tenant summary table (the CLI's text output).

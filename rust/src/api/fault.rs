@@ -1,0 +1,243 @@
+//! Declarative fault injection: the spec layer over [`crate::sim::fault`].
+//!
+//! A [`FaultSpec`] describes a *distribution* of faults — a per-step
+//! hazard rate, a horizon, and whether machine crashes are in scope —
+//! and materializes into a concrete, pre-drawn [`FaultPlan`] via
+//! [`FaultSpec::plan`]. The draw is seeded (the spec's own seed, or the
+//! run's seed when none is set) and happens on the dedicated
+//! [`crate::sim::fault::FAULT_STREAM`] RNG substream, so enabling
+//! faults never perturbs workload generation or arrivals: the same run
+//! seed produces bit-identical graphs and job streams with faults on or
+//! off.
+//!
+//! The companion [`degradation_json`] serializes a
+//! [`DegradationReport`] with the repo's serde-less JSON builders, in a
+//! fixed field order, so two reports are bit-identical iff their JSON
+//! strings are equal — the same determinism proxy every other outcome
+//! type uses.
+
+use crate::api::json::{Arr, Obj};
+use crate::sim::fault::{DegradationReport, FaultPlan};
+
+/// Default per-step fault hazard rate: about one fault per 50 completed
+/// tenant steps per machine — frequent enough to exercise recovery in a
+/// short run, rare enough that runs still converge.
+pub const DEFAULT_FAULT_RATE: f64 = 0.02;
+
+/// Default draw horizon in completed tenant steps per machine. Long
+/// enough to cover any run this repo's experiments perform; events
+/// beyond a run's actual length simply never fire.
+pub const DEFAULT_FAULT_HORIZON: u64 = 10_000;
+
+/// Errors a fault spec can fail validation with.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FaultSpecError {
+    /// The hazard rate is outside `[0, 1)`.
+    BadRate(f64),
+    /// The draw horizon is zero — no step could ever fault.
+    ZeroHorizon,
+}
+
+impl std::fmt::Display for FaultSpecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FaultSpecError::BadRate(r) => {
+                write!(f, "fault rate {r} must be in [0, 1) (a per-step probability)")
+            }
+            FaultSpecError::ZeroHorizon => {
+                write!(f, "fault horizon must be at least 1 step")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FaultSpecError {}
+
+/// A declarative fault-injection request: how often faults strike, over
+/// how many steps, under which seed, and whether whole-machine crashes
+/// are drawn. Attach to a [`crate::api::RunSpec`],
+/// [`crate::api::ClusterSpec`] or [`crate::api::FleetSpec`] with their
+/// `faults(...)` setters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultSpec {
+    seed: Option<u64>,
+    rate: f64,
+    horizon_steps: u64,
+    crashes: bool,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FaultSpec {
+    /// The default spec: [`DEFAULT_FAULT_RATE`] per step over
+    /// [`DEFAULT_FAULT_HORIZON`] steps, no crashes, seed inherited from
+    /// the run.
+    pub fn new() -> Self {
+        FaultSpec {
+            seed: None,
+            rate: DEFAULT_FAULT_RATE,
+            horizon_steps: DEFAULT_FAULT_HORIZON,
+            crashes: false,
+        }
+    }
+
+    /// Draw the plan from this seed instead of the run's seed — sweeps
+    /// can vary the fault draw while holding the workload fixed.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = Some(seed);
+        self
+    }
+
+    /// Per-step fault probability per machine, in `[0, 1)`. Zero is
+    /// legal and draws an empty plan (useful for "faults armed but
+    /// quiet" control runs — the report is present with all zeros).
+    pub fn rate(mut self, rate: f64) -> Self {
+        self.rate = rate;
+        self
+    }
+
+    /// How many completed tenant steps per machine the draw covers.
+    pub fn horizon_steps(mut self, steps: u64) -> Self {
+        self.horizon_steps = steps;
+        self
+    }
+
+    /// Whether whole-machine crashes are drawn (default: off). Only the
+    /// fleet layer can recover from a crash — a solo or cluster run has
+    /// no pool to displace tenants into — so leave this off outside
+    /// fleet specs.
+    pub fn crashes(mut self, on: bool) -> Self {
+        self.crashes = on;
+        self
+    }
+
+    /// The per-step hazard rate this spec draws with.
+    pub fn rate_per_step(&self) -> f64 {
+        self.rate
+    }
+
+    /// Whether this spec draws whole-machine crashes.
+    pub fn draws_crashes(&self) -> bool {
+        self.crashes
+    }
+
+    /// Check the knobs are in range.
+    pub fn validate(&self) -> Result<(), FaultSpecError> {
+        if !(self.rate >= 0.0 && self.rate < 1.0) {
+            return Err(FaultSpecError::BadRate(self.rate));
+        }
+        if self.horizon_steps == 0 {
+            return Err(FaultSpecError::ZeroHorizon);
+        }
+        Ok(())
+    }
+
+    /// Materialize the concrete plan for a pool of `machines` machines,
+    /// defaulting the draw seed to `run_seed`. Deterministic: the same
+    /// spec, seed and machine count always draw the same plan.
+    pub fn plan(&self, run_seed: u64, machines: usize) -> FaultPlan {
+        FaultPlan::draw(
+            self.seed.unwrap_or(run_seed),
+            machines,
+            self.horizon_steps,
+            self.rate,
+            self.crashes,
+        )
+    }
+}
+
+/// Serialize a [`DegradationReport`] to JSON in a fixed field order.
+/// `slowdown_vs_fault_free` prints `null` when no fault-free twin was
+/// measured.
+pub fn degradation_json(r: &DegradationReport) -> String {
+    let mut recovery = Arr::new();
+    for &s in &r.recovery_steps {
+        let lit = s.to_string();
+        recovery = recovery.push_raw(&lit);
+    }
+    let slowdown = match r.slowdown_vs_fault_free {
+        Some(s) => crate::api::json::number(s),
+        None => "null".into(),
+    };
+    Obj::new()
+        .field_u64("injected", r.injected)
+        .field_u64("degradations", r.degradations)
+        .field_u64("capacity_losses", r.capacity_losses)
+        .field_u64("lane_stalls", r.lane_stalls)
+        .field_u64("crashes", r.crashes)
+        .field_u64("promote_pages_dropped", r.promote_pages_dropped)
+        .field_u64("seal_invalidations", r.seal_invalidations)
+        .field_u64("reseals", r.reseals)
+        .field_u64("tenants_displaced", r.tenants_displaced)
+        .field_raw("recovery_steps", &recovery.end())
+        .field_f64("mean_recovery_steps", r.mean_recovery_steps())
+        .field_u64("max_recovery_steps", r.max_recovery_steps())
+        .field_raw("slowdown_vs_fault_free", &slowdown)
+        .end()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::json;
+    use crate::sim::fault::FaultKind;
+
+    #[test]
+    fn validation_rejects_bad_knobs() {
+        assert_eq!(
+            FaultSpec::new().rate(1.5).validate(),
+            Err(FaultSpecError::BadRate(1.5))
+        );
+        assert_eq!(
+            FaultSpec::new().rate(-0.1).validate(),
+            Err(FaultSpecError::BadRate(-0.1))
+        );
+        assert_eq!(
+            FaultSpec::new().horizon_steps(0).validate(),
+            Err(FaultSpecError::ZeroHorizon)
+        );
+        assert!(FaultSpec::new().rate(0.0).validate().is_ok());
+        assert!(FaultSpec::new().validate().is_ok());
+    }
+
+    #[test]
+    fn plan_is_seed_deterministic_and_defaults_to_run_seed() {
+        let spec = FaultSpec::new().rate(0.1);
+        assert_eq!(spec.plan(7, 3), spec.plan(7, 3));
+        // An explicit spec seed overrides the run seed.
+        let pinned = FaultSpec::new().rate(0.1).seed(7);
+        assert_eq!(pinned.plan(999, 3), spec.plan(7, 3));
+        // Crashes stay out of the draw unless asked for.
+        let plan = spec.plan(7, 4);
+        assert!(plan
+            .events()
+            .iter()
+            .all(|e| !matches!(e.kind, FaultKind::Crash)));
+    }
+
+    #[test]
+    fn zero_rate_plan_is_empty() {
+        assert!(FaultSpec::new().rate(0.0).plan(1, 8).is_empty());
+    }
+
+    #[test]
+    fn degradation_json_is_valid_and_round_trips_null_slowdown() {
+        let mut r = DegradationReport::default();
+        r.injected = 3;
+        r.degradations = 2;
+        r.crashes = 1;
+        r.recovery_steps = vec![2, 4];
+        let j = degradation_json(&r);
+        assert!(json::is_valid(&j), "{j}");
+        assert!(j.contains("\"slowdown_vs_fault_free\":null"));
+        assert!(j.contains("\"recovery_steps\":[2,4]"));
+        r.slowdown_vs_fault_free = Some(1.25);
+        let j2 = degradation_json(&r);
+        assert!(json::is_valid(&j2), "{j2}");
+        assert!(j2.contains("\"slowdown_vs_fault_free\":1.25"));
+    }
+}

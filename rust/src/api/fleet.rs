@@ -35,6 +35,7 @@ use std::sync::Arc;
 
 use crate::api::batch::{default_threads, par_map};
 use crate::api::cluster::{solo_baseline, SoloKey};
+use crate::api::fault::{degradation_json, FaultSpec};
 use crate::api::json::{Arr, Obj};
 use crate::api::policy::PolicyKind;
 use crate::api::spec::DEFAULT_SEED;
@@ -43,6 +44,7 @@ use crate::coordinator::sentinel::SentinelPolicy;
 use crate::dnn::workload::Workload;
 use crate::dnn::zoo::Model;
 use crate::sim::cluster::ClusterTenant;
+use crate::sim::fault::{DegradationReport, FaultPlan};
 use crate::sim::fleet::{
     run_fleet, FleetArrival, FleetConfig, FleetMachineStats, UtilSample,
 };
@@ -141,6 +143,23 @@ pub enum FleetError {
     ZeroSteps(u64),
     /// An injected job's policy bypasses fast-memory arbitration.
     UnmanagedPolicy(String),
+    /// The fault-injection request is malformed (message from the
+    /// fault layer).
+    BadFaults(String),
+    /// Crashes emptied the machine pool with work still waiting and no
+    /// autoscaler was configured to regrow it.
+    PoolExhausted {
+        /// Jobs pending or queued when the pool died.
+        waiting_jobs: usize,
+    },
+    /// A completed job had no solo baseline — an internal accounting
+    /// invariant violation, reported as an error instead of a panic.
+    MissingBaseline {
+        /// Model display name of the orphaned job.
+        model: String,
+        /// Registry name of its policy.
+        policy: String,
+    },
 }
 
 impl std::fmt::Display for FleetError {
@@ -158,6 +177,17 @@ impl std::fmt::Display for FleetError {
                 f,
                 "policy '{p}' bypasses fast-memory arbitration and cannot be a fleet job \
                  (pick a managed policy: sentinel, mi:<K>, ial, lru)"
+            ),
+            FleetError::BadFaults(m) => write!(f, "bad fault injection: {m}"),
+            FleetError::PoolExhausted { waiting_jobs } => write!(
+                f,
+                "crashes emptied the machine pool with {waiting_jobs} job(s) still waiting \
+                 and no autoscaler to regrow it (configure autoscale, or lower the fault rate)"
+            ),
+            FleetError::MissingBaseline { model, policy } => write!(
+                f,
+                "internal invariant violated: completed job ({model}, {policy}) has no solo \
+                 baseline"
             ),
         }
     }
@@ -182,6 +212,7 @@ pub struct FleetSpec {
     autoscale: Option<Autoscale>,
     threads: usize,
     jobs: Option<Vec<FleetJob>>,
+    faults: Option<FaultSpec>,
 }
 
 impl Default for FleetSpec {
@@ -210,6 +241,7 @@ impl FleetSpec {
             autoscale: None,
             threads: 0,
             jobs: None,
+            faults: None,
         }
     }
 
@@ -294,6 +326,18 @@ impl FleetSpec {
         self
     }
 
+    /// Arm deterministic fault injection across the pool: machine `i`
+    /// fires the plan's machine-`i` events (machines the autoscaler
+    /// adds read the plan at their pool index). Crashes are legal here
+    /// — the fleet displaces a crashed machine's tenants back through
+    /// admission — and a fault-free twin runs alongside for the
+    /// makespan baseline. The fault draw rides its own RNG substream,
+    /// so the arrival process is bit-identical with faults on or off.
+    pub fn faults(mut self, faults: FaultSpec) -> Self {
+        self.faults = Some(faults);
+        self
+    }
+
     /// Check everything that can be checked without building graphs.
     pub fn validate(&self) -> Result<(), FleetError> {
         if self.machines == 0 {
@@ -334,6 +378,9 @@ impl FleetSpec {
                 }
             }
         }
+        if let Some(fs) = &self.faults {
+            fs.validate().map_err(|e| FleetError::BadFaults(e.to_string()))?;
+        }
         Ok(())
     }
 
@@ -342,10 +389,13 @@ impl FleetSpec {
     /// from the training/inference mix. Pure function of the spec — the
     /// same spec always generates the same jobs.
     pub fn generate_jobs(&self) -> Vec<FleetJob> {
-        // A generator-private stream: perturbing the seed keeps job
-        // randomness decoupled from the graph builder's use of the same
-        // user-facing seed.
-        let mut rng = Rng::new(self.seed ^ 0x5EED_F1EE7);
+        // A generator-private stream: the salted derivation keeps job
+        // randomness decoupled from both the graph builder's use of the
+        // same user-facing seed and the fault layer's labeled stream.
+        // `stream_salted` reproduces the original `seed ^ salt`
+        // derivation bit-exactly, so arrivals match builds that predate
+        // the fault layer.
+        let mut rng = Rng::stream_salted(self.seed, 0x5EED_F1EE7);
         let lambda_max = self.rate_per_s * (1.0 + self.diurnal_amplitude);
         let omega = std::f64::consts::TAU / self.diurnal_period_s;
         let training_models = [Model::Dcgan, Model::ResNetV1 { depth: 32 }, Model::Lstm];
@@ -447,51 +497,74 @@ impl FleetSpec {
             comp_of.push(idx);
         }
 
-        let arrivals: Vec<FleetArrival> = jobs
-            .iter()
-            .enumerate()
-            .map(|(i, j)| {
-                let peak = j.model.peak_memory_target();
-                let demand = ((peak as f64 * j.class.demand_fraction()) as u64)
-                    .clamp(PAGE_SIZE, self.machine_fast_bytes)
-                    / PAGE_SIZE
-                    * PAGE_SIZE;
-                let w = Arc::clone(&workloads[&j.model]);
-                let comp = Arc::clone(&compiled[comp_of[i]]);
-                let (kind, steps, priority) = (j.policy, j.steps, j.priority);
-                FleetArrival {
-                    id: j.id,
-                    arrival_ns: j.arrival_ns,
-                    demand_bytes: demand.max(PAGE_SIZE),
-                    peak_bytes: peak,
-                    priority,
-                    build: Box::new(move |share| {
-                        let spec = kind.machine_spec(&w.graph, &w.trace, share);
-                        ClusterTenant {
-                            policy: kind.construct(&w.graph, &w.trace, spec),
-                            config: kind.engine_config(steps),
-                            machine: Machine::new(spec),
-                            priority,
-                            share,
-                            workload: w,
-                            compiled: comp,
-                        }
-                    }),
-                }
-            })
-            .collect();
+        // Arrivals build is a closure because a faulted run needs two
+        // identical offer streams: the faulted one and its fault-free
+        // twin (run_fleet consumes its arrivals).
+        let build_arrivals = || -> Vec<FleetArrival> {
+            jobs.iter()
+                .enumerate()
+                .map(|(i, j)| {
+                    let peak = j.model.peak_memory_target();
+                    let demand = ((peak as f64 * j.class.demand_fraction()) as u64)
+                        .clamp(PAGE_SIZE, self.machine_fast_bytes)
+                        / PAGE_SIZE
+                        * PAGE_SIZE;
+                    let w = Arc::clone(&workloads[&j.model]);
+                    let comp = Arc::clone(&compiled[comp_of[i]]);
+                    let (kind, steps, priority) = (j.policy, j.steps, j.priority);
+                    FleetArrival {
+                        id: j.id,
+                        arrival_ns: j.arrival_ns,
+                        demand_bytes: demand.max(PAGE_SIZE),
+                        peak_bytes: peak,
+                        priority,
+                        build: Box::new(move |share| {
+                            let spec = kind.machine_spec(&w.graph, &w.trace, share);
+                            ClusterTenant {
+                                policy: kind.construct(&w.graph, &w.trace, spec),
+                                config: kind.engine_config(steps),
+                                machine: Machine::new(spec),
+                                priority,
+                                share,
+                                workload: w,
+                                compiled: comp,
+                            }
+                        }),
+                    }
+                })
+                .collect()
+        };
+        let run_once = |plan: Option<FaultPlan>| {
+            run_fleet(
+                build_arrivals(),
+                FleetConfig {
+                    machines: self.machines,
+                    machine_fast_bytes: self.machine_fast_bytes,
+                    arbitration: self.arbitration,
+                    admission: self.admission,
+                    autoscale: self.autoscale,
+                    threads,
+                    faults: plan,
+                },
+            )
+        };
 
-        let sim = run_fleet(
-            arrivals,
-            FleetConfig {
-                machines: self.machines,
-                machine_fast_bytes: self.machine_fast_bytes,
-                arbitration: self.arbitration,
-                admission: self.admission,
-                autoscale: self.autoscale,
-                threads,
-            },
-        );
+        let fault_plan = self.faults.as_ref().map(|fs| fs.plan(self.seed, self.machines));
+        let sim = run_once(fault_plan).map_err(|e| FleetError::PoolExhausted {
+            waiting_jobs: e.waiting_jobs,
+        })?;
+        let mut fault_report = sim.faults.clone();
+        if let Some(report) = fault_report.as_mut() {
+            // Fault-free twin: the same offer stream against a healthy
+            // pool is the degradation report's makespan baseline. It
+            // cannot exhaust the pool (nothing crashes), but degrade
+            // gracefully if that invariant ever breaks.
+            if let Ok(twin) = run_once(None) {
+                if sim.makespan_ns > 0.0 && twin.makespan_ns > 0.0 {
+                    report.slowdown_vs_fault_free = Some(sim.makespan_ns / twin.makespan_ns);
+                }
+            }
+        }
 
         // Solo baselines for every distinct (model, policy) at canonical
         // length with a whole machine's fast tier — the same cache
@@ -535,12 +608,18 @@ impl FleetSpec {
                     (r, warmup)
                 })
             });
-        let solo_of = |model: Model, kind: PolicyKind| -> &(TrainResult, u32) {
-            let i = solo_keys
+        // A missing baseline is an internal invariant violation (every
+        // completed job's key was collected above) — but the fleet
+        // driver is panic-free, so it degrades to a typed error.
+        let solo_of = |model: Model, kind: PolicyKind| -> Result<&(TrainResult, u32), FleetError> {
+            solo_keys
                 .iter()
                 .position(|(m, k)| *m == model && *k == kind)
-                .expect("every completed job has a baseline");
-            &solos[i]
+                .map(|i| &solos[i])
+                .ok_or_else(|| FleetError::MissingBaseline {
+                    model: model.name(),
+                    policy: kind.name(),
+                })
         };
 
         let mut tenants: Vec<FleetTenantSummary> = Vec::with_capacity(sim.completed.len());
@@ -554,7 +633,7 @@ impl FleetSpec {
                 None => j.policy.default_warmup(),
             };
             let thr = d.result.result.throughput(warmup as usize);
-            let (solo_r, solo_warmup) = solo_of(j.model, j.policy);
+            let (solo_r, solo_warmup) = solo_of(j.model, j.policy)?;
             let solo_thr = solo_r.throughput(*solo_warmup as usize);
             let slowdown = if thr > 0.0 && solo_thr > 0.0 { solo_thr / thr } else { f64::NAN };
             seal_invalidations += d.result.seal_invalidations;
@@ -624,6 +703,7 @@ impl FleetSpec {
             pages_force_demoted,
             peak_fast_utilization: used_peak,
             mean_fast_utilization: used_mean,
+            faults: fault_report,
             tenants,
             machines: sim.machines,
             samples: sim.samples,
@@ -738,6 +818,10 @@ pub struct FleetOutcome {
     pub peak_fast_utilization: f64,
     /// Mean fast-memory residency fraction across event samples.
     pub mean_fast_utilization: f64,
+    /// Fault-injection damage report, merged across the pool — present
+    /// exactly when the spec armed faults (fault-free outcomes
+    /// serialize byte-identically to builds without the fault layer).
+    pub faults: Option<DegradationReport>,
     /// Every completed tenant, sorted by job id.
     pub tenants: Vec<FleetTenantSummary>,
     /// Per-machine lifetime stats, pool order.
@@ -765,15 +849,20 @@ impl FleetOutcome {
         };
         let mut machines = Arr::new();
         for m in &self.machines {
-            let row = Obj::new()
+            let mut row = Obj::new()
                 .field_u64("fast_bytes", m.fast_bytes)
                 .field_u64("tenants_served", m.tenants_served)
                 .field_u64("peak_residents", m.peak_residents as u64)
                 .field_u64("peak_share_bytes", m.peak_share_bytes)
                 .field_u64("peak_committed_bytes", m.peak_committed_bytes)
-                .field_bool("retired", m.retired)
-                .end();
-            machines = machines.push_raw(&row);
+                .field_bool("retired", m.retired);
+            // Only faulted runs report crash state, so fault-free JSON
+            // stays byte-stable.
+            if self.faults.is_some() {
+                row = row.field_bool("crashed", m.crashed);
+            }
+            let rendered = row.end();
+            machines = machines.push_raw(&rendered);
         }
         let stride = (self.samples.len() / 200).max(1);
         let mut samples = Arr::new();
@@ -790,7 +879,7 @@ impl FleetOutcome {
                 .end();
             samples = samples.push_raw(&row);
         }
-        Obj::new()
+        let mut obj = Obj::new()
             .field_u64("seed", self.seed)
             .field_str("arbitration", self.arbitration.name())
             .field_str("admission", self.admission.name())
@@ -816,8 +905,11 @@ impl FleetOutcome {
             .field_u64("pages_force_demoted", self.pages_force_demoted)
             .field_f64("peak_fast_utilization", self.peak_fast_utilization)
             .field_f64("mean_fast_utilization", self.mean_fast_utilization)
-            .field_u64("tenants_digest", self.tenants_digest())
-            .field_raw("machines", &machines.end())
+            .field_u64("tenants_digest", self.tenants_digest());
+        if let Some(r) = &self.faults {
+            obj = obj.field_raw("faults", &degradation_json(r));
+        }
+        obj.field_raw("machines", &machines.end())
             .field_raw("samples", &samples.end())
             .end()
     }
@@ -885,6 +977,24 @@ impl FleetOutcome {
         t.row(vec!["seals written".into(), self.seal_segments.to_string()]);
         t.row(vec!["pages force-demoted".into(), self.pages_force_demoted.to_string()]);
         t.row(vec!["makespan".into(), format!("{:.2} s", self.makespan_ns / 1e9)]);
+        if let Some(r) = &self.faults {
+            t.row(vec!["faults injected".into(), r.injected.to_string()]);
+            t.row(vec![
+                "crashes / displaced".into(),
+                format!("{} / {}", r.crashes, r.tenants_displaced),
+            ]);
+            t.row(vec![
+                "fault seal damage".into(),
+                format!("{} invalidated, {} re-sealed", r.seal_invalidations, r.reseals),
+            ]);
+            t.row(vec![
+                "mean recovery".into(),
+                format!("{:.1} steps", r.mean_recovery_steps()),
+            ]);
+            if let Some(s) = r.slowdown_vs_fault_free {
+                t.row(vec!["slowdown vs fault-free".into(), format!("{s:.3}x")]);
+            }
+        }
         t
     }
 }
@@ -977,5 +1087,34 @@ mod tests {
         assert!(!out.samples.is_empty());
         let rendered = out.summary_table().render();
         assert!(rendered.contains("p99 slowdown"));
+    }
+
+    #[test]
+    fn faulted_fleet_reports_degradation_and_serializes() {
+        let base = FleetSpec::new()
+            .tenants(5)
+            .rate_per_s(2.0)
+            .machines(2)
+            .machine_fast_bytes(Model::Dcgan.peak_memory_target() / 2)
+            .seed(12);
+        let plain = base.clone().run().unwrap();
+        assert!(plain.faults.is_none());
+        let faulted = base.clone().faults(FaultSpec::new().rate(0.05)).run().unwrap();
+        let r = faulted.faults.as_ref().expect("armed faults must report");
+        assert!(r.slowdown_vs_fault_free.is_some());
+        let j = faulted.to_json();
+        assert!(json::is_valid(&j), "{j}");
+        assert!(j.contains("\"faults\""));
+        assert!(j.contains("\"crashed\""));
+        // A zero-rate plan is armed-but-quiet: the report is present
+        // with all zeros and the tenant table is bit-identical to the
+        // fault-free run.
+        let quiet = base.faults(FaultSpec::new().rate(0.0)).run().unwrap();
+        assert_eq!(quiet.faults.as_ref().unwrap().injected, 0);
+        assert_eq!(quiet.tenants_digest(), plain.tenants_digest());
+        // Fault-free JSON carries no fault fields at all.
+        let pj = plain.to_json();
+        assert!(!pj.contains("\"faults\""));
+        assert!(!pj.contains("\"crashed\""));
     }
 }

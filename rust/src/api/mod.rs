@@ -30,6 +30,12 @@
 //!   autoscaled pool of machines under an [`Admission`] policy,
 //!   reporting p50/p99 slowdown-vs-solo, utilization over virtual time,
 //!   queue/reject counters, and churn-driven seal thrash.
+//! * [`fault`] — deterministic fault injection: [`FaultSpec`] arms a
+//!   pre-drawn, seeded plan of bandwidth degradations, fast-capacity
+//!   losses, migration-lane stalls and (fleet-only) machine crashes on
+//!   any of the above, and every outcome carries a
+//!   [`crate::sim::DegradationReport`] quantifying slowdown, seal
+//!   damage, and recovery time.
 //!
 //! ```no_run
 //! use sentinel_hm::api::{run_batch, PolicyKind, RunSpec};
@@ -56,6 +62,7 @@
 
 pub mod batch;
 pub mod cluster;
+pub mod fault;
 pub mod fleet;
 pub mod json;
 pub mod outcome;
@@ -67,6 +74,9 @@ pub use batch::{default_threads, par_map, par_map_mut, run_batch};
 pub use cluster::{
     clear_solo_baseline_cache, parse_tenant_list, Arbitration, ClusterError, ClusterOutcome,
     ClusterSpec, TenantOutcome, TenantSpec,
+};
+pub use fault::{
+    degradation_json, FaultSpec, FaultSpecError, DEFAULT_FAULT_HORIZON, DEFAULT_FAULT_RATE,
 };
 pub use fleet::{
     Admission, Autoscale, FleetError, FleetJob, FleetOutcome, FleetSpec, FleetTenantSummary,

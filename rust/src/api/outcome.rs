@@ -3,8 +3,10 @@
 //! profile summary) that the paper's tables report, serializable to JSON
 //! without serde.
 
+use crate::api::fault::degradation_json;
 use crate::api::json::{Arr, Obj};
 use crate::coordinator::sentinel::CaseCounts;
+use crate::sim::fault::DegradationReport;
 use crate::sim::TrainResult;
 
 /// Condensed §3 profile of the workload, captured when the run's policy
@@ -51,6 +53,11 @@ pub struct RunOutcome {
     pub chosen_mi: Option<u32>,
     /// Profile summary (policies that ran a profiling step).
     pub profile: Option<ProfileSummary>,
+    /// Fault-injection damage report — present exactly when the spec
+    /// armed faults (even a zero-rate plan reports, with all zeros), so
+    /// fault-free outcomes serialize byte-identically to builds that
+    /// predate the fault layer.
+    pub faults: Option<DegradationReport>,
     /// The engine's full per-step record.
     pub result: TrainResult,
 }
@@ -105,7 +112,10 @@ impl RunOutcome {
                 .end(),
             None => "null".into(),
         };
-        Obj::new()
+        // The fault report is appended only when present: a fault-free
+        // outcome's JSON must stay byte-identical to the pre-fault
+        // format (the bit-identity proxy the determinism tests key on).
+        let mut obj = Obj::new()
             .field_str("model", &self.model)
             .field_str("policy", &self.policy)
             .field_str("policy_detail", &self.policy_detail)
@@ -124,8 +134,10 @@ impl RunOutcome {
             .field_u64("alloc_spills", self.result.alloc_spills)
             .field_raw("chosen_mi", &chosen_mi)
             .field_raw("cases", &cases)
-            .field_raw("profile", &profile)
-            .field_raw("per_step", &steps.end())
-            .end()
+            .field_raw("profile", &profile);
+        if let Some(r) = &self.faults {
+            obj = obj.field_raw("faults", &degradation_json(r));
+        }
+        obj.field_raw("per_step", &steps.end()).end()
     }
 }

@@ -9,13 +9,17 @@
 
 use std::sync::Arc;
 
+use crate::api::fault::FaultSpec;
 use crate::api::outcome::{ProfileSummary, RunOutcome};
 use crate::api::policy::PolicyKind;
 use crate::api::workload::{shared_workload, Workload};
 use crate::coordinator::sentinel::SentinelPolicy;
 use crate::dnn::zoo::Model;
 use crate::dnn::{ModelGraph, StepTrace};
-use crate::sim::{Engine, Machine};
+use crate::sim::cluster::{run_cluster_faulted, Arbitration, ClusterTenant};
+use crate::sim::fault::DegradationReport;
+use crate::sim::replay::CompiledTrace;
+use crate::sim::{Engine, Machine, TrainResult};
 
 /// Default steps per run: enough for Sentinel's tuning phase plus a
 /// steady-state window (the evaluation's standard run length).
@@ -55,6 +59,9 @@ pub enum SpecError {
     BadFastSize(String),
     /// Fast capacity exceeds the configured slow-tier capacity.
     FastExceedsSlow { fast: u64, slow: u64 },
+    /// The fault-injection request is malformed or incompatible with
+    /// the chosen policy (message from the fault layer).
+    BadFaults(String),
 }
 
 impl std::fmt::Display for SpecError {
@@ -72,6 +79,7 @@ impl std::fmt::Display for SpecError {
                 "fast capacity ({fast} B) exceeds the slow tier ({slow} B); \
                  the fast tier must be the small one"
             ),
+            SpecError::BadFaults(msg) => write!(f, "bad fault injection: {msg}"),
         }
     }
 }
@@ -100,6 +108,7 @@ pub struct RunSpec {
     fast: FastSize,
     slow_bytes: Option<u64>,
     seed: u64,
+    faults: Option<FaultSpec>,
 }
 
 impl RunSpec {
@@ -111,6 +120,7 @@ impl RunSpec {
             fast: FastSize::PctOfPeak(20),
             slow_bytes: None,
             seed: DEFAULT_SEED,
+            faults: None,
         }
     }
 
@@ -172,6 +182,19 @@ impl RunSpec {
     /// Graph seed (default: [`DEFAULT_SEED`], shared by every figure).
     pub fn seed(mut self, seed: u64) -> Self {
         self.seed = seed;
+        self
+    }
+
+    /// Arm deterministic fault injection: the run executes against a
+    /// pre-drawn [`crate::sim::FaultPlan`] (bandwidth degradation,
+    /// fast-capacity loss, migration-lane stalls — crashes are a fleet
+    /// concept and rejected here), a fault-free twin runs alongside for
+    /// the slowdown baseline, and the outcome carries a
+    /// [`DegradationReport`]. Fault-free specs are untouched: `run`
+    /// without this setter is bit-identical to builds without the fault
+    /// layer.
+    pub fn faults(mut self, faults: FaultSpec) -> Self {
+        self.faults = Some(faults);
         self
     }
 
@@ -246,7 +269,25 @@ impl RunSpec {
             return Err(SpecError::ZeroSteps);
         }
         self.zoo_model()?;
-        self.check_fast(None)
+        self.check_fast(None)?;
+        if let Some(fs) = &self.faults {
+            fs.validate().map_err(|e| SpecError::BadFaults(e.to_string()))?;
+            if matches!(self.policy, PolicyKind::FastOnly | PolicyKind::SlowOnly) {
+                return Err(SpecError::BadFaults(format!(
+                    "policy '{}' bypasses data management; fault injection needs a \
+                     managed policy (sentinel, mi:<K>, ial, lru)",
+                    self.policy.name()
+                )));
+            }
+            if fs.draws_crashes() {
+                return Err(SpecError::BadFaults(
+                    "crashes need a fleet to displace tenants into; a solo run \
+                     cannot recover from one (use FleetSpec, or disable crashes)"
+                        .into(),
+                ));
+            }
+        }
+        Ok(())
     }
 
     /// Execute the run: resolve the workload (graph + trace, shared
@@ -257,19 +298,12 @@ impl RunSpec {
     pub fn run(&self) -> Result<RunOutcome, SpecError> {
         self.validate()?;
         let zoo = self.zoo_model()?;
-        let local;
-        let cached: Arc<Workload>;
-        let (g, trace): (&ModelGraph, &StepTrace) = match (&self.model, zoo) {
-            (ModelSel::Graph(g), _) => {
-                local = StepTrace::from_graph(g);
-                (&**g, &local)
-            }
-            (_, Some(m)) => {
-                cached = shared_workload(m, self.seed);
-                (&cached.graph, &cached.trace)
-            }
+        let workload: Arc<Workload> = match (&self.model, zoo) {
+            (ModelSel::Graph(g), _) => Arc::new(Workload::from_graph((**g).clone())),
+            (_, Some(m)) => shared_workload(m, self.seed),
             _ => unreachable!("non-graph specs always resolve a zoo model"),
         };
+        let (g, trace): (&ModelGraph, &StepTrace) = (&workload.graph, &workload.trace);
         let reported_peak = match zoo {
             Some(m) => m.peak_memory_target(),
             None => Model::reported_peak(g.peak_live_bytes()),
@@ -279,10 +313,42 @@ impl RunSpec {
         if let Some(slow) = self.slow_bytes {
             spec.slow.capacity_bytes = slow;
         }
+        let config = self.policy.engine_config(self.steps);
+        // Fault-free execution: the whole run when faults are off, the
+        // slowdown baseline (the "twin") when they are on.
         let mut policy = self.policy.construct(g, trace, spec);
-        let engine = Engine::new(self.policy.engine_config(self.steps));
+        let engine = Engine::new(config);
         let mut machine = Machine::new(spec);
-        let result = engine.run(g, trace, &mut machine, policy.as_mut());
+        let mut result = engine.run(g, trace, &mut machine, policy.as_mut());
+        let mut faults: Option<DegradationReport> = None;
+        if let Some(fs) = &self.faults {
+            let plan = fs.plan(self.seed, 1);
+            let compiled = Arc::new(CompiledTrace::compile(
+                g,
+                trace,
+                spec.compute_gflops,
+                config.profiling_fault_ns,
+            ));
+            let tenant = ClusterTenant {
+                workload: Arc::clone(&workload),
+                compiled,
+                policy: self.policy.construct(g, trace, spec),
+                config,
+                machine: Machine::new(spec),
+                priority: 0,
+                share: spec.fast.capacity_bytes,
+            };
+            let (mut results, report) =
+                run_cluster_faulted(vec![tenant], Arbitration::StaticPartition, Some(&plan));
+            let res = results.pop().expect("one tenant in, one result out");
+            let mut report = report.unwrap_or_default();
+            report.slowdown_vs_fault_free = slowdown_ratio(&res.result, &result);
+            faults = Some(report);
+            // The faulted execution is the run; the twin only feeds the
+            // slowdown baseline.
+            result = res.result;
+            policy = res.policy;
+        }
         let (cases, chosen_mi, warmup, profile) =
             match policy.as_any().downcast_ref::<SentinelPolicy>() {
                 Some(p) => (
@@ -312,7 +378,18 @@ impl RunSpec {
             cases,
             chosen_mi,
             profile,
+            faults,
             result,
         })
+    }
+}
+
+/// Makespan ratio of a faulted run over its fault-free twin (`None`
+/// when either side is degenerate). > 1.0 means the faults cost time.
+fn slowdown_ratio(faulted: &TrainResult, fault_free: &TrainResult) -> Option<f64> {
+    if faulted.total_time_ns > 0.0 && fault_free.total_time_ns > 0.0 {
+        Some(faulted.total_time_ns / fault_free.total_time_ns)
+    } else {
+        None
     }
 }

@@ -28,8 +28,8 @@
 //! | Fig. 13 (ResNet variants) | [`fig13_variants`] |
 
 use crate::api::{
-    default_threads, par_map, run_batch, shared_workload, Admission, Arbitration, ClusterSpec,
-    FleetSpec, PolicyKind, RunSpec, TenantSpec,
+    default_threads, par_map, run_batch, shared_workload, Admission, Arbitration, Autoscale,
+    ClusterSpec, FaultSpec, FleetSpec, PolicyKind, RunSpec, TenantSpec,
 };
 use crate::coordinator::sentinel::SentinelConfig;
 use crate::dnn::zoo::Model;
@@ -511,6 +511,92 @@ pub fn fleet_churn_table(rates: &[f64], admissions: &[Admission], tenants: usize
     t
 }
 
+/// Degradation curves: the fleet churn scenario under escalating fault
+/// rates × every admission policy, with crashes enabled and an
+/// autoscaled pool (so a crash cold-restarts instead of killing the
+/// run). One row per (fault rate × admission): jobs completed, faults
+/// injected, crash/displacement counts, seal damage re-sealed, mean
+/// recovery time in steps, p99 slowdown vs solo, and the makespan
+/// slowdown against the cell's own fault-free twin.
+///
+/// Regenerate with `sentinel figure dg` (see EXPERIMENTS.md
+/// §Degradation curves for the expected shape: slowdown-vs-fault-free
+/// grows with the fault rate while completion stays total — graceful
+/// degradation, not collapse).
+///
+/// Grid cells are independent fleet simulations and fan out across
+/// [`default_threads`] workers; each cell runs its own machine pool
+/// serially (`threads(1)`) so the pools don't nest. A cell whose pool
+/// is exhausted anyway reports the error in its row instead of
+/// panicking — the sweep itself degrades gracefully.
+pub fn degradation_table(fault_rates: &[f64], admissions: &[Admission], tenants: usize) -> Table {
+    let cells: Vec<(f64, Admission)> = fault_rates
+        .iter()
+        .flat_map(|&r| admissions.iter().map(move |&a| (r, a)))
+        .collect();
+    let run_cell = |&(rate, admission): &(f64, Admission)| {
+        FleetSpec::new()
+            .tenants(tenants)
+            .rate_per_s(0.8)
+            .machines(2)
+            .machine_fast_bytes(2 << 30)
+            .admission(admission)
+            .autoscale(Autoscale::default())
+            .threads(1)
+            .seed(seed())
+            .faults(FaultSpec::new().rate(rate).crashes(true))
+            .run()
+    };
+    let outs = par_map(&cells, default_threads(), run_cell);
+    let mut t = Table::new(vec![
+        "fault rate",
+        "admission",
+        "done",
+        "injected",
+        "crashes",
+        "displaced",
+        "reseals",
+        "mean recovery",
+        "p99 slowdown",
+        "vs fault-free",
+    ]);
+    for ((rate, admission), out) in cells.iter().zip(&outs) {
+        match out {
+            Ok(out) => {
+                let r = out.faults.clone().unwrap_or_default();
+                t.row(vec![
+                    format!("{rate:.3}"),
+                    admission.name().to_string(),
+                    out.completed.to_string(),
+                    r.injected.to_string(),
+                    r.crashes.to_string(),
+                    r.tenants_displaced.to_string(),
+                    r.reseals.to_string(),
+                    format!("{:.1} steps", r.mean_recovery_steps()),
+                    format!("{:.3}", out.p99_slowdown),
+                    match r.slowdown_vs_fault_free {
+                        Some(s) => format!("{s:.3}x"),
+                        None => "-".into(),
+                    },
+                ]);
+            }
+            Err(e) => t.row(vec![
+                format!("{rate:.3}"),
+                admission.name().to_string(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                format!("{e}"),
+            ]),
+        }
+    }
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -540,6 +626,12 @@ mod tests {
     fn fleet_churn_table_has_one_row_per_grid_cell() {
         let t = fleet_churn_table(&[0.5], &[Admission::Queue], 4);
         assert_eq!(t.rows().len(), 1, "rates × admissions");
+    }
+
+    #[test]
+    fn degradation_table_has_one_row_per_grid_cell() {
+        let t = degradation_table(&[0.0, 0.05], &[Admission::Queue], 4);
+        assert_eq!(t.rows().len(), 2, "fault rates × admissions");
     }
 
     #[test]

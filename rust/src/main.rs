@@ -6,6 +6,7 @@
 //! sentinel sweep-mi [--fast-mb N]          # Figs 7/8 (MI sweep)
 //! sentinel compare [--steps N]             # Fig 10 + Tables 4/5
 //! sentinel figure <id|all>                 # regenerate a paper figure/table
+//! sentinel faults [opts]                   # fleet run under injected faults
 //! sentinel e2e [--steps N] [--artifacts D] # real training via PJRT artifacts
 //! sentinel models                          # list model names
 //! ```
@@ -20,7 +21,8 @@ use std::collections::HashMap;
 use std::process::ExitCode;
 
 use sentinel_hm::api::{
-    json, parse_tenant_list, Admission, Autoscale, ClusterSpec, FleetSpec, PolicyKind, RunSpec,
+    json, parse_tenant_list, Admission, Autoscale, ClusterSpec, FaultSpec, FleetSpec, PolicyKind,
+    RunSpec, DEFAULT_FAULT_RATE,
 };
 use sentinel_hm::dnn::zoo::{model_names, Model};
 use sentinel_hm::figures;
@@ -41,6 +43,7 @@ fn main() -> ExitCode {
         "sweep-mi" => cmd_sweep_mi(&args),
         "cluster" => cmd_cluster(&args),
         "fleet" => cmd_fleet(&args),
+        "faults" => cmd_faults(&args),
         "compare" => cmd_compare(&args),
         "figure" => cmd_figure(&args),
         "e2e" => cmd_e2e(&args),
@@ -75,8 +78,12 @@ fn print_usage() {
                           [--machines 2] [--fast-mb 4096] [--arb static|proportional|priority]\n\
                           [--admission reject|queue|spill] [--autoscale] [--max-machines 64]\n\
                           [--threads N] [--seed S] [--json]\n\
+           sentinel faults [--tenants 32] [--rate 1.0] [--machines 2] [--fast-mb 4096]\n\
+                           [--arb static|proportional|priority] [--admission reject|queue|spill]\n\
+                           [--fault-rate {DEFAULT_FAULT_RATE}] [--fault-seed S] [--horizon N] [--no-crashes]\n\
+                           [--fixed-pool] [--max-machines 64] [--threads N] [--seed S] [--json]\n\
            sentinel compare [--steps 14] [--json]\n\
-           sentinel figure <1|2|3|4|7|8|10|11|12|13|t1|t4|t5|ct|fleet|all> [--steps N] [--fast-mb N] [--json]\n\
+           sentinel figure <1|2|3|4|7|8|10|11|12|13|t1|t4|t5|ct|fleet|dg|all> [--steps N] [--fast-mb N] [--json]\n\
            sentinel e2e [--steps 300] [--artifacts artifacts] [--lr 0.05]   (needs the `pjrt` feature)\n\
            sentinel models [--json]\n\
          \n\
@@ -435,6 +442,88 @@ fn cmd_fleet(args: &[String]) -> Result<(), String> {
     Ok(())
 }
 
+/// `sentinel faults`: the fleet scenario with deterministic fault
+/// injection armed — seeded bandwidth degradations, fast-capacity
+/// losses, migration-lane stalls and machine crashes, with the
+/// degradation report (including slowdown vs a fault-free twin of the
+/// same run) attached to the outcome.
+fn cmd_faults(args: &[String]) -> Result<(), String> {
+    let opts = parse_opts(
+        "faults",
+        &args[1..],
+        &[
+            "tenants",
+            "rate",
+            "machines",
+            "max-machines",
+            "fast-mb",
+            "arb",
+            "admission",
+            "threads",
+            "seed",
+            "fault-rate",
+            "fault-seed",
+            "horizon",
+        ],
+        &["json", "fixed-pool", "no-crashes"],
+    )?;
+    let mut faults = FaultSpec::new()
+        .rate(opt_f64(&opts, "fault-rate", DEFAULT_FAULT_RATE)?)
+        .crashes(!opts.contains_key("no-crashes"));
+    if let Some(s) = opts.get("fault-seed") {
+        faults = faults.seed(s.parse().map_err(|_| "--fault-seed wants a number".to_string())?);
+    }
+    if let Some(h) = opts.get("horizon") {
+        let h: u64 = h.parse().map_err(|_| "--horizon wants a number".to_string())?;
+        faults = faults.horizon_steps(h);
+    }
+    let mut spec = FleetSpec::new()
+        .tenants(opt_u64(&opts, "tenants", 32)? as usize)
+        .rate_per_s(opt_f64(&opts, "rate", 1.0)?)
+        .machines(opt_u64(&opts, "machines", 2)? as usize)
+        .machine_fast_bytes(opt_u64(&opts, "fast-mb", 4096)? << 20)
+        .threads(opt_u64(&opts, "threads", 0)? as usize)
+        .faults(faults);
+    if let Some(a) = opts.get("arb") {
+        spec = spec.arbitration(a.parse().map_err(|e| format!("{e}"))?);
+    }
+    if let Some(a) = opts.get("admission") {
+        spec = spec.admission(a.parse().map_err(|e| format!("{e}"))?);
+    }
+    // Crashes permanently remove machines, so the pool autoscales by
+    // default; --fixed-pool opts into the fixed pool, where enough
+    // crashes empty it and the run reports a pool-exhausted error.
+    if opts.contains_key("fixed-pool") {
+        if opts.contains_key("max-machines") {
+            return Err("--max-machines only applies to the (default) autoscaled pool".into());
+        }
+    } else {
+        spec = spec.autoscale(Autoscale {
+            max_machines: opt_u64(&opts, "max-machines", 64)? as usize,
+            ..Default::default()
+        });
+    }
+    if let Some(seed) = opts.get("seed") {
+        spec = spec.seed(seed.parse().map_err(|_| "--seed wants a number".to_string())?);
+    }
+    let out = spec.run().map_err(|e| e.to_string())?;
+    if want_json(&opts) {
+        println!("{}", out.to_json());
+        return Ok(());
+    }
+    let report = out.faults.clone().unwrap_or_default();
+    println!(
+        "faults: {} injected across {} jobs | {} machines x {} fast | admission = {}",
+        report.injected,
+        out.jobs_offered,
+        out.machines_initial,
+        fmt_bytes(out.machine_fast_bytes),
+        out.admission.name(),
+    );
+    out.summary_table().print();
+    Ok(())
+}
+
 fn t5_section() -> (String, Table) {
     let t5: Vec<(String, u64, u64)> = Model::paper_five()
         .into_iter()
@@ -551,6 +640,12 @@ fn figure_sections(id: &str, steps: u32, fast_bytes: u64) -> Result<Vec<(String,
             "Fleet — churn sweep (admission × arrival rate, 48 jobs, 2 machines)".into(),
             figures::fleet_churn_table(&[0.2, 0.8], &Admission::all(), 48),
         )],
+        // Beyond the paper: degradation curves (fault rate × admission
+        // policy, crashes on, autoscaled pool).
+        "dg" => vec![(
+            "Degradation — fault rate × admission (crashes on, autoscaled pool, 24 jobs)".into(),
+            figures::degradation_table(&[0.0, 0.02, 0.08], &Admission::all(), 24),
+        )],
         other => return Err(format!("unknown figure '{other}'")),
     };
     Ok(sections)
@@ -565,11 +660,11 @@ fn cmd_figure(args: &[String]) -> Result<(), String> {
         .clone();
     let steps = opt_u64(&opts, "steps", u64::from(figures::RUN_STEPS))? as u32;
     let fast = opt_u64(&opts, "fast-mb", 1024)? << 20;
-    // "7" covers Fig 8 and "10" covers Table 4 (shared sweeps). "ct"
-    // and "fleet" (the beyond-paper contention and churn sweeps) are
-    // deliberately NOT in "all": "all" regenerates the paper's
-    // artifacts, and those grids are the most expensive figures — run
-    // `sentinel figure ct` / `sentinel figure fleet` explicitly.
+    // "7" covers Fig 8 and "10" covers Table 4 (shared sweeps). "ct",
+    // "fleet" and "dg" (the beyond-paper contention, churn and fault
+    // sweeps) are deliberately NOT in "all": "all" regenerates the
+    // paper's artifacts, and those grids are the most expensive
+    // figures — run `sentinel figure ct|fleet|dg` explicitly.
     let ids: Vec<&str> = if id == "all" {
         vec!["1", "2", "3", "4", "t1", "7", "10", "t5", "11", "12", "13"]
     } else {

@@ -59,6 +59,7 @@ use std::sync::Arc;
 use crate::dnn::workload::Workload;
 use crate::sim::device::Tier;
 use crate::sim::engine::{replay_layer, EngineConfig, Policy, StepStats, TrainResult};
+use crate::sim::fault::{DegradationReport, FaultAction, FaultInjector, FaultPlan, RecoveryTracker};
 use crate::sim::machine::Machine;
 use crate::sim::replay::CompiledTrace;
 use crate::sim::schedule::{Sealer, StepRecorder};
@@ -288,6 +289,17 @@ pub(crate) struct ActiveTenant {
     /// Sealed steps of the current segment, flushed to
     /// `Policy::on_sealed_replay` at invalidation or finish.
     sealed_in_segment: u32,
+    /// Totals banked from machines lost to crashes ([`rehost`] zeroes
+    /// the live machine). All zero on a never-displaced tenant, so the
+    /// fault-free totals are bit-identical to the pre-fault-layer ones.
+    ///
+    /// [`rehost`]: ActiveTenant::rehost
+    carry_time_ns: f64,
+    carry_pages_in: u64,
+    carry_pages_out: u64,
+    carry_spills: u64,
+    carry_peak_fast: u64,
+    carry_peak_total: u64,
     pub(crate) done: bool,
 }
 
@@ -321,6 +333,12 @@ impl ActiveTenant {
             steady_from: None,
             sealed_steps: 0,
             sealed_in_segment: 0,
+            carry_time_ns: 0.0,
+            carry_pages_in: 0,
+            carry_pages_out: 0,
+            carry_spills: 0,
+            carry_peak_fast: 0,
+            carry_peak_total: 0,
             done,
         }
     }
@@ -507,20 +525,88 @@ impl ActiveTenant {
         self.invalidate_seal();
     }
 
+    /// True while a sealed steady-state schedule is active — the
+    /// re-convergence witness the fault layer's recovery clock waits
+    /// for.
+    pub(crate) fn is_sealed(&self) -> bool {
+        self.sealer.sealed().is_some()
+    }
+
+    /// Training steps completed so far (a crash-displaced tenant
+    /// resumes from here, not from zero).
+    pub(crate) fn completed_steps(&self) -> u32 {
+        self.step
+    }
+
+    /// Total steps this tenant was asked to run.
+    pub(crate) fn steps_total(&self) -> u32 {
+        self.config.steps
+    }
+
+    /// Scheduling priority (the fleet re-offers displaced tenants at
+    /// their original priority).
+    pub(crate) fn priority(&self) -> u32 {
+        self.priority
+    }
+
+    /// A fault disrupted this tenant's machine without moving its share
+    /// (bandwidth degradation, lane stall): re-notify the policy — the
+    /// same hook a share change uses, so policies re-plan against the
+    /// machine's new reality — and drop the sealed schedule; the
+    /// steady state it proved no longer exists.
+    pub(crate) fn fault_disrupt(&mut self) {
+        let share = self.share;
+        self.policy.fast_share_changed(share, &self.machine);
+        self.invalidate_seal();
+    }
+
+    /// Crash displacement: the tenant's machine died with everything on
+    /// it. Bank the dead machine's totals (so final counters stay
+    /// honest), stand up a fresh machine at the readmission `share`,
+    /// re-run the prologue, and resume the live loop from
+    /// [`completed_steps`] — any half-finished step is re-run from its
+    /// start, since per-step output is only committed at step
+    /// boundaries.
+    ///
+    /// [`completed_steps`]: ActiveTenant::completed_steps
+    pub(crate) fn rehost(&mut self, share: u64) {
+        self.carry_time_ns += self.machine.now_ns();
+        self.carry_pages_in += self.machine.stats.pages_in;
+        self.carry_pages_out += self.machine.stats.pages_out;
+        self.carry_spills += self.machine.stats.alloc_spills;
+        self.carry_peak_fast = self.carry_peak_fast.max(self.machine.stats.peak_fast_bytes);
+        self.carry_peak_total = self.carry_peak_total.max(self.machine.stats.peak_total_bytes);
+        let mut spec = self.machine.spec;
+        spec.fast.capacity_bytes = share;
+        self.machine = Machine::new(spec);
+        self.share = share;
+        self.floor = share / 4 / PAGE_SIZE * PAGE_SIZE;
+        self.layer = 0;
+        self.spills_seen = 0;
+        self.stalled_since_review = false;
+        self.invalidate_seal();
+        self.prologue();
+        let share = self.share;
+        self.policy.fast_share_changed(share, &self.machine);
+    }
+
     pub(crate) fn finish(mut self) -> TenantRunResult {
         if self.sealed_in_segment > 0 {
             self.policy.on_sealed_replay(self.sealed_in_segment);
             self.sealed_in_segment = 0;
         }
+        // The carries are all zero unless a crash rehosted this tenant;
+        // `x + 0.0` and `max(x, 0)` preserve bits, so the fault-free
+        // totals are exactly the pre-fault-layer ones.
         let result = TrainResult {
             policy: self.policy.name().to_string(),
             model: self.workload.graph.name.clone(),
-            total_time_ns: self.machine.now_ns(),
-            peak_fast_bytes: self.machine.stats.peak_fast_bytes,
-            peak_total_bytes: self.machine.stats.peak_total_bytes,
-            pages_migrated_in: self.machine.stats.pages_in,
-            pages_migrated_out: self.machine.stats.pages_out,
-            alloc_spills: self.machine.stats.alloc_spills,
+            total_time_ns: self.carry_time_ns + self.machine.now_ns(),
+            peak_fast_bytes: self.carry_peak_fast.max(self.machine.stats.peak_fast_bytes),
+            peak_total_bytes: self.carry_peak_total.max(self.machine.stats.peak_total_bytes),
+            pages_migrated_in: self.carry_pages_in + self.machine.stats.pages_in,
+            pages_migrated_out: self.carry_pages_out + self.machine.stats.pages_out,
+            alloc_spills: self.carry_spills + self.machine.stats.alloc_spills,
             steady_from_step: self.steady_from,
             sealed_steps: self.sealed_steps,
             steps: self.steps_out,
@@ -540,6 +626,155 @@ impl ActiveTenant {
     }
 }
 
+/// One machine's fault state: the event cursor for its slice of the
+/// [`FaultPlan`], the per-fault recovery stopwatch, and the accounting
+/// that becomes a [`DegradationReport`].
+///
+/// The machine's *step clock* — cumulative completed tenant steps,
+/// advanced serially by whichever driver owns the machine — is the time
+/// base events fire on. It is independent of worker threading and of
+/// wall-clock, which is what makes faulted runs bit-deterministic
+/// across worker counts.
+///
+/// `pub(crate)`: owned by [`run_cluster_faulted`] here and per
+/// `FleetMachine` in `sim::fleet`.
+pub(crate) struct MachineFaults {
+    injector: FaultInjector,
+    tracker: RecoveryTracker,
+    pub(crate) report: DegradationReport,
+    steps: u64,
+    /// Scratch buffer reused across polls (no per-step allocation).
+    actions: Vec<FaultAction>,
+}
+
+impl MachineFaults {
+    pub(crate) fn new(plan: &FaultPlan, machine_index: usize) -> Self {
+        MachineFaults {
+            injector: plan.injector_for(machine_index),
+            tracker: RecoveryTracker::default(),
+            report: DegradationReport::default(),
+            steps: 0,
+            actions: Vec::new(),
+        }
+    }
+
+    /// True once every scheduled event fired and no degradation window
+    /// remains open (the property tests' "after the last fault"
+    /// anchor).
+    pub(crate) fn exhausted(&self) -> bool {
+        self.injector.exhausted()
+    }
+
+    /// A tenant on this machine completed a step: advance the step
+    /// clock, deliver due faults to the resident tenants, and update
+    /// recovery tracking. Returns `true` when a crash fired — the
+    /// caller owns displacement (the fleet retires the machine; a lone
+    /// cluster has no fleet above it, so there crashes are inert beyond
+    /// being counted).
+    pub(crate) fn on_step(&mut self, tenants: &mut [ActiveTenant]) -> bool {
+        self.steps += 1;
+        let mut actions = std::mem::take(&mut self.actions);
+        actions.clear();
+        self.injector.poll(self.steps, &mut actions);
+        let mut crashed = false;
+        for a in &actions {
+            match *a {
+                FaultAction::Degrade { factor } => {
+                    self.report.injected += 1;
+                    self.report.degradations += 1;
+                    for t in tenants.iter_mut().filter(|t| !t.done) {
+                        if t.is_sealed() {
+                            self.report.seal_invalidations += 1;
+                        }
+                        t.machine.set_bandwidth_degradation(factor);
+                        t.fault_disrupt();
+                    }
+                    self.tracker.fired(self.steps);
+                }
+                FaultAction::RestoreBandwidth => {
+                    // Window end: healthy again — but a steady state
+                    // proven *while degraded* is just as stale as the
+                    // healthy one was when the window opened. Not a new
+                    // fault: counted against the original event's
+                    // recovery clock, which only stops at the first
+                    // full re-seal.
+                    for t in tenants.iter_mut().filter(|t| !t.done) {
+                        if t.is_sealed() {
+                            self.report.seal_invalidations += 1;
+                        }
+                        t.machine.set_bandwidth_degradation(1.0);
+                        t.fault_disrupt();
+                    }
+                }
+                FaultAction::LoseFastCapacity { fraction } => {
+                    self.report.injected += 1;
+                    self.report.capacity_losses += 1;
+                    for t in tenants.iter_mut().filter(|t| !t.done) {
+                        let keep = (t.share as f64 * (1.0 - fraction)) as u64;
+                        let new_share = (keep / PAGE_SIZE * PAGE_SIZE).max(PAGE_SIZE).min(t.share);
+                        if new_share < t.share {
+                            if t.is_sealed() {
+                                self.report.seal_invalidations += 1;
+                            }
+                            // Retired pages are gone: the floor drops
+                            // with the share, or a later preemption
+                            // could "restore" capacity that no longer
+                            // exists.
+                            t.floor = t.floor.min(new_share);
+                            t.resize_share(new_share);
+                        }
+                    }
+                    self.tracker.fired(self.steps);
+                }
+                FaultAction::DropPromotions => {
+                    self.report.injected += 1;
+                    self.report.lane_stalls += 1;
+                    for t in tenants.iter_mut().filter(|t| !t.done) {
+                        let dropped = t.machine.cancel_all_promotions();
+                        if dropped > 0 {
+                            self.report.promote_pages_dropped += dropped;
+                            if t.is_sealed() {
+                                self.report.seal_invalidations += 1;
+                            }
+                            // The policy re-requests the dropped pages
+                            // through its normal per-layer/periodic
+                            // path once the live loop resumes — retry
+                            // at layer cadence, i.e. bounded backoff.
+                            t.fault_disrupt();
+                        }
+                    }
+                    self.tracker.fired(self.steps);
+                }
+                FaultAction::Crash => {
+                    self.report.injected += 1;
+                    self.report.crashes += 1;
+                    crashed = true;
+                }
+            }
+        }
+        self.actions = actions;
+        // The recovery clock stops at the first step where every
+        // surviving tenant holds a sealed schedule again — proof the
+        // whole machine re-converged.
+        if self.tracker.open_count() > 0 {
+            let any_running = tenants.iter().any(|t| !t.done);
+            if any_running && tenants.iter().all(|t| t.done || t.is_sealed()) {
+                self.tracker.recovered(self.steps);
+            }
+        }
+        crashed
+    }
+
+    /// The run (or machine) ended: close still-open recoveries without
+    /// a re-seal and package the report.
+    pub(crate) fn into_report(mut self) -> DegradationReport {
+        self.tracker.finish(self.steps);
+        self.report.reseals = self.tracker.reseals;
+        self.report.recovery_steps = self.tracker.recovery_steps;
+        self.report
+    }
+}
+
 /// Run every tenant to completion against one shared machine,
 /// interleaving their op streams on a virtual clock (always advance the
 /// tenant whose private clock is furthest behind; ties go to the lower
@@ -552,6 +787,27 @@ impl ActiveTenant {
 ///
 /// Results come back in tenant order.
 pub fn run_cluster(tenants: Vec<ClusterTenant>, arbitration: Arbitration) -> Vec<TenantRunResult> {
+    run_cluster_faulted(tenants, arbitration, None).0
+}
+
+/// [`run_cluster`] with a fault plan: the machine is index `0` of the
+/// plan, faults fire at completed-step boundaries, and the returned
+/// report quantifies the damage (present exactly when a plan was
+/// given — even an empty one, so callers can tell "no faults occurred"
+/// from "faults were off").
+///
+/// `None` — and an empty plan — leave the run bit-identical to
+/// [`run_cluster`]: the fault hook is a no-op poll after each completed
+/// step and nothing else changes.
+///
+/// Crash events are inert here beyond being counted: a lone cluster has
+/// no fleet above it to displace tenants into (the fleet driver owns
+/// that path). Draw cluster plans with `include_crashes = false`.
+pub fn run_cluster_faulted(
+    tenants: Vec<ClusterTenant>,
+    arbitration: Arbitration,
+    plan: Option<&FaultPlan>,
+) -> (Vec<TenantRunResult>, Option<DegradationReport>) {
     let n = tenants.len();
     let total_share: u64 = tenants.iter().map(|t| t.share).sum();
     // One preemption moves 1/(8N) of the pool, page-rounded (≥ 1 page).
@@ -559,6 +815,7 @@ pub fn run_cluster(tenants: Vec<ClusterTenant>, arbitration: Arbitration) -> Vec
         .max(PAGE_SIZE)
         / PAGE_SIZE
         * PAGE_SIZE;
+    let mut faults = plan.map(|p| MachineFaults::new(p, 0));
     let mut active: Vec<ActiveTenant> = tenants.into_iter().map(ActiveTenant::new).collect();
     for t in &mut active {
         t.prologue();
@@ -577,13 +834,19 @@ pub fn run_cluster(tenants: Vec<ClusterTenant>, arbitration: Arbitration) -> Vec
         if active[pick].done {
             remaining -= 1;
         }
+        if step_done {
+            if let Some(f) = faults.as_mut() {
+                f.on_step(&mut active);
+            }
+        }
         // Review only for tenants that will keep running: a tenant
         // that just finished has no use for more share.
         if step_done && !active[pick].done && arbitration == Arbitration::Priority {
             review_priority(&mut active, pick, quantum);
         }
     }
-    active.into_iter().map(ActiveTenant::finish).collect()
+    let report = faults.map(MachineFaults::into_report);
+    (active.into_iter().map(ActiveTenant::finish).collect(), report)
 }
 
 /// Priority review point: tenant `i` just finished a step. If it saw
@@ -739,6 +1002,84 @@ mod tests {
             results[0].result.total_time_ns.to_bits(),
             results[1].result.total_time_ns.to_bits()
         );
+    }
+
+    #[test]
+    fn empty_fault_plan_is_bit_identical_and_reports_zero() {
+        use crate::sim::fault::FaultPlan;
+        let w = shared_workload(Model::Dcgan, 5);
+        let kind = PolicyKind::Lru;
+        let cfg = kind.engine_config(4);
+        let spec = kind.machine_spec(&w.graph, &w.trace, 1);
+        let compiled = Arc::new(CompiledTrace::compile(
+            &w.graph,
+            &w.trace,
+            spec.compute_gflops,
+            cfg.profiling_fault_ns,
+        ));
+        let share = Model::Dcgan.peak_memory_target() / 10;
+        let mk = || {
+            vec![
+                tenant(&w, &compiled, kind, share, 0, 4),
+                tenant(&w, &compiled, kind, share, 1, 4),
+            ]
+        };
+        let plan = FaultPlan::new();
+        let (faulted, report) = run_cluster_faulted(mk(), Arbitration::Priority, Some(&plan));
+        let plain = run_cluster(mk(), Arbitration::Priority);
+        let report = report.expect("a plan was given, so a report comes back");
+        assert_eq!(report.injected, 0);
+        assert_eq!(report.seal_invalidations, 0);
+        assert!(report.recovery_steps.is_empty());
+        assert_eq!(faulted.len(), plain.len());
+        for (a, b) in faulted.iter().zip(&plain) {
+            assert_eq!(
+                a.result.total_time_ns.to_bits(),
+                b.result.total_time_ns.to_bits(),
+                "empty plan must be bit-identical to no plan"
+            );
+            assert_eq!(a.result.pages_migrated_in, b.result.pages_migrated_in);
+            assert_eq!(a.result.pages_migrated_out, b.result.pages_migrated_out);
+            assert_eq!(a.seal_invalidations, b.seal_invalidations);
+        }
+    }
+
+    #[test]
+    fn degradation_fault_slows_the_run_and_is_reported() {
+        use crate::sim::fault::{FaultKind, FaultPlan};
+        let w = shared_workload(Model::Dcgan, 5);
+        let kind = PolicyKind::Lru;
+        let cfg = kind.engine_config(6);
+        let spec = kind.machine_spec(&w.graph, &w.trace, 1);
+        let compiled = Arc::new(CompiledTrace::compile(
+            &w.graph,
+            &w.trace,
+            spec.compute_gflops,
+            cfg.profiling_fault_ns,
+        ));
+        let share = Model::Dcgan.peak_memory_target() / 10;
+        let mk = || vec![tenant(&w, &compiled, kind, share, 0, 6)];
+        let plan = FaultPlan::new().push(
+            0,
+            2,
+            FaultKind::BandwidthDegradation { factor: 6.0, duration_steps: 3 },
+        );
+        let (faulted, report) =
+            run_cluster_faulted(mk(), Arbitration::StaticPartition, Some(&plan));
+        let plain = run_cluster(mk(), Arbitration::StaticPartition);
+        let report = report.expect("report present");
+        assert_eq!(report.injected, 1);
+        assert_eq!(report.degradations, 1);
+        assert_eq!(report.recovery_steps.len(), 1, "one fault, one recovery record");
+        assert_eq!(faulted[0].result.steps.len(), 6, "tenant still completes");
+        assert!(
+            faulted[0].result.total_time_ns > plain[0].result.total_time_ns,
+            "a 6x bandwidth degradation must cost simulated time ({} vs {})",
+            faulted[0].result.total_time_ns,
+            plain[0].result.total_time_ns
+        );
+        // The machine ends the run healthy: the window closed.
+        assert!(report.max_recovery_steps() >= 1);
     }
 
     #[test]

@@ -1,0 +1,529 @@
+//! Deterministic fault injection: pre-drawn, seeded fault schedules and
+//! the recovery accounting that turns them into a robustness benchmark.
+//!
+//! Sentinel's design leans on repeatability — profile step 1, trust it
+//! forever — and *Online Application Guidance for Heterogeneous Memory
+//! Systems* (PAPERS.md) frames what a runtime must do when that trust
+//! breaks: detect divergence and re-adapt. RIMMS makes the companion
+//! case that a heterogeneous-memory runtime must keep working while
+//! components degrade. This module models the breakage; the *recovery*
+//! is carried by machinery the simulator already has:
+//!
+//! * every fault invalidates the affected tenants' sealed steady-state
+//!   schedules (`sim/schedule.rs`) through the same
+//!   `fast_share_changed`/invalidate path an arbitration preemption
+//!   uses, forcing the live loop until the tenant re-converges and
+//!   re-seals;
+//! * a crashed machine's tenants re-enter the fleet through the
+//!   existing [`Admission`] path and resume from their completed-step
+//!   count;
+//! * the [`DegradationReport`] quantifies the damage: slowdown versus a
+//!   fault-free twin, seal invalidations/re-seals attributable to
+//!   faults, and per-fault recovery time in steps.
+//!
+//! ## Determinism
+//!
+//! A [`FaultPlan`] is **pre-drawn**: every event (when, where, what,
+//! how bad) is fixed by the seed at construction, on a dedicated RNG
+//! substream ([`Rng::stream`]) so enabling faults never perturbs any
+//! other subsystem's draws. Events fire on a per-machine *step clock*
+//! (cumulative completed tenant steps on that machine), which each
+//! machine advances serially regardless of how many worker threads fan
+//! the pool — so a faulted run is bit-deterministic across worker
+//! counts, and an empty plan is bit-identical to no plan at all.
+//!
+//! [`Admission`]: crate::sim::fleet::Admission
+//! [`Rng::stream`]: crate::util::rng::Rng::stream
+
+use crate::util::rng::Rng;
+
+/// RNG substream label for fault plans. Faults draw from
+/// `Rng::stream(seed, FAULT_STREAM)`, never from the seed directly, so
+/// the arrival generator (its own stream) sees identical draws whether
+/// or not faults are enabled.
+pub const FAULT_STREAM: &str = "fault-plan";
+
+/// One kind of injected hardware misbehavior.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultKind {
+    /// NVM thermal/wear throttling: every memory-time parameter of the
+    /// machine is multiplied by `factor` (> 1) for `duration_steps`
+    /// machine steps, then restored.
+    BandwidthDegradation {
+        /// Multiplicative slowdown (applied via
+        /// [`crate::sim::Machine::set_bandwidth_degradation`]).
+        factor: f64,
+        /// Window length on the machine's step clock.
+        duration_steps: u32,
+    },
+    /// Page retirement: the machine permanently loses `fraction` of
+    /// each resident tenant's fast share, forcing demotion of the
+    /// displaced pages.
+    FastCapacityLoss {
+        /// Fraction of fast capacity lost, in `(0, 1)`.
+        fraction: f64,
+    },
+    /// Migration-lane stall: every in-flight promotion is dropped. The
+    /// issuing policy retries through its normal per-layer/periodic
+    /// re-request path — bounded backoff at layer cadence — after the
+    /// seal invalidation forces it back onto the live loop.
+    LaneStall,
+    /// Machine crash (fleet-level only): the machine retires and every
+    /// resident tenant is displaced back through admission.
+    Crash,
+}
+
+impl FaultKind {
+    /// Canonical short name (used by reports and the CLI).
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::BandwidthDegradation { .. } => "degrade",
+            FaultKind::FastCapacityLoss { .. } => "capacity",
+            FaultKind::LaneStall => "stall",
+            FaultKind::Crash => "crash",
+        }
+    }
+}
+
+/// One scheduled fault: which machine, at which machine step, what.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultEvent {
+    /// Pool index of the machine the fault hits (`0` for solo/cluster
+    /// runs, which have exactly one machine).
+    pub machine: usize,
+    /// Fires at the first completed tenant step on that machine whose
+    /// cumulative step count reaches this value.
+    pub at_step: u64,
+    /// What happens.
+    pub kind: FaultKind,
+}
+
+/// A pre-drawn, seeded fault schedule: the complete list of faults a
+/// run will experience, fixed before the first simulated nanosecond.
+///
+/// Build one explicitly ([`FaultPlan::push`], used by tests to place
+/// surgical faults) or draw one ([`FaultPlan::draw`]) from a seed and a
+/// per-step fault rate. An empty plan injects nothing and leaves every
+/// run bit-identical to one with no plan at all.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// An empty plan (injects nothing).
+    pub fn new() -> Self {
+        FaultPlan { events: Vec::new() }
+    }
+
+    /// True when the plan schedules no faults.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Number of scheduled faults.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// All scheduled events, sorted by `(machine, at_step)`.
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    /// Add one fault (builder style; re-sorts so callers may push in
+    /// any order).
+    pub fn push(mut self, machine: usize, at_step: u64, kind: FaultKind) -> Self {
+        self.events.push(FaultEvent { machine, at_step, kind });
+        self.sort();
+        self
+    }
+
+    fn sort(&mut self) {
+        self.events
+            .sort_by(|a, b| a.machine.cmp(&b.machine).then(a.at_step.cmp(&b.at_step)));
+    }
+
+    /// Draw a plan from a seed: for each of `machines` machines and
+    /// each step below `horizon_steps`, a fault fires with probability
+    /// `rate_per_step`; its kind and parameters are drawn uniformly.
+    /// Crashes are only drawn when `include_crashes` is set (solo and
+    /// cluster runs have no fleet above them to displace tenants into).
+    ///
+    /// Draws come from the dedicated [`FAULT_STREAM`] substream of
+    /// `seed`, so the plan never perturbs arrival or workload draws.
+    /// After a bandwidth-degradation event the draw cursor skips past
+    /// the degradation window, so windows never overlap and a machine
+    /// carries at most one active degradation at a time.
+    pub fn draw(
+        seed: u64,
+        machines: usize,
+        horizon_steps: u64,
+        rate_per_step: f64,
+        include_crashes: bool,
+    ) -> Self {
+        let mut rng = Rng::stream(seed, FAULT_STREAM);
+        let mut events = Vec::new();
+        for machine in 0..machines {
+            let mut step = 1u64;
+            while step < horizon_steps {
+                if rng.chance(rate_per_step) {
+                    let roll = rng.gen_range(if include_crashes { 4 } else { 3 });
+                    let kind = match roll {
+                        0 => {
+                            let factor = 1.5 + rng.f64() * 6.5;
+                            let duration_steps = rng.range_inclusive(2, 8) as u32;
+                            step += duration_steps as u64;
+                            FaultKind::BandwidthDegradation { factor, duration_steps }
+                        }
+                        1 => FaultKind::FastCapacityLoss { fraction: 0.05 + rng.f64() * 0.20 },
+                        2 => FaultKind::LaneStall,
+                        _ => FaultKind::Crash,
+                    };
+                    events.push(FaultEvent { machine, at_step: step, kind });
+                    if matches!(kind, FaultKind::Crash) {
+                        // Nothing survives on this machine to fault.
+                        break;
+                    }
+                }
+                step += 1;
+            }
+        }
+        let mut plan = FaultPlan { events };
+        plan.sort();
+        plan
+    }
+
+    /// The injector that delivers this plan's events for one machine.
+    pub fn injector_for(&self, machine: usize) -> FaultInjector {
+        FaultInjector {
+            events: self
+                .events
+                .iter()
+                .filter(|e| e.machine == machine)
+                .copied()
+                .collect(),
+            next: 0,
+            restore_at: None,
+        }
+    }
+}
+
+/// A fault, lowered to the primitive the driver applies.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultAction {
+    /// Set the machine's bandwidth-degradation factor.
+    Degrade {
+        /// Multiplicative slowdown (> 1).
+        factor: f64,
+    },
+    /// Restore healthy bandwidth (degradation window ended).
+    RestoreBandwidth,
+    /// Permanently shrink every resident's fast share by `fraction`.
+    LoseFastCapacity {
+        /// Fraction lost, in `(0, 1)`.
+        fraction: f64,
+    },
+    /// Drop every in-flight promotion on the machine.
+    DropPromotions,
+    /// Retire the machine and displace its tenants (fleet-level).
+    Crash,
+}
+
+/// Per-machine event cursor: walks one machine's slice of a
+/// [`FaultPlan`] as that machine's step clock advances, and tracks the
+/// end of the active bandwidth-degradation window.
+///
+/// Cheap to poll — two integer comparisons per completed tenant step
+/// while no event is due — so the fault hook costs the fault-free path
+/// nothing measurable.
+#[derive(Clone, Debug)]
+pub struct FaultInjector {
+    events: Vec<FaultEvent>,
+    next: usize,
+    restore_at: Option<u64>,
+}
+
+impl FaultInjector {
+    /// Append the actions due at machine step `step` to `out`.
+    /// Restores run before new injections, so a degradation firing the
+    /// same step an old window closes leaves the machine degraded.
+    pub fn poll(&mut self, step: u64, out: &mut Vec<FaultAction>) {
+        if self.restore_at.is_some_and(|r| step >= r) {
+            out.push(FaultAction::RestoreBandwidth);
+            self.restore_at = None;
+        }
+        while let Some(e) = self.events.get(self.next) {
+            if e.at_step > step {
+                break;
+            }
+            self.next += 1;
+            match e.kind {
+                FaultKind::BandwidthDegradation { factor, duration_steps } => {
+                    out.push(FaultAction::Degrade { factor });
+                    self.restore_at = Some(step + duration_steps.max(1) as u64);
+                }
+                FaultKind::FastCapacityLoss { fraction } => {
+                    out.push(FaultAction::LoseFastCapacity { fraction });
+                }
+                FaultKind::LaneStall => out.push(FaultAction::DropPromotions),
+                FaultKind::Crash => out.push(FaultAction::Crash),
+            }
+        }
+    }
+
+    /// True once every scheduled event has fired and no degradation
+    /// window remains open — from here on the machine runs fault-free.
+    pub fn exhausted(&self) -> bool {
+        self.next >= self.events.len() && self.restore_at.is_none()
+    }
+
+    /// Events not yet delivered.
+    pub fn remaining(&self) -> usize {
+        self.events.len() - self.next
+    }
+}
+
+/// Per-fault recovery stopwatch: a fault *fires* at some machine step;
+/// it is *recovered* at the first later step where every surviving
+/// affected tenant holds a sealed schedule again (proof of
+/// re-convergence). Faults that never see a full re-seal close when the
+/// run ends, with the steps they waited.
+#[derive(Clone, Debug, Default)]
+pub struct RecoveryTracker {
+    open: Vec<u64>,
+    /// Closed recovery times (machine steps from fault to full re-seal
+    /// or run end), in fault order.
+    pub recovery_steps: Vec<u64>,
+    /// Faults whose recovery closed with every survivor re-sealed
+    /// (rather than the run simply ending first).
+    pub reseals: u64,
+}
+
+impl RecoveryTracker {
+    /// A fault fired at machine step `step`.
+    pub fn fired(&mut self, step: u64) {
+        self.open.push(step);
+    }
+
+    /// Every surviving affected tenant is sealed again at `step`: close
+    /// all open recoveries as genuine re-seals.
+    pub fn recovered(&mut self, step: u64) {
+        self.reseals += self.open.len() as u64;
+        for fired in self.open.drain(..) {
+            self.recovery_steps.push(step.saturating_sub(fired));
+        }
+    }
+
+    /// The run ended at machine step `step` with recoveries still open:
+    /// close them without counting a re-seal.
+    pub fn finish(&mut self, step: u64) {
+        for fired in self.open.drain(..) {
+            self.recovery_steps.push(step.saturating_sub(fired));
+        }
+    }
+
+    /// Recoveries still waiting for a re-seal.
+    pub fn open_count(&self) -> usize {
+        self.open.len()
+    }
+}
+
+/// What the faults did: the robustness scorecard of one run.
+///
+/// Built by the cluster/fleet drivers as faults apply; the API layer
+/// fills [`DegradationReport::slowdown_vs_fault_free`] by running the
+/// fault-free twin of the same spec.
+#[derive(Clone, Debug, Default)]
+pub struct DegradationReport {
+    /// Faults injected, total.
+    pub injected: u64,
+    /// Bandwidth-degradation windows opened.
+    pub degradations: u64,
+    /// Fast-capacity-loss events.
+    pub capacity_losses: u64,
+    /// Migration-lane stalls.
+    pub lane_stalls: u64,
+    /// Machine crashes (fleet-level).
+    pub crashes: u64,
+    /// In-flight promotion pages dropped by lane stalls.
+    pub promote_pages_dropped: u64,
+    /// Sealed schedules invalidated *by fault application* (a tenant
+    /// holding a seal when the fault hit). Arbitration-driven
+    /// invalidations are not counted here.
+    pub seal_invalidations: u64,
+    /// Faults whose recovery closed with every survivor re-sealed.
+    pub reseals: u64,
+    /// Per-fault recovery time (machine steps from fault to full
+    /// re-seal, or to run end), in fault order.
+    pub recovery_steps: Vec<u64>,
+    /// Tenants displaced by crashes (fleet-level).
+    pub tenants_displaced: u64,
+    /// Faulted makespan (or total time) over the fault-free twin's;
+    /// `None` until the API layer runs the twin.
+    pub slowdown_vs_fault_free: Option<f64>,
+}
+
+impl DegradationReport {
+    /// Fold another machine's report into this one (fleet aggregation).
+    pub fn merge(&mut self, other: &DegradationReport) {
+        self.injected += other.injected;
+        self.degradations += other.degradations;
+        self.capacity_losses += other.capacity_losses;
+        self.lane_stalls += other.lane_stalls;
+        self.crashes += other.crashes;
+        self.promote_pages_dropped += other.promote_pages_dropped;
+        self.seal_invalidations += other.seal_invalidations;
+        self.reseals += other.reseals;
+        self.recovery_steps.extend_from_slice(&other.recovery_steps);
+        self.tenants_displaced += other.tenants_displaced;
+    }
+
+    /// Mean recovery time in machine steps (`0.0` with no faults).
+    pub fn mean_recovery_steps(&self) -> f64 {
+        if self.recovery_steps.is_empty() {
+            return 0.0;
+        }
+        self.recovery_steps.iter().sum::<u64>() as f64 / self.recovery_steps.len() as f64
+    }
+
+    /// Worst recovery time in machine steps.
+    pub fn max_recovery_steps(&self) -> u64 {
+        self.recovery_steps.iter().copied().max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn draw_is_seed_deterministic() {
+        let a = FaultPlan::draw(42, 4, 200, 0.05, true);
+        let b = FaultPlan::draw(42, 4, 200, 0.05, true);
+        assert_eq!(a, b);
+        let c = FaultPlan::draw(43, 4, 200, 0.05, true);
+        assert_ne!(a, c, "different seeds draw different plans");
+    }
+
+    #[test]
+    fn draw_without_crashes_never_schedules_one() {
+        let plan = FaultPlan::draw(7, 8, 500, 0.08, false);
+        assert!(!plan.is_empty(), "rate 0.08 over 4000 steps draws something");
+        assert!(plan
+            .events()
+            .iter()
+            .all(|e| !matches!(e.kind, FaultKind::Crash)));
+    }
+
+    #[test]
+    fn zero_rate_draws_nothing() {
+        assert!(FaultPlan::draw(7, 8, 500, 0.0, true).is_empty());
+    }
+
+    #[test]
+    fn events_sorted_by_machine_then_step() {
+        let plan = FaultPlan::new()
+            .push(1, 5, FaultKind::LaneStall)
+            .push(0, 9, FaultKind::LaneStall)
+            .push(0, 2, FaultKind::Crash);
+        let order: Vec<(usize, u64)> =
+            plan.events().iter().map(|e| (e.machine, e.at_step)).collect();
+        assert_eq!(order, vec![(0, 2), (0, 9), (1, 5)]);
+    }
+
+    #[test]
+    fn injector_delivers_in_order_and_windows_close() {
+        let plan = FaultPlan::new()
+            .push(0, 2, FaultKind::BandwidthDegradation { factor: 3.0, duration_steps: 2 })
+            .push(0, 10, FaultKind::LaneStall)
+            .push(1, 1, FaultKind::Crash);
+        let mut inj = plan.injector_for(0);
+        let mut out = Vec::new();
+        inj.poll(1, &mut out);
+        assert!(out.is_empty());
+        inj.poll(2, &mut out);
+        assert_eq!(out, vec![FaultAction::Degrade { factor: 3.0 }]);
+        out.clear();
+        inj.poll(3, &mut out);
+        assert!(out.is_empty(), "window still open");
+        inj.poll(4, &mut out);
+        assert_eq!(out, vec![FaultAction::RestoreBandwidth]);
+        assert!(!inj.exhausted(), "the stall at step 10 is still due");
+        out.clear();
+        inj.poll(10, &mut out);
+        assert_eq!(out, vec![FaultAction::DropPromotions]);
+        assert!(inj.exhausted());
+        // Machine 1 only sees its own event.
+        let mut inj1 = plan.injector_for(1);
+        out.clear();
+        inj1.poll(1, &mut out);
+        assert_eq!(out, vec![FaultAction::Crash]);
+    }
+
+    #[test]
+    fn skipped_steps_still_deliver_missed_events() {
+        // A sealed machine advancing whole steps at a time may jump past
+        // an event's exact step; the injector must deliver it at the
+        // next poll.
+        let plan = FaultPlan::new().push(0, 3, FaultKind::LaneStall);
+        let mut inj = plan.injector_for(0);
+        let mut out = Vec::new();
+        inj.poll(7, &mut out);
+        assert_eq!(out, vec![FaultAction::DropPromotions]);
+    }
+
+    #[test]
+    fn recovery_tracker_measures_steps_to_reseal() {
+        let mut t = RecoveryTracker::default();
+        t.fired(10);
+        t.fired(12);
+        assert_eq!(t.open_count(), 2);
+        t.recovered(15);
+        assert_eq!(t.recovery_steps, vec![5, 3]);
+        assert_eq!(t.reseals, 2);
+        // A fault left open at run end closes without a re-seal.
+        t.fired(20);
+        t.finish(24);
+        assert_eq!(t.recovery_steps, vec![5, 3, 4]);
+        assert_eq!(t.reseals, 2);
+    }
+
+    #[test]
+    fn report_merge_and_recovery_stats() {
+        let mut a = DegradationReport {
+            injected: 2,
+            lane_stalls: 1,
+            degradations: 1,
+            recovery_steps: vec![4, 2],
+            ..Default::default()
+        };
+        let b = DegradationReport {
+            injected: 1,
+            crashes: 1,
+            tenants_displaced: 3,
+            recovery_steps: vec![9],
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.injected, 3);
+        assert_eq!(a.crashes, 1);
+        assert_eq!(a.tenants_displaced, 3);
+        assert_eq!(a.recovery_steps, vec![4, 2, 9]);
+        assert_eq!(a.mean_recovery_steps(), 5.0);
+        assert_eq!(a.max_recovery_steps(), 9);
+        assert_eq!(DegradationReport::default().mean_recovery_steps(), 0.0);
+    }
+
+    #[test]
+    fn fault_stream_is_independent_of_other_draws() {
+        // Drawing a plan must not perturb a sibling stream's sequence —
+        // the property that makes fault-free bit-identity provable.
+        let mut arrivals_a = Rng::stream_salted(7, 0x5EED_F1EE7);
+        let before: Vec<u64> = (0..8).map(|_| arrivals_a.next_u64()).collect();
+        let _plan = FaultPlan::draw(7, 4, 1000, 0.1, true);
+        let mut arrivals_b = Rng::stream_salted(7, 0x5EED_F1EE7);
+        let after: Vec<u64> = (0..8).map(|_| arrivals_b.next_u64()).collect();
+        assert_eq!(before, after);
+    }
+}

@@ -58,10 +58,11 @@ use std::collections::VecDeque;
 
 use crate::api::batch::par_map_mut;
 use crate::sim::cluster::{
-    arbitration_shares, review_priority, ActiveTenant, Arbitration, ClusterTenant,
+    arbitration_shares, review_priority, ActiveTenant, Arbitration, ClusterTenant, MachineFaults,
     TenantRunResult,
 };
 use crate::sim::device::Tier;
+use crate::sim::fault::{DegradationReport, FaultPlan};
 use crate::PAGE_SIZE;
 
 /// What the fleet does with a job whose declared fast-memory demand
@@ -208,7 +209,36 @@ pub struct FleetConfig {
     /// Worker threads for the per-round machine fan-out (clamped to the
     /// machine count; results are identical for any value ≥ 1).
     pub threads: usize,
+    /// Pre-drawn fault schedule; `None` (and an empty plan) leave the
+    /// run bit-identical to a fault-free fleet. Machine `i` of the pool
+    /// reads the plan's machine-`i` slice; machines the autoscaler
+    /// grows read the slice at their pool index.
+    pub faults: Option<FaultPlan>,
 }
+
+/// The machine pool emptied (every machine crashed or was retired)
+/// while jobs still waited and no autoscaler exists to cold-restart the
+/// pool — the fleet can make no further progress.
+///
+/// A typed error rather than a panic: a crash fault emptying the pool
+/// is a simulated outcome, not a driver bug.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PoolExhausted {
+    /// Jobs stranded in the pending + admission queues.
+    pub waiting_jobs: usize,
+}
+
+impl std::fmt::Display for PoolExhausted {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "machine pool exhausted with {} job(s) waiting and no autoscaler to regrow it",
+            self.waiting_jobs
+        )
+    }
+}
+
+impl std::error::Error for PoolExhausted {}
 
 /// One completed tenant: when and where it ran, and the full cluster
 /// result.
@@ -246,6 +276,9 @@ pub struct FleetMachineStats {
     pub peak_committed_bytes: u64,
     /// Whether the autoscaler retired this machine.
     pub retired: bool,
+    /// Whether a crash fault killed this machine (it also reads as
+    /// `retired`; this distinguishes the cause).
+    pub crashed: bool,
 }
 
 /// Fleet-wide fast-memory utilization at one event.
@@ -293,6 +326,10 @@ pub struct FleetSimResult {
     pub makespan_ns: f64,
     /// Fleet event rounds processed.
     pub fleet_events: u64,
+    /// Fault-layer outcome, merged across machines — present exactly
+    /// when [`FleetConfig::faults`] held a plan (even an empty one, so
+    /// callers can tell "no faults occurred" from "faults were off").
+    pub faults: Option<DegradationReport>,
 }
 
 /// Join-time metadata kept per resident, index-aligned with the
@@ -303,6 +340,34 @@ struct ResidentMeta {
     join_ns: f64,
     demand: u64,
     peak: u64,
+}
+
+/// A job inside the admission machinery: either a fresh arrival (built
+/// at its final share) or a crash-displaced tenant being re-offered.
+/// Internal — the public interface stays [`FleetArrival`]; displacement
+/// is the one path that creates `Resume` offers.
+enum OfferKind {
+    /// Build the tenant at its admitted share (from [`FleetArrival`]).
+    New(Box<dyn FnOnce(u64) -> ClusterTenant + Send>),
+    /// Re-host a crash-displaced tenant at its readmitted share; it
+    /// resumes from its completed-step count.
+    Resume(Box<ActiveTenant>),
+}
+
+/// One unit of admission work: a [`FleetArrival`] or a displaced
+/// resident, carrying both its original arrival time (reported in the
+/// departure) and the time it entered admission (the queue-wait
+/// baseline — for a displaced tenant, the crash time).
+struct Offer {
+    id: u64,
+    /// Original offer time, reported as the departure's `arrival_ns`.
+    first_arrival_ns: f64,
+    /// When this offer entered admission: the arrival time, or the
+    /// displacement time for a crash-displaced tenant.
+    offered_ns: f64,
+    demand_bytes: u64,
+    peak_bytes: u64,
+    kind: OfferKind,
 }
 
 /// One machine of the pool: a shared fast tier plus the cluster layer's
@@ -323,10 +388,16 @@ struct FleetMachine {
     peak_share_bytes: u64,
     peak_committed_bytes: u64,
     retired: bool,
+    /// This machine's slice of the fleet's fault plan (`None` when
+    /// faults are off — the hot loop then skips the poll entirely).
+    faults: Option<MachineFaults>,
+    /// A crash fault fired: the machine froze mid-round; the fleet
+    /// driver retires it and displaces its residents.
+    crashed: bool,
 }
 
 impl FleetMachine {
-    fn new(fast_total: u64, arbitration: Arbitration) -> Self {
+    fn new(fast_total: u64, arbitration: Arbitration, faults: Option<MachineFaults>) -> Self {
         FleetMachine {
             fast_total,
             arbitration,
@@ -339,6 +410,8 @@ impl FleetMachine {
             peak_share_bytes: 0,
             peak_committed_bytes: 0,
             retired: false,
+            faults,
+            crashed: false,
         }
     }
 
@@ -367,7 +440,8 @@ impl FleetMachine {
                 break;
             }
             let step_done = self.tenants[pick].advance_layer();
-            if self.tenants[pick].done {
+            let tenant_done = self.tenants[pick].done;
+            if tenant_done {
                 // Order-preserving removal keeps the survivors' relative
                 // order — the cluster layer's tie-break (lowest index)
                 // then behaves identically to skipping a done tenant in
@@ -387,6 +461,23 @@ impl FleetMachine {
                     machine: usize::MAX,
                     result: t.finish(),
                 });
+            }
+            if step_done {
+                // The machine's fault step clock counts every completed
+                // tenant step, including a tenant's last (mirroring the
+                // cluster driver, which polls with the done tenant
+                // still in place — here it was just removed, which the
+                // poll sees identically: done tenants are skipped).
+                if let Some(f) = self.faults.as_mut() {
+                    if f.on_step(&mut self.tenants) {
+                        // Crash: freeze the machine mid-round; the
+                        // fleet driver owns retirement + displacement.
+                        self.crashed = true;
+                        break;
+                    }
+                }
+            }
+            if tenant_done {
                 if stop_at_departure {
                     break;
                 }
@@ -402,9 +493,10 @@ impl FleetMachine {
     /// Admit a batch of same-time arrivals: re-arbitrate shares over
     /// residents + newcomers, resize residents (forced demotion on
     /// shrink, seal invalidation both ways), then build each newcomer
-    /// at its final share and run its prologue. `committed` was already
-    /// charged by the placement decision in [`run_fleet`].
-    fn join_batch(&mut self, now_ns: f64, newcomers: Vec<FleetArrival>) {
+    /// at its final share — or re-host a displaced tenant there — and
+    /// run its prologue. `committed` was already charged by the
+    /// placement decision in [`run_fleet`].
+    fn join_batch(&mut self, now_ns: f64, newcomers: Vec<Offer>) {
         let n_res = self.tenants.len();
         let mut peaks: Vec<u64> = self.meta.iter().map(|m| m.peak).collect();
         peaks.extend(newcomers.iter().map(|a| a.peak_bytes));
@@ -419,12 +511,20 @@ impl FleetMachine {
         }
         for (k, a) in newcomers.into_iter().enumerate() {
             let share = shares[n_res + k];
-            let tenant = (a.build)(share);
-            let mut active = ActiveTenant::new(tenant);
-            active.prologue();
+            let active = match a.kind {
+                OfferKind::New(build) => {
+                    let mut active = ActiveTenant::new(build(share));
+                    active.prologue();
+                    active
+                }
+                OfferKind::Resume(mut t) => {
+                    t.rehost(share);
+                    *t
+                }
+            };
             self.meta.push(ResidentMeta {
                 id: a.id,
-                arrival_ns: a.arrival_ns,
+                arrival_ns: a.first_arrival_ns,
                 join_ns: now_ns,
                 demand: a.demand_bytes,
                 peak: a.peak_bytes,
@@ -449,6 +549,7 @@ impl FleetMachine {
             peak_share_bytes: self.peak_share_bytes,
             peak_committed_bytes: self.peak_committed_bytes,
             retired: self.retired,
+            crashed: self.crashed,
         }
     }
 }
@@ -494,20 +595,42 @@ fn least_loaded(machines: &[FleetMachine]) -> Option<usize> {
 /// clock, autoscale on sustained pressure, and collect every completed
 /// tenant plus fleet-level observability.
 ///
-/// Deterministic: same arrivals + config produce bit-identical results
-/// for any `threads` value (machines are independent between events,
-/// and every fleet-level decision iterates machines in index order).
-pub fn run_fleet(arrivals: Vec<FleetArrival>, cfg: FleetConfig) -> FleetSimResult {
+/// Deterministic: same arrivals + config (fault plan included) produce
+/// bit-identical results for any `threads` value (machines are
+/// independent between events, fault clocks are per-machine, and every
+/// fleet-level decision iterates machines in index order).
+///
+/// Errs with [`PoolExhausted`] when crash faults empty the machine pool
+/// while jobs still wait and no autoscaler exists to cold-restart it;
+/// with an autoscaler, an emptied pool immediately grows one machine
+/// instead (crash recovery does not wait out hysteresis).
+pub fn run_fleet(
+    arrivals: Vec<FleetArrival>,
+    cfg: FleetConfig,
+) -> Result<FleetSimResult, PoolExhausted> {
     let mut arrivals = arrivals;
     arrivals.sort_by(|a, b| a.arrival_ns.total_cmp(&b.arrival_ns).then(a.id.cmp(&b.id)));
     let n_machines = cfg.machines.max(1);
     let mut machines: Vec<FleetMachine> = (0..n_machines)
-        .map(|_| FleetMachine::new(cfg.machine_fast_bytes, cfg.arbitration))
+        .map(|i| {
+            let faults = cfg.faults.as_ref().map(|p| MachineFaults::new(p, i));
+            FleetMachine::new(cfg.machine_fast_bytes, cfg.arbitration, faults)
+        })
         .collect();
     let threads = cfg.threads.max(1);
 
-    let mut pending: VecDeque<FleetArrival> = arrivals.into();
-    let mut queue: VecDeque<FleetArrival> = VecDeque::new();
+    let mut pending: VecDeque<Offer> = arrivals
+        .into_iter()
+        .map(|a| Offer {
+            id: a.id,
+            first_arrival_ns: a.arrival_ns,
+            offered_ns: a.arrival_ns,
+            demand_bytes: a.demand_bytes,
+            peak_bytes: a.peak_bytes,
+            kind: OfferKind::New(a.build),
+        })
+        .collect();
+    let mut queue: VecDeque<Offer> = VecDeque::new();
     let mut completed: Vec<FleetDeparture> = Vec::new();
     let mut rejected: Vec<u64> = Vec::new();
     let mut samples: Vec<UtilSample> = Vec::new();
@@ -521,11 +644,29 @@ pub fn run_fleet(arrivals: Vec<FleetArrival>, cfg: FleetConfig) -> FleetSimResul
     let mut shrink_streak = 0u32;
     let mut fleet_now = 0.0f64;
     let mut fleet_events = 0u64;
+    let mut tenants_displaced = 0u64;
 
     loop {
         let live: usize = machines.iter().map(|m| m.tenants.len()).sum();
         if pending.is_empty() && queue.is_empty() && live == 0 {
             break;
+        }
+        // Pool-exhaustion gate: crashes can retire every machine while
+        // jobs still wait. With an autoscaler, cold-restart the pool
+        // immediately (a dead fleet has nothing for hysteresis to
+        // smooth); without one, surface the typed error — this is the
+        // path that used to be unreachable and guarded by panics.
+        if machines.iter().all(|m| m.retired) {
+            if cfg.autoscale.is_some() {
+                let idx = machines.len();
+                let faults = cfg.faults.as_ref().map(|p| MachineFaults::new(p, idx));
+                machines.push(FleetMachine::new(cfg.machine_fast_bytes, cfg.arbitration, faults));
+                scale_ups += 1;
+                grow_streak = 0;
+                shrink_streak = 0;
+            } else {
+                return Err(PoolExhausted { waiting_jobs: pending.len() + queue.len() });
+            }
         }
         fleet_events += 1;
 
@@ -533,7 +674,7 @@ pub fn run_fleet(arrivals: Vec<FleetArrival>, cfg: FleetConfig) -> FleetSimResul
         //    arrival, or (tail mode: arrivals exhausted, queue waiting)
         //    each machine's next departure so queued jobs see capacity
         //    free up.
-        let horizon = pending.front().map_or(f64::INFINITY, |a| a.arrival_ns);
+        let horizon = pending.front().map_or(f64::INFINITY, |a| a.offered_ns);
         let tail = pending.is_empty() && !queue.is_empty();
         let mut departures: Vec<Vec<FleetDeparture>> =
             par_map_mut(&mut machines, threads, |m| m.advance_until(horizon, tail));
@@ -563,6 +704,41 @@ pub fn run_fleet(arrivals: Vec<FleetArrival>, cfg: FleetConfig) -> FleetSimResul
             completed.extend(deps);
         }
 
+        // 2b. Crash fallout: retire crashed machines and displace their
+        //     residents back through admission as re-offers at
+        //     `fleet_now`. Machine order, then resident order, so the
+        //     re-offer sequence is deterministic; `push_front` in
+        //     reverse keeps that order at the head of `pending`, where
+        //     the offers are picked up by this same round's admission
+        //     phase (their original arrival is necessarily ≤ horizon).
+        let mut displaced: Vec<Offer> = Vec::new();
+        for m in machines.iter_mut() {
+            if !m.crashed || m.retired {
+                continue;
+            }
+            m.retired = true;
+            m.committed = 0;
+            let tenants = std::mem::take(&mut m.tenants);
+            let metas = std::mem::take(&mut m.meta);
+            if let Some(f) = m.faults.as_mut() {
+                f.report.tenants_displaced += tenants.len() as u64;
+            }
+            tenants_displaced += tenants.len() as u64;
+            for (t, meta) in tenants.into_iter().zip(metas) {
+                displaced.push(Offer {
+                    id: meta.id,
+                    first_arrival_ns: meta.arrival_ns,
+                    offered_ns: fleet_now,
+                    demand_bytes: meta.demand,
+                    peak_bytes: meta.peak,
+                    kind: OfferKind::Resume(Box::new(t)),
+                });
+            }
+        }
+        for o in displaced.into_iter().rev() {
+            pending.push_front(o);
+        }
+
         // 3. Autoscale on sustained pool pressure (committed demand
         //    over active capacity), before placement so a grown machine
         //    absorbs this round's joins.
@@ -583,7 +759,9 @@ pub fn run_fleet(arrivals: Vec<FleetArrival>, cfg: FleetConfig) -> FleetSimResul
             }
             let n_active = active.len();
             if grow_streak >= auto.sustain_events && n_active < auto.max_machines.max(1) {
-                machines.push(FleetMachine::new(cfg.machine_fast_bytes, cfg.arbitration));
+                let idx = machines.len();
+                let faults = cfg.faults.as_ref().map(|p| MachineFaults::new(p, idx));
+                machines.push(FleetMachine::new(cfg.machine_fast_bytes, cfg.arbitration, faults));
                 scale_ups += 1;
                 grow_streak = 0;
             } else if shrink_streak >= auto.sustain_events && n_active > auto.min_machines.max(1) {
@@ -607,25 +785,27 @@ pub fn run_fleet(arrivals: Vec<FleetArrival>, cfg: FleetConfig) -> FleetSimResul
         //    FIFO means a big job at the head blocks smaller ones
         //    behind it (no starvation of large jobs); every job's
         //    demand is clamped to one machine, so the head always fits
-        //    once some machine drains.
-        let mut joins: Vec<Vec<FleetArrival>> = (0..machines.len()).map(|_| Vec::new()).collect();
-        while let Some(head) = queue.front() {
-            match pick_machine(&machines, head.demand_bytes) {
-                Some(mi) => {
-                    let a = queue.pop_front().unwrap();
-                    total_queue_wait_ns += (fleet_now - a.arrival_ns).max(0.0);
-                    machines[mi].committed += a.demand_bytes;
-                    machines[mi].peak_committed_bytes =
-                        machines[mi].peak_committed_bytes.max(machines[mi].committed);
-                    joins[mi].push(a);
-                }
-                None => break,
-            }
+        //    once some machine drains. Structured so no pop can panic:
+        //    each iteration re-reads the head and stops when nothing
+        //    fits (or nothing is left).
+        let mut joins: Vec<Vec<Offer>> = (0..machines.len()).map(|_| Vec::new()).collect();
+        while let Some(demand) = queue.front().map(|h| h.demand_bytes) {
+            let Some(mi) = pick_machine(&machines, demand) else { break };
+            let Some(a) = queue.pop_front() else { break };
+            total_queue_wait_ns += (fleet_now - a.offered_ns).max(0.0);
+            machines[mi].committed += a.demand_bytes;
+            machines[mi].peak_committed_bytes =
+                machines[mi].peak_committed_bytes.max(machines[mi].committed);
+            joins[mi].push(a);
         }
 
-        // 5. Admit this round's arrivals (everything at the horizon).
-        while pending.front().is_some_and(|a| a.arrival_ns <= horizon) {
-            let mut a = pending.pop_front().unwrap();
+        // 5. Admit this round's offers (everything at the horizon —
+        //    fresh arrivals and crash re-offers alike).
+        loop {
+            if !pending.front().is_some_and(|a| a.offered_ns <= horizon) {
+                break;
+            }
+            let Some(mut a) = pending.pop_front() else { break };
             a.demand_bytes = a.demand_bytes.min(cfg.machine_fast_bytes).max(1);
             // FIFO fairness under queueing: while older jobs wait, new
             // arrivals line up behind them even if they would fit.
@@ -647,15 +827,25 @@ pub fn run_fleet(arrivals: Vec<FleetArrival>, cfg: FleetConfig) -> FleetSimResul
                         queue.push_back(a);
                         queued_jobs += 1;
                     }
-                    Admission::SpillToSlow => {
-                        let mi = least_loaded(&machines)
-                            .expect("pool keeps at least one active machine");
-                        machines[mi].committed += a.demand_bytes;
-                        machines[mi].peak_committed_bytes =
-                            machines[mi].peak_committed_bytes.max(machines[mi].committed);
-                        spilled += 1;
-                        joins[mi].push(a);
-                    }
+                    Admission::SpillToSlow => match least_loaded(&machines) {
+                        Some(mi) => {
+                            machines[mi].committed += a.demand_bytes;
+                            machines[mi].peak_committed_bytes =
+                                machines[mi].peak_committed_bytes.max(machines[mi].committed);
+                            spilled += 1;
+                            joins[mi].push(a);
+                        }
+                        // A crash emptied the pool this round: hold the
+                        // job; next round's exhaustion gate either
+                        // cold-restarts the pool or errs. This was the
+                        // "pool keeps at least one active machine"
+                        // panic before the fault layer made it
+                        // reachable.
+                        None => {
+                            queue.push_back(a);
+                            queued_jobs += 1;
+                        }
+                    },
                 },
             }
         }
@@ -695,7 +885,22 @@ pub fn run_fleet(arrivals: Vec<FleetArrival>, cfg: FleetConfig) -> FleetSimResul
 
     completed.sort_by(|a, b| a.tenant_id.cmp(&b.tenant_id));
     let makespan_ns = completed.iter().map(|d| d.finish_ns).fold(0.0f64, f64::max);
-    FleetSimResult {
+    let stats: Vec<FleetMachineStats> = machines.iter().map(FleetMachine::stats).collect();
+    // Merge per-machine fault reports, machine order. Present exactly
+    // when a plan was configured; `tenants_displaced` is fleet-level
+    // (counted at the displacement site, which also stamps each
+    // machine's own report).
+    let faults = cfg.faults.as_ref().map(|_| {
+        let mut merged = DegradationReport::default();
+        for m in &mut machines {
+            if let Some(f) = m.faults.take() {
+                merged.merge(&f.into_report());
+            }
+        }
+        merged.tenants_displaced = tenants_displaced;
+        merged
+    });
+    Ok(FleetSimResult {
         completed,
         rejected,
         spilled,
@@ -704,11 +909,12 @@ pub fn run_fleet(arrivals: Vec<FleetArrival>, cfg: FleetConfig) -> FleetSimResul
         total_queue_wait_ns,
         scale_ups,
         scale_downs,
-        machines: machines.iter().map(FleetMachine::stats).collect(),
+        machines: stats,
         samples,
         makespan_ns,
         fleet_events,
-    }
+        faults,
+    })
 }
 
 #[cfg(test)]
@@ -778,6 +984,7 @@ mod tests {
             admission,
             autoscale: None,
             threads: 1,
+            faults: None,
         }
     }
 
@@ -796,7 +1003,7 @@ mod tests {
 
     #[test]
     fn empty_fleet_terminates_immediately() {
-        let r = run_fleet(Vec::new(), config(2, 1 << 30, Admission::Reject));
+        let r = run_fleet(Vec::new(), config(2, 1 << 30, Admission::Reject)).expect("pool intact");
         assert!(r.completed.is_empty());
         assert_eq!(r.fleet_events, 0);
         assert_eq!(r.machines.len(), 2);
@@ -813,7 +1020,7 @@ mod tests {
             arrival(0, 0.0, &w, &compiled, kind, fast * 6 / 10, fast, 3, 0),
             arrival(1, 0.0, &w, &compiled, kind, fast * 6 / 10, fast, 3, 0),
         ];
-        let r = run_fleet(jobs, config(1, fast, Admission::Reject));
+        let r = run_fleet(jobs, config(1, fast, Admission::Reject)).expect("pool intact");
         assert_eq!(r.completed.len(), 1);
         assert_eq!(r.completed[0].tenant_id, 0);
         assert_eq!(r.rejected, vec![1]);
@@ -828,7 +1035,7 @@ mod tests {
         let jobs: Vec<FleetArrival> = (0..3)
             .map(|i| arrival(i, 0.0, &w, &compiled, kind, fast * 6 / 10, fast, 3, 0))
             .collect();
-        let r = run_fleet(jobs, config(1, fast, Admission::Queue));
+        let r = run_fleet(jobs, config(1, fast, Admission::Queue)).expect("pool intact");
         assert_eq!(r.completed.len(), 3, "queued jobs all ran");
         assert_eq!(r.queued_jobs, 2);
         assert!(r.peak_queue_depth >= 1);
@@ -848,7 +1055,7 @@ mod tests {
         let jobs: Vec<FleetArrival> = (0..3)
             .map(|i| arrival(i, 0.0, &w, &compiled, kind, fast * 6 / 10, fast, 3, 0))
             .collect();
-        let r = run_fleet(jobs, config(1, fast, Admission::SpillToSlow));
+        let r = run_fleet(jobs, config(1, fast, Admission::SpillToSlow)).expect("pool intact");
         assert_eq!(r.completed.len(), 3);
         assert_eq!(r.spilled, 2, "two jobs oversubscribed the one machine");
         assert!(r.machines[0].peak_committed_bytes > fast);
@@ -875,8 +1082,9 @@ mod tests {
             admission: Admission::Queue,
             autoscale: None,
             threads: 1,
+            faults: None,
         };
-        let r = run_fleet(jobs, cfg);
+        let r = run_fleet(jobs, cfg).expect("pool intact");
         assert_eq!(r.completed.len(), 2);
         let first = &r.completed[0];
         // The resident's share halved at the join (equal peaks).
@@ -884,5 +1092,112 @@ mod tests {
         assert_eq!(first.result.share_final, fast / 2);
         assert!(first.result.pages_force_demoted > 0 || first.result.seal_invalidations > 0
             || first.result.seal_segments > 0);
+    }
+
+    #[test]
+    fn crash_displaces_tenants_to_the_surviving_machine() {
+        use crate::sim::fault::{FaultKind, FaultPlan};
+        let kind = PolicyKind::Lru;
+        let (w, compiled) = dcgan_parts(kind, 6);
+        let fast = Model::Dcgan.peak_memory_target() / 8;
+        // Two jobs, one per machine; machine 0 crashes after its
+        // tenant's second step.
+        let jobs = vec![
+            arrival(0, 0.0, &w, &compiled, kind, fast / 2, fast, 6, 0),
+            arrival(1, 0.0, &w, &compiled, kind, fast / 2, fast, 6, 0),
+        ];
+        let mut cfg = config(2, fast, Admission::Queue);
+        cfg.faults = Some(FaultPlan::new().push(0, 2, FaultKind::Crash));
+        let r = run_fleet(jobs, cfg).expect("one machine survives");
+        assert_eq!(r.completed.len(), 2, "both jobs finish despite the crash");
+        for d in &r.completed {
+            assert_eq!(d.result.result.steps.len(), 6, "job {} ran every step", d.tenant_id);
+        }
+        let report = r.faults.as_ref().expect("plan configured, report present");
+        assert_eq!(report.crashes, 1);
+        assert_eq!(report.tenants_displaced, 1);
+        assert!(r.machines[0].crashed && r.machines[0].retired);
+        assert!(!r.machines[1].crashed);
+        // The displaced job finished on the surviving machine, later
+        // than it would have solo.
+        let displaced = r.completed.iter().find(|d| d.machine == 1 && d.join_ns > 0.0);
+        assert!(displaced.is_some(), "a re-offered tenant rejoined machine 1");
+    }
+
+    #[test]
+    fn crash_emptying_the_pool_is_a_typed_error() {
+        use crate::sim::fault::{FaultKind, FaultPlan};
+        let kind = PolicyKind::Lru;
+        let (w, compiled) = dcgan_parts(kind, 6);
+        let fast = Model::Dcgan.peak_memory_target() / 8;
+        let jobs = vec![
+            arrival(0, 0.0, &w, &compiled, kind, fast / 2, fast, 6, 0),
+            arrival(1, 0.0, &w, &compiled, kind, fast / 2, fast, 6, 0),
+        ];
+        let mut cfg = config(1, fast, Admission::Queue);
+        cfg.faults = Some(FaultPlan::new().push(0, 1, FaultKind::Crash));
+        match run_fleet(jobs, cfg) {
+            Err(e) => {
+                assert!(e.waiting_jobs >= 1, "the displaced job was stranded: {e}");
+                assert!(e.to_string().contains("pool exhausted"), "{e}");
+            }
+            Ok(_) => panic!("sole machine crashed with work pending: must err, not complete"),
+        }
+    }
+
+    #[test]
+    fn autoscaler_cold_restarts_a_crashed_pool() {
+        use crate::sim::fault::{FaultKind, FaultPlan};
+        let kind = PolicyKind::Lru;
+        let (w, compiled) = dcgan_parts(kind, 6);
+        let fast = Model::Dcgan.peak_memory_target() / 8;
+        let jobs = vec![arrival(0, 0.0, &w, &compiled, kind, fast / 2, fast, 6, 0)];
+        let mut cfg = config(1, fast, Admission::Queue);
+        cfg.autoscale = Some(Autoscale::default());
+        cfg.faults = Some(FaultPlan::new().push(0, 2, FaultKind::Crash));
+        let r = run_fleet(jobs, cfg).expect("autoscaler regrows the pool");
+        assert_eq!(r.completed.len(), 1, "the displaced job finishes on the regrown machine");
+        assert_eq!(r.completed[0].result.result.steps.len(), 6);
+        assert!(r.scale_ups >= 1, "a cold-restart grow happened");
+        assert!(r.machines[0].crashed);
+    }
+
+    #[test]
+    fn fleet_faults_deterministic_across_thread_counts() {
+        use crate::sim::fault::FaultPlan;
+        let kind = PolicyKind::Lru;
+        let (w, compiled) = dcgan_parts(kind, 4);
+        let fast = Model::Dcgan.peak_memory_target() / 8;
+        let plan = FaultPlan::draw(0x5E17, 2, 64, 0.10, false);
+        let run = |threads: usize| {
+            let jobs: Vec<FleetArrival> = (0..4)
+                .map(|i| {
+                    arrival(i, i as f64 * 1.0e8, &w, &compiled, kind, fast / 2, fast, 4, 0)
+                })
+                .collect();
+            let mut cfg = config(2, fast, Admission::Queue);
+            cfg.threads = threads;
+            cfg.faults = Some(plan.clone());
+            run_fleet(jobs, cfg).expect("pool intact")
+        };
+        let a = run(1);
+        let b = run(4);
+        assert_eq!(a.completed.len(), b.completed.len());
+        for (x, y) in a.completed.iter().zip(&b.completed) {
+            assert_eq!(x.tenant_id, y.tenant_id);
+            assert_eq!(x.finish_ns.to_bits(), y.finish_ns.to_bits());
+            assert_eq!(
+                x.result.result.total_time_ns.to_bits(),
+                y.result.result.total_time_ns.to_bits()
+            );
+        }
+        let (ra, rb) = (a.faults.as_ref(), b.faults.as_ref());
+        match (ra, rb) {
+            (Some(ra), Some(rb)) => {
+                assert_eq!(ra.injected, rb.injected);
+                assert_eq!(ra.recovery_steps, rb.recovery_steps);
+            }
+            _ => panic!("both runs carry fault reports"),
+        }
     }
 }

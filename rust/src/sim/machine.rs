@@ -64,13 +64,19 @@ pub struct SteadySnapshot {
     fast_capacity: u64,
     lane_in: LaneSnapshot,
     lane_out: LaneSnapshot,
+    /// Bandwidth-degradation factor bits (fault layer). `1.0` on a
+    /// healthy machine, so fault-free snapshots are unchanged; a
+    /// degraded machine can never seal across a factor change.
+    bw_degradation_bits: u64,
 }
 
 /// The simulated machine.
 ///
 /// §Perf: the per-device timing parameters are cached at construction
 /// (`ns_per_page`, the inverse bandwidths) — mutating `spec`'s bandwidth
-/// fields after `Machine::new` has no effect on timing.
+/// fields after `Machine::new` has no effect on timing. The one
+/// sanctioned way to change timing mid-run is
+/// [`Machine::set_bandwidth_degradation`], which rebuilds the caches.
 ///
 /// ## The two-part clock
 ///
@@ -101,6 +107,10 @@ pub struct Machine {
     /// event dominated `access_time_ns` before).
     inv_bw_fast: f64,
     inv_bw_slow: f64,
+    /// Multiplicative slowdown on every memory-time parameter (fault
+    /// layer: NVM thermal/wear throttling). `1.0` = healthy; see
+    /// [`Machine::set_bandwidth_degradation`].
+    bw_degradation: f64,
     /// True iff both migration lanes have empty queues. `exec` skips
     /// the whole queue machinery while this holds (a clock bump plus
     /// two credit ticks) — the idle-lane fast path that makes
@@ -115,6 +125,7 @@ impl Machine {
             ns_per_page: spec.ns_per_page(),
             inv_bw_fast: 1.0 / spec.fast.bandwidth_gbps,
             inv_bw_slow: 1.0 / spec.slow.bandwidth_gbps,
+            bw_degradation: 1.0,
             spec,
             base_ns: 0.0,
             local_ns: 0.0,
@@ -194,6 +205,7 @@ impl Machine {
             fast_capacity: self.spec.fast.capacity_bytes,
             lane_in: self.lane_in.snapshot(),
             lane_out: self.lane_out.snapshot(),
+            bw_degradation_bits: self.bw_degradation.to_bits(),
         }
     }
 
@@ -219,6 +231,27 @@ impl Machine {
     /// demoted, new fast allocations spill, and promotions stall.
     pub fn set_fast_capacity(&mut self, bytes: u64) {
         self.spec.fast.capacity_bytes = bytes;
+    }
+
+    /// Apply a multiplicative bandwidth-degradation factor (fault
+    /// layer: NVM thermal/wear throttling). Every cached memory-time
+    /// parameter — `ns_per_page` and both inverse bandwidths — is
+    /// rebuilt from the spec scaled by `factor`, so `factor == 1.0`
+    /// restores the exact construction-time bits (healthy). Callers
+    /// that degrade a machine mid-run must also invalidate any sealed
+    /// schedule: the seal's fixed-point proof pinned the *old* timing,
+    /// and sealed replay never re-reads these parameters.
+    pub fn set_bandwidth_degradation(&mut self, factor: f64) {
+        debug_assert!(factor >= 1.0, "degradation factor {factor} < 1.0");
+        self.bw_degradation = factor;
+        self.ns_per_page = self.spec.ns_per_page() * factor;
+        self.inv_bw_fast = factor / self.spec.fast.bandwidth_gbps;
+        self.inv_bw_slow = factor / self.spec.slow.bandwidth_gbps;
+    }
+
+    /// Current bandwidth-degradation factor (`1.0` = healthy).
+    pub fn bandwidth_degradation(&self) -> f64 {
+        self.bw_degradation
     }
 
     /// Objects currently holding pages in fast memory, as
@@ -728,6 +761,39 @@ mod tests {
         m.exec(100.0 * m.ns_per_page());
         assert_eq!(m.used_bytes(Tier::Fast), 0);
         assert!(m.fast_resident().is_empty());
+    }
+
+    #[test]
+    fn bandwidth_degradation_scales_timing_and_restores_exactly() {
+        let mut m = machine_1gb();
+        m.alloc(ObjectId(0), 256, Tier::Slow);
+        let bytes = 256 * PAGE_SIZE;
+        let healthy_t = m.access_time_ns(ObjectId(0), bytes, 1);
+        let healthy_nspp = m.ns_per_page();
+        m.set_bandwidth_degradation(4.0);
+        assert_eq!(m.bandwidth_degradation(), 4.0);
+        let degraded_t = m.access_time_ns(ObjectId(0), bytes, 1);
+        assert!(degraded_t > 2.0 * healthy_t, "{degraded_t} vs {healthy_t}");
+        assert!(m.ns_per_page() > healthy_nspp);
+        // Clearing restores the construction-time bits exactly — the
+        // fault-free bit-identity contract.
+        m.set_bandwidth_degradation(1.0);
+        assert_eq!(
+            m.access_time_ns(ObjectId(0), bytes, 1).to_bits(),
+            healthy_t.to_bits()
+        );
+        assert_eq!(m.ns_per_page().to_bits(), healthy_nspp.to_bits());
+    }
+
+    #[test]
+    fn degradation_is_visible_in_steady_snapshot() {
+        let mut a = machine_1gb();
+        let b = machine_1gb();
+        assert_eq!(a.steady_snapshot(), b.steady_snapshot());
+        a.set_bandwidth_degradation(2.0);
+        assert_ne!(a.steady_snapshot(), b.steady_snapshot());
+        a.set_bandwidth_degradation(1.0);
+        assert_eq!(a.steady_snapshot(), b.steady_snapshot());
     }
 
     #[test]

@@ -18,6 +18,7 @@
 pub mod cluster;
 pub mod device;
 pub mod engine;
+pub mod fault;
 pub mod fleet;
 pub mod machine;
 pub mod migration;
@@ -25,12 +26,16 @@ pub mod replay;
 pub mod schedule;
 
 pub use cluster::{
-    arbitration_shares, run_cluster, Arbitration, ClusterTenant, ParseArbitrationError,
-    TenantRunResult,
+    arbitration_shares, run_cluster, run_cluster_faulted, Arbitration, ClusterTenant,
+    ParseArbitrationError, TenantRunResult,
+};
+pub use fault::{
+    DegradationReport, FaultAction, FaultEvent, FaultInjector, FaultKind, FaultPlan,
+    RecoveryTracker,
 };
 pub use fleet::{
     run_fleet, Admission, Autoscale, FleetArrival, FleetConfig, FleetDeparture, FleetMachineStats,
-    FleetSimResult, ParseAdmissionError, UtilSample,
+    FleetSimResult, ParseAdmissionError, PoolExhausted, UtilSample,
 };
 pub use device::{DeviceSpec, MachineSpec, Tier};
 pub use engine::{Engine, EngineConfig, Policy, StepStats, TrainResult};

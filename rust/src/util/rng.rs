@@ -18,6 +18,18 @@ fn splitmix64(state: &mut u64) -> u64 {
     z ^ (z >> 31)
 }
 
+/// FNV-1a over a label's bytes — the stable hash behind [`Rng::stream`].
+/// Not exposed: callers name streams, they don't do seed arithmetic.
+#[inline]
+fn fnv1a64(label: &str) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    for b in label.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
 impl Rng {
     /// Create a generator from a 64-bit seed.
     pub fn new(seed: u64) -> Self {
@@ -30,6 +42,25 @@ impl Rng {
                 splitmix64(&mut sm),
             ],
         }
+    }
+
+    /// An independent labeled substream of `parent`: the label is hashed
+    /// (FNV-1a) into a salt xored with the parent seed before the usual
+    /// SplitMix64 expansion. Distinct labels give statistically
+    /// independent streams, and — the property the fault layer's
+    /// bit-identity proof rests on — drawing from one stream never
+    /// advances another, so a subsystem can add randomness without
+    /// perturbing its siblings' draws.
+    pub fn stream(parent: u64, label: &str) -> Self {
+        Rng::stream_salted(parent, fnv1a64(label))
+    }
+
+    /// Like [`Rng::stream`] but with an explicit numeric salt instead of
+    /// a hashed label. Exists for streams whose derivation predates
+    /// labels and is pinned by bit-identity tests (the fleet arrival
+    /// stream); new streams should use [`Rng::stream`].
+    pub fn stream_salted(parent: u64, salt: u64) -> Self {
+        Rng::new(parent ^ salt)
     }
 
     /// Next raw 64-bit value.
@@ -165,6 +196,29 @@ mod tests {
         for _ in 0..10_000 {
             let x = r.log_uniform(16.0, 4096.0);
             assert!((16.0..=4096.01).contains(&x));
+        }
+    }
+
+    #[test]
+    fn streams_are_deterministic_and_independent() {
+        let mut a = Rng::stream(42, "faults");
+        let mut b = Rng::stream(42, "faults");
+        let mut c = Rng::stream(42, "arrivals");
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        // Distinct labels diverge immediately (FNV-1a salts differ).
+        assert_ne!(Rng::stream(42, "faults").next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn stream_salted_matches_legacy_xor_derivation() {
+        // The fleet arrival stream predates labels; its draws must stay
+        // bit-identical to the original `Rng::new(seed ^ salt)` form.
+        let mut legacy = Rng::new(7 ^ 0x5EED_F1EE7);
+        let mut stream = Rng::stream_salted(7, 0x5EED_F1EE7);
+        for _ in 0..100 {
+            assert_eq!(legacy.next_u64(), stream.next_u64());
         }
     }
 

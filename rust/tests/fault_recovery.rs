@@ -1,0 +1,288 @@
+//! Fault-injection and recovery invariants.
+//!
+//! * **Fault-free bit-identity**: arming a [`FaultSpec`] whose plan is
+//!   empty (rate 0) must leave solo, cluster, and fleet runs
+//!   bit-identical to runs with no spec at all — the fault hook may
+//!   cost the healthy path nothing, not even an RNG draw.
+//! * **Determinism**: a *faulted* fleet is bit-identical run to run and
+//!   across worker-thread counts — faults fire on per-machine step
+//!   clocks, not wall clocks.
+//! * **Recovery**: when every fault lands early in a cluster run, every
+//!   recovery closes as a genuine re-seal (all survivors holding sealed
+//!   schedules again) and no tenant loses a step.
+//! * **Crash displacement**: a tenant displaced by a machine crash
+//!   re-enters through admission, resumes from its completed-step
+//!   count, and finishes with exactly its requested step total.
+
+use std::sync::Arc;
+
+use sentinel_hm::api::{
+    json, shared_workload, Admission, Autoscale, ClusterSpec, FaultSpec, FleetSpec, PolicyKind,
+    RunSpec, TenantSpec, Workload,
+};
+use sentinel_hm::dnn::zoo::Model;
+use sentinel_hm::sim::{
+    run_fleet, Arbitration, ClusterTenant, CompiledTrace, FaultKind, FaultPlan, FleetArrival,
+    FleetConfig, Machine, TrainResult,
+};
+
+/// Exact (bit-level for floats) equality of two engine results.
+fn assert_bit_identical(a: &TrainResult, b: &TrainResult, ctx: &str) {
+    assert_eq!(
+        a.total_time_ns.to_bits(),
+        b.total_time_ns.to_bits(),
+        "{ctx}: total_time_ns {} vs {}",
+        a.total_time_ns,
+        b.total_time_ns
+    );
+    assert_eq!(a.peak_fast_bytes, b.peak_fast_bytes, "{ctx}: peak_fast_bytes");
+    assert_eq!(a.pages_migrated_in, b.pages_migrated_in, "{ctx}: pages_in");
+    assert_eq!(a.pages_migrated_out, b.pages_migrated_out, "{ctx}: pages_out");
+    assert_eq!(a.alloc_spills, b.alloc_spills, "{ctx}: alloc_spills");
+    assert_eq!(a.steps.len(), b.steps.len(), "{ctx}: step count");
+    for (i, (sa, sb)) in a.steps.iter().zip(&b.steps).enumerate() {
+        assert_eq!(
+            sa.time_ns.to_bits(),
+            sb.time_ns.to_bits(),
+            "{ctx}: step {i} time {} vs {}",
+            sa.time_ns,
+            sb.time_ns
+        );
+    }
+}
+
+/// An armed-but-quiet solo run (zero-rate spec → empty plan) must be
+/// bit-identical to a run with no spec, and its report must say so:
+/// nothing injected, slowdown exactly 1.
+#[test]
+fn armed_but_empty_faults_leave_solo_run_bit_identical() {
+    let spec = || RunSpec::for_model(Model::Dcgan).fast_pct(30).steps(10);
+    let base = spec().run().unwrap();
+    assert!(base.faults.is_none(), "unarmed runs carry no report");
+    let armed = spec().faults(FaultSpec::new().rate(0.0)).run().unwrap();
+    let report = armed.faults.as_ref().expect("armed runs carry a report");
+    assert_eq!(report.injected, 0);
+    assert_eq!(
+        report.slowdown_vs_fault_free.map(f64::to_bits),
+        Some(1f64.to_bits()),
+        "an empty plan's twin is the run itself"
+    );
+    assert_bit_identical(&armed.result, &base.result, "solo");
+    // The report is the only JSON difference, by design.
+    assert!(!base.to_json().contains("\"faults\""));
+    assert!(armed.to_json().contains("\"faults\""));
+}
+
+#[test]
+fn armed_but_empty_faults_leave_cluster_run_bit_identical() {
+    let fast = Model::Dcgan.peak_memory_target() * 3 / 10;
+    let spec = || {
+        ClusterSpec::new()
+            .tenant(TenantSpec::for_model(Model::Dcgan).policy(PolicyKind::Lru))
+            .tenant(TenantSpec::for_model(Model::Dcgan).policy(PolicyKind::StaticInterval(4)))
+            .fast_bytes(fast)
+            .steps(10)
+    };
+    let base = spec().run().unwrap();
+    assert!(base.faults.is_none());
+    let armed = spec().faults(FaultSpec::new().rate(0.0)).run().unwrap();
+    let report = armed.faults.as_ref().expect("armed runs carry a report");
+    assert_eq!(report.injected, 0);
+    assert_eq!(armed.makespan_ns().to_bits(), base.makespan_ns().to_bits());
+    assert_eq!(armed.tenants.len(), base.tenants.len());
+    for (a, b) in armed.tenants.iter().zip(&base.tenants) {
+        assert_bit_identical(&a.result, &b.result, &a.model);
+    }
+}
+
+#[test]
+fn armed_but_empty_faults_leave_fleet_run_bit_identical() {
+    let spec = || {
+        FleetSpec::new()
+            .tenants(8)
+            .rate_per_s(2.0)
+            .machines(2)
+            .machine_fast_bytes(3 << 30)
+            .admission(Admission::Queue)
+            .threads(1)
+            .seed(17)
+    };
+    let base = spec().run().unwrap();
+    assert!(base.faults.is_none());
+    // Crashes enabled but rate 0: still an empty plan.
+    let armed = spec().faults(FaultSpec::new().rate(0.0).crashes(true)).run().unwrap();
+    let report = armed.faults.as_ref().expect("armed runs carry a report");
+    assert_eq!(report.injected, 0);
+    assert_eq!(armed.tenants_digest(), base.tenants_digest());
+    assert_eq!(armed.makespan_ns.to_bits(), base.makespan_ns.to_bits());
+    assert!(!base.to_json().contains("\"faults\""));
+    assert!(!base.to_json().contains("\"crashed\""));
+    assert!(armed.to_json().contains("\"faults\""));
+}
+
+fn faulted_churn(threads: usize) -> FleetSpec {
+    FleetSpec::new()
+        .tenants(8)
+        .rate_per_s(2.0)
+        .machines(2)
+        .machine_fast_bytes(3 << 30)
+        .admission(Admission::Queue)
+        .autoscale(Autoscale::default())
+        .threads(threads)
+        .seed(17)
+        .faults(FaultSpec::new().rate(0.15).crashes(true))
+}
+
+/// Same seed + same faulted spec ⇒ bit-identical outcome JSON and
+/// tenant digest, run to run and for any worker count. Faults fire on
+/// per-machine cumulative-step clocks, which advance identically
+/// however the pool is fanned out.
+#[test]
+fn faulted_fleet_is_deterministic_across_runs_and_worker_counts() {
+    let baseline = faulted_churn(1).run().unwrap();
+    let base_json = baseline.to_json();
+    assert!(json::is_valid(&base_json), "{base_json}");
+    let report = baseline.faults.as_ref().expect("plan armed");
+    assert!(
+        report.injected > 0,
+        "rate 0.15 over this run must inject something (got {base_json})"
+    );
+    assert_eq!(base_json, faulted_churn(1).run().unwrap().to_json(), "re-run drifted");
+    for threads in [4, 8] {
+        let out = faulted_churn(threads).run().unwrap();
+        assert_eq!(base_json, out.to_json(), "{threads} workers drifted");
+        assert_eq!(
+            baseline.tenants_digest(),
+            out.tenants_digest(),
+            "{threads} workers: tenant table drifted"
+        );
+    }
+}
+
+/// Every fault lands in the first 6 machine steps of a 48-machine-step
+/// cluster run, so every recovery must close as a genuine re-seal (all
+/// survivors sealed again) rather than by the run ending — and no
+/// tenant loses a step. Static-interval tenants re-seal two steady
+/// steps after any disruption, which makes the property sharp.
+#[test]
+fn early_faults_all_reseal_and_every_tenant_completes() {
+    let fast = Model::Dcgan.peak_memory_target() * 3 / 10;
+    let steps = 24u32;
+    let out = ClusterSpec::new()
+        .tenant(TenantSpec::for_model(Model::Dcgan).policy(PolicyKind::StaticInterval(4)))
+        .tenant(TenantSpec::for_model(Model::Dcgan).policy(PolicyKind::StaticInterval(3)))
+        .fast_bytes(fast)
+        .steps(steps)
+        .faults(FaultSpec::new().rate(0.6).horizon_steps(6))
+        .run()
+        .unwrap();
+    let report = out.faults.as_ref().expect("plan armed");
+    assert!(report.injected >= 1, "rate 0.6 over 6 steps draws something");
+    assert_eq!(
+        report.recovery_steps.len() as u64,
+        report.injected,
+        "every fault's recovery is accounted (no crashes in a cluster draw)"
+    );
+    assert_eq!(
+        report.reseals, report.injected,
+        "with ~40 machine steps after the last fault, every recovery must \
+         close with a full re-seal, not the run ending"
+    );
+    for t in &out.tenants {
+        assert_eq!(t.result.steps.len(), steps as usize, "{}: no step lost", t.model);
+    }
+}
+
+fn arrival(
+    id: u64,
+    w: &Arc<Workload>,
+    compiled: &Arc<CompiledTrace>,
+    kind: PolicyKind,
+    demand: u64,
+    peak: u64,
+    steps: u32,
+) -> FleetArrival {
+    let w = Arc::clone(w);
+    let compiled = Arc::clone(compiled);
+    FleetArrival {
+        id,
+        arrival_ns: 0.0,
+        demand_bytes: demand,
+        peak_bytes: peak,
+        priority: 0,
+        build: Box::new(move |share| {
+            let spec = kind.machine_spec(&w.graph, &w.trace, share);
+            ClusterTenant {
+                policy: kind.construct(&w.graph, &w.trace, spec),
+                config: kind.engine_config(steps),
+                machine: Machine::new(spec),
+                priority: 0,
+                share,
+                workload: w,
+                compiled,
+            }
+        }),
+    }
+}
+
+/// A surgical crash on machine 0 displaces its resident; under queue
+/// admission the tenant re-enters, waits for room on the survivor,
+/// resumes from its completed-step count, and finishes with exactly its
+/// requested step total — no step lost, none repeated.
+#[test]
+fn crash_displaced_tenant_resumes_and_completes_every_step() {
+    let kind = PolicyKind::Lru;
+    let steps = 6u32;
+    let w = shared_workload(Model::Dcgan, 5);
+    let cfg = kind.engine_config(steps);
+    let mspec = kind.machine_spec(&w.graph, &w.trace, 1);
+    let compiled = Arc::new(CompiledTrace::compile(
+        &w.graph,
+        &w.trace,
+        mspec.compute_gflops,
+        cfg.profiling_fault_ns,
+    ));
+    let fast = Model::Dcgan.peak_memory_target() / 2;
+    // Two t=0 jobs at 60% demand each: one per machine, and after the
+    // crash the displaced one must queue until the survivor has room.
+    let jobs = vec![
+        arrival(0, &w, &compiled, kind, fast * 6 / 10, fast, steps),
+        arrival(1, &w, &compiled, kind, fast * 6 / 10, fast, steps),
+    ];
+    let r = run_fleet(
+        jobs,
+        FleetConfig {
+            machines: 2,
+            machine_fast_bytes: fast,
+            arbitration: Arbitration::StaticPartition,
+            admission: Admission::Queue,
+            autoscale: None,
+            threads: 1,
+            faults: Some(FaultPlan::new().push(0, 2, FaultKind::Crash)),
+        },
+    )
+    .expect("machine 1 survives the crash");
+    assert_eq!(r.completed.len(), 2, "both jobs finish");
+    for d in &r.completed {
+        assert_eq!(
+            d.result.result.steps.len(),
+            steps as usize,
+            "job {}: exactly the requested step total across crash + resume",
+            d.tenant_id
+        );
+    }
+    let report = r.faults.as_ref().expect("plan configured");
+    assert_eq!(report.crashes, 1);
+    assert_eq!(report.tenants_displaced, 1);
+    assert!(r.machines[0].crashed && r.machines[0].retired);
+    assert!(!r.machines[1].crashed);
+    let displaced = r
+        .completed
+        .iter()
+        .find(|d| d.machine == 1 && d.join_ns > 0.0)
+        .expect("the displaced tenant rejoined on the survivor");
+    assert!(
+        displaced.finish_ns > displaced.join_ns,
+        "the resumed tenant did real work after rejoining"
+    );
+}

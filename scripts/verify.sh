@@ -54,4 +54,19 @@ else
   esac
 fi
 
+echo "== smoke: sentinel faults --tenants 8 --fault-rate 0.05 --json =="
+out="$(./target/release/sentinel faults --tenants 8 --fault-rate 0.05 --json)"
+if command -v python3 >/dev/null 2>&1; then
+  printf '%s' "$out" | python3 -c 'import json,sys
+o = json.load(sys.stdin)
+assert o["jobs_offered"] == 8, o
+assert "faults" in o, "armed run must carry a degradation report"
+assert o["faults"]["injected"] >= 0, o["faults"]'
+else
+  case "$out" in
+    "{"*"}") ;;
+    *) echo "faults --json did not emit a JSON object" >&2; exit 1 ;;
+  esac
+fi
+
 echo "verify: OK"
