@@ -671,6 +671,19 @@ impl TenantOutcome {
         self.result.throughput(self.warmup_steps as usize)
     }
 
+    /// Seal thrash: invalidations per sealed segment — the tenant-level
+    /// analogue of [`crate::sim::DivergenceStats::thrash_ratio`]. 0.0
+    /// for tenants that never sealed; values near (or above) 1.0 mean
+    /// arbitration churn tears schedules down about as fast as the
+    /// tenant can prove them.
+    pub fn seal_thrash(&self) -> f64 {
+        if self.seal_segments == 0 {
+            0.0
+        } else {
+            self.seal_invalidations as f64 / self.seal_segments as f64
+        }
+    }
+
     /// Serialize this tenant's row to JSON.
     pub fn to_json(&self) -> String {
         let mut occupancy = Arr::new();
@@ -711,6 +724,7 @@ impl TenantOutcome {
             .field_u64("sealed_steps", self.result.sealed_steps as u64)
             .field_u64("seal_invalidations", self.seal_invalidations)
             .field_u64("seal_segments", self.seal_segments)
+            .field_f64("seal_thrash", self.seal_thrash())
             .field_u64("peak_fast_bytes", self.result.peak_fast_bytes)
             .field_u64("alloc_spills", self.result.alloc_spills)
             .field_raw("chosen_mi", &chosen_mi)

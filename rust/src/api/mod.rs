@@ -36,6 +36,12 @@
 //!   any of the above, and every outcome carries a
 //!   [`crate::sim::DegradationReport`] quantifying slowdown, seal
 //!   damage, and recovery time.
+//! * Dynamic workloads — [`RunSpec::dynamic`] swaps the static trace
+//!   for a seed-deterministic non-repeatable variant
+//!   ([`crate::dnn::DynamicKind`]: variable batch, MoE routing,
+//!   inference mixes) and arms the engine's online divergence detector;
+//!   outcomes grow a `dynamics` JSON object ([`DynamicsReport`]) with
+//!   divergence/re-seal/thrash counters.
 //!
 //! ```no_run
 //! use sentinel_hm::api::{run_batch, PolicyKind, RunSpec};
@@ -82,9 +88,9 @@ pub use fleet::{
     Admission, Autoscale, FleetError, FleetJob, FleetOutcome, FleetSpec, FleetTenantSummary,
     JobClass,
 };
-pub use outcome::{ProfileSummary, RunOutcome};
+pub use outcome::{DynamicsReport, ProfileSummary, RunOutcome};
 pub use policy::PolicyKind;
-pub use spec::{RunSpec, SpecError, DEFAULT_SEED, DEFAULT_STEPS};
+pub use spec::{DynamicSpec, RunSpec, SpecError, DEFAULT_SEED, DEFAULT_STEPS};
 pub use workload::{
     clear_workload_cache, shared_workload, workload_cache_stats, Workload, WorkloadCacheStats,
 };

@@ -21,6 +21,36 @@ pub struct ProfileSummary {
     pub short_lived_small_fraction: f64,
 }
 
+/// What the online phase detector saw during a dynamic
+/// (repeatability-breaking) run — [`crate::sim::DivergenceStats`] plus
+/// the workload-side context needed to read them.
+#[derive(Clone, Debug)]
+pub struct DynamicsReport {
+    /// Variability mechanism ([`crate::dnn::DynamicKind::name`]).
+    pub kind: String,
+    /// Phase-switch probability per post-warm-up step.
+    pub variability: f64,
+    /// Whether the online divergence detector was armed.
+    pub detector: bool,
+    /// Distinct phases in the workload's palette.
+    pub variants: u64,
+    /// Phase switches the step plan actually contains.
+    pub switches: u64,
+    /// Steps whose phase differed from the previous step's.
+    pub divergences: u64,
+    /// Detector-triggered policy re-profiles.
+    pub reprofiles: u64,
+    /// Live steps run while a stale (wrong-phase) schedule stayed
+    /// sealed — detector-off exposure.
+    pub stale_steps: u64,
+    /// Steady-state schedules sealed over the run.
+    pub seals: u64,
+    /// Sealed schedules torn down by the detector.
+    pub invalidations: u64,
+    /// Invalidations per seal (0.0 when nothing sealed).
+    pub thrash_ratio: f64,
+}
+
 /// Everything one run produces.
 #[derive(Clone, Debug)]
 pub struct RunOutcome {
@@ -58,6 +88,11 @@ pub struct RunOutcome {
     /// fault-free outcomes serialize byte-identically to builds that
     /// predate the fault layer.
     pub faults: Option<DegradationReport>,
+    /// Phase-divergence report — present exactly when the spec asked
+    /// for a dynamic workload with `variability > 0.0`, so static runs
+    /// (and `variability = 0.0` dynamic runs, which are provably the
+    /// same execution) serialize byte-identically to before.
+    pub dynamics: Option<DynamicsReport>,
     /// The engine's full per-step record.
     pub result: TrainResult,
 }
@@ -137,6 +172,22 @@ impl RunOutcome {
             .field_raw("profile", &profile);
         if let Some(r) = &self.faults {
             obj = obj.field_raw("faults", &degradation_json(r));
+        }
+        if let Some(d) = &self.dynamics {
+            let dyn_obj = Obj::new()
+                .field_str("kind", &d.kind)
+                .field_f64("variability", d.variability)
+                .field_bool("detector", d.detector)
+                .field_u64("variants", d.variants)
+                .field_u64("switches", d.switches)
+                .field_u64("divergences", d.divergences)
+                .field_u64("reprofiles", d.reprofiles)
+                .field_u64("stale_steps", d.stale_steps)
+                .field_u64("seals", d.seals)
+                .field_u64("invalidations", d.invalidations)
+                .field_f64("thrash_ratio", d.thrash_ratio)
+                .end();
+            obj = obj.field_raw("dynamics", &dyn_obj);
         }
         obj.field_raw("per_step", &steps.end()).end()
     }

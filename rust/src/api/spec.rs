@@ -10,10 +10,11 @@
 use std::sync::Arc;
 
 use crate::api::fault::FaultSpec;
-use crate::api::outcome::{ProfileSummary, RunOutcome};
+use crate::api::outcome::{DynamicsReport, ProfileSummary, RunOutcome};
 use crate::api::policy::PolicyKind;
 use crate::api::workload::{shared_workload, Workload};
 use crate::coordinator::sentinel::SentinelPolicy;
+use crate::dnn::dynamic::{DynamicKind, DynamicWorkload};
 use crate::dnn::zoo::Model;
 use crate::dnn::{ModelGraph, StepTrace};
 use crate::sim::cluster::{run_cluster_faulted, Arbitration, ClusterTenant};
@@ -48,6 +49,22 @@ enum FastSize {
     Bytes(u64),
 }
 
+/// Dynamic (repeatability-breaking) workload request: which variability
+/// family drives the phase changes, how often phases switch, and whether
+/// the engine's online divergence detector is armed.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DynamicSpec {
+    /// The variability mechanism (variable batch, MoE routing, …).
+    pub kind: DynamicKind,
+    /// Phase-switch probability per post-warm-up step, in `[0, 1]`.
+    /// `0.0` reproduces the static workload bit-identically.
+    pub variability: f64,
+    /// Arm the detector (invalidate + re-profile on divergence). Off =
+    /// the runtime trusts its step-1 profile forever (§2.1's premise,
+    /// taken literally).
+    pub detector: bool,
+}
+
 /// Errors a spec can fail validation with.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum SpecError {
@@ -62,6 +79,9 @@ pub enum SpecError {
     /// The fault-injection request is malformed or incompatible with
     /// the chosen policy (message from the fault layer).
     BadFaults(String),
+    /// The dynamic-workload request is malformed or incompatible with
+    /// the rest of the spec.
+    BadDynamic(String),
 }
 
 impl std::fmt::Display for SpecError {
@@ -80,6 +100,7 @@ impl std::fmt::Display for SpecError {
                  the fast tier must be the small one"
             ),
             SpecError::BadFaults(msg) => write!(f, "bad fault injection: {msg}"),
+            SpecError::BadDynamic(msg) => write!(f, "bad dynamic workload: {msg}"),
         }
     }
 }
@@ -109,6 +130,7 @@ pub struct RunSpec {
     slow_bytes: Option<u64>,
     seed: u64,
     faults: Option<FaultSpec>,
+    dynamic: Option<DynamicSpec>,
 }
 
 impl RunSpec {
@@ -121,6 +143,7 @@ impl RunSpec {
             slow_bytes: None,
             seed: DEFAULT_SEED,
             faults: None,
+            dynamic: None,
         }
     }
 
@@ -195,6 +218,30 @@ impl RunSpec {
     /// layer.
     pub fn faults(mut self, faults: FaultSpec) -> Self {
         self.faults = Some(faults);
+        self
+    }
+
+    /// Run a dynamic (non-repeatable) variant of the model instead of
+    /// its static trace: phases switch with probability `variability`
+    /// per post-warm-up step, and the engine's online divergence
+    /// detector is armed (disarm with [`RunSpec::detector`]). At
+    /// `variability = 0.0` the execution — and the JSON — is
+    /// bit-identical to the static run, just routed through the dynamic
+    /// engine path.
+    pub fn dynamic(mut self, kind: DynamicKind, variability: f64) -> Self {
+        self.dynamic = Some(DynamicSpec { kind, variability, detector: true });
+        self
+    }
+
+    /// Arm or disarm the online divergence detector of a dynamic run
+    /// (no effect unless [`RunSpec::dynamic`] was called). Off means
+    /// the runtime trusts its step-1 profile forever and keeps running
+    /// a stale plan across phase changes — the paper's repeatability
+    /// premise taken literally.
+    pub fn detector(mut self, on: bool) -> Self {
+        if let Some(d) = &mut self.dynamic {
+            d.detector = on;
+        }
         self
     }
 
@@ -287,6 +334,28 @@ impl RunSpec {
                 ));
             }
         }
+        if let Some(d) = &self.dynamic {
+            if !d.variability.is_finite() || !(0.0..=1.0).contains(&d.variability) {
+                return Err(SpecError::BadDynamic(format!(
+                    "variability {} must be in [0, 1]",
+                    d.variability
+                )));
+            }
+            if matches!(self.model, ModelSel::Graph(_)) {
+                return Err(SpecError::BadDynamic(
+                    "dynamic variants are generated from a zoo model; \
+                     caller-supplied graphs have no variant recipe"
+                        .into(),
+                ));
+            }
+            if self.faults.is_some() {
+                return Err(SpecError::BadDynamic(
+                    "fault injection and dynamic workloads are separate \
+                     experiments; arm one at a time"
+                        .into(),
+                ));
+            }
+        }
         Ok(())
     }
 
@@ -298,6 +367,10 @@ impl RunSpec {
     pub fn run(&self) -> Result<RunOutcome, SpecError> {
         self.validate()?;
         let zoo = self.zoo_model()?;
+        if let Some(d) = self.dynamic {
+            let model = zoo.expect("validated: dynamic specs name a zoo model");
+            return self.run_dynamic(model, d);
+        }
         let workload: Arc<Workload> = match (&self.model, zoo) {
             (ModelSel::Graph(g), _) => Arc::new(Workload::from_graph((**g).clone())),
             (_, Some(m)) => shared_workload(m, self.seed),
@@ -379,6 +452,75 @@ impl RunSpec {
             chosen_mi,
             profile,
             faults,
+            dynamics: None,
+            result,
+        })
+    }
+
+    /// The dynamic-workload execution path: build the variant palette
+    /// and phase plan, size the machine and construct the policy from
+    /// the *base* variant (what a real runtime would profile on step 1 —
+    /// and, for MoE, the union graph every phase draws its objects
+    /// from), then hand the engine the whole workload plus the detector
+    /// switch. At `variability = 0.0` the base variant is the static
+    /// workload and this is bit-identical to [`RunSpec::run`]'s static
+    /// path (pinned by `rust/tests/repeatability_stress.rs`).
+    fn run_dynamic(&self, model: Model, d: DynamicSpec) -> Result<RunOutcome, SpecError> {
+        let dw = DynamicWorkload::build(model, self.seed, d.kind, d.variability, self.steps);
+        let (bg, bt) = (&dw.variants[0].graph, &dw.variants[0].trace);
+        let fast_bytes = self.resolve_fast(model.peak_memory_target())?;
+        let mut spec = self.policy.machine_spec(bg, bt, fast_bytes);
+        if let Some(slow) = self.slow_bytes {
+            spec.slow.capacity_bytes = slow;
+        }
+        let config = self.policy.engine_config(self.steps);
+        let mut policy = self.policy.construct(bg, bt, spec);
+        let engine = Engine::new(config);
+        let mut machine = Machine::new(spec);
+        let (result, stats) = engine.run_dynamic(&dw, &mut machine, policy.as_mut(), d.detector);
+        // Omitted at variability 0.0 so the JSON stays byte-identical
+        // to the static run's (the equivalence property keys on it).
+        let dynamics = (d.variability > 0.0).then(|| DynamicsReport {
+            kind: d.kind.name().to_string(),
+            variability: d.variability,
+            detector: stats.detector,
+            variants: dw.variants.len() as u64,
+            switches: dw.n_switches(),
+            divergences: stats.divergences,
+            reprofiles: stats.reprofiles,
+            stale_steps: stats.stale_steps,
+            seals: stats.seals,
+            invalidations: stats.invalidations,
+            thrash_ratio: stats.thrash_ratio(),
+        });
+        let (cases, chosen_mi, warmup, profile) =
+            match policy.as_any().downcast_ref::<SentinelPolicy>() {
+                Some(p) => (
+                    Some(p.cases_total),
+                    Some(p.chosen_mi),
+                    p.tuning_steps(),
+                    Some(ProfileSummary {
+                        n_objects: p.report.objects.len() as u64,
+                        short_lived_fraction: p.report.short_lived_fraction(),
+                        short_lived_small_fraction: p.report.short_lived_small_fraction(),
+                    }),
+                ),
+                None => (None, None, self.policy.default_warmup(), None),
+            };
+        Ok(RunOutcome {
+            model: bg.name.clone(),
+            policy: self.policy.name(),
+            policy_detail: result.policy.clone(),
+            steps: self.steps,
+            fast_bytes: spec.fast.capacity_bytes,
+            warmup_steps: warmup,
+            steady_from_step: result.steady_from_step,
+            sealed_steps: result.sealed_steps,
+            cases,
+            chosen_mi,
+            profile,
+            faults: None,
+            dynamics,
             result,
         })
     }

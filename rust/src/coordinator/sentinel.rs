@@ -322,6 +322,27 @@ impl Policy for SentinelPolicy {
         }
     }
 
+    /// The engine's online phase detector saw the step stream diverge
+    /// from what Sentinel profiled. Trusting the step-1 profile is
+    /// exactly what breaks here (§2.1's premise), so re-fit against the
+    /// new phase: refresh the profile, rebuild the migration plan and
+    /// the short-lived reservation sizes (`RS(k)`) from the new trace
+    /// at the already-chosen MI, and stay in (or jump straight to)
+    /// steady state — the MI search ran on real hardware steps and
+    /// re-running it per divergence would cost more than it saves.
+    ///
+    /// Cost model: this is Unimem-style *phase-local* re-profiling —
+    /// the incremental fit reuses the poisoned-PTE channel for one
+    /// sampled window rather than a full §3.1 slow-memory step, so we
+    /// charge two interval-boundary syncs (issue the sampling batch +
+    /// collect it), not a 4× profiling step.
+    fn on_divergence(&mut self, g: &ModelGraph, trace: &StepTrace, _m: &Machine) -> f64 {
+        self.report = profile(g, trace);
+        self.plan = MigrationPlan::build(g, self.chosen_mi, &self.spec);
+        self.phase = Phase::Steady;
+        2.0 * self.cfg.boundary_overhead_ns
+    }
+
     fn step_start(&mut self, step: u32, m: &mut Machine, g: &ModelGraph) {
         self.step_start_ns = m.now_ns();
         self.cases_this_step = CaseCounts::default();

@@ -14,13 +14,21 @@
 //! A *layer* here is the paper's layer: one forward or backward stage.
 //! A model with `d` forward layers has `2d` layers per training step
 //! (ResNet_v1-32 → 64, matching §3.2).
+//!
+//! The [`dynamic`] module breaks the §2.1 repeatability premise on
+//! purpose: seed-deterministic workloads whose step trace changes phase
+//! over time (variable batch size, MoE routing, inference request
+//! mixes), parameterized by a `variability` knob where 0.0 reproduces
+//! the static traces bit-identically.
 
+pub mod dynamic;
 pub mod graph;
 pub mod layer;
 pub mod trace;
 pub mod workload;
 pub mod zoo;
 
+pub use dynamic::{scale_non_persistent, DynamicKind, DynamicVariant, DynamicWorkload};
 pub use graph::{GraphBuilder, ModelGraph};
 pub use layer::{Layer, LayerKind};
 pub use trace::{StepTrace, TraceEvent};

@@ -33,6 +33,7 @@ use crate::api::{
 };
 use crate::coordinator::sentinel::SentinelConfig;
 use crate::dnn::zoo::Model;
+use crate::dnn::DynamicKind;
 use crate::mem::{AllocMode, Allocator};
 use crate::profiler::profile;
 use crate::util::table::{fmt_bytes, Table};
@@ -597,6 +598,112 @@ pub fn degradation_table(fault_rates: &[f64], admissions: &[Admission], tenants:
     t
 }
 
+/// Beyond the paper: the repeatability-stress sweep (`sentinel figure
+/// rp`). For each variability level, run the var-batch ResNet_v1-32
+/// workload at the paper's 20% fast fraction three ways — fast-only
+/// (the denominator), Sentinel with the divergence detector off
+/// (trust the step-1 profile forever), and Sentinel with it on
+/// (invalidate + re-profile on divergence) — and report slowdown vs
+/// fast-only plus the detector counters. The headline curve: detector
+/// off degrades with variability as stale plans mis-size the
+/// short-lived reservation and block re-sealing; detector on stays
+/// close to the static-trace slowdown (see EXPERIMENTS.md
+/// §Repeatability stress for expected shapes).
+///
+/// One row per (variability × detector) cell; all runs fan out across
+/// [`default_threads`] workers.
+pub fn repeatability_table(variabilities: &[f64], steps: u32) -> Table {
+    let mut specs: Vec<RunSpec> = Vec::new();
+    for &v in variabilities {
+        specs.push(
+            RunSpec::for_model(RN32)
+                .policy(PolicyKind::FastOnly)
+                .steps(steps)
+                .seed(seed())
+                .dynamic(DynamicKind::VarBatch, v),
+        );
+        for det in [false, true] {
+            specs.push(
+                RunSpec::for_model(RN32)
+                    .steps(steps)
+                    .fast_pct(20)
+                    .seed(seed())
+                    .dynamic(DynamicKind::VarBatch, v)
+                    .detector(det),
+            );
+        }
+    }
+    let outs = run_batch(specs, default_threads());
+    let mut t = Table::new(vec![
+        "variability",
+        "detector",
+        "slowdown vs fast-only",
+        "divergences",
+        "reprofiles",
+        "stale steps",
+        "seals",
+        "invalidations",
+        "thrash",
+    ]);
+    for (i, &v) in variabilities.iter().enumerate() {
+        let fast_time = match &outs[3 * i] {
+            Ok(o) => o.result.total_time_ns,
+            Err(_) => 0.0,
+        };
+        for (j, det) in ["off", "on"].iter().enumerate() {
+            match &outs[3 * i + 1 + j] {
+                Ok(o) => {
+                    let slowdown = if fast_time > 0.0 {
+                        format!("{:.3}x", o.result.total_time_ns / fast_time)
+                    } else {
+                        "-".into()
+                    };
+                    // `dynamics` is omitted at variability 0 by design
+                    // (the bit-identity contract); the counters are all
+                    // provably zero there.
+                    let row = match &o.dynamics {
+                        Some(d) => vec![
+                            format!("{v:.2}"),
+                            det.to_string(),
+                            slowdown,
+                            d.divergences.to_string(),
+                            d.reprofiles.to_string(),
+                            d.stale_steps.to_string(),
+                            d.seals.to_string(),
+                            d.invalidations.to_string(),
+                            format!("{:.2}", d.thrash_ratio),
+                        ],
+                        None => vec![
+                            format!("{v:.2}"),
+                            det.to_string(),
+                            slowdown,
+                            "0".into(),
+                            "0".into(),
+                            "0".into(),
+                            "-".into(),
+                            "0".into(),
+                            "0.00".into(),
+                        ],
+                    };
+                    t.row(row);
+                }
+                Err(e) => t.row(vec![
+                    format!("{v:.2}"),
+                    det.to_string(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    format!("{e}"),
+                ]),
+            }
+        }
+    }
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -632,6 +739,12 @@ mod tests {
     fn degradation_table_has_one_row_per_grid_cell() {
         let t = degradation_table(&[0.0, 0.05], &[Admission::Queue], 4);
         assert_eq!(t.rows().len(), 2, "fault rates × admissions");
+    }
+
+    #[test]
+    fn repeatability_table_has_two_rows_per_variability() {
+        let t = repeatability_table(&[0.0, 0.3], 20);
+        assert_eq!(t.rows().len(), 2 * 2, "variabilities × detector off/on");
     }
 
     #[test]

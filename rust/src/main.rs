@@ -25,6 +25,7 @@ use sentinel_hm::api::{
     RunSpec, DEFAULT_FAULT_RATE,
 };
 use sentinel_hm::dnn::zoo::{model_names, Model};
+use sentinel_hm::dnn::DynamicKind;
 use sentinel_hm::figures;
 use sentinel_hm::metrics::peak_memory_table;
 use sentinel_hm::util::table::{fmt_bytes, Table};
@@ -40,6 +41,7 @@ fn main() -> ExitCode {
     let result = match cmd.as_str() {
         "profile" => cmd_profile(&args),
         "train" => cmd_train(&args),
+        "dynamic" => cmd_dynamic(&args),
         "sweep-mi" => cmd_sweep_mi(&args),
         "cluster" => cmd_cluster(&args),
         "fleet" => cmd_fleet(&args),
@@ -71,6 +73,8 @@ fn print_usage() {
          USAGE:\n\
            sentinel profile <model> [--json]\n\
            sentinel train <model> [--policy <P>] [--fast-pct 20] [--fast-mb N] [--steps 14] [--mi K] [--seed S] [--json]\n\
+           sentinel dynamic <model> [--kind var-batch|moe|infer-mix] [--variability 0.25] [--no-detector]\n\
+                            [--policy <P>] [--fast-pct 20|--fast-mb N] [--steps 48] [--seed S] [--json]\n\
            sentinel sweep-mi [--fast-mb 1024] [--json]\n\
            sentinel cluster --tenants <model[:policy][:prio][*N],...> [--arb static|proportional|priority]\n\
                             [--fast-pct 20|--fast-mb N] [--steps 14] [--seed S] [--json]\n\
@@ -83,7 +87,7 @@ fn print_usage() {
                            [--fault-rate {DEFAULT_FAULT_RATE}] [--fault-seed S] [--horizon N] [--no-crashes]\n\
                            [--fixed-pool] [--max-machines 64] [--threads N] [--seed S] [--json]\n\
            sentinel compare [--steps 14] [--json]\n\
-           sentinel figure <1|2|3|4|7|8|10|11|12|13|t1|t4|t5|ct|fleet|dg|all> [--steps N] [--fast-mb N] [--json]\n\
+           sentinel figure <1|2|3|4|7|8|10|11|12|13|t1|t4|t5|ct|fleet|dg|rp|all> [--steps N] [--fast-mb N] [--json]\n\
            sentinel e2e [--steps 300] [--artifacts artifacts] [--lr 0.05]   (needs the `pjrt` feature)\n\
            sentinel models [--json]\n\
          \n\
@@ -293,6 +297,87 @@ fn cmd_train(args: &[String]) -> Result<(), String> {
              (zero policy dispatch)",
             out.sealed_steps, out.steps
         );
+    }
+    Ok(())
+}
+
+/// `sentinel dynamic`: one run of a repeatability-breaking workload
+/// variant, with the engine's online divergence detector armed unless
+/// `--no-detector` asks for the trust-step-1-forever behaviour.
+fn cmd_dynamic(args: &[String]) -> Result<(), String> {
+    let opts = parse_opts(
+        "dynamic",
+        &args[1..],
+        &["kind", "variability", "policy", "steps", "fast-pct", "fast-mb", "seed"],
+        &["json", "no-detector"],
+    )?;
+    let model = model_arg(args)?;
+    let kind = match opts.get("kind") {
+        None => DynamicKind::VarBatch,
+        Some(k) => DynamicKind::from_name(k).ok_or_else(|| {
+            let names: Vec<&str> = DynamicKind::all().iter().map(|d| d.name()).collect();
+            format!("unknown dynamic kind '{k}' (try: {})", names.join(", "))
+        })?,
+    };
+    let variability = opt_f64(&opts, "variability", 0.25)?;
+    let steps = opt_u64(&opts, "steps", 48)? as u32;
+    let policy = match opts.get("policy") {
+        None => PolicyKind::Sentinel(Default::default()),
+        Some(p) => p.parse::<PolicyKind>()?,
+    };
+    let mut spec = RunSpec::for_model(model)
+        .policy(policy)
+        .steps(steps)
+        .dynamic(kind, variability)
+        .detector(!opts.contains_key("no-detector"));
+    if opts.contains_key("fast-mb") && opts.contains_key("fast-pct") {
+        return Err("--fast-mb and --fast-pct both size fast memory; pass only one".into());
+    }
+    if let Some(mb) = opts.get("fast-mb") {
+        let mb: u64 = mb.parse().map_err(|_| "--fast-mb wants a number".to_string())?;
+        spec = spec.fast_bytes(mb << 20);
+    } else {
+        spec = spec.fast_pct(opt_u64(&opts, "fast-pct", 20)? as u32);
+    }
+    if let Some(seed) = opts.get("seed") {
+        spec = spec.seed(seed.parse().map_err(|_| "--seed wants a number".to_string())?);
+    }
+    let out = spec.run().map_err(|e| e.to_string())?;
+    if want_json(&opts) {
+        println!("{}", out.to_json());
+        return Ok(());
+    }
+    println!(
+        "model={} policy={} kind={} variability={variability} detector={} steps={}",
+        out.model,
+        out.policy_detail,
+        kind.name(),
+        !opts.contains_key("no-detector"),
+        out.steps
+    );
+    println!(
+        "throughput: {:.3} steps/s | migrations: {} pages | sealed steps: {}",
+        out.throughput(),
+        out.result.total_migrations(),
+        out.result.sealed_steps,
+    );
+    match &out.dynamics {
+        Some(d) => println!(
+            "phases: {} variants, {} switches | divergences: {} | reprofiles: {} | \
+             stale steps: {} | seals: {} | invalidations: {} | thrash: {:.2}",
+            d.variants,
+            d.switches,
+            d.divergences,
+            d.reprofiles,
+            d.stale_steps,
+            d.seals,
+            d.invalidations,
+            d.thrash_ratio,
+        ),
+        None => println!(
+            "variability 0: the static trace ran through the dynamic path \
+             (bit-identical to `sentinel train`); the detector stayed silent"
+        ),
     }
     Ok(())
 }
@@ -646,6 +731,15 @@ fn figure_sections(id: &str, steps: u32, fast_bytes: u64) -> Result<Vec<(String,
             "Degradation — fault rate × admission (crashes on, autoscaled pool, 24 jobs)".into(),
             figures::degradation_table(&[0.0, 0.02, 0.08], &Admission::all(), 24),
         )],
+        // Beyond the paper: repeatability stress — slowdown vs
+        // variability with the divergence detector off (trust step 1
+        // forever) vs on (invalidate + re-profile on divergence).
+        "rp" => vec![(
+            "Repeatability — slowdown vs variability, detector off vs on \
+             (var-batch ResNet_v1-32, fast = 20% of peak)"
+                .into(),
+            figures::repeatability_table(&[0.0, 0.1, 0.25, 0.5], 40),
+        )],
         other => return Err(format!("unknown figure '{other}'")),
     };
     Ok(sections)
@@ -661,10 +755,11 @@ fn cmd_figure(args: &[String]) -> Result<(), String> {
     let steps = opt_u64(&opts, "steps", u64::from(figures::RUN_STEPS))? as u32;
     let fast = opt_u64(&opts, "fast-mb", 1024)? << 20;
     // "7" covers Fig 8 and "10" covers Table 4 (shared sweeps). "ct",
-    // "fleet" and "dg" (the beyond-paper contention, churn and fault
-    // sweeps) are deliberately NOT in "all": "all" regenerates the
-    // paper's artifacts, and those grids are the most expensive
-    // figures — run `sentinel figure ct|fleet|dg` explicitly.
+    // "fleet", "dg" and "rp" (the beyond-paper contention, churn,
+    // fault and repeatability sweeps) are deliberately NOT in "all":
+    // "all" regenerates the paper's artifacts, and those grids are the
+    // most expensive figures — run `sentinel figure ct|fleet|dg|rp`
+    // explicitly.
     let ids: Vec<&str> = if id == "all" {
         vec!["1", "2", "3", "4", "t1", "7", "10", "t5", "11", "12", "13"]
     } else {

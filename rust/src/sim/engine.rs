@@ -10,6 +10,7 @@
 //! lanes draining throughout. Any extra stall a policy requests (e.g.
 //! Sentinel's Case-3 "continue migration" wait) is charged on top.
 
+use crate::dnn::dynamic::DynamicWorkload;
 use crate::dnn::{ModelGraph, StepTrace, TraceEvent};
 use crate::mem::DataObject;
 use crate::sim::device::Tier;
@@ -92,6 +93,55 @@ pub trait Policy: Send {
     /// counters) folds `sealed_steps` copies of its last live step's
     /// worth here. The default is a no-op.
     fn on_sealed_replay(&mut self, _sealed_steps: u32) {}
+
+    /// Called by [`Engine::run_dynamic`] when the online divergence
+    /// detector fires: the live step's phase fingerprint differs from
+    /// the previous step's, so whatever the policy profiled no longer
+    /// describes the trace it is about to manage. `g`/`trace` are the
+    /// *new* phase. The policy re-fits its model of the workload
+    /// (Unimem-style phase-local re-profiling) and returns the
+    /// re-profiling cost in ns, which the engine charges on the
+    /// critical path of the divergent step. The default — no
+    /// adaptation, no cost — keeps profile-free policies (LRU,
+    /// fast-only) honest: they never consulted a profile, so divergence
+    /// costs them nothing extra.
+    fn on_divergence(&mut self, _g: &ModelGraph, _trace: &StepTrace, _m: &Machine) -> f64 {
+        0.0
+    }
+}
+
+/// What [`Engine::run_dynamic`]'s phase detector observed: divergence
+/// events, re-profiles, stale-schedule exposure, and the seal churn the
+/// workload induced.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DivergenceStats {
+    /// Whether the online detector was armed for this run.
+    pub detector: bool,
+    /// Steps whose phase fingerprint differed from the previous step's.
+    pub divergences: u64,
+    /// Times the detector triggered [`Policy::on_divergence`]
+    /// (detector-on runs: equal to `divergences`).
+    pub reprofiles: u64,
+    /// Live steps executed while a sealed schedule for a *different*
+    /// phase was still held (detector-off runs only: the stale-trust
+    /// exposure the detector exists to eliminate).
+    pub stale_steps: u64,
+    /// Times a steady-state schedule was sealed.
+    pub seals: u64,
+    /// Times a sealed schedule was invalidated.
+    pub invalidations: u64,
+}
+
+impl DivergenceStats {
+    /// Seal thrash: invalidations per seal. 0.0 for runs that never
+    /// sealed; approaches 1.0 when every seal is eventually torn down.
+    pub fn thrash_ratio(&self) -> f64 {
+        if self.seals == 0 {
+            0.0
+        } else {
+            self.invalidations as f64 / self.seals as f64
+        }
+    }
 }
 
 /// Engine knobs.
@@ -316,6 +366,182 @@ impl Engine {
         }
 
         self.package(graph, machine, policy, steps, steady_from, sealed_steps)
+    }
+
+    /// Simulate a [`DynamicWorkload`] — a step stream that changes phase
+    /// over time, breaking the §2.1 repeatability premise — with an
+    /// online divergence detector in the loop.
+    ///
+    /// Each step carries a phase fingerprint (its variant index). The
+    /// detector compares the live step's fingerprint against the
+    /// previous step's; on a mismatch the step has *diverged* from
+    /// whatever the policy last profiled:
+    ///
+    /// - **Detector on:** the sealed schedule (if any) is invalidated so
+    ///   a stale record is never replayed, and the policy's
+    ///   [`Policy::on_divergence`] hook re-profiles against the new
+    ///   phase, returning a re-profiling surcharge that is charged on
+    ///   the divergent step's critical path. The seal machinery then
+    ///   re-converges inside the new phase (invalidate → re-seal, the
+    ///   same path PR 4's cluster rebalancing exercises).
+    /// - **Detector off:** the runtime trusts its step-1 profile
+    ///   forever. Diverged steps still execute against the *real* trace
+    ///   (the machine model charges honest physics), but the policy's
+    ///   plan is stale and a sealed schedule from another phase blocks
+    ///   any re-sealing — `stale_steps` counts this exposure. Sealed
+    ///   replay is only ever applied when the sealed phase matches the
+    ///   live phase, since replaying a wrong-phase delta would fabricate
+    ///   state for objects that no longer exist.
+    ///
+    /// For a single-variant workload (`variability = 0.0`) every
+    /// fingerprint is 0 and this loop is statement-for-statement
+    /// [`Engine::run_compiled`]: bit-identity is by construction and
+    /// pinned by `single_variant_run_dynamic_matches_run_compiled`.
+    pub fn run_dynamic(
+        &self,
+        workload: &DynamicWorkload,
+        machine: &mut Machine,
+        policy: &mut dyn Policy,
+        detector: bool,
+    ) -> (TrainResult, DivergenceStats) {
+        assert!(
+            workload.step_variant.len() >= self.config.steps as usize,
+            "dynamic workload plans {} steps but config asks for {}",
+            workload.step_variant.len(),
+            self.config.steps
+        );
+        let compiled: Vec<CompiledTrace> = workload
+            .variants
+            .iter()
+            .map(|v| {
+                CompiledTrace::compile(
+                    &v.graph,
+                    &v.trace,
+                    machine.spec.compute_gflops,
+                    self.config.profiling_fault_ns,
+                )
+            })
+            .collect();
+        let n_objects = compiled.iter().map(|c| c.n_objects).max().unwrap_or(0);
+        machine.reserve_objects(n_objects);
+        // All variants share the persistent set (enforced by
+        // `DynamicWorkload::from_parts`), so the prologue allocates it
+        // once from the first step's variant, exactly like the static
+        // path.
+        let base = workload.step_variant[0] as usize;
+        {
+            let g0 = &workload.variants[base].graph;
+            for &(oid, pages) in &compiled[base].persistent {
+                let pref = policy.place(&g0.objects[oid.index()], machine);
+                machine.alloc(oid, pages, pref);
+            }
+        }
+
+        let mut steps = Vec::with_capacity(self.config.steps as usize);
+        let mut sealer = Sealer::new(self.config.seal_steady);
+        let mut steady_from: Option<u32> = None;
+        let mut sealed_steps = 0u32;
+        let mut stats = DivergenceStats {
+            detector,
+            ..DivergenceStats::default()
+        };
+        let mut prev_fp = workload.step_variant[0];
+        for step in 0..self.config.steps {
+            let fp = workload.step_variant[step as usize];
+            let vi = fp as usize;
+            let graph = &workload.variants[vi].graph;
+            let ct = &compiled[vi];
+            let mut reprofile_ns = 0.0;
+            if fp != prev_fp {
+                stats.divergences += 1;
+                if detector {
+                    sealer.invalidate();
+                    reprofile_ns =
+                        policy.on_divergence(graph, &workload.variants[vi].trace, machine);
+                    stats.reprofiles += 1;
+                }
+            }
+            prev_fp = fp;
+
+            // Tier 3: sealed replay, but only when the sealed record
+            // belongs to the live phase.
+            if let Some(s) = sealer.sealed() {
+                if sealer.sealed_fp() == Some(fp) {
+                    machine.apply_sealed_step(
+                        s.step_time_ns,
+                        s.pages_in,
+                        s.pages_out,
+                        s.alloc_spills,
+                    );
+                    steps.push(StepStats {
+                        step,
+                        time_ns: s.step_time_ns,
+                        pages_in: s.pages_in,
+                        pages_out: s.pages_out,
+                    });
+                    if steady_from.is_none() {
+                        steady_from = Some(step);
+                    }
+                    sealed_steps += 1;
+                    continue;
+                }
+                // Detector off (the detector always invalidates before
+                // reaching here): a schedule for another phase is still
+                // sealed, so the runtime is operating on stale trust.
+                stats.stale_steps += 1;
+            }
+
+            // Tier 2: the live compiled loop, optionally recording.
+            let profiling = step < self.config.profiling_steps;
+            machine.fold_step();
+            let in0 = machine.stats.pages_in;
+            let out0 = machine.stats.pages_out;
+            let sp0 = machine.stats.alloc_spills;
+            if reprofile_ns > 0.0 {
+                // The detector's re-profile runs on the critical path of
+                // the divergent step, before any of its work.
+                machine.exec(reprofile_ns);
+            }
+            let mut rec = (sealer.recording() && !profiling && policy.is_steady(step))
+                .then(|| StepRecorder::new(ct.layers.len()));
+            policy.step_start(step, machine, graph);
+            for lt in &ct.layers {
+                replay_layer(ct, lt, graph, machine, policy, profiling, rec.as_mut());
+            }
+            policy.step_end(step, machine, graph);
+            let time_ns = machine.step_elapsed_ns();
+            let pages_in = machine.stats.pages_in - in0;
+            let pages_out = machine.stats.pages_out - out0;
+            steps.push(StepStats { step, time_ns, pages_in, pages_out });
+            match rec {
+                Some(r) => sealer.offer_at(
+                    fp,
+                    r.finish(
+                        time_ns,
+                        pages_in,
+                        pages_out,
+                        machine.stats.alloc_spills - sp0,
+                        machine.steady_snapshot(),
+                    ),
+                ),
+                None => sealer.observe_unsteady(),
+            }
+        }
+        if sealed_steps > 0 {
+            policy.on_sealed_replay(sealed_steps);
+        }
+        stats.seals = sealer.seals;
+        stats.invalidations = sealer.invalidations;
+
+        let result = self.package(
+            &workload.variants[base].graph,
+            machine,
+            policy,
+            steps,
+            steady_from,
+            sealed_steps,
+        );
+        (result, stats)
     }
 
     /// The pre-compilation event-by-event replay, kept verbatim as the
@@ -738,5 +964,80 @@ mod tests {
         for (a, b) in r1.steps.iter().zip(&r2.steps) {
             assert_eq!(a.time_ns.to_bits(), b.time_ns.to_bits());
         }
+    }
+
+    #[test]
+    fn single_variant_run_dynamic_matches_run_compiled() {
+        use crate::dnn::dynamic::{DynamicKind, DynamicWorkload};
+        let (g, t) = small_model();
+        let engine = Engine::new(EngineConfig { steps: 8, ..Default::default() });
+        let w = DynamicWorkload::build(Model::Dcgan, 3, DynamicKind::VarBatch, 0.0, 8);
+        assert!(w.is_static());
+
+        let mut m1 = Machine::new(MachineSpec::fast_only());
+        let r1 = engine.run(&g, &t, &mut m1, &mut StaticPolicy { tier: Tier::Fast });
+        for detector in [false, true] {
+            let mut m2 = Machine::new(MachineSpec::fast_only());
+            let (r2, d) =
+                engine.run_dynamic(&w, &mut m2, &mut StaticPolicy { tier: Tier::Fast }, detector);
+            assert_eq!(r1.total_time_ns.to_bits(), r2.total_time_ns.to_bits());
+            assert_eq!(r1.steady_from_step, r2.steady_from_step);
+            assert_eq!(r1.sealed_steps, r2.sealed_steps);
+            for (a, b) in r1.steps.iter().zip(&r2.steps) {
+                assert_eq!(a.time_ns.to_bits(), b.time_ns.to_bits());
+            }
+            // The detector is provably silent on a static stream.
+            assert_eq!(d.divergences, 0);
+            assert_eq!(d.reprofiles, 0);
+            assert_eq!(d.stale_steps, 0);
+            assert_eq!(d.invalidations, 0);
+        }
+    }
+
+    #[test]
+    fn detector_invalidates_and_reseals_per_phase() {
+        use crate::dnn::dynamic::{scale_non_persistent, DynamicVariant, DynamicWorkload};
+        let g = Model::Dcgan.build(3);
+        let g2 = scale_non_persistent(&g, 1.5);
+        let variants = vec![
+            DynamicVariant { trace: StepTrace::from_graph(&g), graph: g },
+            DynamicVariant { trace: StepTrace::from_graph(&g2), graph: g2 },
+        ];
+        // Two phases of 5 steps each: one divergence at step 5.
+        let plan: Vec<u32> = (0..10).map(|s| if s < 5 { 0 } else { 1 }).collect();
+        let w = DynamicWorkload::from_parts(
+            crate::dnn::dynamic::DynamicKind::VarBatch,
+            0.5,
+            variants,
+            plan,
+        );
+        let engine = Engine::new(EngineConfig { steps: 10, ..Default::default() });
+
+        let mut m = Machine::new(MachineSpec::fast_only());
+        let (r, d) = engine.run_dynamic(&w, &mut m, &mut StaticPolicy { tier: Tier::Fast }, true);
+        // Phase A: record 0,1 → seal, replay 2..5. Divergence at 5
+        // invalidates; phase B: record 5,6 → seal, replay 7..10.
+        assert_eq!(d.divergences, 1);
+        assert_eq!(d.reprofiles, 1);
+        assert_eq!(d.seals, 2);
+        assert_eq!(d.invalidations, 1);
+        assert_eq!(d.stale_steps, 0);
+        assert_eq!(r.sealed_steps, 3 + 3);
+        assert!((d.thrash_ratio() - 0.5).abs() < 1e-12);
+
+        // Detector off: the phase-A seal survives, but must never be
+        // replayed for phase B — all 5 phase-B steps run live & stale.
+        let mut m2 = Machine::new(MachineSpec::fast_only());
+        let (r2, d2) =
+            engine.run_dynamic(&w, &mut m2, &mut StaticPolicy { tier: Tier::Fast }, false);
+        assert_eq!(d2.divergences, 1);
+        assert_eq!(d2.reprofiles, 0);
+        assert_eq!(d2.invalidations, 0);
+        assert_eq!(d2.seals, 1);
+        assert_eq!(d2.stale_steps, 5);
+        assert_eq!(r2.sealed_steps, 3);
+        // Phase-B steps cost more than phase-A steady steps (1.5×
+        // non-persistent bytes), proving the stale seal was not replayed.
+        assert!(r2.steps[7].time_ns > r2.steps[3].time_ns);
     }
 }

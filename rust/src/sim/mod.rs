@@ -38,7 +38,7 @@ pub use fleet::{
     FleetSimResult, ParseAdmissionError, PoolExhausted, UtilSample,
 };
 pub use device::{DeviceSpec, MachineSpec, Tier};
-pub use engine::{Engine, EngineConfig, Policy, StepStats, TrainResult};
+pub use engine::{DivergenceStats, Engine, EngineConfig, Policy, StepStats, TrainResult};
 pub use machine::{Machine, Residency, SteadySnapshot};
 pub use migration::{Direction, Lane, LaneSnapshot, MoveRequest};
 pub use replay::{CompiledLayer, CompiledOp, CompiledOpKind, CompiledTrace};

@@ -155,9 +155,22 @@ pub struct CompiledSchedule {
 ///  recording ────────────────────────▶ sealed ──────▶   O(1)/step)
 ///   ▲  │ offer(r), r != prev: prev = r   │
 ///   │  └──────────────────────────────┐  │ invalidate()   (share resize,
-///   │     observe_unsteady(): prev=None  │                 forced demotion)
-///   └────────────────────────────────────┘
+///   │     observe_unsteady(): prev=None  │                 forced demotion,
+///   └────────────────────────────────────┘                 phase divergence)
 /// ```
+///
+/// Under dynamic workloads every offer and every seal is tagged with a
+/// **phase fingerprint** ([`Sealer::offer_at`]) — the workload's
+/// per-step variant index. Two records only pair within one phase, and
+/// a sealed schedule remembers which phase it proves
+/// ([`Sealer::sealed_fp`]), so the engine can tell "sealed for the
+/// live phase → replay" from "sealed for a *different* phase → the
+/// schedule is stale". The detector-on path invalidates on divergence
+/// (back to `recording`, the dashed edge above); the detector-off path
+/// keeps the stale seal and runs diverged steps live — the degradation
+/// `figure rp` measures. The static engine's [`Sealer::offer`] is the
+/// single-phase case (fingerprint 0 everywhere), byte-for-byte the old
+/// behavior.
 ///
 /// Disabled sealers (`Sealer::new(false)`) never record and never seal
 /// — the engine's plain live loop, used by the equivalence tests as the
@@ -166,7 +179,9 @@ pub struct CompiledSchedule {
 pub struct Sealer {
     enabled: bool,
     prev: Option<StepRecord>,
+    prev_fp: u32,
     sealed: Option<CompiledSchedule>,
+    sealed_fp: u32,
     /// Times a sealed schedule was dropped by [`Sealer::invalidate`].
     pub invalidations: u64,
     /// Times a schedule was sealed (≥ 2 after an invalidate + re-seal).
@@ -177,7 +192,15 @@ impl Sealer {
     /// A sealer; `enabled == false` makes every method a no-op (the
     /// always-live reference configuration).
     pub fn new(enabled: bool) -> Self {
-        Sealer { enabled, prev: None, sealed: None, invalidations: 0, seals: 0 }
+        Sealer {
+            enabled,
+            prev: None,
+            prev_fp: 0,
+            sealed: None,
+            sealed_fp: 0,
+            invalidations: 0,
+            seals: 0,
+        }
     }
 
     /// Should the caller record the upcoming step? True while enabled
@@ -192,14 +215,27 @@ impl Sealer {
         self.sealed
     }
 
-    /// Offer a recorded step. Seals when it is bit-identical to the
-    /// previous offer (and the machine end-states agree — part of the
-    /// record); otherwise it becomes the new candidate.
+    /// The phase fingerprint the sealed schedule proves, if sealed.
+    /// Replaying it against any other phase would be a stale replay.
+    pub fn sealed_fp(&self) -> Option<u32> {
+        self.sealed.map(|_| self.sealed_fp)
+    }
+
+    /// Offer a recorded step (single-phase callers; fingerprint 0).
     pub fn offer(&mut self, record: StepRecord) {
+        self.offer_at(0, record);
+    }
+
+    /// Offer a recorded step under phase fingerprint `fp`. Seals when it
+    /// is bit-identical to the previous offer *from the same phase* (and
+    /// the machine end-states agree — part of the record); otherwise it
+    /// becomes the new candidate. A candidate from another phase can
+    /// never pair — phase identity is part of the steadiness proof.
+    pub fn offer_at(&mut self, fp: u32, record: StepRecord) {
         if !self.enabled || self.sealed.is_some() {
             return;
         }
-        if self.prev.as_ref() == Some(&record) {
+        if self.prev_fp == fp && self.prev.as_ref() == Some(&record) {
             self.sealed = Some(CompiledSchedule {
                 step_time_ns: f64::from_bits(record.time_ns_bits),
                 pages_in: record.pages_in,
@@ -207,10 +243,12 @@ impl Sealer {
                 alloc_spills: record.alloc_spills,
                 stalled_any: record.stalled_any,
             });
+            self.sealed_fp = fp;
             self.seals += 1;
             self.prev = None;
         } else {
             self.prev = Some(record);
+            self.prev_fp = fp;
         }
     }
 
@@ -220,9 +258,10 @@ impl Sealer {
         self.prev = None;
     }
 
-    /// External state change (fast-share resize, forced demotion):
-    /// drop the sealed schedule and any candidate; the caller resumes
-    /// the live loop and may re-seal once steady again.
+    /// External state change (fast-share resize, forced demotion, or a
+    /// detected phase divergence): drop the sealed schedule and any
+    /// candidate; the caller resumes the live loop and may re-seal once
+    /// steady again.
     pub fn invalidate(&mut self) {
         if self.sealed.take().is_some() {
             self.invalidations += 1;
@@ -330,6 +369,36 @@ mod tests {
         s.offer(record(70.0, &[], &snap));
         assert!(s.sealed().is_some());
         assert_eq!(s.seals, 2);
+    }
+
+    #[test]
+    fn records_from_different_phases_never_pair() {
+        let snap = snapshot();
+        let mut s = Sealer::new(true);
+        s.offer_at(0, record(100.0, &[Tier::Fast], &snap));
+        // Identical record, different phase fingerprint: no seal.
+        s.offer_at(1, record(100.0, &[Tier::Fast], &snap));
+        assert!(s.sealed().is_none(), "cross-phase records must not pair");
+        // Two matching offers within phase 1 seal, tagged with phase 1.
+        s.offer_at(1, record(100.0, &[Tier::Fast], &snap));
+        assert!(s.sealed().is_some());
+        assert_eq!(s.sealed_fp(), Some(1));
+    }
+
+    #[test]
+    fn sealed_fp_clears_with_the_seal() {
+        let snap = snapshot();
+        let mut s = Sealer::new(true);
+        assert_eq!(s.sealed_fp(), None);
+        s.offer_at(3, record(10.0, &[], &snap));
+        s.offer_at(3, record(10.0, &[], &snap));
+        assert_eq!(s.sealed_fp(), Some(3));
+        s.invalidate();
+        assert_eq!(s.sealed_fp(), None);
+        // The legacy single-phase entry point is fingerprint 0.
+        s.offer(record(10.0, &[], &snap));
+        s.offer(record(10.0, &[], &snap));
+        assert_eq!(s.sealed_fp(), Some(0));
     }
 
     #[test]

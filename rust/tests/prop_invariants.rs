@@ -9,14 +9,21 @@
 //! * migration plans only prefetch live, long-lived, pre-existing
 //!   objects, and RS reservations are bounded;
 //! * the short-lived pool never lends more than it reserved;
-//! * the engine returns memory to the persistent baseline every step.
+//! * the engine returns memory to the persistent baseline every step;
+//! * dynamic (phase-changing) runs — objects resizing, appearing and
+//!   disappearing between steps — never leak pages or exceed the fast
+//!   share, with the divergence detector on or off.
 
 use sentinel_hm::coordinator::plan::MigrationPlan;
+use sentinel_hm::dnn::dynamic::{
+    scale_non_persistent, DynamicKind, DynamicVariant, DynamicWorkload,
+};
 use sentinel_hm::dnn::graph::GraphBuilder;
 use sentinel_hm::dnn::layer::LayerKind;
-use sentinel_hm::dnn::{ModelGraph, StepTrace};
+use sentinel_hm::dnn::{ModelGraph, StepTrace, TraceEvent};
 use sentinel_hm::mem::{ObjectId, ShortLivedPool};
-use sentinel_hm::sim::{Machine, MachineSpec, Tier};
+use sentinel_hm::sim::engine::StaticPolicy;
+use sentinel_hm::sim::{Engine, EngineConfig, Machine, MachineSpec, Tier};
 use sentinel_hm::util::prop::{check, Gen};
 use sentinel_hm::PAGE_SIZE;
 
@@ -239,6 +246,84 @@ fn engine_returns_to_persistent_baseline_on_random_graphs() {
             persistent,
             "non-persistent memory leaked across steps"
         );
+    });
+}
+
+/// Three phases of one random graph: the base, a scaled twin (every
+/// non-persistent object and the FLOPs grown by a random factor), and
+/// a thinned twin in which a random subset of non-persistent objects
+/// never materializes — the appear/disappear case a phase switch
+/// induces mid-run.
+fn phase_variants(g: &mut Gen, base: ModelGraph) -> Vec<DynamicVariant> {
+    let scaled = scale_non_persistent(&base, 1.0 + g.range(1, 15) as f64 / 10.0);
+    let scaled_trace = StepTrace::from_graph(&scaled);
+
+    let thinned = base.clone();
+    let mut thinned_trace = StepTrace::from_graph(&thinned);
+    let mut dead = vec![false; thinned.objects.len()];
+    for o in &thinned.objects {
+        if !o.persistent && g.bool(0.3) {
+            dead[o.id.index()] = true;
+        }
+    }
+    for lt in &mut thinned_trace.layers {
+        lt.events.retain(|ev| {
+            let oid = match *ev {
+                TraceEvent::Alloc(o) | TraceEvent::Free(o) => o,
+                TraceEvent::Access { obj, .. } => obj,
+            };
+            !dead[oid.index()]
+        });
+    }
+
+    let base_trace = StepTrace::from_graph(&base);
+    vec![
+        DynamicVariant { trace: base_trace, graph: base },
+        DynamicVariant { trace: scaled_trace, graph: scaled },
+        DynamicVariant { trace: thinned_trace, graph: thinned },
+    ]
+}
+
+#[test]
+fn dynamic_phase_changes_never_leak_pages_or_exceed_fast() {
+    check("dynamic residency conservation", 24, |g| {
+        let base = random_graph(g);
+        let persistent: u64 = base
+            .objects
+            .iter()
+            .filter(|o| o.persistent)
+            .map(|o| o.pages() * PAGE_SIZE)
+            .sum();
+        let variants = phase_variants(g, base);
+        let steps = g.range(4, 10) as u32;
+        let plan: Vec<u32> = (0..steps).map(|_| g.range(0, 2) as u32).collect();
+        let w = DynamicWorkload::from_parts(DynamicKind::VarBatch, 0.5, variants, plan);
+        let cap = g.range(4, 128) * PAGE_SIZE;
+        for detector in [false, true] {
+            let mut m = Machine::new(MachineSpec::paper_testbed(cap));
+            let e = Engine::new(EngineConfig { steps, ..Default::default() });
+            let (r, d) =
+                e.run_dynamic(&w, &mut m, &mut StaticPolicy { tier: Tier::Fast }, detector);
+            assert_eq!(r.steps.len(), steps as usize);
+            // INVARIANT: the fast share is a hard bound, whatever
+            // appears or disappears between steps.
+            assert!(
+                r.peak_fast_bytes <= cap,
+                "fast share exceeded: {} > {cap} (detector={detector})",
+                r.peak_fast_bytes
+            );
+            // INVARIANT: every phase ends back at the persistent
+            // baseline — objects that vanished from a later phase's
+            // trace must not leave residue from an earlier one.
+            assert_eq!(
+                m.used_bytes(Tier::Fast) + m.used_bytes(Tier::Slow),
+                persistent,
+                "pages leaked across phase changes (detector={detector})"
+            );
+            if detector {
+                assert_eq!(d.stale_steps, 0, "the detector leaves no stale exposure");
+            }
+        }
     });
 }
 

@@ -1,0 +1,218 @@
+//! Seal-machine stress suite: push PR 4's seal/invalidate machinery off
+//! its happy path with workloads that break the §2.1 repeatability
+//! premise, and prove the online divergence detector's two contracts:
+//!
+//! 1. **Exact seal accounting.** On an adversarial two-phase workload
+//!    the seal / invalidate / re-seal counts follow the phase schedule
+//!    *exactly* — no spurious seals, no missed invalidations.
+//! 2. **No stale replay, ever.** A detector-on run with sealing enabled
+//!    is bit-identical to the same run with sealing disabled
+//!    (`seal_steady = false`, the pure-live reference): every sealed
+//!    delta the engine applied stands for exactly the live step it
+//!    replaced, across every invalidate → re-seal cycle.
+//!
+//! Plus the tentpole's headline: with the detector ON, Sentinel's
+//! slowdown-vs-fast-only on the variable-batch workload at the paper's
+//! 20% fast fraction is strictly smaller than with the detector OFF
+//! (trust the step-1 profile forever), and `variability = 0.0` remains
+//! JSON-bit-identical to the static path across the policy registry.
+
+use sentinel_hm::api::{PolicyKind, RunSpec, DEFAULT_SEED};
+use sentinel_hm::dnn::dynamic::{
+    scale_non_persistent, DynamicKind, DynamicVariant, DynamicWorkload,
+};
+use sentinel_hm::dnn::zoo::Model;
+use sentinel_hm::dnn::StepTrace;
+use sentinel_hm::sim::engine::StaticPolicy;
+use sentinel_hm::sim::{
+    DivergenceStats, Engine, EngineConfig, Machine, MachineSpec, Tier, TrainResult,
+};
+
+const RN32: Model = Model::ResNetV1 { depth: 32 };
+
+/// An adversarial workload alternating A,B,A,B,… between two steady
+/// phases, `phase_len` steps each. Phase B scales every non-persistent
+/// object (and the FLOPs) by 1.4×, so its steps cannot be confused
+/// with phase A's.
+fn alternating(phases: usize, phase_len: usize) -> DynamicWorkload {
+    let g = Model::Dcgan.build(7);
+    let g2 = scale_non_persistent(&g, 1.4);
+    let variants = vec![
+        DynamicVariant { trace: StepTrace::from_graph(&g), graph: g },
+        DynamicVariant { trace: StepTrace::from_graph(&g2), graph: g2 },
+    ];
+    let plan: Vec<u32> = (0..phases * phase_len)
+        .map(|s| ((s / phase_len) % 2) as u32)
+        .collect();
+    DynamicWorkload::from_parts(DynamicKind::VarBatch, 0.5, variants, plan)
+}
+
+/// 4 phases × 5 steps under a zero-overhead always-steady policy. Each
+/// phase records its first two steps, seals, and replays the remaining
+/// three; each phase *entry* after the first invalidates. The counts
+/// are exact, not bounds.
+#[test]
+fn seal_counts_match_the_phase_schedule_exactly() {
+    let w = alternating(4, 5);
+    let engine = Engine::new(EngineConfig { steps: 20, ..Default::default() });
+    let mut m = Machine::new(MachineSpec::fast_only());
+    let (r, d) = engine.run_dynamic(&w, &mut m, &mut StaticPolicy { tier: Tier::Fast }, true);
+    assert_eq!(d.divergences, 3, "3 phase boundaries after step 0");
+    assert_eq!(d.reprofiles, 3, "detector re-profiles at every divergence");
+    assert_eq!(d.seals, 4, "each of the 4 phases seals once");
+    assert_eq!(d.invalidations, 3, "each re-entry tears the old seal down");
+    assert_eq!(d.stale_steps, 0, "the detector leaves no stale exposure");
+    assert_eq!(r.sealed_steps, 4 * 3, "each 5-step phase replays 3 sealed steps");
+    assert_eq!(r.steady_from_step, Some(2));
+    assert!((d.thrash_ratio() - 0.75).abs() < 1e-12, "3 invalidations / 4 seals");
+}
+
+/// The same workload with the detector off: the phase-A seal survives
+/// the whole run, is *never* replayed during phase B (that would be the
+/// stale-replay bug this suite exists to catch), and resumes replaying
+/// the moment the live phase matches it again.
+#[test]
+fn detector_off_replays_only_in_the_sealed_phase() {
+    let w = alternating(4, 5);
+    let engine = Engine::new(EngineConfig { steps: 20, ..Default::default() });
+    let mut m = Machine::new(MachineSpec::fast_only());
+    let (r, d) = engine.run_dynamic(&w, &mut m, &mut StaticPolicy { tier: Tier::Fast }, false);
+    assert_eq!(d.divergences, 3);
+    assert_eq!(d.reprofiles, 0, "no detector, no re-profiles");
+    assert_eq!(d.seals, 1, "only phase A's first visit seals");
+    assert_eq!(d.invalidations, 0);
+    assert_eq!(d.stale_steps, 10, "both phase-B windows run under stale trust");
+    // Steps 2-4 replay, 5-9 run live (phase B), 10-14 replay again
+    // (back in the sealed phase), 15-19 run live.
+    assert_eq!(r.sealed_steps, 3 + 5);
+    // Phase-B steps carry 1.4× the non-persistent bytes: if the stale
+    // phase-A seal had been replayed there, these times would collapse
+    // onto the phase-A steady time.
+    assert!(
+        r.steps[7].time_ns > r.steps[3].time_ns,
+        "phase-B live step ({}) must cost more than a phase-A sealed step ({})",
+        r.steps[7].time_ns,
+        r.steps[3].time_ns
+    );
+}
+
+/// One Sentinel arm of the bit-compare: same dynamic workload, same
+/// detector, sealing on or off.
+fn sentinel_arm(w: &DynamicWorkload, steps: u32, seal: bool) -> (TrainResult, DivergenceStats) {
+    let kind = PolicyKind::Sentinel(Default::default());
+    let (bg, bt) = (&w.variants[0].graph, &w.variants[0].trace);
+    let fast = RN32.peak_memory_target() / 5;
+    let spec = kind.machine_spec(bg, bt, fast);
+    let mut cfg = kind.engine_config(steps);
+    cfg.seal_steady = seal;
+    let mut policy = kind.construct(bg, bt, spec);
+    let mut machine = Machine::new(spec);
+    Engine::new(cfg).run_dynamic(w, &mut machine, policy.as_mut(), true)
+}
+
+/// The no-stale-replay proof: a detector-on run that seals, invalidates
+/// and re-seals across phase changes is bit-identical to the pure-live
+/// run (`seal_steady = false`) of the same workload. If any sealed
+/// delta ever stood for a step of the wrong phase, the clocks would
+/// drift and the bits would differ.
+#[test]
+fn detector_on_sealed_run_is_bit_identical_to_pure_live() {
+    let steps = 48;
+    let w = DynamicWorkload::build(RN32, DEFAULT_SEED, DynamicKind::VarBatch, 0.35, steps);
+    assert!(w.n_switches() > 0, "the seed must actually produce phase switches");
+    let (sealed, ds) = sentinel_arm(&w, steps, true);
+    let (live, dl) = sentinel_arm(&w, steps, false);
+    assert!(ds.seals > 0, "the sealed arm must exercise the seal machinery");
+    assert_eq!(dl.seals, 0, "the live arm must not seal");
+    assert_eq!(ds.divergences, dl.divergences, "detection is seal-independent");
+    assert_eq!(ds.reprofiles, dl.reprofiles);
+    assert_eq!(
+        sealed.total_time_ns.to_bits(),
+        live.total_time_ns.to_bits(),
+        "sealed {} vs live {}",
+        sealed.total_time_ns,
+        live.total_time_ns
+    );
+    assert_eq!(sealed.steps.len(), live.steps.len());
+    for (a, b) in sealed.steps.iter().zip(&live.steps) {
+        assert_eq!(a.time_ns.to_bits(), b.time_ns.to_bits(), "step {}", a.step);
+        assert_eq!(a.pages_in, b.pages_in, "step {}", a.step);
+        assert_eq!(a.pages_out, b.pages_out, "step {}", a.step);
+    }
+    assert_eq!(
+        sealed.pages_migrated_in, live.pages_migrated_in,
+        "sealed deltas must re-apply the exact migration traffic"
+    );
+    assert_eq!(sealed.pages_migrated_out, live.pages_migrated_out);
+}
+
+/// The tentpole's headline: on the variable-batch workload at the
+/// paper's 20% fast fraction, arming the detector strictly reduces
+/// Sentinel's slowdown vs fast-only. Off, Sentinel keeps running the
+/// stale step-1 plan (mis-sized short-lived reservations, blocked
+/// re-sealing); on, it pays a small re-profile surcharge per divergence
+/// and gets the placement right.
+#[test]
+fn detector_strictly_reduces_slowdown_vs_fast_only() {
+    let steps = 40;
+    let variability = 0.25;
+    let spec = RunSpec::for_model(RN32)
+        .steps(steps)
+        .fast_pct(20)
+        .seed(DEFAULT_SEED)
+        .dynamic(DynamicKind::VarBatch, variability);
+    let on = spec.clone().detector(true).run().unwrap();
+    let off = spec.clone().detector(false).run().unwrap();
+    let fast = RunSpec::for_model(RN32)
+        .policy(PolicyKind::FastOnly)
+        .steps(steps)
+        .seed(DEFAULT_SEED)
+        .dynamic(DynamicKind::VarBatch, variability)
+        .run()
+        .unwrap();
+
+    let d_on = on.dynamics.as_ref().expect("variability > 0 reports dynamics");
+    let d_off = off.dynamics.as_ref().expect("variability > 0 reports dynamics");
+    assert!(d_on.divergences > 0, "the workload must actually diverge");
+    assert_eq!(d_on.divergences, d_off.divergences, "same phase plan both arms");
+    assert_eq!(d_on.reprofiles, d_on.divergences);
+    assert_eq!(d_off.reprofiles, 0);
+    assert!(d_off.stale_steps > 0, "detector-off must be exposed to stale trust");
+    assert_eq!(d_on.stale_steps, 0);
+
+    let fast_ns = fast.result.total_time_ns;
+    assert!(fast_ns > 0.0);
+    let slowdown_on = on.result.total_time_ns / fast_ns;
+    let slowdown_off = off.result.total_time_ns / fast_ns;
+    assert!(
+        slowdown_on < slowdown_off,
+        "detector on ({slowdown_on:.4}x) must beat detector off ({slowdown_off:.4}x)"
+    );
+    assert!(slowdown_on >= 1.0, "nothing beats fast-only: {slowdown_on:.4}");
+}
+
+/// Zero-variability equivalence: every dynamic kind at
+/// `variability = 0.0`, detector armed, is JSON-bit-identical to its
+/// static counterpart across the whole policy registry. JSON equality
+/// is the repo's bit-identity proxy (floats print shortest-round-trip).
+#[test]
+fn zero_variability_is_json_identical_across_the_registry() {
+    for kind in DynamicKind::all() {
+        for policy in PolicyKind::all() {
+            let fixed = RunSpec::for_model(Model::Dcgan)
+                .policy(policy)
+                .steps(10)
+                .fast_pct(25)
+                .seed(DEFAULT_SEED);
+            let stat = fixed.clone().run().unwrap();
+            let dynv = fixed.dynamic(kind, 0.0).detector(true).run().unwrap();
+            assert_eq!(
+                stat.to_json(),
+                dynv.to_json(),
+                "kind={} policy={}",
+                kind.name(),
+                policy.name()
+            );
+        }
+    }
+}

@@ -14,9 +14,11 @@
 //!   arbitration invalidates a tenant's sealed schedule mid-run and the
 //!   tenant provably re-seals afterwards.
 
+use std::sync::Arc;
+
 use sentinel_hm::api::PolicyKind;
 use sentinel_hm::dnn::zoo::Model;
-use sentinel_hm::dnn::{ModelGraph, StepTrace};
+use sentinel_hm::dnn::{ModelGraph, StepTrace, Workload};
 use sentinel_hm::mem::{DataObject, ObjectId};
 use sentinel_hm::sim::cluster::{run_cluster, Arbitration, ClusterTenant};
 use sentinel_hm::sim::engine::StaticPolicy;
@@ -201,28 +203,34 @@ impl Policy for PressureFrom {
 #[test]
 fn priority_reshare_invalidates_and_reseals() {
     let g = Model::Dcgan.build(5);
-    let trace = StepTrace::from_graph(&g);
     let spec_base = MachineSpec::paper_testbed(1 << 30);
-    let compiled = CompiledTrace::compile(&g, &trace, spec_base.compute_gflops, 1_000.0);
+    let workload = Arc::new(Workload::from_graph(g));
+    let compiled = Arc::new(CompiledTrace::compile(
+        &workload.graph,
+        &workload.trace,
+        spec_base.compute_gflops,
+        1_000.0,
+    ));
 
     // The biggest persistent object: promoting it into a sliver of fast
     // memory can never finish — a guaranteed stall.
-    let target = g
+    let target = workload
+        .graph
         .objects
         .iter()
         .filter(|o| o.persistent)
         .max_by_key(|o| (o.pages(), o.id))
         .expect("graph has persistent objects");
 
-    let victim_share = g.peak_live_bytes() * 2 / PAGE_SIZE * PAGE_SIZE;
+    let victim_share = workload.graph.peak_live_bytes() * 2 / PAGE_SIZE * PAGE_SIZE;
     let aggressor_share = 4 * PAGE_SIZE;
 
     let tenant = |policy: Box<dyn Policy>, share: u64, priority: u32, steps: u32| {
         let mut spec = spec_base;
         spec.fast.capacity_bytes = share;
         ClusterTenant {
-            graph: &g,
-            compiled: &compiled,
+            workload: Arc::clone(&workload),
+            compiled: Arc::clone(&compiled),
             policy,
             config: EngineConfig { steps, ..Default::default() },
             machine: Machine::new(spec),
@@ -281,23 +289,27 @@ fn priority_reshare_invalidates_and_reseals() {
 /// in `cluster_tenancy.rs`; this pins the sealing tier specifically).
 #[test]
 fn single_sealed_tenant_matches_solo_engine() {
-    let g = Model::Dcgan.build(7);
-    let trace = StepTrace::from_graph(&g);
+    let w = Arc::new(Workload::from_graph(Model::Dcgan.build(7)));
+    let (g, trace) = (&w.graph, &w.trace);
     let kind = PolicyKind::Lru;
     let fast = Model::Dcgan.peak_memory_target() / 5;
-    let spec = kind.machine_spec(&g, &trace, fast);
+    let spec = kind.machine_spec(g, trace, fast);
     let cfg = kind.engine_config(12);
-    let compiled =
-        CompiledTrace::compile(&g, &trace, spec.compute_gflops, cfg.profiling_fault_ns);
+    let compiled = Arc::new(CompiledTrace::compile(
+        g,
+        trace,
+        spec.compute_gflops,
+        cfg.profiling_fault_ns,
+    ));
 
     let mut m = Machine::new(spec);
-    let mut p = kind.construct(&g, &trace, spec);
-    let solo = Engine::new(cfg).run_compiled(&g, &compiled, &mut m, p.as_mut());
+    let mut p = kind.construct(g, trace, spec);
+    let solo = Engine::new(cfg).run_compiled(g, &compiled, &mut m, p.as_mut());
 
     let tenants = vec![ClusterTenant {
-        graph: &g,
-        compiled: &compiled,
-        policy: kind.construct(&g, &trace, spec),
+        workload: Arc::clone(&w),
+        compiled: Arc::clone(&compiled),
+        policy: kind.construct(g, trace, spec),
         config: cfg,
         machine: Machine::new(spec),
         priority: 0,

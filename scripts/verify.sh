@@ -9,6 +9,20 @@ cd "$(dirname "$0")/.."
 # and CI (.github/workflows/ci.yml) runs this same script.
 export RUSTFLAGS="${RUSTFLAGS:--Dwarnings}"
 
+# Meta-check: every suite under rust/tests/ must have a [[test]] entry in
+# Cargo.toml. The manifest sets autotests = false, so an unregistered
+# suite is SILENTLY skipped by `cargo test` — it would rot green.
+echo "== meta: every rust/tests/*.rs is registered in Cargo.toml =="
+missing=0
+for f in rust/tests/*.rs; do
+  name="$(basename "$f" .rs)"
+  if ! grep -q "^name = \"$name\"$" Cargo.toml; then
+    echo "UNREGISTERED TEST SUITE: $f has no [[test]] entry in Cargo.toml" >&2
+    missing=1
+  fi
+done
+[ "$missing" -eq 0 ] || exit 1
+
 echo "== cargo build --release (RUSTFLAGS=$RUSTFLAGS) =="
 cargo build --release
 
@@ -66,6 +80,23 @@ else
   case "$out" in
     "{"*"}") ;;
     *) echo "faults --json did not emit a JSON object" >&2; exit 1 ;;
+  esac
+fi
+
+echo "== smoke: sentinel dynamic resnet32 --kind var-batch --variability 0.25 --json =="
+out="$(./target/release/sentinel dynamic resnet32 --kind var-batch --variability 0.25 --steps 12 --json)"
+if command -v python3 >/dev/null 2>&1; then
+  printf '%s' "$out" | python3 -c 'import json,sys
+o = json.load(sys.stdin)
+d = o.get("dynamics")
+assert d is not None, "variability > 0 must carry a dynamics report"
+assert d["detector"] is True, d
+assert d["reprofiles"] == d["divergences"], d
+assert d["stale_steps"] == 0, "armed detector must leave no stale exposure"'
+else
+  case "$out" in
+    "{"*"}") ;;
+    *) echo "dynamic --json did not emit a JSON object" >&2; exit 1 ;;
   esac
 fi
 
