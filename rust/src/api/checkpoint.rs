@@ -1,0 +1,229 @@
+//! Spec-layer checkpoint/restore plumbing: the configuration block
+//! behind [`RunSpec::checkpoint_every`][res], `ClusterSpec`'s and
+//! `FleetSpec`'s equivalents, and the crate-level [`SimError`] every
+//! checkpointed entry point returns.
+//!
+//! The file format and boundary mechanics live in
+//! [`crate::sim::checkpoint`]; this module owns the *policy* layer: how
+//! the fluent setters translate to a [`CheckpointCtl`], how a
+//! `--resume` file is validated against the spec that tries to consume
+//! it (payload kind + spec fingerprint), and how every way a
+//! checkpointed run can stop — spec rejection, corrupt file, graceful
+//! interrupt — surfaces as one typed error instead of a panic.
+//!
+//! [res]: crate::api::RunSpec::checkpoint_every
+
+use std::path::PathBuf;
+
+use crate::api::cluster::ClusterError;
+use crate::api::fleet::FleetError;
+use crate::api::spec::SpecError;
+use crate::sim::checkpoint::{load_checkpoint, CheckpointCtl, CheckpointError, RunHalt};
+
+/// Directory checkpoints land in when checkpointing is enabled without
+/// an explicit directory (`--checkpoint-every` without
+/// `--checkpoint-dir`).
+pub const DEFAULT_CHECKPOINT_DIR: &str = "checkpoints";
+
+/// Any failure of a checkpointed run: whichever spec layer rejected the
+/// request, a checkpoint file the resume path refused, or a graceful
+/// interrupt that parked the run in a final checkpoint.
+///
+/// The non-checkpointed entry points (`RunSpec::run`,
+/// `ClusterSpec::run`, `FleetSpec::run`) keep their narrower error
+/// types; this enum only appears where checkpointing is in play, so
+/// embedders that never checkpoint never see it.
+#[derive(Debug)]
+pub enum SimError {
+    /// Solo run-spec validation failed.
+    Spec(SpecError),
+    /// Cluster-spec validation failed.
+    Cluster(ClusterError),
+    /// Fleet-spec validation failed (includes pool exhaustion).
+    Fleet(FleetError),
+    /// A checkpoint file was rejected, or one could not be written.
+    Checkpoint(CheckpointError),
+    /// A graceful interrupt (SIGINT/SIGTERM) halted the run after
+    /// writing a final checkpoint. Not a failure: resume with
+    /// `--resume` pointing at the named file.
+    Interrupted {
+        /// The final checkpoint written before halting.
+        checkpoint: PathBuf,
+    },
+}
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SimError::Spec(e) => write!(f, "{e}"),
+            SimError::Cluster(e) => write!(f, "{e}"),
+            SimError::Fleet(e) => write!(f, "{e}"),
+            SimError::Checkpoint(e) => write!(f, "checkpoint: {e}"),
+            SimError::Interrupted { checkpoint } => write!(
+                f,
+                "interrupted; state saved to '{}' (resume with --resume)",
+                checkpoint.display()
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SimError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            SimError::Spec(e) => Some(e),
+            SimError::Cluster(e) => Some(e),
+            SimError::Fleet(e) => Some(e),
+            SimError::Checkpoint(e) => Some(e),
+            SimError::Interrupted { .. } => None,
+        }
+    }
+}
+
+impl From<SpecError> for SimError {
+    fn from(e: SpecError) -> Self {
+        SimError::Spec(e)
+    }
+}
+
+impl From<ClusterError> for SimError {
+    fn from(e: ClusterError) -> Self {
+        SimError::Cluster(e)
+    }
+}
+
+impl From<FleetError> for SimError {
+    fn from(e: FleetError) -> Self {
+        SimError::Fleet(e)
+    }
+}
+
+impl From<CheckpointError> for SimError {
+    fn from(e: CheckpointError) -> Self {
+        SimError::Checkpoint(e)
+    }
+}
+
+impl From<RunHalt> for SimError {
+    fn from(h: RunHalt) -> Self {
+        match h {
+            RunHalt::Interrupted { checkpoint } => SimError::Interrupted { checkpoint },
+            RunHalt::Checkpoint(e) => SimError::Checkpoint(e),
+        }
+    }
+}
+
+/// The three checkpoint knobs every spec carries, in one block the
+/// fluent setters write through to. Defaults to fully off: no
+/// boundaries observed, nothing resumed.
+#[derive(Clone, Debug, Default)]
+pub(crate) struct CheckpointOpts {
+    /// Write a checkpoint every N progress units; 0 means only on
+    /// interrupt (when a directory is configured).
+    pub(crate) every: u64,
+    /// Where checkpoint files land (default
+    /// [`DEFAULT_CHECKPOINT_DIR`] once checkpointing is on).
+    pub(crate) dir: Option<PathBuf>,
+    /// Checkpoint file to resume from.
+    pub(crate) resume: Option<PathBuf>,
+}
+
+impl CheckpointOpts {
+    /// Whether checkpoint *writing* is engaged (periodic or
+    /// interrupt-only). A pure `--resume` without either knob restores
+    /// state but writes nothing new.
+    pub(crate) fn writes(&self) -> bool {
+        self.every > 0 || self.dir.is_some()
+    }
+
+    /// The boundary controller for this run, or `None` when writing is
+    /// not configured. `kind`/`spec_fp` stamp every file this run
+    /// writes; `prefix` names them (`run`, `cluster`, `fleet`).
+    pub(crate) fn ctl(&self, kind: u8, spec_fp: u64, prefix: &str) -> Option<CheckpointCtl> {
+        if !self.writes() {
+            return None;
+        }
+        Some(CheckpointCtl {
+            every: self.every,
+            dir: self
+                .dir
+                .clone()
+                .unwrap_or_else(|| PathBuf::from(DEFAULT_CHECKPOINT_DIR)),
+            kind,
+            spec_fp,
+            prefix: prefix.to_string(),
+        })
+    }
+
+    /// Load and validate the resume file, if one was requested:
+    /// structural checks (magic, version, checksum) from the file
+    /// layer, then kind + fingerprint against the spec doing the
+    /// resuming. Returns the raw state payload.
+    pub(crate) fn resume_payload(
+        &self,
+        kind: u8,
+        spec_fp: u64,
+    ) -> Result<Option<Vec<u8>>, CheckpointError> {
+        match &self.resume {
+            None => Ok(None),
+            Some(path) => {
+                let ck = load_checkpoint(path)?;
+                ck.verify(kind, spec_fp)?;
+                Ok(Some(ck.payload))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::checkpoint::{write_checkpoint, KIND_SOLO};
+
+    #[test]
+    fn opts_default_to_off_and_dir_defaults_once_on() {
+        let off = CheckpointOpts::default();
+        assert!(!off.writes());
+        assert!(off.ctl(KIND_SOLO, 1, "run").is_none());
+        assert!(off.resume_payload(KIND_SOLO, 1).unwrap().is_none());
+
+        let on = CheckpointOpts { every: 4, ..Default::default() };
+        let ctl = on.ctl(KIND_SOLO, 7, "run").unwrap();
+        assert_eq!(ctl.every, 4);
+        assert_eq!(ctl.dir, PathBuf::from(DEFAULT_CHECKPOINT_DIR));
+        assert_eq!(ctl.spec_fp, 7);
+
+        // A bare directory means interrupt-only writing.
+        let dir_only = CheckpointOpts {
+            dir: Some(PathBuf::from("/tmp/ckpt")),
+            ..Default::default()
+        };
+        assert!(dir_only.writes());
+        assert_eq!(dir_only.ctl(KIND_SOLO, 7, "run").unwrap().every, 0);
+    }
+
+    #[test]
+    fn resume_payload_verifies_kind_and_fingerprint() {
+        let dir = std::env::temp_dir().join("sentinel-api-ckpt-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("resume-check.ckpt");
+        write_checkpoint(&path, KIND_SOLO, 0xFEED, 3, b"state").unwrap();
+
+        let opts = CheckpointOpts { resume: Some(path.clone()), ..Default::default() };
+        assert_eq!(opts.resume_payload(KIND_SOLO, 0xFEED).unwrap().unwrap(), b"state");
+        assert!(matches!(
+            opts.resume_payload(KIND_SOLO, 0xBEEF),
+            Err(CheckpointError::SpecMismatch { .. })
+        ));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn sim_error_displays_and_converts() {
+        let e = SimError::from(RunHalt::Interrupted { checkpoint: PathBuf::from("a.ckpt") });
+        assert!(e.to_string().contains("a.ckpt"));
+        let e = SimError::from(CheckpointError::BadMagic);
+        assert!(matches!(e, SimError::Checkpoint(CheckpointError::BadMagic)));
+        assert!(e.to_string().starts_with("checkpoint:"));
+    }
+}

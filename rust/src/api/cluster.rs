@@ -32,9 +32,11 @@
 //! ```
 
 use std::collections::HashMap;
+use std::path::PathBuf;
 use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::api::batch::{default_threads, par_map};
+use crate::api::checkpoint::{CheckpointOpts, SimError};
 use crate::api::fault::{degradation_json, FaultSpec};
 use crate::api::json::{Arr, Obj};
 use crate::api::policy::PolicyKind;
@@ -42,7 +44,10 @@ use crate::api::spec::{DEFAULT_SEED, DEFAULT_STEPS};
 use crate::api::workload::shared_workload;
 use crate::coordinator::sentinel::{CaseCounts, SentinelPolicy};
 use crate::dnn::zoo::Model;
-use crate::sim::cluster::{arbitration_shares, run_cluster_faulted, ClusterTenant};
+use crate::sim::checkpoint::{fnv64, KIND_CLUSTER};
+use crate::sim::cluster::{
+    arbitration_shares, run_cluster_ckpt, run_cluster_faulted, ClusterTenant,
+};
 use crate::sim::fault::DegradationReport;
 use crate::sim::replay::CompiledTrace;
 use crate::sim::{Engine, Machine, MachineSpec, TrainResult};
@@ -193,6 +198,12 @@ pub enum ClusterError {
     /// The fault-injection request is malformed or incompatible with a
     /// lone cluster (message from the fault layer).
     BadFaults(String),
+    /// A checkpoint/resume request failed, or the run was gracefully
+    /// interrupted (message from the checkpoint layer). Only reachable
+    /// through [`ClusterSpec::run`] when checkpoint knobs are set;
+    /// [`ClusterSpec::run_checkpointed`] reports the same conditions as
+    /// typed [`SimError`] variants instead.
+    Checkpoint(String),
 }
 
 impl std::fmt::Display for ClusterError {
@@ -212,6 +223,7 @@ impl std::fmt::Display for ClusterError {
             ),
             ClusterError::BadFastSize(msg) => write!(f, "bad total fast-memory size: {msg}"),
             ClusterError::BadFaults(msg) => write!(f, "bad fault injection: {msg}"),
+            ClusterError::Checkpoint(msg) => write!(f, "{msg}"),
         }
     }
 }
@@ -229,6 +241,7 @@ pub struct ClusterSpec {
     steps: u32,
     seed: u64,
     faults: Option<FaultSpec>,
+    ckpt: CheckpointOpts,
 }
 
 impl Default for ClusterSpec {
@@ -257,6 +270,7 @@ impl ClusterSpec {
             steps: DEFAULT_STEPS,
             seed: DEFAULT_SEED,
             faults: None,
+            ckpt: CheckpointOpts::default(),
         }
     }
 
@@ -308,6 +322,45 @@ impl ClusterSpec {
     pub fn faults(mut self, faults: FaultSpec) -> Self {
         self.faults = Some(faults);
         self
+    }
+
+    /// Write a checkpoint every `steps` completed *tenant*-steps —
+    /// cluster progress is the sum of every tenant's step counter
+    /// (default: off). `0` arms interrupt-only checkpointing once a
+    /// directory is set with [`ClusterSpec::checkpoint_dir`].
+    pub fn checkpoint_every(mut self, steps: u64) -> Self {
+        self.ckpt.every = steps;
+        self
+    }
+
+    /// Where checkpoint files land (default:
+    /// [`crate::api::DEFAULT_CHECKPOINT_DIR`]). A directory without
+    /// [`ClusterSpec::checkpoint_every`] means interrupt-only
+    /// checkpointing.
+    pub fn checkpoint_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.ckpt.dir = Some(dir.into());
+        self
+    }
+
+    /// Resume from a checkpoint file written by an earlier run of this
+    /// same spec (payload kind and spec fingerprint are verified before
+    /// any state is restored).
+    pub fn resume_from(mut self, path: impl Into<PathBuf>) -> Self {
+        self.ckpt.resume = Some(path.into());
+        self
+    }
+
+    /// Spec fingerprint stamped into every checkpoint this cluster
+    /// writes and checked on resume — a hash over everything that
+    /// shapes the simulation, excluding the checkpoint knobs.
+    fn fingerprint(&self) -> u64 {
+        fnv64(
+            format!(
+                "cluster|{:?}|{:?}|{:?}|{}|{}|{:?}",
+                self.tenants, self.arbitration, self.fast, self.steps, self.seed, self.faults
+            )
+            .as_bytes(),
+        )
     }
 
     fn resolve(&self) -> Result<Vec<ResolvedTenant>, ClusterError> {
@@ -366,7 +419,25 @@ impl ClusterSpec {
     /// shared fast tier and each tenant's initial share, compile each
     /// distinct trace once, co-schedule everything on the virtual clock,
     /// run solo baselines, and package per-tenant contention metrics.
+    ///
+    /// Checkpoint conditions (a rejected resume file, a graceful
+    /// interrupt) surface here as [`ClusterError::Checkpoint`]
+    /// messages; [`ClusterSpec::run_checkpointed`] reports them as
+    /// typed [`SimError`] variants instead.
     pub fn run(&self) -> Result<ClusterOutcome, ClusterError> {
+        self.run_checkpointed().map_err(|e| match e {
+            SimError::Cluster(e) => e,
+            other => ClusterError::Checkpoint(other.to_string()),
+        })
+    }
+
+    /// [`ClusterSpec::run`] with checkpoint/restore fully surfaced:
+    /// resumes from [`ClusterSpec::resume_from`] when set, writes
+    /// through [`ClusterSpec::checkpoint_every`] /
+    /// [`ClusterSpec::checkpoint_dir`], and reports every halt as a
+    /// typed [`SimError`] — never a panic. With no checkpoint knob set
+    /// this is exactly [`ClusterSpec::run`].
+    pub fn run_checkpointed(&self) -> Result<ClusterOutcome, SimError> {
         let resolved = self.resolve()?;
         let n = resolved.len();
         let workloads: Vec<_> = resolved
@@ -384,7 +455,8 @@ impl ClusterSpec {
         if fast_total == 0 {
             return Err(ClusterError::BadFastSize(
                 "resolves to 0 bytes of fast memory".into(),
-            ));
+            )
+            .into());
         }
         let shares = arbitration_shares(self.arbitration, fast_total, &peaks);
 
@@ -445,13 +517,33 @@ impl ClusterSpec {
         let makespan_of = |rs: &[crate::sim::cluster::TenantRunResult]| -> f64 {
             rs.iter().map(|r| r.result.total_time_ns).fold(0.0, f64::max)
         };
+        let fp = self.fingerprint();
+        let resume = self.ckpt.resume_payload(KIND_CLUSTER, fp)?;
+        let ctl = self.ckpt.ctl(KIND_CLUSTER, fp, "cluster");
         let (results, fault_report) = match &self.faults {
-            None => (run_cluster_faulted(build_tenants(), self.arbitration, None).0, None),
+            None => {
+                let (results, _) = run_cluster_ckpt(
+                    build_tenants(),
+                    self.arbitration,
+                    None,
+                    resume.as_deref(),
+                    ctl.as_ref(),
+                )?;
+                (results, None)
+            }
             Some(fs) => {
                 let plan = fs.plan(self.seed, 1);
+                // The fault-free twin only feeds the slowdown baseline:
+                // a pure recomputation, uncheckpointed, rerun in full
+                // on resume.
                 let twin = run_cluster_faulted(build_tenants(), self.arbitration, None).0;
-                let (results, report) =
-                    run_cluster_faulted(build_tenants(), self.arbitration, Some(&plan));
+                let (results, report) = run_cluster_ckpt(
+                    build_tenants(),
+                    self.arbitration,
+                    Some(&plan),
+                    resume.as_deref(),
+                    ctl.as_ref(),
+                )?;
                 let mut report = report.unwrap_or_default();
                 let (faulted_ms, twin_ms) = (makespan_of(&results), makespan_of(&twin));
                 if faulted_ms > 0.0 && twin_ms > 0.0 {

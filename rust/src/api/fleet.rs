@@ -31,9 +31,11 @@
 //! ```
 
 use std::collections::HashMap;
+use std::path::PathBuf;
 use std::sync::Arc;
 
 use crate::api::batch::{default_threads, par_map};
+use crate::api::checkpoint::{CheckpointOpts, SimError};
 use crate::api::cluster::{solo_baseline, SoloKey};
 use crate::api::fault::{degradation_json, FaultSpec};
 use crate::api::json::{Arr, Obj};
@@ -43,10 +45,11 @@ use crate::api::workload::shared_workload;
 use crate::coordinator::sentinel::SentinelPolicy;
 use crate::dnn::workload::Workload;
 use crate::dnn::zoo::Model;
+use crate::sim::checkpoint::{fnv64, KIND_FLEET};
 use crate::sim::cluster::ClusterTenant;
 use crate::sim::fault::{DegradationReport, FaultPlan};
 use crate::sim::fleet::{
-    run_fleet, FleetArrival, FleetConfig, FleetMachineStats, UtilSample,
+    run_fleet, run_fleet_ckpt, FleetArrival, FleetConfig, FleetMachineStats, UtilSample,
 };
 use crate::sim::replay::CompiledTrace;
 use crate::sim::{Engine, Machine, TrainResult};
@@ -160,6 +163,12 @@ pub enum FleetError {
         /// Registry name of its policy.
         policy: String,
     },
+    /// A checkpoint/resume request failed, or the run was gracefully
+    /// interrupted (message from the checkpoint layer). Only reachable
+    /// through [`FleetSpec::run`] when checkpoint knobs are set;
+    /// [`FleetSpec::run_checkpointed`] reports the same conditions as
+    /// typed [`SimError`] variants instead.
+    Checkpoint(String),
 }
 
 impl std::fmt::Display for FleetError {
@@ -189,6 +198,7 @@ impl std::fmt::Display for FleetError {
                 "internal invariant violated: completed job ({model}, {policy}) has no solo \
                  baseline"
             ),
+            FleetError::Checkpoint(msg) => write!(f, "{msg}"),
         }
     }
 }
@@ -213,6 +223,7 @@ pub struct FleetSpec {
     threads: usize,
     jobs: Option<Vec<FleetJob>>,
     faults: Option<FaultSpec>,
+    ckpt: CheckpointOpts,
 }
 
 impl Default for FleetSpec {
@@ -242,6 +253,7 @@ impl FleetSpec {
             threads: 0,
             jobs: None,
             faults: None,
+            ckpt: CheckpointOpts::default(),
         }
     }
 
@@ -336,6 +348,58 @@ impl FleetSpec {
     pub fn faults(mut self, faults: FaultSpec) -> Self {
         self.faults = Some(faults);
         self
+    }
+
+    /// Write a checkpoint every `n` fleet event rounds (default: off).
+    /// `0` arms interrupt-only checkpointing once a directory is set
+    /// with [`FleetSpec::checkpoint_dir`]. A killed sweep resumed from
+    /// any checkpoint reproduces the uninterrupted run bit for bit.
+    pub fn checkpoint_every(mut self, n: u64) -> Self {
+        self.ckpt.every = n;
+        self
+    }
+
+    /// Where checkpoint files land (default:
+    /// [`crate::api::DEFAULT_CHECKPOINT_DIR`]). A directory without
+    /// [`FleetSpec::checkpoint_every`] means interrupt-only
+    /// checkpointing.
+    pub fn checkpoint_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.ckpt.dir = Some(dir.into());
+        self
+    }
+
+    /// Resume from a checkpoint file written by an earlier run of this
+    /// same spec (payload kind and spec fingerprint are verified before
+    /// any state is restored).
+    pub fn resume_from(mut self, path: impl Into<PathBuf>) -> Self {
+        self.ckpt.resume = Some(path.into());
+        self
+    }
+
+    /// Spec fingerprint stamped into every checkpoint this fleet writes
+    /// and checked on resume: a hash over everything that shapes the
+    /// simulation. `threads` is excluded (the outcome is bit-identical
+    /// for any value), as are the checkpoint knobs themselves.
+    fn fingerprint(&self) -> u64 {
+        fnv64(
+            format!(
+                "fleet|{}|{}|{:?}|{:?}|{:?}|{:?}|{}|{}|{:?}|{:?}|{:?}|{:?}|{:?}",
+                self.seed,
+                self.tenants,
+                self.rate_per_s,
+                self.diurnal_amplitude,
+                self.diurnal_period_s,
+                self.training_fraction,
+                self.machines,
+                self.machine_fast_bytes,
+                self.arbitration,
+                self.admission,
+                self.autoscale,
+                self.jobs,
+                self.faults
+            )
+            .as_bytes(),
+        )
     }
 
     /// Check everything that can be checked without building graphs.
@@ -455,7 +519,24 @@ impl FleetSpec {
     /// distinct workload and compiled trace once, drive the event loop,
     /// attach slowdown-vs-solo to every completed tenant, and package
     /// the fleet-level observability.
+    ///
+    /// Checkpoint conditions (a rejected resume file, a graceful
+    /// interrupt) surface here as [`FleetError::Checkpoint`] messages;
+    /// [`FleetSpec::run_checkpointed`] reports them as typed
+    /// [`SimError`] variants instead.
     pub fn run(&self) -> Result<FleetOutcome, FleetError> {
+        self.run_checkpointed().map_err(|e| match e {
+            SimError::Fleet(e) => e,
+            other => FleetError::Checkpoint(other.to_string()),
+        })
+    }
+
+    /// [`FleetSpec::run`] with checkpoint/restore fully surfaced:
+    /// resumes from [`FleetSpec::resume_from`] when set, writes through
+    /// [`FleetSpec::checkpoint_every`] / [`FleetSpec::checkpoint_dir`],
+    /// and reports every halt as a typed [`SimError`] — never a panic.
+    /// With no checkpoint knob set this is exactly [`FleetSpec::run`].
+    pub fn run_checkpointed(&self) -> Result<FleetOutcome, SimError> {
         self.validate()?;
         let jobs = match &self.jobs {
             Some(j) => j.clone(),
@@ -549,10 +630,28 @@ impl FleetSpec {
             )
         };
 
+        let fp = self.fingerprint();
+        let resume = self.ckpt.resume_payload(KIND_FLEET, fp)?;
+        let ctl = self.ckpt.ctl(KIND_FLEET, fp, "fleet");
         let fault_plan = self.faults.as_ref().map(|fs| fs.plan(self.seed, self.machines));
-        let sim = run_once(fault_plan).map_err(|e| FleetError::PoolExhausted {
-            waiting_jobs: e.waiting_jobs,
-        })?;
+        // The primary (possibly faulted) fleet is the checkpointed
+        // computation; arrivals are regenerated from the fingerprinted
+        // spec on resume and matched to checkpointed tenants by job id.
+        let sim = run_fleet_ckpt(
+            build_arrivals(),
+            FleetConfig {
+                machines: self.machines,
+                machine_fast_bytes: self.machine_fast_bytes,
+                arbitration: self.arbitration,
+                admission: self.admission,
+                autoscale: self.autoscale,
+                threads,
+                faults: fault_plan,
+            },
+            resume.as_deref(),
+            ctl.as_ref(),
+        )?
+        .map_err(|e| FleetError::PoolExhausted { waiting_jobs: e.waiting_jobs })?;
         let mut fault_report = sim.faults.clone();
         if let Some(report) = fault_report.as_mut() {
             // Fault-free twin: the same offer stream against a healthy

@@ -36,6 +36,13 @@
 //!   any of the above, and every outcome carries a
 //!   [`crate::sim::DegradationReport`] quantifying slowdown, seal
 //!   damage, and recovery time.
+//! * [`checkpoint`] — checkpoint/restore: `checkpoint_every` /
+//!   `resume_from` on [`RunSpec`], [`ClusterSpec`] and [`FleetSpec`]
+//!   snapshot the complete simulation state at step boundaries into
+//!   versioned, checksummed files (`crate::sim::checkpoint`), and a
+//!   killed run resumed from its last checkpoint reproduces the
+//!   uninterrupted run bit for bit. [`SimError`] is the one error type
+//!   every checkpointed entry point returns.
 //! * Dynamic workloads — [`RunSpec::dynamic`] swaps the static trace
 //!   for a seed-deterministic non-repeatable variant
 //!   ([`crate::dnn::DynamicKind`]: variable batch, MoE routing,
@@ -67,6 +74,7 @@
 #![warn(missing_docs)]
 
 pub mod batch;
+pub mod checkpoint;
 pub mod cluster;
 pub mod fault;
 pub mod fleet;
@@ -77,6 +85,7 @@ pub mod spec;
 pub mod workload;
 
 pub use batch::{default_threads, par_map, par_map_mut, run_batch};
+pub use checkpoint::{SimError, DEFAULT_CHECKPOINT_DIR};
 pub use cluster::{
     clear_solo_baseline_cache, parse_tenant_list, Arbitration, ClusterError, ClusterOutcome,
     ClusterSpec, TenantOutcome, TenantSpec,

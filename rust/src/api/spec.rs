@@ -7,8 +7,10 @@
 //! Specs are plain data (`Clone + Send + Sync`), so
 //! [`crate::api::run_batch`] can fan a grid of them across threads.
 
+use std::path::PathBuf;
 use std::sync::Arc;
 
+use crate::api::checkpoint::{CheckpointOpts, SimError};
 use crate::api::fault::FaultSpec;
 use crate::api::outcome::{DynamicsReport, ProfileSummary, RunOutcome};
 use crate::api::policy::PolicyKind;
@@ -17,7 +19,8 @@ use crate::coordinator::sentinel::SentinelPolicy;
 use crate::dnn::dynamic::{DynamicKind, DynamicWorkload};
 use crate::dnn::zoo::Model;
 use crate::dnn::{ModelGraph, StepTrace};
-use crate::sim::cluster::{run_cluster_faulted, Arbitration, ClusterTenant};
+use crate::sim::checkpoint::{fnv64, CheckpointError, KIND_CLUSTER, KIND_DYNAMIC, KIND_SOLO};
+use crate::sim::cluster::{run_cluster_ckpt, Arbitration, ClusterTenant};
 use crate::sim::fault::DegradationReport;
 use crate::sim::replay::CompiledTrace;
 use crate::sim::{Engine, Machine, TrainResult};
@@ -82,6 +85,12 @@ pub enum SpecError {
     /// The dynamic-workload request is malformed or incompatible with
     /// the rest of the spec.
     BadDynamic(String),
+    /// A checkpoint/resume request failed, or the run was gracefully
+    /// interrupted (message from the checkpoint layer). Only reachable
+    /// through [`RunSpec::run`] when checkpoint knobs are set;
+    /// [`RunSpec::run_checkpointed`] reports the same conditions as
+    /// typed [`SimError`] variants instead.
+    Checkpoint(String),
 }
 
 impl std::fmt::Display for SpecError {
@@ -101,6 +110,7 @@ impl std::fmt::Display for SpecError {
             ),
             SpecError::BadFaults(msg) => write!(f, "bad fault injection: {msg}"),
             SpecError::BadDynamic(msg) => write!(f, "bad dynamic workload: {msg}"),
+            SpecError::Checkpoint(msg) => write!(f, "{msg}"),
         }
     }
 }
@@ -131,6 +141,7 @@ pub struct RunSpec {
     seed: u64,
     faults: Option<FaultSpec>,
     dynamic: Option<DynamicSpec>,
+    ckpt: CheckpointOpts,
 }
 
 impl RunSpec {
@@ -144,6 +155,7 @@ impl RunSpec {
             seed: DEFAULT_SEED,
             faults: None,
             dynamic: None,
+            ckpt: CheckpointOpts::default(),
         }
     }
 
@@ -242,6 +254,37 @@ impl RunSpec {
         if let Some(d) = &mut self.dynamic {
             d.detector = on;
         }
+        self
+    }
+
+    /// Write a checkpoint every `steps` completed simulation steps
+    /// (default: off). `0` arms interrupt-only checkpointing once a
+    /// directory is set with [`RunSpec::checkpoint_dir`]. Checkpoint
+    /// files snapshot the complete simulation state, and a run killed
+    /// and resumed from any of them reproduces the uninterrupted run
+    /// bit for bit ([`RunSpec::run_checkpointed`]).
+    pub fn checkpoint_every(mut self, steps: u64) -> Self {
+        self.ckpt.every = steps;
+        self
+    }
+
+    /// Where checkpoint files land (default:
+    /// [`crate::api::DEFAULT_CHECKPOINT_DIR`]). Setting a directory
+    /// without [`RunSpec::checkpoint_every`] arms interrupt-only
+    /// checkpointing: nothing is written periodically, but a graceful
+    /// interrupt still parks the run in a final checkpoint.
+    pub fn checkpoint_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.ckpt.dir = Some(dir.into());
+        self
+    }
+
+    /// Resume from a checkpoint file written by an earlier run of this
+    /// same spec. The file's payload kind and spec fingerprint are
+    /// verified before any state is restored — resuming a cluster file
+    /// into a solo run, or a checkpoint from a differently-configured
+    /// spec, is a typed error, never undefined behavior.
+    pub fn resume_from(mut self, path: impl Into<PathBuf>) -> Self {
+        self.ckpt.resume = Some(path.into());
         self
     }
 
@@ -359,22 +402,77 @@ impl RunSpec {
         Ok(())
     }
 
+    /// Spec fingerprint stamped into every checkpoint this run writes
+    /// and checked against every file it resumes: a hash over
+    /// everything that shapes the simulation — and nothing else. The
+    /// checkpoint knobs are deliberately excluded (the original and the
+    /// resuming invocation differ exactly there).
+    fn fingerprint(&self) -> u64 {
+        let model = match &self.model {
+            ModelSel::Zoo(m) => format!("zoo:{m:?}"),
+            ModelSel::Named(n) => format!("named:{n}"),
+            // Caller-supplied graphs have no construction recipe to
+            // hash; name + peak is the best identity available.
+            ModelSel::Graph(g) => format!("graph:{}:{}", g.name, g.peak_live_bytes()),
+        };
+        fnv64(
+            format!(
+                "run|{model}|{:?}|{}|{:?}|{:?}|{}|{:?}|{:?}",
+                self.policy,
+                self.steps,
+                self.fast,
+                self.slow_bytes,
+                self.seed,
+                self.faults,
+                self.dynamic
+            )
+            .as_bytes(),
+        )
+    }
+
     /// Execute the run: resolve the workload (graph + trace, shared
     /// through the process-wide cache for zoo models — an MI sweep
     /// builds its graph once, not once per grid point), size and
     /// construct the machine, construct the policy from the registry,
     /// simulate, and package the outcome.
+    ///
+    /// Checkpoint conditions (a rejected resume file, a graceful
+    /// interrupt) surface here as [`SpecError::Checkpoint`] messages;
+    /// [`RunSpec::run_checkpointed`] reports them as typed [`SimError`]
+    /// variants instead.
     pub fn run(&self) -> Result<RunOutcome, SpecError> {
+        self.run_checkpointed().map_err(|e| match e {
+            SimError::Spec(e) => e,
+            other => SpecError::Checkpoint(other.to_string()),
+        })
+    }
+
+    /// [`RunSpec::run`] with checkpoint/restore fully surfaced:
+    /// resumes from [`RunSpec::resume_from`] when set, writes through
+    /// [`RunSpec::checkpoint_every`] / [`RunSpec::checkpoint_dir`],
+    /// and reports every halt as a typed [`SimError`] — never a panic.
+    /// With no checkpoint knob set this is exactly [`RunSpec::run`].
+    pub fn run_checkpointed(&self) -> Result<RunOutcome, SimError> {
         self.validate()?;
         let zoo = self.zoo_model()?;
         if let Some(d) = self.dynamic {
-            let model = zoo.expect("validated: dynamic specs name a zoo model");
+            // validate() already rejected dynamic specs that don't
+            // name a zoo model; degrade to a typed error regardless.
+            let model = zoo.ok_or_else(|| {
+                SpecError::BadDynamic("dynamic specs must name a zoo model".into())
+            })?;
             return self.run_dynamic(model, d);
         }
         let workload: Arc<Workload> = match (&self.model, zoo) {
             (ModelSel::Graph(g), _) => Arc::new(Workload::from_graph((**g).clone())),
             (_, Some(m)) => shared_workload(m, self.seed),
-            _ => unreachable!("non-graph specs always resolve a zoo model"),
+            // zoo_model() already rejected unknown names; degrade to a
+            // typed error instead of asserting the invariant.
+            (_, None) => {
+                return Err(SimError::Spec(SpecError::UnknownModel(
+                    "spec resolved no model".into(),
+                )))
+            }
         };
         let (g, trace): (&ModelGraph, &StepTrace) = (&workload.graph, &workload.trace);
         let reported_peak = match zoo {
@@ -387,41 +485,74 @@ impl RunSpec {
             spec.slow.capacity_bytes = slow;
         }
         let config = self.policy.engine_config(self.steps);
-        // Fault-free execution: the whole run when faults are off, the
-        // slowdown baseline (the "twin") when they are on.
-        let mut policy = self.policy.construct(g, trace, spec);
         let engine = Engine::new(config);
-        let mut machine = Machine::new(spec);
-        let mut result = engine.run(g, trace, &mut machine, policy.as_mut());
-        let mut faults: Option<DegradationReport> = None;
-        if let Some(fs) = &self.faults {
-            let plan = fs.plan(self.seed, 1);
-            let compiled = Arc::new(CompiledTrace::compile(
-                g,
-                trace,
-                spec.compute_gflops,
-                config.profiling_fault_ns,
-            ));
-            let tenant = ClusterTenant {
-                workload: Arc::clone(&workload),
-                compiled,
-                policy: self.policy.construct(g, trace, spec),
-                config,
-                machine: Machine::new(spec),
-                priority: 0,
-                share: spec.fast.capacity_bytes,
-            };
-            let (mut results, report) =
-                run_cluster_faulted(vec![tenant], Arbitration::StaticPartition, Some(&plan));
-            let res = results.pop().expect("one tenant in, one result out");
-            let mut report = report.unwrap_or_default();
-            report.slowdown_vs_fault_free = slowdown_ratio(&res.result, &result);
-            faults = Some(report);
-            // The faulted execution is the run; the twin only feeds the
-            // slowdown baseline.
-            result = res.result;
-            policy = res.policy;
-        }
+        let fp = self.fingerprint();
+        // A faulted solo run executes on the multi-tenant driver (one
+        // tenant + a fault plan), so its checkpoints are cluster-kind;
+        // the plain path is solo-kind. The kind tag keeps a file from
+        // one path out of the other.
+        let (result, policy, faults) = match &self.faults {
+            None => {
+                let resume = self.ckpt.resume_payload(KIND_SOLO, fp)?;
+                let ctl = self.ckpt.ctl(KIND_SOLO, fp, "run");
+                let compiled = CompiledTrace::compile(
+                    g,
+                    trace,
+                    spec.compute_gflops,
+                    config.profiling_fault_ns,
+                );
+                let mut policy = self.policy.construct(g, trace, spec);
+                let mut machine = Machine::new(spec);
+                let result = engine.run_compiled_checkpointed(
+                    g,
+                    &compiled,
+                    &mut machine,
+                    policy.as_mut(),
+                    resume.as_deref(),
+                    ctl.as_ref(),
+                )?;
+                (result, policy, None)
+            }
+            Some(fs) => {
+                let resume = self.ckpt.resume_payload(KIND_CLUSTER, fp)?;
+                let ctl = self.ckpt.ctl(KIND_CLUSTER, fp, "run");
+                // The fault-free twin is a pure recomputation — it only
+                // feeds the slowdown baseline, runs uncheckpointed, and
+                // reruns in full on resume.
+                let mut twin_policy = self.policy.construct(g, trace, spec);
+                let mut twin_machine = Machine::new(spec);
+                let twin = engine.run(g, trace, &mut twin_machine, twin_policy.as_mut());
+                let plan = fs.plan(self.seed, 1);
+                let compiled = Arc::new(CompiledTrace::compile(
+                    g,
+                    trace,
+                    spec.compute_gflops,
+                    config.profiling_fault_ns,
+                ));
+                let tenant = ClusterTenant {
+                    workload: Arc::clone(&workload),
+                    compiled,
+                    policy: self.policy.construct(g, trace, spec),
+                    config,
+                    machine: Machine::new(spec),
+                    priority: 0,
+                    share: spec.fast.capacity_bytes,
+                };
+                let (mut results, report) = run_cluster_ckpt(
+                    vec![tenant],
+                    Arbitration::StaticPartition,
+                    Some(&plan),
+                    resume.as_deref(),
+                    ctl.as_ref(),
+                )?;
+                let res = results.pop().ok_or(SimError::Checkpoint(
+                    CheckpointError::Malformed("one tenant in, zero results out"),
+                ))?;
+                let mut report = report.unwrap_or_default();
+                report.slowdown_vs_fault_free = slowdown_ratio(&res.result, &twin);
+                (res.result, res.policy, Some(report))
+            }
+        };
         let (cases, chosen_mi, warmup, profile) =
             match policy.as_any().downcast_ref::<SentinelPolicy>() {
                 Some(p) => (
@@ -465,7 +596,13 @@ impl RunSpec {
     /// switch. At `variability = 0.0` the base variant is the static
     /// workload and this is bit-identical to [`RunSpec::run`]'s static
     /// path (pinned by `rust/tests/repeatability_stress.rs`).
-    fn run_dynamic(&self, model: Model, d: DynamicSpec) -> Result<RunOutcome, SpecError> {
+    fn run_dynamic(&self, model: Model, d: DynamicSpec) -> Result<RunOutcome, SimError> {
+        // The dynamic workload (variant palette + phase plan) is a pure
+        // function of the fingerprinted spec — rebuilt on resume, never
+        // checkpointed.
+        let fp = self.fingerprint();
+        let resume = self.ckpt.resume_payload(KIND_DYNAMIC, fp)?;
+        let ctl = self.ckpt.ctl(KIND_DYNAMIC, fp, "run");
         let dw = DynamicWorkload::build(model, self.seed, d.kind, d.variability, self.steps);
         let (bg, bt) = (&dw.variants[0].graph, &dw.variants[0].trace);
         let fast_bytes = self.resolve_fast(model.peak_memory_target())?;
@@ -477,7 +614,14 @@ impl RunSpec {
         let mut policy = self.policy.construct(bg, bt, spec);
         let engine = Engine::new(config);
         let mut machine = Machine::new(spec);
-        let (result, stats) = engine.run_dynamic(&dw, &mut machine, policy.as_mut(), d.detector);
+        let (result, stats) = engine.run_dynamic_checkpointed(
+            &dw,
+            &mut machine,
+            policy.as_mut(),
+            d.detector,
+            resume.as_deref(),
+            ctl.as_ref(),
+        )?;
         // Omitted at variability 0.0 so the JSON stays byte-identical
         // to the static run's (the equivalence property keys on it).
         let dynamics = (d.variability > 0.0).then(|| DynamicsReport {

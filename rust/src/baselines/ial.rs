@@ -21,6 +21,7 @@ use std::collections::{HashMap, VecDeque};
 
 use crate::dnn::ModelGraph;
 use crate::mem::{DataObject, ObjectId};
+use crate::sim::checkpoint::{CheckpointError, Dec, Enc};
 use crate::sim::{Machine, Policy, Tier};
 
 /// Which list an object is on.
@@ -226,6 +227,93 @@ impl Policy for IalPolicy {
     /// on the live loop for the whole run; correctness over speed.
     fn is_steady(&self, _step: u32) -> bool {
         false
+    }
+
+    /// List *order* is decision-relevant (FIFO promotion/demotion), so
+    /// both deques serialize in order; the hash maps serialize
+    /// key-sorted for byte-stable output. The arena RNG's word state
+    /// rides along so tier-inheritance draws continue mid-stream.
+    fn save_state(&self, e: &mut Enc) {
+        e.f64(self.cfg.epoch_s);
+        e.f64(self.cfg.active_cap_fraction);
+        e.opt_u64(self.cfg.arena_bytes);
+        e.len(self.active.len());
+        for o in &self.active {
+            e.u32(o.0);
+        }
+        e.len(self.inactive.len());
+        for o in &self.inactive {
+            e.u32(o.0);
+        }
+        let mut loc: Vec<(u32, u8)> = self
+            .loc
+            .iter()
+            .map(|(o, l)| (o.0, matches!(l, ListLoc::Inactive) as u8))
+            .collect();
+        loc.sort_unstable();
+        e.len(loc.len());
+        for (o, l) in loc {
+            e.u32(o);
+            e.u8(l);
+        }
+        let mut referenced: Vec<(u32, bool)> =
+            self.referenced.iter().map(|(o, &r)| (o.0, r)).collect();
+        referenced.sort_unstable();
+        e.len(referenced.len());
+        for (o, r) in referenced {
+            e.u32(o);
+            e.bool(r);
+        }
+        e.f64(self.next_epoch_ns);
+        e.u64(self.epochs_run);
+        for w in self.arena_rng.state() {
+            e.u64(w);
+        }
+    }
+
+    fn load_state(&mut self, d: &mut Dec) -> Result<(), CheckpointError> {
+        self.cfg.epoch_s = d.f64()?;
+        self.cfg.active_cap_fraction = d.f64()?;
+        self.cfg.arena_bytes = d.opt_u64()?;
+        let n = d.len()?;
+        let mut active = VecDeque::with_capacity(n);
+        for _ in 0..n {
+            active.push_back(ObjectId(d.u32()?));
+        }
+        self.active = active;
+        let n = d.len()?;
+        let mut inactive = VecDeque::with_capacity(n);
+        for _ in 0..n {
+            inactive.push_back(ObjectId(d.u32()?));
+        }
+        self.inactive = inactive;
+        let n = d.len()?;
+        let mut loc = HashMap::with_capacity(n);
+        for _ in 0..n {
+            let o = ObjectId(d.u32()?);
+            let l = match d.u8()? {
+                0 => ListLoc::Active,
+                1 => ListLoc::Inactive,
+                _ => return Err(CheckpointError::Malformed("unknown IAL list tag")),
+            };
+            loc.insert(o, l);
+        }
+        self.loc = loc;
+        let n = d.len()?;
+        let mut referenced = HashMap::with_capacity(n);
+        for _ in 0..n {
+            let o = ObjectId(d.u32()?);
+            referenced.insert(o, d.bool()?);
+        }
+        self.referenced = referenced;
+        self.next_epoch_ns = d.f64()?;
+        self.epochs_run = d.u64()?;
+        let mut s = [0u64; 4];
+        for w in &mut s {
+            *w = d.u64()?;
+        }
+        self.arena_rng = crate::util::Rng::from_state(s);
+        Ok(())
     }
 }
 

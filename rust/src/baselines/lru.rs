@@ -10,6 +10,7 @@ use std::collections::HashMap;
 
 use crate::dnn::ModelGraph;
 use crate::mem::{DataObject, ObjectId};
+use crate::sim::checkpoint::{CheckpointError, Dec, Enc};
 use crate::sim::{Machine, Policy, Tier};
 use crate::PAGE_SIZE;
 
@@ -108,6 +109,31 @@ impl Policy for LruPolicy {
     /// supplies the remaining premise.
     fn is_steady(&self, _step: u32) -> bool {
         true
+    }
+
+    fn save_state(&self, e: &mut Enc) {
+        e.u64(self.tick);
+        // Key-sorted so identical maps serialize to identical bytes.
+        let mut last_use: Vec<(u32, u64)> =
+            self.last_use.iter().map(|(o, &t)| (o.0, t)).collect();
+        last_use.sort_unstable();
+        e.len(last_use.len());
+        for (o, t) in last_use {
+            e.u32(o);
+            e.u64(t);
+        }
+    }
+
+    fn load_state(&mut self, d: &mut Dec) -> Result<(), CheckpointError> {
+        self.tick = d.u64()?;
+        let n = d.len()?;
+        let mut last_use = HashMap::with_capacity(n);
+        for _ in 0..n {
+            let o = ObjectId(d.u32()?);
+            last_use.insert(o, d.u64()?);
+        }
+        self.last_use = last_use;
+        Ok(())
     }
 }
 

@@ -14,6 +14,7 @@
 
 use crate::dnn::ModelGraph;
 use crate::mem::ObjectId;
+use crate::sim::checkpoint::{CheckpointError, Dec, Enc};
 use crate::sim::MachineSpec;
 use crate::PAGE_SIZE;
 
@@ -181,6 +182,85 @@ impl MigrationPlan {
     /// Last layer of interval `k`.
     pub fn interval_last(&self, k: u32) -> u32 {
         ((k + 1) * self.mi).min(self.n_layers) - 1
+    }
+
+    pub(crate) fn encode(&self, e: &mut Enc) {
+        e.u32(self.mi);
+        e.u32(self.n_layers);
+        e.u32(self.n_intervals);
+        e.len(self.prefetch.len());
+        for objs in &self.prefetch {
+            e.len(objs.len());
+            for o in objs {
+                e.u32(o.0);
+            }
+        }
+        e.len(self.evict_after_layer.len());
+        for objs in &self.evict_after_layer {
+            e.len(objs.len());
+            for o in objs {
+                e.u32(o.0);
+            }
+        }
+        e.len(self.rs_bytes.len());
+        for &b in &self.rs_bytes {
+            e.u64(b);
+        }
+        e.u64(self.max_prefetch_bytes);
+        e.f64(self.min_interval_time_ns);
+        e.len(self.short_lived.len());
+        for &b in &self.short_lived {
+            e.bool(b);
+        }
+    }
+
+    pub(crate) fn decode(d: &mut Dec<'_>) -> Result<MigrationPlan, CheckpointError> {
+        let mi = d.u32()?;
+        let n_layers = d.u32()?;
+        let n_intervals = d.u32()?;
+        let np = d.len()?;
+        let mut prefetch = Vec::with_capacity(np);
+        for _ in 0..np {
+            let n = d.len()?;
+            let mut objs = Vec::with_capacity(n);
+            for _ in 0..n {
+                objs.push(ObjectId(d.u32()?));
+            }
+            prefetch.push(objs);
+        }
+        let ne = d.len()?;
+        let mut evict_after_layer = Vec::with_capacity(ne);
+        for _ in 0..ne {
+            let n = d.len()?;
+            let mut objs = Vec::with_capacity(n);
+            for _ in 0..n {
+                objs.push(ObjectId(d.u32()?));
+            }
+            evict_after_layer.push(objs);
+        }
+        let nr = d.len()?;
+        let mut rs_bytes = Vec::with_capacity(nr);
+        for _ in 0..nr {
+            rs_bytes.push(d.u64()?);
+        }
+        let max_prefetch_bytes = d.u64()?;
+        let min_interval_time_ns = d.f64()?;
+        let ns = d.len()?;
+        let mut short_lived = Vec::with_capacity(ns);
+        for _ in 0..ns {
+            short_lived.push(d.bool()?);
+        }
+        Ok(MigrationPlan {
+            mi,
+            n_layers,
+            n_intervals,
+            prefetch,
+            evict_after_layer,
+            rs_bytes,
+            max_prefetch_bytes,
+            min_interval_time_ns,
+            short_lived,
+        })
     }
 }
 

@@ -19,6 +19,7 @@ use crate::coordinator::trial::{Case3Strategy, TestAndTrial};
 use crate::dnn::{ModelGraph, StepTrace};
 use crate::mem::{DataObject, ShortLivedPool};
 use crate::profiler::{profile, ProfileReport};
+use crate::sim::checkpoint::{CheckpointError, Dec, Enc};
 use crate::sim::{Machine, MachineSpec, Policy, Tier};
 use crate::PAGE_SIZE;
 
@@ -78,6 +79,42 @@ impl CaseCounts {
         self.case1 += other.case1;
         self.case2 += other.case2;
         self.case3 += other.case3;
+    }
+
+    pub(crate) fn encode(&self, e: &mut Enc) {
+        e.u64(self.case1);
+        e.u64(self.case2);
+        e.u64(self.case3);
+    }
+
+    pub(crate) fn decode(d: &mut Dec<'_>) -> Result<CaseCounts, CheckpointError> {
+        Ok(CaseCounts { case1: d.u64()?, case2: d.u64()?, case3: d.u64()? })
+    }
+}
+
+impl SentinelConfig {
+    pub(crate) fn encode(&self, e: &mut Enc) {
+        e.opt_u32(self.fixed_mi);
+        e.bool(self.reserve_space);
+        e.bool(self.handle_false_sharing);
+        e.bool(self.test_and_trial);
+        e.bool(self.eager_evict);
+        // Not `Enc::len`: this is a config knob, not an element count,
+        // so the decoder must not bound it by the remaining payload.
+        e.u64(self.max_mi_candidates as u64);
+        e.f64(self.boundary_overhead_ns);
+    }
+
+    pub(crate) fn decode(d: &mut Dec<'_>) -> Result<SentinelConfig, CheckpointError> {
+        Ok(SentinelConfig {
+            fixed_mi: d.opt_u32()?,
+            reserve_space: d.bool()?,
+            handle_false_sharing: d.bool()?,
+            test_and_trial: d.bool()?,
+            eager_evict: d.bool()?,
+            max_mi_candidates: d.u64()? as usize,
+            boundary_overhead_ns: d.f64()?,
+        })
     }
 }
 
@@ -447,6 +484,90 @@ impl Policy for SentinelPolicy {
         // measurement, so Drop was never actually measured and the
         // §4.4 trial degenerated to always-Continue.
         self.trial.on_step_end(step_ns);
+    }
+
+    /// Every mutable field rides in the checkpoint — including the
+    /// profile report and migration plan, which `on_divergence`
+    /// replaces mid-run, and the spec, which `fast_share_changed`
+    /// rewrites — so a policy reconstructed from the same workload and
+    /// overwritten with these bytes is bit-identical to the original.
+    fn save_state(&self, e: &mut Enc) {
+        self.cfg.encode(e);
+        self.spec.encode(e);
+        match self.phase {
+            Phase::Profiling => e.u8(0),
+            Phase::MeasureMi { idx } => {
+                e.u8(1);
+                e.u64(idx as u64);
+            }
+            Phase::Steady => e.u8(2),
+        }
+        e.len(self.candidates.len());
+        for &c in &self.candidates {
+            e.u32(c);
+        }
+        e.len(self.candidate_times.len());
+        for &t in &self.candidate_times {
+            e.f64(t);
+        }
+        self.plan.encode(e);
+        self.pool.encode(e);
+        self.trial.encode(e);
+        e.f64(self.step_start_ns);
+        self.cases_total.encode(e);
+        self.cases_last_step.encode(e);
+        self.cases_this_step.encode(e);
+        e.len(self.cases_per_step.len());
+        for c in &self.cases_per_step {
+            c.encode(e);
+        }
+        e.u32(self.chosen_mi);
+        self.report.encode(e);
+        e.str(&self.graph_name);
+        e.u32(self.n_layers);
+        e.str(&self.display_name);
+    }
+
+    fn load_state(&mut self, d: &mut Dec) -> Result<(), CheckpointError> {
+        self.cfg = SentinelConfig::decode(d)?;
+        self.spec = MachineSpec::decode(d)?;
+        self.phase = match d.u8()? {
+            0 => Phase::Profiling,
+            1 => Phase::MeasureMi { idx: d.u64()? as usize },
+            2 => Phase::Steady,
+            _ => return Err(CheckpointError::Malformed("unknown sentinel phase tag")),
+        };
+        let n = d.len()?;
+        let mut candidates = Vec::with_capacity(n);
+        for _ in 0..n {
+            candidates.push(d.u32()?);
+        }
+        self.candidates = candidates;
+        let n = d.len()?;
+        let mut candidate_times = Vec::with_capacity(n);
+        for _ in 0..n {
+            candidate_times.push(d.f64()?);
+        }
+        self.candidate_times = candidate_times;
+        self.plan = MigrationPlan::decode(d)?;
+        self.pool = ShortLivedPool::decode(d)?;
+        self.trial = TestAndTrial::decode(d)?;
+        self.step_start_ns = d.f64()?;
+        self.cases_total = CaseCounts::decode(d)?;
+        self.cases_last_step = CaseCounts::decode(d)?;
+        self.cases_this_step = CaseCounts::decode(d)?;
+        let n = d.len()?;
+        let mut cases_per_step = Vec::with_capacity(n);
+        for _ in 0..n {
+            cases_per_step.push(CaseCounts::decode(d)?);
+        }
+        self.cases_per_step = cases_per_step;
+        self.chosen_mi = d.u32()?;
+        self.report = ProfileReport::decode(d)?;
+        self.graph_name = d.str()?;
+        self.n_layers = d.u32()?;
+        self.display_name = d.str()?;
+        Ok(())
     }
 }
 

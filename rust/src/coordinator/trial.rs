@@ -112,6 +112,44 @@ impl TestAndTrial {
             Phase::Decided => 2,
         }
     }
+
+    pub(crate) fn encode(&self, e: &mut crate::sim::checkpoint::Enc) {
+        e.u8(match self.phase {
+            Phase::Idle => 0,
+            Phase::TryContinue => 1,
+            Phase::TryDrop => 2,
+            Phase::Decided => 3,
+        });
+        e.f64(self.continue_ns);
+        e.f64(self.drop_ns);
+        e.u8(match self.decided {
+            Case3Strategy::Continue => 0,
+            Case3Strategy::Drop => 1,
+        });
+        e.bool(self.enabled);
+    }
+
+    pub(crate) fn decode(
+        d: &mut crate::sim::checkpoint::Dec<'_>,
+    ) -> Result<TestAndTrial, crate::sim::checkpoint::CheckpointError> {
+        use crate::sim::checkpoint::CheckpointError;
+        let phase = match d.u8()? {
+            0 => Phase::Idle,
+            1 => Phase::TryContinue,
+            2 => Phase::TryDrop,
+            3 => Phase::Decided,
+            _ => return Err(CheckpointError::Malformed("unknown trial phase tag")),
+        };
+        let continue_ns = d.f64()?;
+        let drop_ns = d.f64()?;
+        let decided = match d.u8()? {
+            0 => Case3Strategy::Continue,
+            1 => Case3Strategy::Drop,
+            _ => return Err(CheckpointError::Malformed("unknown case-3 strategy tag")),
+        };
+        let enabled = d.bool()?;
+        Ok(TestAndTrial { phase, continue_ns, drop_ns, decided, enabled })
+    }
 }
 
 #[cfg(test)]

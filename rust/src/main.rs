@@ -18,19 +18,50 @@
 //! [`PolicyKind`] registry.
 
 use std::collections::HashMap;
+use std::path::PathBuf;
 use std::process::ExitCode;
 
 use sentinel_hm::api::{
     json, parse_tenant_list, Admission, Autoscale, ClusterSpec, FaultSpec, FleetSpec, PolicyKind,
-    RunSpec, DEFAULT_FAULT_RATE,
+    RunSpec, SimError, DEFAULT_FAULT_RATE,
 };
 use sentinel_hm::dnn::zoo::{model_names, Model};
 use sentinel_hm::dnn::DynamicKind;
 use sentinel_hm::figures;
 use sentinel_hm::metrics::peak_memory_table;
+use sentinel_hm::sim::install_interrupt_handler;
 use sentinel_hm::util::table::{fmt_bytes, Table};
 
 type Opts = HashMap<String, String>;
+
+/// How a CLI command stops short of success: a plain error message
+/// (exit 1, usage printed), or a graceful interrupt that parked the run
+/// in a checkpoint (exit 130, the conventional SIGINT code — no usage,
+/// nothing went wrong).
+enum CliError {
+    Msg(String),
+    Interrupted(PathBuf),
+}
+
+impl From<String> for CliError {
+    fn from(msg: String) -> Self {
+        CliError::Msg(msg)
+    }
+}
+
+impl From<&str> for CliError {
+    fn from(msg: &str) -> Self {
+        CliError::Msg(msg.to_string())
+    }
+}
+
+/// Map a checkpointed-run error onto the CLI's exit behavior.
+fn cli_sim_err(e: SimError) -> CliError {
+    match e {
+        SimError::Interrupted { checkpoint } => CliError::Interrupted(checkpoint),
+        other => CliError::Msg(other.to_string()),
+    }
+}
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -38,33 +69,75 @@ fn main() -> ExitCode {
         print_usage();
         return ExitCode::FAILURE;
     };
-    let result = match cmd.as_str() {
-        "profile" => cmd_profile(&args),
+    let result: Result<(), CliError> = match cmd.as_str() {
+        "profile" => cmd_profile(&args).map_err(CliError::Msg),
         "train" => cmd_train(&args),
         "dynamic" => cmd_dynamic(&args),
-        "sweep-mi" => cmd_sweep_mi(&args),
+        "sweep-mi" => cmd_sweep_mi(&args).map_err(CliError::Msg),
         "cluster" => cmd_cluster(&args),
         "fleet" => cmd_fleet(&args),
         "faults" => cmd_faults(&args),
-        "compare" => cmd_compare(&args),
-        "figure" => cmd_figure(&args),
-        "e2e" => cmd_e2e(&args),
-        "models" => cmd_models(&args),
+        "compare" => cmd_compare(&args).map_err(CliError::Msg),
+        "figure" => cmd_figure(&args).map_err(CliError::Msg),
+        "e2e" => cmd_e2e(&args).map_err(CliError::Msg),
+        "models" => cmd_models(&args).map_err(CliError::Msg),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
         }
-        other => Err(format!("unknown command '{other}'")),
+        other => Err(CliError::Msg(format!("unknown command '{other}'"))),
     };
     match result {
         Ok(()) => ExitCode::SUCCESS,
-        Err(e) => {
+        Err(CliError::Interrupted(path)) => {
+            eprintln!(
+                "interrupted; state saved to '{}' (resume with --resume '{}')",
+                path.display(),
+                path.display()
+            );
+            ExitCode::from(130)
+        }
+        Err(CliError::Msg(e)) => {
             eprintln!("error: {e}");
             print_usage();
             ExitCode::FAILURE
         }
     }
 }
+
+/// Apply the shared checkpoint flags (`--checkpoint-every`,
+/// `--checkpoint-dir`, `--resume`) through a spec's fluent setters, and
+/// install the graceful-interrupt hook when checkpoint *writing* is
+/// configured (SIGINT/SIGTERM then parks the run in a final checkpoint
+/// instead of killing the process mid-step).
+fn apply_ckpt_flags<S>(
+    opts: &Opts,
+    spec: S,
+    every: impl FnOnce(S, u64) -> S,
+    dir: impl FnOnce(S, PathBuf) -> S,
+    resume: impl FnOnce(S, PathBuf) -> S,
+) -> Result<S, String> {
+    let mut spec = spec;
+    if let Some(n) = opts.get("checkpoint-every") {
+        let n: u64 = n
+            .parse()
+            .map_err(|_| format!("--checkpoint-every wants a number, got '{n}'"))?;
+        spec = every(spec, n);
+    }
+    if let Some(d) = opts.get("checkpoint-dir") {
+        spec = dir(spec, PathBuf::from(d));
+    }
+    if let Some(p) = opts.get("resume") {
+        spec = resume(spec, PathBuf::from(p));
+    }
+    if opts.contains_key("checkpoint-every") || opts.contains_key("checkpoint-dir") {
+        install_interrupt_handler();
+    }
+    Ok(spec)
+}
+
+/// The checkpoint flags every simulating command accepts.
+const CKPT_FLAGS: [&str; 3] = ["checkpoint-every", "checkpoint-dir", "resume"];
 
 fn print_usage() {
     eprintln!(
@@ -86,6 +159,8 @@ fn print_usage() {
                            [--arb static|proportional|priority] [--admission reject|queue|spill]\n\
                            [--fault-rate {DEFAULT_FAULT_RATE}] [--fault-seed S] [--horizon N] [--no-crashes]\n\
                            [--fixed-pool] [--max-machines 64] [--threads N] [--seed S] [--json]\n\
+           (train/dynamic/cluster/fleet/faults also take [--checkpoint-every N] [--checkpoint-dir D] [--resume F]:\n\
+            periodic checkpoints + a final one on Ctrl-C; a resumed run matches the uninterrupted one bit for bit)\n\
            sentinel compare [--steps 14] [--json]\n\
            sentinel figure <1|2|3|4|7|8|10|11|12|13|t1|t4|t5|ct|fleet|dg|rp|all> [--steps N] [--fast-mb N] [--json]\n\
            sentinel e2e [--steps 300] [--artifacts artifacts] [--lr 0.05]   (needs the `pjrt` feature)\n\
@@ -227,11 +302,21 @@ fn cmd_profile(args: &[String]) -> Result<(), String> {
     Ok(())
 }
 
-fn cmd_train(args: &[String]) -> Result<(), String> {
+fn cmd_train(args: &[String]) -> Result<(), CliError> {
     let opts = parse_opts(
         "train",
         &args[1..],
-        &["policy", "steps", "fast-pct", "fast-mb", "mi", "seed"],
+        &[
+            "policy",
+            "steps",
+            "fast-pct",
+            "fast-mb",
+            "mi",
+            "seed",
+            CKPT_FLAGS[0],
+            CKPT_FLAGS[1],
+            CKPT_FLAGS[2],
+        ],
         &["json"],
     )?;
     let model = model_arg(args)?;
@@ -263,7 +348,14 @@ fn cmd_train(args: &[String]) -> Result<(), String> {
     if let Some(seed) = opts.get("seed") {
         spec = spec.seed(seed.parse().map_err(|_| "--seed wants a number".to_string())?);
     }
-    let out = spec.run().map_err(|e| e.to_string())?;
+    let spec = apply_ckpt_flags(
+        &opts,
+        spec,
+        RunSpec::checkpoint_every,
+        RunSpec::checkpoint_dir,
+        RunSpec::resume_from,
+    )?;
+    let out = spec.run_checkpointed().map_err(cli_sim_err)?;
     if want_json(&opts) {
         println!("{}", out.to_json());
         return Ok(());
@@ -304,11 +396,22 @@ fn cmd_train(args: &[String]) -> Result<(), String> {
 /// `sentinel dynamic`: one run of a repeatability-breaking workload
 /// variant, with the engine's online divergence detector armed unless
 /// `--no-detector` asks for the trust-step-1-forever behaviour.
-fn cmd_dynamic(args: &[String]) -> Result<(), String> {
+fn cmd_dynamic(args: &[String]) -> Result<(), CliError> {
     let opts = parse_opts(
         "dynamic",
         &args[1..],
-        &["kind", "variability", "policy", "steps", "fast-pct", "fast-mb", "seed"],
+        &[
+            "kind",
+            "variability",
+            "policy",
+            "steps",
+            "fast-pct",
+            "fast-mb",
+            "seed",
+            CKPT_FLAGS[0],
+            CKPT_FLAGS[1],
+            CKPT_FLAGS[2],
+        ],
         &["json", "no-detector"],
     )?;
     let model = model_arg(args)?;
@@ -342,7 +445,14 @@ fn cmd_dynamic(args: &[String]) -> Result<(), String> {
     if let Some(seed) = opts.get("seed") {
         spec = spec.seed(seed.parse().map_err(|_| "--seed wants a number".to_string())?);
     }
-    let out = spec.run().map_err(|e| e.to_string())?;
+    let spec = apply_ckpt_flags(
+        &opts,
+        spec,
+        RunSpec::checkpoint_every,
+        RunSpec::checkpoint_dir,
+        RunSpec::resume_from,
+    )?;
+    let out = spec.run_checkpointed().map_err(cli_sim_err)?;
     if want_json(&opts) {
         println!("{}", out.to_json());
         return Ok(());
@@ -418,11 +528,21 @@ fn cmd_sweep_mi(args: &[String]) -> Result<(), String> {
 }
 
 /// `sentinel cluster`: co-schedule N tenants on one shared machine.
-fn cmd_cluster(args: &[String]) -> Result<(), String> {
+fn cmd_cluster(args: &[String]) -> Result<(), CliError> {
     let opts = parse_opts(
         "cluster",
         &args[1..],
-        &["tenants", "arb", "steps", "fast-pct", "fast-mb", "seed"],
+        &[
+            "tenants",
+            "arb",
+            "steps",
+            "fast-pct",
+            "fast-mb",
+            "seed",
+            CKPT_FLAGS[0],
+            CKPT_FLAGS[1],
+            CKPT_FLAGS[2],
+        ],
         &["json"],
     )?;
     let tenants = opts
@@ -448,7 +568,14 @@ fn cmd_cluster(args: &[String]) -> Result<(), String> {
     if let Some(seed) = opts.get("seed") {
         spec = spec.seed(seed.parse().map_err(|_| "--seed wants a number".to_string())?);
     }
-    let out = spec.run().map_err(|e| e.to_string())?;
+    let spec = apply_ckpt_flags(
+        &opts,
+        spec,
+        ClusterSpec::checkpoint_every,
+        ClusterSpec::checkpoint_dir,
+        ClusterSpec::resume_from,
+    )?;
+    let out = spec.run_checkpointed().map_err(cli_sim_err)?;
     if want_json(&opts) {
         println!("{}", out.to_json());
         return Ok(());
@@ -465,7 +592,7 @@ fn cmd_cluster(args: &[String]) -> Result<(), String> {
 }
 
 /// `sentinel fleet`: open-loop serving on an autoscaled machine pool.
-fn cmd_fleet(args: &[String]) -> Result<(), String> {
+fn cmd_fleet(args: &[String]) -> Result<(), CliError> {
     let opts = parse_opts(
         "fleet",
         &args[1..],
@@ -482,6 +609,9 @@ fn cmd_fleet(args: &[String]) -> Result<(), String> {
             "admission",
             "threads",
             "seed",
+            CKPT_FLAGS[0],
+            CKPT_FLAGS[1],
+            CKPT_FLAGS[2],
         ],
         &["json", "autoscale"],
     )?;
@@ -510,7 +640,14 @@ fn cmd_fleet(args: &[String]) -> Result<(), String> {
     if let Some(seed) = opts.get("seed") {
         spec = spec.seed(seed.parse().map_err(|_| "--seed wants a number".to_string())?);
     }
-    let out = spec.run().map_err(|e| e.to_string())?;
+    let spec = apply_ckpt_flags(
+        &opts,
+        spec,
+        FleetSpec::checkpoint_every,
+        FleetSpec::checkpoint_dir,
+        FleetSpec::resume_from,
+    )?;
+    let out = spec.run_checkpointed().map_err(cli_sim_err)?;
     if want_json(&opts) {
         println!("{}", out.to_json());
         return Ok(());
@@ -532,7 +669,7 @@ fn cmd_fleet(args: &[String]) -> Result<(), String> {
 /// losses, migration-lane stalls and machine crashes, with the
 /// degradation report (including slowdown vs a fault-free twin of the
 /// same run) attached to the outcome.
-fn cmd_faults(args: &[String]) -> Result<(), String> {
+fn cmd_faults(args: &[String]) -> Result<(), CliError> {
     let opts = parse_opts(
         "faults",
         &args[1..],
@@ -549,6 +686,9 @@ fn cmd_faults(args: &[String]) -> Result<(), String> {
             "fault-rate",
             "fault-seed",
             "horizon",
+            CKPT_FLAGS[0],
+            CKPT_FLAGS[1],
+            CKPT_FLAGS[2],
         ],
         &["json", "fixed-pool", "no-crashes"],
     )?;
@@ -591,7 +731,14 @@ fn cmd_faults(args: &[String]) -> Result<(), String> {
     if let Some(seed) = opts.get("seed") {
         spec = spec.seed(seed.parse().map_err(|_| "--seed wants a number".to_string())?);
     }
-    let out = spec.run().map_err(|e| e.to_string())?;
+    let spec = apply_ckpt_flags(
+        &opts,
+        spec,
+        FleetSpec::checkpoint_every,
+        FleetSpec::checkpoint_dir,
+        FleetSpec::resume_from,
+    )?;
+    let out = spec.run_checkpointed().map_err(cli_sim_err)?;
     if want_json(&opts) {
         println!("{}", out.to_json());
         return Ok(());

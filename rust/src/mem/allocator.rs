@@ -66,6 +66,56 @@ pub struct PageStats {
 }
 
 impl PageStats {
+    pub(crate) fn encode(&self, e: &mut crate::sim::checkpoint::Enc) {
+        e.u64(self.peak_pages);
+        e.u64(self.peak_live_bytes);
+        e.u64(self.total_pages);
+        e.len(self.page_access_counts.len());
+        for &c in &self.page_access_counts {
+            e.u64(c);
+        }
+        e.len(self.exclusive_spans.len());
+        for &(c, p) in &self.exclusive_spans {
+            e.u64(c);
+            e.u64(p);
+        }
+        e.u64(self.false_shared_pages);
+        e.u64(self.small_object_pages);
+        e.u64(self.false_shared_waste_bytes);
+    }
+
+    pub(crate) fn decode(
+        d: &mut crate::sim::checkpoint::Dec<'_>,
+    ) -> Result<PageStats, crate::sim::checkpoint::CheckpointError> {
+        let peak_pages = d.u64()?;
+        let peak_live_bytes = d.u64()?;
+        let total_pages = d.u64()?;
+        let n = d.len()?;
+        let mut page_access_counts = Vec::with_capacity(n);
+        for _ in 0..n {
+            page_access_counts.push(d.u64()?);
+        }
+        let n = d.len()?;
+        let mut exclusive_spans = Vec::with_capacity(n);
+        for _ in 0..n {
+            let c = d.u64()?;
+            let p = d.u64()?;
+            exclusive_spans.push((c, p));
+        }
+        Ok(PageStats {
+            peak_pages,
+            peak_live_bytes,
+            total_pages,
+            page_access_counts,
+            exclusive_spans,
+            false_shared_pages: d.u64()?,
+            small_object_pages: d.u64()?,
+            false_shared_waste_bytes: d.u64()?,
+        })
+    }
+}
+
+impl PageStats {
     /// Bucket pages by access count using the paper's Fig. 2/4 buckets.
     /// Returns (bucket label, page count, bytes).
     pub fn pages_by_access_bucket(&self) -> Vec<(&'static str, u64, u64)> {

@@ -96,6 +96,44 @@ impl ShortLivedPool {
     pub fn contains(&self, obj: ObjectId) -> bool {
         self.live.contains_key(&obj)
     }
+
+    pub(crate) fn encode(&self, e: &mut crate::sim::checkpoint::Enc) {
+        e.u64(self.reserved_bytes);
+        e.u64(self.in_use_bytes);
+        e.u64(self.interval_peak_bytes);
+        // Key-sorted so identical pools serialize to identical bytes.
+        let mut live: Vec<(u32, u64)> = self.live.iter().map(|(k, &v)| (k.0, v)).collect();
+        live.sort_unstable();
+        e.len(live.len());
+        for (k, v) in live {
+            e.u32(k);
+            e.u64(v);
+        }
+        e.bool(self.shrink_enabled);
+    }
+
+    pub(crate) fn decode(
+        d: &mut crate::sim::checkpoint::Dec<'_>,
+    ) -> Result<ShortLivedPool, crate::sim::checkpoint::CheckpointError> {
+        let reserved_bytes = d.u64()?;
+        let in_use_bytes = d.u64()?;
+        let interval_peak_bytes = d.u64()?;
+        let n = d.len()?;
+        let mut live = HashMap::with_capacity(n);
+        for _ in 0..n {
+            let k = d.u32()?;
+            let v = d.u64()?;
+            live.insert(ObjectId(k), v);
+        }
+        let shrink_enabled = d.bool()?;
+        Ok(ShortLivedPool {
+            reserved_bytes,
+            in_use_bytes,
+            interval_peak_bytes,
+            live,
+            shrink_enabled,
+        })
+    }
 }
 
 #[cfg(test)]

@@ -47,6 +47,66 @@ pub struct ObjectProfile {
     pub persistent: bool,
 }
 
+impl ObjectProfile {
+    pub(crate) fn encode(&self, e: &mut crate::sim::checkpoint::Enc) {
+        e.u64(self.size_bytes);
+        e.u32(self.lifetime_layers);
+        e.u64(self.total_accesses);
+        e.bool(self.small);
+        e.bool(self.short_lived);
+        e.bool(self.persistent);
+    }
+
+    pub(crate) fn decode(
+        d: &mut crate::sim::checkpoint::Dec<'_>,
+    ) -> Result<ObjectProfile, crate::sim::checkpoint::CheckpointError> {
+        Ok(ObjectProfile {
+            size_bytes: d.u64()?,
+            lifetime_layers: d.u32()?,
+            total_accesses: d.u64()?,
+            small: d.bool()?,
+            short_lived: d.bool()?,
+            persistent: d.bool()?,
+        })
+    }
+}
+
+impl ProfileReport {
+    pub(crate) fn encode(&self, e: &mut crate::sim::checkpoint::Enc) {
+        e.str(&self.model);
+        e.u32(self.n_layers);
+        e.len(self.objects.len());
+        for o in &self.objects {
+            o.encode(e);
+        }
+        e.u64(self.peak_live_bytes);
+        e.u64(self.peak_short_lived_bytes);
+        self.profiling_pages.encode(e);
+        self.shared_pages.encode(e);
+    }
+
+    pub(crate) fn decode(
+        d: &mut crate::sim::checkpoint::Dec<'_>,
+    ) -> Result<ProfileReport, crate::sim::checkpoint::CheckpointError> {
+        let model = d.str()?;
+        let n_layers = d.u32()?;
+        let n = d.len()?;
+        let mut objects = Vec::with_capacity(n);
+        for _ in 0..n {
+            objects.push(ObjectProfile::decode(d)?);
+        }
+        Ok(ProfileReport {
+            model,
+            n_layers,
+            objects,
+            peak_live_bytes: d.u64()?,
+            peak_short_lived_bytes: d.u64()?,
+            profiling_pages: PageStats::decode(d)?,
+            shared_pages: PageStats::decode(d)?,
+        })
+    }
+}
+
 /// Lifetime histogram bucket (Fig. 1). `label` is layers-of-life.
 #[derive(Clone, Debug)]
 pub struct HistBucket {

@@ -57,6 +57,7 @@
 use std::sync::Arc;
 
 use crate::dnn::workload::Workload;
+use crate::sim::checkpoint::{CheckpointCtl, CheckpointError, Dec, Enc, RunHalt};
 use crate::sim::device::Tier;
 use crate::sim::engine::{replay_layer, EngineConfig, Policy, StepStats, TrainResult};
 use crate::sim::fault::{DegradationReport, FaultAction, FaultInjector, FaultPlan, RecoveryTracker};
@@ -230,6 +231,67 @@ pub struct TenantRunResult {
     /// Times a steady-state schedule was sealed (≥ 2 proves the tenant
     /// re-sealed after an invalidation).
     pub seal_segments: u64,
+}
+
+impl TenantRunResult {
+    /// Serialize a finished tenant's record (the fleet checkpoints its
+    /// completed-departure list). The policy rides as a nested state
+    /// blob; [`TenantRunResult::restore`] overlays it onto a freshly
+    /// constructed policy object supplied by the caller — the sim layer
+    /// cannot rebuild policies itself (construction lives in the spec
+    /// layer).
+    pub(crate) fn encode(&self, e: &mut Enc) {
+        self.result.encode(e);
+        e.len(self.fast_occupancy_per_step.len());
+        for &occ in &self.fast_occupancy_per_step {
+            e.u64(occ);
+        }
+        e.u64(self.share_initial);
+        e.u64(self.share_final);
+        e.u64(self.preemptions_won);
+        e.u64(self.preemptions_suffered);
+        e.u64(self.pages_force_demoted);
+        e.u64(self.seal_invalidations);
+        e.u64(self.seal_segments);
+        let mut pe = Enc::new();
+        self.policy.save_state(&mut pe);
+        e.bytes(&pe.finish());
+    }
+
+    pub(crate) fn restore(
+        mut policy: Box<dyn Policy>,
+        d: &mut Dec<'_>,
+    ) -> Result<TenantRunResult, CheckpointError> {
+        let result = TrainResult::decode(d)?;
+        let n = d.len()?;
+        let mut fast_occupancy_per_step = Vec::with_capacity(n);
+        for _ in 0..n {
+            fast_occupancy_per_step.push(d.u64()?);
+        }
+        let share_initial = d.u64()?;
+        let share_final = d.u64()?;
+        let preemptions_won = d.u64()?;
+        let preemptions_suffered = d.u64()?;
+        let pages_force_demoted = d.u64()?;
+        let seal_invalidations = d.u64()?;
+        let seal_segments = d.u64()?;
+        let blob = d.bytes()?;
+        let mut pd = Dec::new(blob);
+        policy.load_state(&mut pd)?;
+        pd.done()?;
+        Ok(TenantRunResult {
+            result,
+            policy,
+            fast_occupancy_per_step,
+            share_initial,
+            share_final,
+            preemptions_won,
+            preemptions_suffered,
+            pages_force_demoted,
+            seal_invalidations,
+            seal_segments,
+        })
+    }
 }
 
 /// Driver state for one tenant: a resumable layer-granular cursor over
@@ -624,6 +686,122 @@ impl ActiveTenant {
             seal_segments: self.sealer.seals,
         }
     }
+
+    /// Serialize every mutable field of this tenant cursor. The
+    /// immutable inputs — workload, compiled trace, engine config,
+    /// priority — are *not* serialized: the restore side rebuilds them
+    /// from the spec (they are pure functions of it) and
+    /// [`ActiveTenant::restore`] overlays the mutable state on top.
+    ///
+    /// A checkpoint boundary is a *step* boundary for one tenant, but
+    /// the others may sit mid-step (the cluster interleaves at layer
+    /// granularity), so the mid-step cursor — `layer`, the `in0`/`out0`/
+    /// `sp0` counter baselines, and any in-flight [`StepRecorder`] —
+    /// must round-trip too.
+    pub(crate) fn encode(&self, e: &mut Enc) {
+        self.machine.encode(e);
+        e.u64(self.share);
+        e.u64(self.share_initial);
+        e.u64(self.floor);
+        e.u32(self.step);
+        e.u64(self.layer as u64);
+        e.u64(self.in0);
+        e.u64(self.out0);
+        e.u64(self.spills_seen);
+        e.bool(self.stalled_since_review);
+        e.len(self.steps_out.len());
+        for s in &self.steps_out {
+            s.encode(e);
+        }
+        e.len(self.occupancy.len());
+        for &occ in &self.occupancy {
+            e.u64(occ);
+        }
+        e.u64(self.preemptions_won);
+        e.u64(self.preemptions_suffered);
+        e.u64(self.pages_force_demoted);
+        self.sealer.encode(e);
+        match &self.rec {
+            Some(r) => {
+                e.bool(true);
+                r.encode(e);
+            }
+            None => e.bool(false),
+        }
+        e.u64(self.sp0);
+        e.opt_u32(self.steady_from);
+        e.u32(self.sealed_steps);
+        e.u32(self.sealed_in_segment);
+        e.f64(self.carry_time_ns);
+        e.u64(self.carry_pages_in);
+        e.u64(self.carry_pages_out);
+        e.u64(self.carry_spills);
+        e.u64(self.carry_peak_fast);
+        e.u64(self.carry_peak_total);
+        e.bool(self.done);
+        // Policy state rides as a nested length-prefixed blob so the
+        // policy gets exactly its own bytes and we can `done()`-check
+        // that it consumed them all.
+        let mut pe = Enc::new();
+        self.policy.save_state(&mut pe);
+        e.bytes(&pe.finish());
+    }
+
+    /// Rebuild a tenant cursor from a freshly constructed skeleton plus
+    /// serialized state. The skeleton's policy was just constructed by
+    /// the spec layer; `load_state` overwrites all of its mutable state,
+    /// and the decoded machine replaces the skeleton's empty one — so
+    /// `prologue` must NOT be called on a restored tenant (its
+    /// allocations are already inside the decoded machine).
+    pub(crate) fn restore(t: ClusterTenant, d: &mut Dec) -> Result<ActiveTenant, CheckpointError> {
+        let mut at = ActiveTenant::new(t);
+        at.machine = Machine::decode(d)?;
+        at.share = d.u64()?;
+        at.share_initial = d.u64()?;
+        at.floor = d.u64()?;
+        at.step = d.u32()?;
+        at.layer = d.u64()? as usize;
+        if at.layer >= at.compiled.layers.len().max(1) {
+            return Err(CheckpointError::Malformed("tenant layer cursor out of range"));
+        }
+        at.in0 = d.u64()?;
+        at.out0 = d.u64()?;
+        at.spills_seen = d.u64()?;
+        at.stalled_since_review = d.bool()?;
+        let n = d.len()?;
+        let mut steps_out = Vec::with_capacity(n);
+        for _ in 0..n {
+            steps_out.push(StepStats::decode(d)?);
+        }
+        at.steps_out = steps_out;
+        let n = d.len()?;
+        let mut occupancy = Vec::with_capacity(n);
+        for _ in 0..n {
+            occupancy.push(d.u64()?);
+        }
+        at.occupancy = occupancy;
+        at.preemptions_won = d.u64()?;
+        at.preemptions_suffered = d.u64()?;
+        at.pages_force_demoted = d.u64()?;
+        at.sealer = Sealer::decode(d)?;
+        at.rec = if d.bool()? { Some(StepRecorder::decode(d)?) } else { None };
+        at.sp0 = d.u64()?;
+        at.steady_from = d.opt_u32()?;
+        at.sealed_steps = d.u32()?;
+        at.sealed_in_segment = d.u32()?;
+        at.carry_time_ns = d.f64()?;
+        at.carry_pages_in = d.u64()?;
+        at.carry_pages_out = d.u64()?;
+        at.carry_spills = d.u64()?;
+        at.carry_peak_fast = d.u64()?;
+        at.carry_peak_total = d.u64()?;
+        at.done = d.bool()?;
+        let blob = d.bytes()?;
+        let mut pd = Dec::new(blob);
+        at.policy.load_state(&mut pd)?;
+        pd.done()?;
+        Ok(at)
+    }
 }
 
 /// One machine's fault state: the event cursor for its slice of the
@@ -773,6 +951,27 @@ impl MachineFaults {
         self.report.recovery_steps = self.tracker.recovery_steps;
         self.report
     }
+
+    /// Serialize the fault-layer state. `actions` is a scratch buffer
+    /// that is always drained before a checkpoint boundary (its stale
+    /// contents are cleared before every reuse), so it is not
+    /// serialized; restore starts it empty.
+    pub(crate) fn encode(&self, e: &mut Enc) {
+        self.injector.encode(e);
+        self.tracker.encode(e);
+        self.report.encode(e);
+        e.u64(self.steps);
+    }
+
+    pub(crate) fn decode(d: &mut Dec<'_>) -> Result<MachineFaults, CheckpointError> {
+        Ok(MachineFaults {
+            injector: FaultInjector::decode(d)?,
+            tracker: RecoveryTracker::decode(d)?,
+            report: DegradationReport::decode(d)?,
+            steps: d.u64()?,
+            actions: Vec::new(),
+        })
+    }
 }
 
 /// Run every tenant to completion against one shared machine,
@@ -808,18 +1007,104 @@ pub fn run_cluster_faulted(
     arbitration: Arbitration,
     plan: Option<&FaultPlan>,
 ) -> (Vec<TenantRunResult>, Option<DegradationReport>) {
+    match run_cluster_ckpt(tenants, arbitration, plan, None, None) {
+        Ok(out) => out,
+        // No checkpoint controller and no resume bytes: the loop has no
+        // halt path.
+        Err(_) => unreachable!("checkpoint-free cluster run cannot halt"),
+    }
+}
+
+/// Serialize the whole cluster driver state at a step boundary: every
+/// tenant cursor plus the optional fault layer. The spec inputs
+/// (workloads, traces, configs, the arbitration policy itself) are not
+/// serialized — the resume side rebuilds them and must pass the same
+/// tenant set, which the header's spec fingerprint enforces.
+pub(crate) fn encode_cluster_state(
+    active: &[ActiveTenant],
+    faults: Option<&MachineFaults>,
+) -> Vec<u8> {
+    let mut e = Enc::new();
+    e.len(active.len());
+    for t in active {
+        t.encode(&mut e);
+    }
+    match faults {
+        Some(f) => {
+            e.bool(true);
+            f.encode(&mut e);
+        }
+        None => e.bool(false),
+    }
+    e.finish()
+}
+
+/// [`run_cluster_faulted`] with checkpoint/resume: `resume` is a
+/// previously written cluster payload (the freshly built `tenants` act
+/// as skeletons to overlay it on), `ckpt` gets a boundary callback
+/// after every completed tenant step — *after* fault delivery and the
+/// arbitration review, so the serialized state is exactly what the
+/// next loop iteration would read.
+///
+/// Progress is the cumulative completed-step count across tenants,
+/// which both the fresh and resumed runs derive identically (it is the
+/// sum of every tenant's step counter), so checkpoint filenames line up
+/// between an interrupted and an uninterrupted run.
+pub(crate) fn run_cluster_ckpt(
+    tenants: Vec<ClusterTenant>,
+    arbitration: Arbitration,
+    plan: Option<&FaultPlan>,
+    resume: Option<&[u8]>,
+    ckpt: Option<&CheckpointCtl>,
+) -> Result<(Vec<TenantRunResult>, Option<DegradationReport>), RunHalt> {
     let n = tenants.len();
-    let total_share: u64 = tenants.iter().map(|t| t.share).sum();
+    let mut faults;
+    let mut active: Vec<ActiveTenant>;
+    match resume {
+        Some(bytes) => {
+            let mut d = Dec::new(bytes);
+            let nt = d.len().map_err(RunHalt::Checkpoint)?;
+            if nt != n {
+                return Err(RunHalt::Checkpoint(CheckpointError::Malformed(
+                    "tenant count mismatch",
+                )));
+            }
+            active = Vec::with_capacity(n);
+            for t in tenants {
+                active.push(ActiveTenant::restore(t, &mut d).map_err(RunHalt::Checkpoint)?);
+            }
+            let has_faults = d.bool().map_err(RunHalt::Checkpoint)?;
+            if has_faults != plan.is_some() {
+                return Err(RunHalt::Checkpoint(CheckpointError::Malformed(
+                    "fault plan presence mismatch",
+                )));
+            }
+            faults = if has_faults {
+                Some(MachineFaults::decode(&mut d).map_err(RunHalt::Checkpoint)?)
+            } else {
+                None
+            };
+            d.done().map_err(RunHalt::Checkpoint)?;
+        }
+        None => {
+            faults = plan.map(|p| MachineFaults::new(p, 0));
+            active = tenants.into_iter().map(ActiveTenant::new).collect();
+            for t in &mut active {
+                t.prologue();
+            }
+        }
+    }
     // One preemption moves 1/(8N) of the pool, page-rounded (≥ 1 page).
+    // Derived from *initial* shares (`share_initial` == the share each
+    // tenant was handed in) so a resumed run — where current shares may
+    // have moved under priority arbitration — computes the same quantum
+    // the fresh run did.
+    let total_share: u64 = active.iter().map(|t| t.share_initial).sum();
     let quantum = (total_share / (8 * n.max(1) as u64))
         .max(PAGE_SIZE)
         / PAGE_SIZE
         * PAGE_SIZE;
-    let mut faults = plan.map(|p| MachineFaults::new(p, 0));
-    let mut active: Vec<ActiveTenant> = tenants.into_iter().map(ActiveTenant::new).collect();
-    for t in &mut active {
-        t.prologue();
-    }
+    let mut completed: u64 = active.iter().map(|t| u64::from(t.step)).sum();
     let mut remaining = active.iter().filter(|t| !t.done).count();
     while remaining > 0 {
         let mut pick = 0usize;
@@ -835,18 +1120,23 @@ pub fn run_cluster_faulted(
             remaining -= 1;
         }
         if step_done {
+            completed += 1;
             if let Some(f) = faults.as_mut() {
                 f.on_step(&mut active);
             }
-        }
-        // Review only for tenants that will keep running: a tenant
-        // that just finished has no use for more share.
-        if step_done && !active[pick].done && arbitration == Arbitration::Priority {
-            review_priority(&mut active, pick, quantum);
+            // Review only for tenants that will keep running: a tenant
+            // that just finished has no use for more share.
+            if !active[pick].done && arbitration == Arbitration::Priority {
+                review_priority(&mut active, pick, quantum);
+            }
+            if let Some(c) = ckpt {
+                let (a, f) = (&active, faults.as_ref());
+                c.boundary(completed, || encode_cluster_state(a, f))?;
+            }
         }
     }
     let report = faults.map(MachineFaults::into_report);
-    (active.into_iter().map(ActiveTenant::finish).collect(), report)
+    Ok((active.into_iter().map(ActiveTenant::finish).collect(), report))
 }
 
 /// Priority review point: tenant `i` just finished a step. If it saw

@@ -17,6 +17,25 @@ impl Tier {
             Tier::Slow => Tier::Fast,
         }
     }
+
+    pub(crate) fn encode(self, e: &mut crate::sim::checkpoint::Enc) {
+        e.u8(match self {
+            Tier::Fast => 0,
+            Tier::Slow => 1,
+        });
+    }
+
+    pub(crate) fn decode(
+        d: &mut crate::sim::checkpoint::Dec<'_>,
+    ) -> Result<Tier, crate::sim::checkpoint::CheckpointError> {
+        match d.u8()? {
+            0 => Ok(Tier::Fast),
+            1 => Ok(Tier::Slow),
+            _ => Err(crate::sim::checkpoint::CheckpointError::Malformed(
+                "unknown tier tag",
+            )),
+        }
+    }
 }
 
 impl std::fmt::Display for Tier {
@@ -112,6 +131,48 @@ impl Default for MachineSpec {
     fn default() -> Self {
         // 1 GB fast memory — the configuration of the paper's Fig. 7/8.
         Self::paper_testbed(1 << 30)
+    }
+}
+
+impl DeviceSpec {
+    pub(crate) fn encode(&self, e: &mut crate::sim::checkpoint::Enc) {
+        e.u64(self.capacity_bytes);
+        e.f64(self.bandwidth_gbps);
+        e.f64(self.latency_ns);
+    }
+
+    pub(crate) fn decode(
+        d: &mut crate::sim::checkpoint::Dec<'_>,
+    ) -> Result<DeviceSpec, crate::sim::checkpoint::CheckpointError> {
+        Ok(DeviceSpec {
+            capacity_bytes: d.u64()?,
+            bandwidth_gbps: d.f64()?,
+            latency_ns: d.f64()?,
+        })
+    }
+}
+
+impl MachineSpec {
+    pub(crate) fn encode(&self, e: &mut crate::sim::checkpoint::Enc) {
+        self.fast.encode(e);
+        self.slow.encode(e);
+        e.f64(self.migration_bw_gbps);
+        e.f64(self.page_move_overhead_ns);
+        e.u32(self.copy_threads);
+        e.f64(self.compute_gflops);
+    }
+
+    pub(crate) fn decode(
+        d: &mut crate::sim::checkpoint::Dec<'_>,
+    ) -> Result<MachineSpec, crate::sim::checkpoint::CheckpointError> {
+        Ok(MachineSpec {
+            fast: DeviceSpec::decode(d)?,
+            slow: DeviceSpec::decode(d)?,
+            migration_bw_gbps: d.f64()?,
+            page_move_overhead_ns: d.f64()?,
+            copy_threads: d.u32()?,
+            compute_gflops: d.f64()?,
+        })
     }
 }
 

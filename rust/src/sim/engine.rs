@@ -13,6 +13,7 @@
 use crate::dnn::dynamic::DynamicWorkload;
 use crate::dnn::{ModelGraph, StepTrace, TraceEvent};
 use crate::mem::DataObject;
+use crate::sim::checkpoint::{CheckpointCtl, CheckpointError, Dec, Enc, RunHalt};
 use crate::sim::device::Tier;
 use crate::sim::machine::Machine;
 use crate::sim::replay::{CompiledOpKind, CompiledTrace};
@@ -108,6 +109,21 @@ pub trait Policy: Send {
     fn on_divergence(&mut self, _g: &ModelGraph, _trace: &StepTrace, _m: &Machine) -> f64 {
         0.0
     }
+
+    /// Serialize every piece of mutable policy state into a checkpoint
+    /// payload (`sim/checkpoint.rs`). The contract is total: a policy
+    /// reconstructed via [`crate::api::PolicyKind::construct`] and fed
+    /// these bytes through [`Policy::load_state`] must be
+    /// bit-indistinguishable from the original for the remainder of the
+    /// run. Stateless policies (the default) write nothing.
+    fn save_state(&self, _e: &mut Enc) {}
+
+    /// Restore state written by [`Policy::save_state`]. Called exactly
+    /// once, on a freshly constructed policy, before any other callback.
+    /// The default (for stateless policies) reads nothing.
+    fn load_state(&mut self, _d: &mut Dec) -> Result<(), CheckpointError> {
+        Ok(())
+    }
 }
 
 /// What [`Engine::run_dynamic`]'s phase detector observed: divergence
@@ -141,6 +157,26 @@ impl DivergenceStats {
         } else {
             self.invalidations as f64 / self.seals as f64
         }
+    }
+
+    pub(crate) fn encode(&self, e: &mut Enc) {
+        e.bool(self.detector);
+        e.u64(self.divergences);
+        e.u64(self.reprofiles);
+        e.u64(self.stale_steps);
+        e.u64(self.seals);
+        e.u64(self.invalidations);
+    }
+
+    pub(crate) fn decode(d: &mut Dec<'_>) -> Result<DivergenceStats, CheckpointError> {
+        Ok(DivergenceStats {
+            detector: d.bool()?,
+            divergences: d.u64()?,
+            reprofiles: d.u64()?,
+            stale_steps: d.u64()?,
+            seals: d.u64()?,
+            invalidations: d.u64()?,
+        })
     }
 }
 
@@ -186,6 +222,24 @@ pub struct StepStats {
     pub pages_out: u64,
 }
 
+impl StepStats {
+    pub(crate) fn encode(&self, e: &mut Enc) {
+        e.u32(self.step);
+        e.f64(self.time_ns);
+        e.u64(self.pages_in);
+        e.u64(self.pages_out);
+    }
+
+    pub(crate) fn decode(d: &mut Dec<'_>) -> Result<StepStats, CheckpointError> {
+        Ok(StepStats {
+            step: d.u32()?,
+            time_ns: d.f64()?,
+            pages_in: d.u64()?,
+            pages_out: d.u64()?,
+        })
+    }
+}
+
 /// Result of a training run.
 #[derive(Clone, Debug)]
 pub struct TrainResult {
@@ -204,6 +258,48 @@ pub struct TrainResult {
     /// Steps replayed by applying the sealed schedule's delta instead
     /// of running the live loop.
     pub sealed_steps: u32,
+}
+
+impl TrainResult {
+    pub(crate) fn encode(&self, e: &mut Enc) {
+        e.str(&self.policy);
+        e.str(&self.model);
+        e.len(self.steps.len());
+        for s in &self.steps {
+            s.encode(e);
+        }
+        e.f64(self.total_time_ns);
+        e.u64(self.peak_fast_bytes);
+        e.u64(self.peak_total_bytes);
+        e.u64(self.pages_migrated_in);
+        e.u64(self.pages_migrated_out);
+        e.u64(self.alloc_spills);
+        e.opt_u32(self.steady_from_step);
+        e.u32(self.sealed_steps);
+    }
+
+    pub(crate) fn decode(d: &mut Dec<'_>) -> Result<TrainResult, CheckpointError> {
+        let policy = d.str()?;
+        let model = d.str()?;
+        let n = d.len()?;
+        let mut steps = Vec::with_capacity(n);
+        for _ in 0..n {
+            steps.push(StepStats::decode(d)?);
+        }
+        Ok(TrainResult {
+            policy,
+            model,
+            steps,
+            total_time_ns: d.f64()?,
+            peak_fast_bytes: d.u64()?,
+            peak_total_bytes: d.u64()?,
+            pages_migrated_in: d.u64()?,
+            pages_migrated_out: d.u64()?,
+            alloc_spills: d.u64()?,
+            steady_from_step: d.opt_u32()?,
+            sealed_steps: d.u32()?,
+        })
+    }
 }
 
 impl TrainResult {
@@ -299,18 +395,70 @@ impl Engine {
         machine: &mut Machine,
         policy: &mut dyn Policy,
     ) -> TrainResult {
-        machine.reserve_objects(compiled.n_objects);
-        // Allocate persistent objects (weights, optimizer state) once.
-        for &(oid, pages) in &compiled.persistent {
-            let pref = policy.place(&graph.objects[oid.index()], machine);
-            machine.alloc(oid, pages, pref);
+        match self.run_compiled_checkpointed(graph, compiled, machine, policy, None, None) {
+            Ok(r) => r,
+            // With no resume payload to decode and no controller to
+            // write through, the checkpointed loop has no error source.
+            Err(_) => unreachable!("checkpoint-free run cannot halt"),
+        }
+    }
+
+    /// [`Engine::run_compiled`] with checkpoint/restore threaded in.
+    ///
+    /// `resume` is a payload produced by a previous run's boundary
+    /// write (the `Checkpoint::payload` of a `KIND_SOLO` file): the
+    /// prologue is skipped and machine, sealer, per-step stats, and
+    /// policy state are restored to the exact bits they held at that
+    /// step boundary. `ckpt` is polled after **every** completed step
+    /// (sealed or live); it serializes when a checkpoint is due and
+    /// converts a pending interrupt into a final checkpoint plus
+    /// [`RunHalt::Interrupted`]. A resumed run continues the surviving
+    /// checkpoint cadence, so kill + resume writes the same remaining
+    /// files an uninterrupted run would.
+    pub fn run_compiled_checkpointed(
+        &self,
+        graph: &ModelGraph,
+        compiled: &CompiledTrace,
+        machine: &mut Machine,
+        policy: &mut dyn Policy,
+        resume: Option<&[u8]>,
+        ckpt: Option<&CheckpointCtl>,
+    ) -> Result<TrainResult, RunHalt> {
+        let mut steps;
+        let mut sealer;
+        let mut steady_from: Option<u32>;
+        let mut sealed_steps;
+        let start_step;
+        match resume {
+            Some(bytes) => {
+                let st = decode_run_state(bytes, false).map_err(RunHalt::Checkpoint)?;
+                *machine = st.machine;
+                let mut pd = Dec::new(&st.policy_state);
+                policy.load_state(&mut pd).map_err(RunHalt::Checkpoint)?;
+                pd.done().map_err(RunHalt::Checkpoint)?;
+                steps = st.steps;
+                sealer = st.sealer;
+                steady_from = st.steady_from;
+                sealed_steps = st.sealed_steps;
+                start_step = st.step;
+            }
+            None => {
+                machine.reserve_objects(compiled.n_objects);
+                // Allocate persistent objects (weights, optimizer
+                // state) once.
+                for &(oid, pages) in &compiled.persistent {
+                    let pref = policy.place(&graph.objects[oid.index()], machine);
+                    machine.alloc(oid, pages, pref);
+                }
+                steps = Vec::with_capacity(self.config.steps as usize);
+                sealer = Sealer::new(self.config.seal_steady);
+                steady_from = None;
+                sealed_steps = 0u32;
+                start_step = 0;
+            }
         }
 
-        let mut steps = Vec::with_capacity(self.config.steps as usize);
-        let mut sealer = Sealer::new(self.config.seal_steady);
-        let mut steady_from: Option<u32> = None;
-        let mut sealed_steps = 0u32;
-        for step in 0..self.config.steps {
+        for step in start_step..self.config.steps {
             // Tier 3: a sealed schedule replays the step as a delta —
             // one clock fold, three counter bumps, one stats push.
             if let Some(s) = sealer.sealed() {
@@ -330,42 +478,49 @@ impl Engine {
                     steady_from = Some(step);
                 }
                 sealed_steps += 1;
-                continue;
+            } else {
+                // Tier 2: the live compiled loop, optionally recording.
+                let profiling = step < self.config.profiling_steps;
+                machine.fold_step();
+                let in0 = machine.stats.pages_in;
+                let out0 = machine.stats.pages_out;
+                let sp0 = machine.stats.alloc_spills;
+                let mut rec = (sealer.recording() && !profiling && policy.is_steady(step))
+                    .then(|| StepRecorder::new(compiled.layers.len()));
+                policy.step_start(step, machine, graph);
+                for lt in &compiled.layers {
+                    replay_layer(compiled, lt, graph, machine, policy, profiling, rec.as_mut());
+                }
+                policy.step_end(step, machine, graph);
+                let time_ns = machine.step_elapsed_ns();
+                let pages_in = machine.stats.pages_in - in0;
+                let pages_out = machine.stats.pages_out - out0;
+                steps.push(StepStats { step, time_ns, pages_in, pages_out });
+                match rec {
+                    Some(r) => sealer.offer(r.finish(
+                        time_ns,
+                        pages_in,
+                        pages_out,
+                        machine.stats.alloc_spills - sp0,
+                        machine.steady_snapshot(),
+                    )),
+                    None => sealer.observe_unsteady(),
+                }
             }
-
-            // Tier 2: the live compiled loop, optionally recording.
-            let profiling = step < self.config.profiling_steps;
-            machine.fold_step();
-            let in0 = machine.stats.pages_in;
-            let out0 = machine.stats.pages_out;
-            let sp0 = machine.stats.alloc_spills;
-            let mut rec = (sealer.recording() && !profiling && policy.is_steady(step))
-                .then(|| StepRecorder::new(compiled.layers.len()));
-            policy.step_start(step, machine, graph);
-            for lt in &compiled.layers {
-                replay_layer(compiled, lt, graph, machine, policy, profiling, rec.as_mut());
-            }
-            policy.step_end(step, machine, graph);
-            let time_ns = machine.step_elapsed_ns();
-            let pages_in = machine.stats.pages_in - in0;
-            let pages_out = machine.stats.pages_out - out0;
-            steps.push(StepStats { step, time_ns, pages_in, pages_out });
-            match rec {
-                Some(r) => sealer.offer(r.finish(
-                    time_ns,
-                    pages_in,
-                    pages_out,
-                    machine.stats.alloc_spills - sp0,
-                    machine.steady_snapshot(),
-                )),
-                None => sealer.observe_unsteady(),
+            if let Some(c) = ckpt {
+                let m: &Machine = machine;
+                let p: &dyn Policy = policy;
+                let (se, st) = (&sealer, &steps);
+                c.boundary(u64::from(step + 1), || {
+                    encode_run_state(step + 1, m, se, steady_from, sealed_steps, st, p, None)
+                })?;
             }
         }
         if sealed_steps > 0 {
             policy.on_sealed_replay(sealed_steps);
         }
 
-        self.package(graph, machine, policy, steps, steady_from, sealed_steps)
+        Ok(self.package(graph, machine, policy, steps, steady_from, sealed_steps))
     }
 
     /// Simulate a [`DynamicWorkload`] — a step stream that changes phase
@@ -404,12 +559,37 @@ impl Engine {
         policy: &mut dyn Policy,
         detector: bool,
     ) -> (TrainResult, DivergenceStats) {
+        match self.run_dynamic_checkpointed(workload, machine, policy, detector, None, None) {
+            Ok(r) => r,
+            // With no resume payload to decode and no controller to
+            // write through, the checkpointed loop has no error source.
+            Err(_) => unreachable!("checkpoint-free run cannot halt"),
+        }
+    }
+
+    /// [`Engine::run_dynamic`] with checkpoint/restore threaded in —
+    /// the same contract as [`Engine::run_compiled_checkpointed`], plus
+    /// the divergence-detector state ([`DivergenceStats`] counters and
+    /// the previous step's phase fingerprint) rides in the payload so a
+    /// resume lands mid-phase with the detector armed exactly as the
+    /// uninterrupted run would have it.
+    pub fn run_dynamic_checkpointed(
+        &self,
+        workload: &DynamicWorkload,
+        machine: &mut Machine,
+        policy: &mut dyn Policy,
+        detector: bool,
+        resume: Option<&[u8]>,
+        ckpt: Option<&CheckpointCtl>,
+    ) -> Result<(TrainResult, DivergenceStats), RunHalt> {
         assert!(
             workload.step_variant.len() >= self.config.steps as usize,
             "dynamic workload plans {} steps but config asks for {}",
             workload.step_variant.len(),
             self.config.steps
         );
+        // Variant traces are recompiled, never checkpointed: they are a
+        // pure function of the (fingerprinted) workload and spec.
         let compiled: Vec<CompiledTrace> = workload
             .variants
             .iter()
@@ -422,31 +602,61 @@ impl Engine {
                 )
             })
             .collect();
-        let n_objects = compiled.iter().map(|c| c.n_objects).max().unwrap_or(0);
-        machine.reserve_objects(n_objects);
-        // All variants share the persistent set (enforced by
-        // `DynamicWorkload::from_parts`), so the prologue allocates it
-        // once from the first step's variant, exactly like the static
-        // path.
         let base = workload.step_variant[0] as usize;
-        {
-            let g0 = &workload.variants[base].graph;
-            for &(oid, pages) in &compiled[base].persistent {
-                let pref = policy.place(&g0.objects[oid.index()], machine);
-                machine.alloc(oid, pages, pref);
+
+        let mut steps;
+        let mut sealer;
+        let mut steady_from: Option<u32>;
+        let mut sealed_steps;
+        let mut stats;
+        let mut prev_fp;
+        let start_step;
+        match resume {
+            Some(bytes) => {
+                let st = decode_run_state(bytes, true).map_err(RunHalt::Checkpoint)?;
+                *machine = st.machine;
+                let mut pd = Dec::new(&st.policy_state);
+                policy.load_state(&mut pd).map_err(RunHalt::Checkpoint)?;
+                pd.done().map_err(RunHalt::Checkpoint)?;
+                steps = st.steps;
+                sealer = st.sealer;
+                steady_from = st.steady_from;
+                sealed_steps = st.sealed_steps;
+                // Presence is guaranteed by `decode_run_state(_, true)`.
+                let (dstats, dfp) = st.dynamic.ok_or(CheckpointError::Malformed(
+                    "dynamic state missing",
+                ))
+                .map_err(RunHalt::Checkpoint)?;
+                stats = dstats;
+                prev_fp = dfp;
+                start_step = st.step;
+            }
+            None => {
+                let n_objects = compiled.iter().map(|c| c.n_objects).max().unwrap_or(0);
+                machine.reserve_objects(n_objects);
+                // All variants share the persistent set (enforced by
+                // `DynamicWorkload::from_parts`), so the prologue
+                // allocates it once from the first step's variant,
+                // exactly like the static path.
+                let g0 = &workload.variants[base].graph;
+                for &(oid, pages) in &compiled[base].persistent {
+                    let pref = policy.place(&g0.objects[oid.index()], machine);
+                    machine.alloc(oid, pages, pref);
+                }
+                steps = Vec::with_capacity(self.config.steps as usize);
+                sealer = Sealer::new(self.config.seal_steady);
+                steady_from = None;
+                sealed_steps = 0u32;
+                stats = DivergenceStats {
+                    detector,
+                    ..DivergenceStats::default()
+                };
+                prev_fp = workload.step_variant[0];
+                start_step = 0;
             }
         }
 
-        let mut steps = Vec::with_capacity(self.config.steps as usize);
-        let mut sealer = Sealer::new(self.config.seal_steady);
-        let mut steady_from: Option<u32> = None;
-        let mut sealed_steps = 0u32;
-        let mut stats = DivergenceStats {
-            detector,
-            ..DivergenceStats::default()
-        };
-        let mut prev_fp = workload.step_variant[0];
-        for step in 0..self.config.steps {
+        for step in start_step..self.config.steps {
             let fp = workload.step_variant[step as usize];
             let vi = fp as usize;
             let graph = &workload.variants[vi].graph;
@@ -465,6 +675,7 @@ impl Engine {
 
             // Tier 3: sealed replay, but only when the sealed record
             // belongs to the live phase.
+            let mut replayed = false;
             if let Some(s) = sealer.sealed() {
                 if sealer.sealed_fp() == Some(fp) {
                     machine.apply_sealed_step(
@@ -483,48 +694,72 @@ impl Engine {
                         steady_from = Some(step);
                     }
                     sealed_steps += 1;
-                    continue;
+                    replayed = true;
+                } else {
+                    // Detector off (the detector always invalidates
+                    // before reaching here): a schedule for another
+                    // phase is still sealed, so the runtime is
+                    // operating on stale trust.
+                    stats.stale_steps += 1;
                 }
-                // Detector off (the detector always invalidates before
-                // reaching here): a schedule for another phase is still
-                // sealed, so the runtime is operating on stale trust.
-                stats.stale_steps += 1;
             }
 
-            // Tier 2: the live compiled loop, optionally recording.
-            let profiling = step < self.config.profiling_steps;
-            machine.fold_step();
-            let in0 = machine.stats.pages_in;
-            let out0 = machine.stats.pages_out;
-            let sp0 = machine.stats.alloc_spills;
-            if reprofile_ns > 0.0 {
-                // The detector's re-profile runs on the critical path of
-                // the divergent step, before any of its work.
-                machine.exec(reprofile_ns);
-            }
-            let mut rec = (sealer.recording() && !profiling && policy.is_steady(step))
-                .then(|| StepRecorder::new(ct.layers.len()));
-            policy.step_start(step, machine, graph);
-            for lt in &ct.layers {
-                replay_layer(ct, lt, graph, machine, policy, profiling, rec.as_mut());
-            }
-            policy.step_end(step, machine, graph);
-            let time_ns = machine.step_elapsed_ns();
-            let pages_in = machine.stats.pages_in - in0;
-            let pages_out = machine.stats.pages_out - out0;
-            steps.push(StepStats { step, time_ns, pages_in, pages_out });
-            match rec {
-                Some(r) => sealer.offer_at(
-                    fp,
-                    r.finish(
-                        time_ns,
-                        pages_in,
-                        pages_out,
-                        machine.stats.alloc_spills - sp0,
-                        machine.steady_snapshot(),
+            if !replayed {
+                // Tier 2: the live compiled loop, optionally recording.
+                let profiling = step < self.config.profiling_steps;
+                machine.fold_step();
+                let in0 = machine.stats.pages_in;
+                let out0 = machine.stats.pages_out;
+                let sp0 = machine.stats.alloc_spills;
+                if reprofile_ns > 0.0 {
+                    // The detector's re-profile runs on the critical
+                    // path of the divergent step, before any of its
+                    // work.
+                    machine.exec(reprofile_ns);
+                }
+                let mut rec = (sealer.recording() && !profiling && policy.is_steady(step))
+                    .then(|| StepRecorder::new(ct.layers.len()));
+                policy.step_start(step, machine, graph);
+                for lt in &ct.layers {
+                    replay_layer(ct, lt, graph, machine, policy, profiling, rec.as_mut());
+                }
+                policy.step_end(step, machine, graph);
+                let time_ns = machine.step_elapsed_ns();
+                let pages_in = machine.stats.pages_in - in0;
+                let pages_out = machine.stats.pages_out - out0;
+                steps.push(StepStats { step, time_ns, pages_in, pages_out });
+                match rec {
+                    Some(r) => sealer.offer_at(
+                        fp,
+                        r.finish(
+                            time_ns,
+                            pages_in,
+                            pages_out,
+                            machine.stats.alloc_spills - sp0,
+                            machine.steady_snapshot(),
+                        ),
                     ),
-                ),
-                None => sealer.observe_unsteady(),
+                    None => sealer.observe_unsteady(),
+                }
+            }
+
+            if let Some(c) = ckpt {
+                let m: &Machine = machine;
+                let p: &dyn Policy = policy;
+                let (se, st) = (&sealer, &steps);
+                let dy = (stats, fp);
+                c.boundary(u64::from(step + 1), || {
+                    encode_run_state(
+                        step + 1,
+                        m,
+                        se,
+                        steady_from,
+                        sealed_steps,
+                        st,
+                        p,
+                        Some(dy),
+                    )
+                })?;
             }
         }
         if sealed_steps > 0 {
@@ -541,7 +776,7 @@ impl Engine {
             steady_from,
             sealed_steps,
         );
-        (result, stats)
+        Ok((result, stats))
     }
 
     /// The pre-compilation event-by-event replay, kept verbatim as the
@@ -656,6 +891,92 @@ impl Engine {
             steps,
         }
     }
+}
+
+/// Decoded mid-run engine state (the body of a `KIND_SOLO` or
+/// `KIND_DYNAMIC` checkpoint payload).
+struct RunState {
+    step: u32,
+    machine: Machine,
+    sealer: Sealer,
+    steady_from: Option<u32>,
+    sealed_steps: u32,
+    steps: Vec<StepStats>,
+    dynamic: Option<(DivergenceStats, u32)>,
+    policy_state: Vec<u8>,
+}
+
+/// Serialize the solo/dynamic loop state at a step boundary. `step` is
+/// the number of completed steps (== the next step index to run);
+/// `dynamic` carries the detector counters plus the previous step's
+/// phase fingerprint for `run_dynamic` checkpoints.
+#[allow(clippy::too_many_arguments)]
+fn encode_run_state(
+    step: u32,
+    machine: &Machine,
+    sealer: &Sealer,
+    steady_from: Option<u32>,
+    sealed_steps: u32,
+    steps: &[StepStats],
+    policy: &dyn Policy,
+    dynamic: Option<(DivergenceStats, u32)>,
+) -> Vec<u8> {
+    let mut e = Enc::new();
+    e.u32(step);
+    machine.encode(&mut e);
+    sealer.encode(&mut e);
+    e.opt_u32(steady_from);
+    e.u32(sealed_steps);
+    e.len(steps.len());
+    for s in steps {
+        s.encode(&mut e);
+    }
+    if let Some((stats, prev_fp)) = dynamic {
+        stats.encode(&mut e);
+        e.u32(prev_fp);
+    }
+    // Policy state rides as a nested length-prefixed blob so the
+    // restore side can hand the policy exactly its own bytes and
+    // `done()`-check that it consumed them all.
+    let mut pe = Enc::new();
+    policy.save_state(&mut pe);
+    e.bytes(&pe.finish());
+    e.finish()
+}
+
+/// Inverse of [`encode_run_state`]; `dynamic` selects the
+/// `KIND_DYNAMIC` layout.
+fn decode_run_state(bytes: &[u8], dynamic: bool) -> Result<RunState, CheckpointError> {
+    let mut d = Dec::new(bytes);
+    let step = d.u32()?;
+    let machine = Machine::decode(&mut d)?;
+    let sealer = Sealer::decode(&mut d)?;
+    let steady_from = d.opt_u32()?;
+    let sealed_steps = d.u32()?;
+    let n = d.len()?;
+    let mut steps = Vec::with_capacity(n);
+    for _ in 0..n {
+        steps.push(StepStats::decode(&mut d)?);
+    }
+    let dyn_state = if dynamic {
+        let stats = DivergenceStats::decode(&mut d)?;
+        let prev_fp = d.u32()?;
+        Some((stats, prev_fp))
+    } else {
+        None
+    };
+    let policy_state = d.bytes()?.to_vec();
+    d.done()?;
+    Ok(RunState {
+        step,
+        machine,
+        sealer,
+        steady_from,
+        sealed_steps,
+        steps,
+        dynamic: dyn_state,
+        policy_state,
+    })
 }
 
 /// Replay one compiled layer: policy callbacks, the op stream, the

@@ -35,6 +35,7 @@
 //! [`Admission`]: crate::sim::fleet::Admission
 //! [`Rng::stream`]: crate::util::rng::Rng::stream
 
+use crate::sim::checkpoint::{CheckpointError, Dec, Enc};
 use crate::util::rng::Rng;
 
 /// RNG substream label for fault plans. Faults draw from
@@ -82,6 +83,51 @@ impl FaultKind {
             FaultKind::LaneStall => "stall",
             FaultKind::Crash => "crash",
         }
+    }
+
+    pub(crate) fn encode(&self, e: &mut Enc) {
+        match *self {
+            FaultKind::BandwidthDegradation { factor, duration_steps } => {
+                e.u8(0);
+                e.f64(factor);
+                e.u32(duration_steps);
+            }
+            FaultKind::FastCapacityLoss { fraction } => {
+                e.u8(1);
+                e.f64(fraction);
+            }
+            FaultKind::LaneStall => e.u8(2),
+            FaultKind::Crash => e.u8(3),
+        }
+    }
+
+    pub(crate) fn decode(d: &mut Dec<'_>) -> Result<FaultKind, CheckpointError> {
+        Ok(match d.u8()? {
+            0 => FaultKind::BandwidthDegradation {
+                factor: d.f64()?,
+                duration_steps: d.u32()?,
+            },
+            1 => FaultKind::FastCapacityLoss { fraction: d.f64()? },
+            2 => FaultKind::LaneStall,
+            3 => FaultKind::Crash,
+            _ => return Err(CheckpointError::Malformed("unknown fault kind tag")),
+        })
+    }
+}
+
+impl FaultEvent {
+    pub(crate) fn encode(&self, e: &mut Enc) {
+        e.u64(self.machine as u64);
+        e.u64(self.at_step);
+        self.kind.encode(e);
+    }
+
+    pub(crate) fn decode(d: &mut Dec<'_>) -> Result<FaultEvent, CheckpointError> {
+        Ok(FaultEvent {
+            machine: d.u64()? as usize,
+            at_step: d.u64()?,
+            kind: FaultKind::decode(d)?,
+        })
     }
 }
 
@@ -282,6 +328,30 @@ impl FaultInjector {
     pub fn remaining(&self) -> usize {
         self.events.len() - self.next
     }
+
+    /// Serialize the cursor: the machine's event slice, the delivery
+    /// position, and the open degradation window.
+    pub(crate) fn encode(&self, e: &mut Enc) {
+        e.len(self.events.len());
+        for ev in &self.events {
+            ev.encode(e);
+        }
+        e.u64(self.next as u64);
+        e.opt_u64(self.restore_at);
+    }
+
+    pub(crate) fn decode(d: &mut Dec<'_>) -> Result<FaultInjector, CheckpointError> {
+        let n = d.len()?;
+        let mut events = Vec::with_capacity(n);
+        for _ in 0..n {
+            events.push(FaultEvent::decode(d)?);
+        }
+        Ok(FaultInjector {
+            events,
+            next: d.u64()? as usize,
+            restore_at: d.opt_u64()?,
+        })
+    }
 }
 
 /// Per-fault recovery stopwatch: a fault *fires* at some machine step;
@@ -326,6 +396,36 @@ impl RecoveryTracker {
     /// Recoveries still waiting for a re-seal.
     pub fn open_count(&self) -> usize {
         self.open.len()
+    }
+
+    pub(crate) fn encode(&self, e: &mut Enc) {
+        e.len(self.open.len());
+        for &s in &self.open {
+            e.u64(s);
+        }
+        e.len(self.recovery_steps.len());
+        for &s in &self.recovery_steps {
+            e.u64(s);
+        }
+        e.u64(self.reseals);
+    }
+
+    pub(crate) fn decode(d: &mut Dec<'_>) -> Result<RecoveryTracker, CheckpointError> {
+        let n = d.len()?;
+        let mut open = Vec::with_capacity(n);
+        for _ in 0..n {
+            open.push(d.u64()?);
+        }
+        let n = d.len()?;
+        let mut recovery_steps = Vec::with_capacity(n);
+        for _ in 0..n {
+            recovery_steps.push(d.u64()?);
+        }
+        Ok(RecoveryTracker {
+            open,
+            recovery_steps,
+            reseals: d.u64()?,
+        })
     }
 }
 
@@ -390,6 +490,52 @@ impl DegradationReport {
     /// Worst recovery time in machine steps.
     pub fn max_recovery_steps(&self) -> u64 {
         self.recovery_steps.iter().copied().max().unwrap_or(0)
+    }
+
+    pub(crate) fn encode(&self, e: &mut Enc) {
+        e.u64(self.injected);
+        e.u64(self.degradations);
+        e.u64(self.capacity_losses);
+        e.u64(self.lane_stalls);
+        e.u64(self.crashes);
+        e.u64(self.promote_pages_dropped);
+        e.u64(self.seal_invalidations);
+        e.u64(self.reseals);
+        e.len(self.recovery_steps.len());
+        for &s in &self.recovery_steps {
+            e.u64(s);
+        }
+        e.u64(self.tenants_displaced);
+        e.opt_f64(self.slowdown_vs_fault_free);
+    }
+
+    pub(crate) fn decode(d: &mut Dec<'_>) -> Result<DegradationReport, CheckpointError> {
+        let injected = d.u64()?;
+        let degradations = d.u64()?;
+        let capacity_losses = d.u64()?;
+        let lane_stalls = d.u64()?;
+        let crashes = d.u64()?;
+        let promote_pages_dropped = d.u64()?;
+        let seal_invalidations = d.u64()?;
+        let reseals = d.u64()?;
+        let n = d.len()?;
+        let mut recovery_steps = Vec::with_capacity(n);
+        for _ in 0..n {
+            recovery_steps.push(d.u64()?);
+        }
+        Ok(DegradationReport {
+            injected,
+            degradations,
+            capacity_losses,
+            lane_stalls,
+            crashes,
+            promote_pages_dropped,
+            seal_invalidations,
+            reseals,
+            recovery_steps,
+            tenants_displaced: d.u64()?,
+            slowdown_vs_fault_free: d.opt_f64()?,
+        })
     }
 }
 

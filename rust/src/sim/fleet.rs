@@ -54,9 +54,10 @@
 //! machine* the interleaving is exactly the cluster layer's, which is
 //! what the single-machine bit-identity test pins.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 
 use crate::api::batch::par_map_mut;
+use crate::sim::checkpoint::{CheckpointCtl, CheckpointError, Dec, Enc, RunHalt};
 use crate::sim::cluster::{
     arbitration_shares, review_priority, ActiveTenant, Arbitration, ClusterTenant, MachineFaults,
     TenantRunResult,
@@ -64,6 +65,12 @@ use crate::sim::cluster::{
 use crate::sim::device::Tier;
 use crate::sim::fault::{DegradationReport, FaultPlan};
 use crate::PAGE_SIZE;
+
+/// One-shot tenant constructor from admitted share — the type of
+/// [`FleetArrival::build`]. Checkpoints never serialize these: a resumed
+/// run regenerates the arrivals (they are a pure function of the fleet
+/// spec) and re-matches closures to serialized offers by job id.
+type TenantBuild = Box<dyn FnOnce(u64) -> ClusterTenant + Send>;
 
 /// What the fleet does with a job whose declared fast-memory demand
 /// fits on no machine.
@@ -370,6 +377,56 @@ struct Offer {
     kind: OfferKind,
 }
 
+impl Offer {
+    /// A `New` offer serializes no tenant — its build closure cannot be
+    /// serialized and does not need to be: resume re-matches the job id
+    /// against the regenerated arrivals. A `Resume` offer carries the
+    /// displaced tenant's full state (plus its current share, the
+    /// skeleton-construction argument).
+    fn encode(&self, e: &mut Enc) {
+        e.u64(self.id);
+        e.f64(self.first_arrival_ns);
+        e.f64(self.offered_ns);
+        e.u64(self.demand_bytes);
+        e.u64(self.peak_bytes);
+        match &self.kind {
+            OfferKind::New(_) => e.u8(0),
+            OfferKind::Resume(t) => {
+                e.u8(1);
+                e.u64(t.share);
+                t.encode(e);
+            }
+        }
+    }
+
+    fn restore(
+        builds: &mut HashMap<u64, TenantBuild>,
+        d: &mut Dec<'_>,
+    ) -> Result<Offer, CheckpointError> {
+        let id = d.u64()?;
+        let first_arrival_ns = d.f64()?;
+        let offered_ns = d.f64()?;
+        let demand_bytes = d.u64()?;
+        let peak_bytes = d.u64()?;
+        let kind = match d.u8()? {
+            0 => OfferKind::New(
+                builds
+                    .remove(&id)
+                    .ok_or(CheckpointError::Malformed("checkpoint references an unknown job id"))?,
+            ),
+            1 => {
+                let share = d.u64()?;
+                let build = builds
+                    .remove(&id)
+                    .ok_or(CheckpointError::Malformed("checkpoint references an unknown job id"))?;
+                OfferKind::Resume(Box::new(ActiveTenant::restore(build(share), d)?))
+            }
+            _ => return Err(CheckpointError::Malformed("unknown offer kind tag")),
+        };
+        Ok(Offer { id, first_arrival_ns, offered_ns, demand_bytes, peak_bytes, kind })
+    }
+}
+
 /// One machine of the pool: a shared fast tier plus the cluster layer's
 /// driver state for its current residents.
 struct FleetMachine {
@@ -552,6 +609,93 @@ impl FleetMachine {
             crashed: self.crashed,
         }
     }
+
+    /// Serialize the machine: lifetime counters, the fault layer, and
+    /// every resident (join metadata + full tenant cursor). The
+    /// arbitration policy is a config input, not state.
+    fn encode(&self, e: &mut Enc) {
+        e.u64(self.fast_total);
+        e.u64(self.quantum);
+        e.u64(self.committed);
+        e.u64(self.tenants_served);
+        e.u64(self.peak_residents as u64);
+        e.u64(self.peak_share_bytes);
+        e.u64(self.peak_committed_bytes);
+        e.bool(self.retired);
+        e.bool(self.crashed);
+        match &self.faults {
+            Some(f) => {
+                e.bool(true);
+                f.encode(e);
+            }
+            None => e.bool(false),
+        }
+        e.len(self.tenants.len());
+        for (t, m) in self.tenants.iter().zip(&self.meta) {
+            e.u64(m.id);
+            e.f64(m.arrival_ns);
+            e.f64(m.join_ns);
+            e.u64(m.demand);
+            e.u64(m.peak);
+            e.u64(t.share);
+            t.encode(e);
+        }
+    }
+
+    fn restore(
+        arbitration: Arbitration,
+        cfg_has_faults: bool,
+        builds: &mut HashMap<u64, TenantBuild>,
+        d: &mut Dec<'_>,
+    ) -> Result<FleetMachine, CheckpointError> {
+        let fast_total = d.u64()?;
+        let quantum = d.u64()?;
+        let committed = d.u64()?;
+        let tenants_served = d.u64()?;
+        let peak_residents = d.u64()? as usize;
+        let peak_share_bytes = d.u64()?;
+        let peak_committed_bytes = d.u64()?;
+        let retired = d.bool()?;
+        let crashed = d.bool()?;
+        let faults = if d.bool()? { Some(MachineFaults::decode(d)?) } else { None };
+        if faults.is_some() != cfg_has_faults {
+            // A checkpoint from a faulted run resumed with faults off
+            // (or vice versa) would silently drop — or fabricate — the
+            // fault layer; reject it instead.
+            return Err(CheckpointError::Malformed("fault plan presence mismatch"));
+        }
+        let n = d.len()?;
+        let mut tenants = Vec::with_capacity(n);
+        let mut meta = Vec::with_capacity(n);
+        for _ in 0..n {
+            let id = d.u64()?;
+            let arrival_ns = d.f64()?;
+            let join_ns = d.f64()?;
+            let demand = d.u64()?;
+            let peak = d.u64()?;
+            let share = d.u64()?;
+            let build = builds
+                .remove(&id)
+                .ok_or(CheckpointError::Malformed("checkpoint references an unknown job id"))?;
+            tenants.push(ActiveTenant::restore(build(share), d)?);
+            meta.push(ResidentMeta { id, arrival_ns, join_ns, demand, peak });
+        }
+        Ok(FleetMachine {
+            fast_total,
+            arbitration,
+            quantum,
+            committed,
+            tenants,
+            meta,
+            tenants_served,
+            peak_residents,
+            peak_share_bytes,
+            peak_committed_bytes,
+            retired,
+            faults,
+            crashed,
+        })
+    }
 }
 
 /// Best machine for a job of `demand` bytes: the non-retired machine
@@ -608,43 +752,288 @@ pub fn run_fleet(
     arrivals: Vec<FleetArrival>,
     cfg: FleetConfig,
 ) -> Result<FleetSimResult, PoolExhausted> {
-    let mut arrivals = arrivals;
-    arrivals.sort_by(|a, b| a.arrival_ns.total_cmp(&b.arrival_ns).then(a.id.cmp(&b.id)));
-    let n_machines = cfg.machines.max(1);
-    let mut machines: Vec<FleetMachine> = (0..n_machines)
-        .map(|i| {
-            let faults = cfg.faults.as_ref().map(|p| MachineFaults::new(p, i));
-            FleetMachine::new(cfg.machine_fast_bytes, cfg.arbitration, faults)
-        })
-        .collect();
-    let threads = cfg.threads.max(1);
+    match run_fleet_ckpt(arrivals, cfg, None, None) {
+        Ok(r) => r,
+        // No checkpoint controller and no resume bytes: the loop has no
+        // halt path.
+        Err(_) => unreachable!("checkpoint-free fleet run cannot halt"),
+    }
+}
 
-    let mut pending: VecDeque<Offer> = arrivals
-        .into_iter()
-        .map(|a| Offer {
-            id: a.id,
-            first_arrival_ns: a.arrival_ns,
-            offered_ns: a.arrival_ns,
-            demand_bytes: a.demand_bytes,
-            peak_bytes: a.peak_bytes,
-            kind: OfferKind::New(a.build),
-        })
-        .collect();
-    let mut queue: VecDeque<Offer> = VecDeque::new();
-    let mut completed: Vec<FleetDeparture> = Vec::new();
-    let mut rejected: Vec<u64> = Vec::new();
-    let mut samples: Vec<UtilSample> = Vec::new();
-    let mut spilled = 0u64;
-    let mut queued_jobs = 0u64;
-    let mut peak_queue_depth = 0usize;
-    let mut total_queue_wait_ns = 0.0f64;
-    let mut scale_ups = 0u64;
-    let mut scale_downs = 0u64;
-    let mut grow_streak = 0u32;
-    let mut shrink_streak = 0u32;
-    let mut fleet_now = 0.0f64;
-    let mut fleet_events = 0u64;
-    let mut tenants_displaced = 0u64;
+/// The fleet driver's complete mutable state between event rounds —
+/// what a fleet checkpoint serializes. Everything else the loop touches
+/// is a pure function of the config and arrivals (which the resume side
+/// regenerates and must pass again; the header's spec fingerprint
+/// enforces that they match).
+struct FleetDriverState {
+    machines: Vec<FleetMachine>,
+    pending: VecDeque<Offer>,
+    queue: VecDeque<Offer>,
+    completed: Vec<FleetDeparture>,
+    rejected: Vec<u64>,
+    samples: Vec<UtilSample>,
+    spilled: u64,
+    queued_jobs: u64,
+    peak_queue_depth: usize,
+    total_queue_wait_ns: f64,
+    scale_ups: u64,
+    scale_downs: u64,
+    grow_streak: u32,
+    shrink_streak: u32,
+    fleet_now: f64,
+    fleet_events: u64,
+    tenants_displaced: u64,
+}
+
+/// Serialize the driver state at an event-round boundary (between
+/// rounds every machine is quiescent at its horizon, though individual
+/// tenants may sit mid-step — their cursors round-trip).
+#[allow(clippy::too_many_arguments)]
+fn encode_fleet_state(
+    machines: &[FleetMachine],
+    pending: &VecDeque<Offer>,
+    queue: &VecDeque<Offer>,
+    completed: &[FleetDeparture],
+    rejected: &[u64],
+    samples: &[UtilSample],
+    spilled: u64,
+    queued_jobs: u64,
+    peak_queue_depth: usize,
+    total_queue_wait_ns: f64,
+    scale_ups: u64,
+    scale_downs: u64,
+    grow_streak: u32,
+    shrink_streak: u32,
+    fleet_now: f64,
+    fleet_events: u64,
+    tenants_displaced: u64,
+) -> Vec<u8> {
+    let mut e = Enc::new();
+    e.f64(fleet_now);
+    e.u64(fleet_events);
+    e.len(machines.len());
+    for m in machines {
+        m.encode(&mut e);
+    }
+    e.len(pending.len());
+    for o in pending {
+        o.encode(&mut e);
+    }
+    e.len(queue.len());
+    for o in queue {
+        o.encode(&mut e);
+    }
+    e.len(completed.len());
+    for dep in completed {
+        e.u64(dep.tenant_id);
+        e.f64(dep.arrival_ns);
+        e.f64(dep.join_ns);
+        e.f64(dep.finish_ns);
+        e.u64(dep.machine as u64);
+        // The share the restore side hands the job's build closure when
+        // reconstructing the policy object the result carries.
+        e.u64(dep.result.share_initial);
+        dep.result.encode(&mut e);
+    }
+    e.len(rejected.len());
+    for &id in rejected {
+        e.u64(id);
+    }
+    e.len(samples.len());
+    for s in samples {
+        e.f64(s.t_ns);
+        e.f64(s.used_frac);
+        e.f64(s.committed_frac);
+        e.u64(s.queue_depth as u64);
+        e.u64(s.machines_active as u64);
+    }
+    e.u64(spilled);
+    e.u64(queued_jobs);
+    e.u64(peak_queue_depth as u64);
+    e.f64(total_queue_wait_ns);
+    e.u64(scale_ups);
+    e.u64(scale_downs);
+    e.u32(grow_streak);
+    e.u32(shrink_streak);
+    e.u64(tenants_displaced);
+    e.finish()
+}
+
+/// Inverse of [`encode_fleet_state`]: overlay the serialized state onto
+/// skeletons built from the regenerated `arrivals` (matched by job id).
+fn decode_fleet_state(
+    bytes: &[u8],
+    cfg: &FleetConfig,
+    arrivals: Vec<FleetArrival>,
+) -> Result<FleetDriverState, CheckpointError> {
+    let mut builds: HashMap<u64, TenantBuild> =
+        arrivals.into_iter().map(|a| (a.id, a.build)).collect();
+    let mut d = Dec::new(bytes);
+    let fleet_now = d.f64()?;
+    let fleet_events = d.u64()?;
+    let n = d.len()?;
+    let mut machines = Vec::with_capacity(n);
+    for _ in 0..n {
+        machines.push(FleetMachine::restore(
+            cfg.arbitration,
+            cfg.faults.is_some(),
+            &mut builds,
+            &mut d,
+        )?);
+    }
+    let n = d.len()?;
+    let mut pending = VecDeque::with_capacity(n);
+    for _ in 0..n {
+        pending.push_back(Offer::restore(&mut builds, &mut d)?);
+    }
+    let n = d.len()?;
+    let mut queue = VecDeque::with_capacity(n);
+    for _ in 0..n {
+        queue.push_back(Offer::restore(&mut builds, &mut d)?);
+    }
+    let n = d.len()?;
+    let mut completed = Vec::with_capacity(n);
+    for _ in 0..n {
+        let tenant_id = d.u64()?;
+        let arrival_ns = d.f64()?;
+        let join_ns = d.f64()?;
+        let finish_ns = d.f64()?;
+        let machine = d.u64()? as usize;
+        let share = d.u64()?;
+        let build = builds
+            .remove(&tenant_id)
+            .ok_or(CheckpointError::Malformed("checkpoint references an unknown job id"))?;
+        let result = TenantRunResult::restore(build(share).policy, &mut d)?;
+        completed.push(FleetDeparture {
+            tenant_id,
+            arrival_ns,
+            join_ns,
+            finish_ns,
+            machine,
+            result,
+        });
+    }
+    let n = d.len()?;
+    let mut rejected = Vec::with_capacity(n);
+    for _ in 0..n {
+        rejected.push(d.u64()?);
+    }
+    let n = d.len()?;
+    let mut samples = Vec::with_capacity(n);
+    for _ in 0..n {
+        samples.push(UtilSample {
+            t_ns: d.f64()?,
+            used_frac: d.f64()?,
+            committed_frac: d.f64()?,
+            queue_depth: d.u64()? as usize,
+            machines_active: d.u64()? as usize,
+        });
+    }
+    let spilled = d.u64()?;
+    let queued_jobs = d.u64()?;
+    let peak_queue_depth = d.u64()? as usize;
+    let total_queue_wait_ns = d.f64()?;
+    let scale_ups = d.u64()?;
+    let scale_downs = d.u64()?;
+    let grow_streak = d.u32()?;
+    let shrink_streak = d.u32()?;
+    let tenants_displaced = d.u64()?;
+    d.done()?;
+    Ok(FleetDriverState {
+        machines,
+        pending,
+        queue,
+        completed,
+        rejected,
+        samples,
+        spilled,
+        queued_jobs,
+        peak_queue_depth,
+        total_queue_wait_ns,
+        scale_ups,
+        scale_downs,
+        grow_streak,
+        shrink_streak,
+        fleet_now,
+        fleet_events,
+        tenants_displaced,
+    })
+}
+
+/// [`run_fleet`] with checkpoint/resume: `resume` is a previously
+/// written fleet payload, overlaid onto the regenerated `arrivals`;
+/// `ckpt` gets a boundary callback after every fleet event round, with
+/// the round count as progress. The outer `Result` is the checkpoint
+/// machinery ([`RunHalt`]); the inner one is the simulation's own
+/// [`PoolExhausted`] outcome.
+pub(crate) fn run_fleet_ckpt(
+    arrivals: Vec<FleetArrival>,
+    cfg: FleetConfig,
+    resume: Option<&[u8]>,
+    ckpt: Option<&CheckpointCtl>,
+) -> Result<Result<FleetSimResult, PoolExhausted>, RunHalt> {
+    let threads = cfg.threads.max(1);
+    let st = match resume {
+        Some(bytes) => decode_fleet_state(bytes, &cfg, arrivals).map_err(RunHalt::Checkpoint)?,
+        None => {
+            let mut arrivals = arrivals;
+            arrivals.sort_by(|a, b| a.arrival_ns.total_cmp(&b.arrival_ns).then(a.id.cmp(&b.id)));
+            let n_machines = cfg.machines.max(1);
+            FleetDriverState {
+                machines: (0..n_machines)
+                    .map(|i| {
+                        let faults = cfg.faults.as_ref().map(|p| MachineFaults::new(p, i));
+                        FleetMachine::new(cfg.machine_fast_bytes, cfg.arbitration, faults)
+                    })
+                    .collect(),
+                pending: arrivals
+                    .into_iter()
+                    .map(|a| Offer {
+                        id: a.id,
+                        first_arrival_ns: a.arrival_ns,
+                        offered_ns: a.arrival_ns,
+                        demand_bytes: a.demand_bytes,
+                        peak_bytes: a.peak_bytes,
+                        kind: OfferKind::New(a.build),
+                    })
+                    .collect(),
+                queue: VecDeque::new(),
+                completed: Vec::new(),
+                rejected: Vec::new(),
+                samples: Vec::new(),
+                spilled: 0,
+                queued_jobs: 0,
+                peak_queue_depth: 0,
+                total_queue_wait_ns: 0.0,
+                scale_ups: 0,
+                scale_downs: 0,
+                grow_streak: 0,
+                shrink_streak: 0,
+                fleet_now: 0.0,
+                fleet_events: 0,
+                tenants_displaced: 0,
+            }
+        }
+    };
+    let FleetDriverState {
+        mut machines,
+        mut pending,
+        mut queue,
+        mut completed,
+        mut rejected,
+        mut samples,
+        mut spilled,
+        mut queued_jobs,
+        mut peak_queue_depth,
+        mut total_queue_wait_ns,
+        mut scale_ups,
+        mut scale_downs,
+        mut grow_streak,
+        mut shrink_streak,
+        mut fleet_now,
+        mut fleet_events,
+        mut tenants_displaced,
+    } = st;
 
     loop {
         let live: usize = machines.iter().map(|m| m.tenants.len()).sum();
@@ -665,7 +1054,7 @@ pub fn run_fleet(
                 grow_streak = 0;
                 shrink_streak = 0;
             } else {
-                return Err(PoolExhausted { waiting_jobs: pending.len() + queue.len() });
+                return Ok(Err(PoolExhausted { waiting_jobs: pending.len() + queue.len() }));
             }
         }
         fleet_events += 1;
@@ -881,6 +1270,32 @@ pub fn run_fleet(
             queue_depth: queue.len(),
             machines_active: n_active,
         });
+
+        // 8. Checkpoint boundary: the round is fully processed, so the
+        //    serialized state is exactly what the next iteration reads.
+        if let Some(c) = ckpt {
+            c.boundary(fleet_events, || {
+                encode_fleet_state(
+                    &machines,
+                    &pending,
+                    &queue,
+                    &completed,
+                    &rejected,
+                    &samples,
+                    spilled,
+                    queued_jobs,
+                    peak_queue_depth,
+                    total_queue_wait_ns,
+                    scale_ups,
+                    scale_downs,
+                    grow_streak,
+                    shrink_streak,
+                    fleet_now,
+                    fleet_events,
+                    tenants_displaced,
+                )
+            })?;
+        }
     }
 
     completed.sort_by(|a, b| a.tenant_id.cmp(&b.tenant_id));
@@ -900,7 +1315,7 @@ pub fn run_fleet(
         merged.tenants_displaced = tenants_displaced;
         merged
     });
-    Ok(FleetSimResult {
+    Ok(Ok(FleetSimResult {
         completed,
         rejected,
         spilled,
@@ -914,7 +1329,7 @@ pub fn run_fleet(
         makespan_ns,
         fleet_events,
         faults,
-    })
+    }))
 }
 
 #[cfg(test)]

@@ -7,6 +7,7 @@
 //! drain while compute proceeds.
 
 use crate::mem::ObjectId;
+use crate::sim::checkpoint::{CheckpointError, Dec, Enc};
 use crate::sim::device::{MachineSpec, Tier};
 use crate::sim::migration::{Direction, Lane, LaneSnapshot};
 use crate::PAGE_SIZE;
@@ -508,6 +509,124 @@ impl Machine {
         self.base_ns = 0.0;
         self.local_ns = 0.0;
         self.stats = MachineStats::default();
+    }
+
+    /// Serialize the complete machine state for a checkpoint: the spec
+    /// as currently configured (share resizes live in
+    /// `spec.fast.capacity_bytes`), the degradation factor, the split
+    /// clock as exact bits, residency, per-tier usage, both lanes, and
+    /// the monotone counters.
+    pub(crate) fn encode(&self, e: &mut Enc) {
+        self.spec.encode(e);
+        e.f64(self.bw_degradation);
+        e.f64(self.base_ns);
+        e.f64(self.local_ns);
+        e.len(self.res.len());
+        for r in &self.res {
+            r.encode(e);
+        }
+        e.u64(self.used_fast);
+        e.u64(self.used_slow);
+        self.lane_in.encode(e);
+        self.lane_out.encode(e);
+        e.bool(self.lanes_idle);
+        self.stats.encode(e);
+    }
+
+    /// Rebuild a machine from checkpoint bytes. Construction goes
+    /// through [`Machine::new`] and [`Machine::set_bandwidth_degradation`]
+    /// so the cached timing parameters (`ns_per_page`, the inverse
+    /// bandwidths) are recomputed by exactly the arithmetic the original
+    /// run used — restoring them to the same bits — and only then is the
+    /// mutable state overlaid.
+    pub(crate) fn decode(d: &mut Dec<'_>) -> Result<Machine, CheckpointError> {
+        let spec = MachineSpec::decode(d)?;
+        let factor = d.f64()?;
+        let mut m = Machine::new(spec);
+        m.set_bandwidth_degradation(factor);
+        m.base_ns = d.f64()?;
+        m.local_ns = d.f64()?;
+        let n = d.len()?;
+        let mut res = Vec::with_capacity(n);
+        for _ in 0..n {
+            res.push(Residency::decode(d)?);
+        }
+        m.res = res;
+        m.used_fast = d.u64()?;
+        m.used_slow = d.u64()?;
+        m.lane_in = Lane::decode(d)?;
+        m.lane_out = Lane::decode(d)?;
+        m.lanes_idle = d.bool()?;
+        m.stats = MachineStats::decode(d)?;
+        Ok(m)
+    }
+}
+
+impl Residency {
+    pub(crate) fn encode(&self, e: &mut Enc) {
+        e.u64(self.pages_total);
+        e.u64(self.pages_fast);
+        e.bool(self.alive);
+    }
+
+    pub(crate) fn decode(d: &mut Dec<'_>) -> Result<Residency, CheckpointError> {
+        Ok(Residency {
+            pages_total: d.u64()?,
+            pages_fast: d.u64()?,
+            alive: d.bool()?,
+        })
+    }
+}
+
+impl MachineStats {
+    pub(crate) fn encode(&self, e: &mut Enc) {
+        e.u64(self.pages_in);
+        e.u64(self.pages_out);
+        e.u64(self.alloc_spills);
+        e.u64(self.peak_fast_bytes);
+        e.u64(self.peak_total_bytes);
+    }
+
+    pub(crate) fn decode(d: &mut Dec<'_>) -> Result<MachineStats, CheckpointError> {
+        Ok(MachineStats {
+            pages_in: d.u64()?,
+            pages_out: d.u64()?,
+            alloc_spills: d.u64()?,
+            peak_fast_bytes: d.u64()?,
+            peak_total_bytes: d.u64()?,
+        })
+    }
+}
+
+impl SteadySnapshot {
+    pub(crate) fn encode(&self, e: &mut Enc) {
+        e.len(self.res.len());
+        for r in &self.res {
+            r.encode(e);
+        }
+        e.u64(self.used_fast);
+        e.u64(self.used_slow);
+        e.u64(self.fast_capacity);
+        self.lane_in.encode(e);
+        self.lane_out.encode(e);
+        e.u64(self.bw_degradation_bits);
+    }
+
+    pub(crate) fn decode(d: &mut Dec<'_>) -> Result<SteadySnapshot, CheckpointError> {
+        let n = d.len()?;
+        let mut res = Vec::with_capacity(n);
+        for _ in 0..n {
+            res.push(Residency::decode(d)?);
+        }
+        Ok(SteadySnapshot {
+            res,
+            used_fast: d.u64()?,
+            used_slow: d.u64()?,
+            fast_capacity: d.u64()?,
+            lane_in: LaneSnapshot::decode(d)?,
+            lane_out: LaneSnapshot::decode(d)?,
+            bw_degradation_bits: d.u64()?,
+        })
     }
 }
 

@@ -13,6 +13,7 @@
 use std::collections::VecDeque;
 
 use crate::mem::ObjectId;
+use crate::sim::checkpoint::{CheckpointError, Dec, Enc};
 
 /// Direction of a page move.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -51,6 +52,31 @@ pub struct LaneSnapshot {
     queue: Vec<(ObjectId, u64)>,
     credit_ns_bits: u64,
     stalled: bool,
+}
+
+impl LaneSnapshot {
+    pub(crate) fn encode(&self, e: &mut Enc) {
+        e.len(self.queue.len());
+        for &(obj, pages) in &self.queue {
+            e.u32(obj.0);
+            e.u64(pages);
+        }
+        e.u64(self.credit_ns_bits);
+        e.bool(self.stalled);
+    }
+
+    pub(crate) fn decode(d: &mut Dec<'_>) -> Result<LaneSnapshot, CheckpointError> {
+        let n = d.len()?;
+        let mut queue = Vec::with_capacity(n);
+        for _ in 0..n {
+            queue.push((ObjectId(d.u32()?), d.u64()?));
+        }
+        Ok(LaneSnapshot {
+            queue,
+            credit_ns_bits: d.u64()?,
+            stalled: d.bool()?,
+        })
+    }
 }
 
 /// A migration lane: FIFO of requests plus accumulated bandwidth credit.
@@ -169,6 +195,46 @@ impl Lane {
     /// migration" arm to decide how long to block.
     pub fn drain_time_ns(&self, ns_per_page: f64) -> f64 {
         (self.pending_pages as f64 * ns_per_page - self.credit_ns).max(0.0)
+    }
+
+    /// Serialize the lane for a checkpoint: direction, FIFO contents in
+    /// order, banked credit bits, pending-page total, stall flag.
+    pub(crate) fn encode(&self, e: &mut Enc) {
+        e.u8(match self.dir {
+            Direction::In => 0,
+            Direction::Out => 1,
+        });
+        e.len(self.queue.len());
+        for r in &self.queue {
+            e.u32(r.obj.0);
+            e.u64(r.pages);
+        }
+        e.f64(self.credit_ns);
+        e.u64(self.pending_pages);
+        e.bool(self.stalled);
+    }
+
+    pub(crate) fn decode(d: &mut Dec<'_>) -> Result<Lane, CheckpointError> {
+        let dir = match d.u8()? {
+            0 => Direction::In,
+            1 => Direction::Out,
+            _ => return Err(CheckpointError::Malformed("unknown lane direction")),
+        };
+        let n = d.len()?;
+        let mut queue = VecDeque::with_capacity(n);
+        for _ in 0..n {
+            queue.push_back(MoveRequest {
+                obj: ObjectId(d.u32()?),
+                pages: d.u64()?,
+            });
+        }
+        Ok(Lane {
+            dir,
+            queue,
+            credit_ns: d.f64()?,
+            pending_pages: d.u64()?,
+            stalled: d.bool()?,
+        })
     }
 
     /// Grant `dt` nanoseconds of bandwidth and move pages. For each head

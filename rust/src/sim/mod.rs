@@ -15,6 +15,7 @@
 //! Time is in **nanoseconds**; bandwidth in **GB/s**, which conveniently
 //! equals **bytes/ns** (1 GB/s = 1e9 B / 1e9 ns).
 
+pub mod checkpoint;
 pub mod cluster;
 pub mod device;
 pub mod engine;
@@ -25,6 +26,11 @@ pub mod migration;
 pub mod replay;
 pub mod schedule;
 
+pub use checkpoint::{
+    clear_interrupt, install_interrupt_handler, interrupt_requested, load_checkpoint,
+    request_interrupt, write_checkpoint, Checkpoint, CheckpointCtl, CheckpointError, Dec, Enc,
+    RunHalt,
+};
 pub use cluster::{
     arbitration_shares, run_cluster, run_cluster_faulted, Arbitration, ClusterTenant,
     ParseArbitrationError, TenantRunResult,

@@ -55,6 +55,7 @@
 //! [`Machine::fold_step`]: crate::sim::Machine::fold_step
 //! [`SteadySnapshot`]: crate::sim::machine::SteadySnapshot
 
+use crate::sim::checkpoint::{CheckpointError, Dec, Enc};
 use crate::sim::device::Tier;
 use crate::sim::machine::SteadySnapshot;
 
@@ -267,6 +268,154 @@ impl Sealer {
             self.invalidations += 1;
         }
         self.prev = None;
+    }
+
+    /// Serialize the complete seal state machine — candidate record,
+    /// sealed schedule, phase fingerprints, counters — so a resumed run
+    /// continues the seal search (or the sealed replay) exactly where
+    /// the interrupted run left it.
+    pub(crate) fn encode(&self, e: &mut Enc) {
+        e.bool(self.enabled);
+        match &self.prev {
+            Some(r) => {
+                e.bool(true);
+                r.encode(e);
+            }
+            None => e.bool(false),
+        }
+        e.u32(self.prev_fp);
+        match &self.sealed {
+            Some(s) => {
+                e.bool(true);
+                s.encode(e);
+            }
+            None => e.bool(false),
+        }
+        e.u32(self.sealed_fp);
+        e.u64(self.invalidations);
+        e.u64(self.seals);
+    }
+
+    pub(crate) fn decode(d: &mut Dec<'_>) -> Result<Sealer, CheckpointError> {
+        let enabled = d.bool()?;
+        let prev = if d.bool()? {
+            Some(StepRecord::decode(d)?)
+        } else {
+            None
+        };
+        let prev_fp = d.u32()?;
+        let sealed = if d.bool()? {
+            Some(CompiledSchedule::decode(d)?)
+        } else {
+            None
+        };
+        Ok(Sealer {
+            enabled,
+            prev,
+            prev_fp,
+            sealed,
+            sealed_fp: d.u32()?,
+            invalidations: d.u64()?,
+            seals: d.u64()?,
+        })
+    }
+}
+
+impl StepRecorder {
+    /// Serialize an in-flight recording (a cluster tenant can be
+    /// checkpointed mid-step, with a recording open).
+    pub(crate) fn encode(&self, e: &mut Enc) {
+        e.len(self.placements.len());
+        for &t in &self.placements {
+            t.encode(e);
+        }
+        e.len(self.layer_marks.len());
+        for &(a, b) in &self.layer_marks {
+            e.u64(a);
+            e.u64(b);
+        }
+        e.bool(self.stalled_any);
+    }
+
+    pub(crate) fn decode(d: &mut Dec<'_>) -> Result<StepRecorder, CheckpointError> {
+        let n = d.len()?;
+        let mut placements = Vec::with_capacity(n);
+        for _ in 0..n {
+            placements.push(Tier::decode(d)?);
+        }
+        let n = d.len()?;
+        let mut layer_marks = Vec::with_capacity(n);
+        for _ in 0..n {
+            layer_marks.push((d.u64()?, d.u64()?));
+        }
+        Ok(StepRecorder {
+            placements,
+            layer_marks,
+            stalled_any: d.bool()?,
+        })
+    }
+}
+
+impl StepRecord {
+    pub(crate) fn encode(&self, e: &mut Enc) {
+        e.len(self.placements.len());
+        for &t in &self.placements {
+            t.encode(e);
+        }
+        e.len(self.layer_marks.len());
+        for &(a, b) in &self.layer_marks {
+            e.u64(a);
+            e.u64(b);
+        }
+        e.bool(self.stalled_any);
+        e.u64(self.time_ns_bits);
+        e.u64(self.pages_in);
+        e.u64(self.pages_out);
+        e.u64(self.alloc_spills);
+        self.end_state.encode(e);
+    }
+
+    pub(crate) fn decode(d: &mut Dec<'_>) -> Result<StepRecord, CheckpointError> {
+        let n = d.len()?;
+        let mut placements = Vec::with_capacity(n);
+        for _ in 0..n {
+            placements.push(Tier::decode(d)?);
+        }
+        let n = d.len()?;
+        let mut layer_marks = Vec::with_capacity(n);
+        for _ in 0..n {
+            layer_marks.push((d.u64()?, d.u64()?));
+        }
+        Ok(StepRecord {
+            placements,
+            layer_marks,
+            stalled_any: d.bool()?,
+            time_ns_bits: d.u64()?,
+            pages_in: d.u64()?,
+            pages_out: d.u64()?,
+            alloc_spills: d.u64()?,
+            end_state: SteadySnapshot::decode(d)?,
+        })
+    }
+}
+
+impl CompiledSchedule {
+    pub(crate) fn encode(&self, e: &mut Enc) {
+        e.f64(self.step_time_ns);
+        e.u64(self.pages_in);
+        e.u64(self.pages_out);
+        e.u64(self.alloc_spills);
+        e.bool(self.stalled_any);
+    }
+
+    pub(crate) fn decode(d: &mut Dec<'_>) -> Result<CompiledSchedule, CheckpointError> {
+        Ok(CompiledSchedule {
+            step_time_ns: d.f64()?,
+            pages_in: d.u64()?,
+            pages_out: d.u64()?,
+            alloc_spills: d.u64()?,
+            stalled_any: d.bool()?,
+        })
     }
 }
 

@@ -1,0 +1,109 @@
+//! Graceful-interrupt checkpointing.
+//!
+//! The interrupt flag is **process-global** (it mirrors a signal
+//! handler's one bit of state), so these tests live in their own test
+//! binary and serialize on a mutex: one pending interrupt must never
+//! leak into a neighboring test.
+//!
+//! * An interrupted run with checkpointing configured halts with
+//!   [`SimError::Interrupted`], leaves a loadable final checkpoint, and
+//!   resuming from it reproduces the uninterrupted run bit for bit.
+//! * The same holds for a fleet run.
+//! * Without checkpointing configured, a pending interrupt is inert —
+//!   the run completes normally (the boundary hook is never consulted).
+
+use std::fs;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use sentinel_hm::api::{Admission, FleetSpec, PolicyKind, RunSpec, SimError};
+use sentinel_hm::dnn::zoo::Model;
+use sentinel_hm::sim::{clear_interrupt, load_checkpoint, request_interrupt};
+
+/// Serializes every test in this binary around the process-global
+/// interrupt flag.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+/// Fresh per-test scratch directory under the system temp dir.
+fn tdir(tag: &str) -> PathBuf {
+    let d =
+        std::env::temp_dir().join(format!("sentinel-ckpt-intr-{}-{}", tag, std::process::id()));
+    let _ = fs::remove_dir_all(&d);
+    fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn solo() -> RunSpec {
+    RunSpec::for_model(Model::Dcgan).policy(PolicyKind::Lru).fast_pct(30).steps(8)
+}
+
+#[test]
+fn solo_interrupt_parks_in_a_checkpoint_and_resume_matches() {
+    let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    clear_interrupt();
+    let dir = tdir("solo");
+    let base = solo().run().unwrap().to_json();
+
+    // `checkpoint_dir` alone means interrupt-only checkpointing
+    // (every = 0): nothing is written until the interrupt lands.
+    request_interrupt();
+    let err = solo().checkpoint_dir(&dir).run_checkpointed().unwrap_err();
+    let SimError::Interrupted { checkpoint } = err else {
+        clear_interrupt();
+        panic!("expected Interrupted, got {err:?}");
+    };
+    clear_interrupt();
+    let ck = load_checkpoint(&checkpoint).expect("the final checkpoint is well-formed");
+    assert!(
+        ck.progress >= 1 && ck.progress < 8,
+        "interrupt parked mid-run, not at an end (progress {})",
+        ck.progress
+    );
+
+    let resumed = solo().resume_from(&checkpoint).run_checkpointed().unwrap().to_json();
+    assert_eq!(base, resumed, "resume after interrupt diverged from the uninterrupted run");
+    let _ = fs::remove_dir_all(&dir);
+}
+
+fn fleet() -> FleetSpec {
+    FleetSpec::new()
+        .tenants(8)
+        .rate_per_s(2.0)
+        .machines(2)
+        .machine_fast_bytes(3 << 30)
+        .admission(Admission::Queue)
+        .threads(1)
+        .seed(17)
+}
+
+#[test]
+fn fleet_interrupt_parks_in_a_checkpoint_and_resume_matches() {
+    let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    clear_interrupt();
+    let dir = tdir("fleet");
+    let base = fleet().run().unwrap().to_json();
+
+    request_interrupt();
+    let err = fleet().checkpoint_dir(&dir).run_checkpointed().unwrap_err();
+    let SimError::Interrupted { checkpoint } = err else {
+        clear_interrupt();
+        panic!("expected Interrupted, got {err:?}");
+    };
+    clear_interrupt();
+    assert!(checkpoint.exists(), "final fleet checkpoint written");
+
+    let resumed = fleet().resume_from(&checkpoint).run_checkpointed().unwrap().to_json();
+    assert_eq!(base, resumed, "fleet resume after interrupt diverged");
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn pending_interrupt_without_checkpointing_is_inert() {
+    let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    clear_interrupt();
+    let base = solo().run().unwrap().to_json();
+    request_interrupt();
+    let out = solo().run_checkpointed();
+    clear_interrupt();
+    assert_eq!(base, out.unwrap().to_json(), "uncheckpointed run must ignore the flag");
+}

@@ -1,0 +1,286 @@
+//! Checkpoint/restore equivalence: a run killed at a step boundary and
+//! resumed from its checkpoint must reproduce the uninterrupted run
+//! **bit for bit** (JSON-identical outcomes, float bits included).
+//!
+//! * **Kill-at-every-boundary**: for every policy in
+//!   [`PolicyKind::all`], a solo run checkpointed at every step is
+//!   resumed from *each* written checkpoint and compared to the
+//!   uninterrupted baseline. Same for a 3-tenant cluster, a faulted
+//!   fleet with crashes, and a dynamic workload with the divergence
+//!   detector armed (PR 7 fault state and PR 8 detector state must
+//!   round-trip too).
+//! * **Observational**: writing checkpoints must not perturb the run —
+//!   the checkpointing run's own outcome equals the plain run's.
+//! * **Resume-twice determinism**: resuming the same file twice gives
+//!   identical output.
+//! * **Typed rejection**: wrong-kind, wrong-spec, truncated, bit-flipped
+//!   and missing checkpoint files surface as [`CheckpointError`]
+//!   variants through the spec layer — never a panic.
+//! * **Property**: random (steps, interval, resume-point) triples drawn
+//!   from a seeded LCG all satisfy resume ≡ uninterrupted.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use sentinel_hm::api::{
+    Admission, Autoscale, ClusterSpec, FaultSpec, FleetSpec, PolicyKind, RunSpec, SimError,
+    TenantSpec,
+};
+use sentinel_hm::dnn::zoo::Model;
+use sentinel_hm::dnn::DynamicKind;
+use sentinel_hm::sim::{load_checkpoint, CheckpointError};
+
+/// Fresh per-test scratch directory under the system temp dir.
+fn tdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("sentinel-ckpt-resume-{}-{}", tag, std::process::id()));
+    let _ = fs::remove_dir_all(&d);
+    fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// All checkpoint files in `dir`, sorted by progress (the zero-padded
+/// file name sorts correctly).
+fn ckpts(dir: &Path) -> Vec<PathBuf> {
+    let mut v: Vec<PathBuf> = fs::read_dir(dir)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .filter(|p| p.extension().map_or(false, |x| x == "ckpt"))
+        .collect();
+    v.sort();
+    v
+}
+
+/// For every policy: checkpoint a short solo run at every step boundary,
+/// then resume from each file; all outcomes must equal the plain run.
+#[test]
+fn solo_kill_at_every_boundary_matches_uninterrupted_for_all_policies() {
+    for kind in PolicyKind::all() {
+        let dir = tdir(&format!("solo-{kind:?}").replace(['(', ')', ' ', '{', '}', ':'], "-"));
+        let spec = || RunSpec::for_model(Model::Dcgan).policy(kind).fast_pct(30).steps(6);
+        let base = spec().run().unwrap().to_json();
+        let ckpt_run = spec()
+            .checkpoint_every(1)
+            .checkpoint_dir(&dir)
+            .run_checkpointed()
+            .unwrap()
+            .to_json();
+        assert_eq!(base, ckpt_run, "{kind:?}: writing checkpoints perturbed the run");
+        let files = ckpts(&dir);
+        assert_eq!(files.len(), 6, "{kind:?}: one checkpoint per step boundary");
+        for f in &files {
+            let resumed = spec().resume_from(f).run_checkpointed().unwrap().to_json();
+            assert_eq!(base, resumed, "{kind:?}: resume from {} diverged", f.display());
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+}
+
+fn cluster_spec() -> ClusterSpec {
+    let fast = Model::Dcgan.peak_memory_target() * 3 / 10;
+    ClusterSpec::new()
+        .tenant(TenantSpec::for_model(Model::Dcgan).policy(PolicyKind::Lru))
+        .tenant(TenantSpec::for_model(Model::Dcgan).policy(PolicyKind::StaticInterval(4)))
+        .tenant(TenantSpec::for_model(Model::Dcgan).policy(PolicyKind::Ial))
+        .fast_bytes(fast)
+        .steps(6)
+}
+
+/// A 3-tenant cluster checkpointed at every tenant-step boundary,
+/// resumed from each file.
+#[test]
+fn cluster_kill_at_every_boundary_matches_uninterrupted() {
+    let dir = tdir("cluster");
+    let base = cluster_spec().run().unwrap().to_json();
+    let ckpt_run = cluster_spec()
+        .checkpoint_every(1)
+        .checkpoint_dir(&dir)
+        .run_checkpointed()
+        .unwrap()
+        .to_json();
+    assert_eq!(base, ckpt_run, "writing checkpoints perturbed the cluster run");
+    let files = ckpts(&dir);
+    assert!(!files.is_empty(), "cluster run wrote no checkpoints");
+    for f in &files {
+        let resumed = cluster_spec().resume_from(f).run_checkpointed().unwrap().to_json();
+        assert_eq!(base, resumed, "cluster resume from {} diverged", f.display());
+    }
+    let _ = fs::remove_dir_all(&dir);
+}
+
+fn faulted_fleet() -> FleetSpec {
+    FleetSpec::new()
+        .tenants(8)
+        .rate_per_s(2.0)
+        .machines(2)
+        .machine_fast_bytes(3 << 30)
+        .admission(Admission::Queue)
+        .autoscale(Autoscale::default())
+        .threads(1)
+        .seed(17)
+        .faults(FaultSpec::new().rate(0.15).crashes(true))
+}
+
+/// A faulted fleet (crashes enabled) checkpointed every other event
+/// round: resuming from each checkpoint — including rounds after
+/// machines have crashed — reproduces the uninterrupted outcome,
+/// fault plan positions and all.
+#[test]
+fn faulted_fleet_kill_at_every_checkpoint_matches_uninterrupted() {
+    let dir = tdir("fleet");
+    let baseline = faulted_fleet().run().unwrap();
+    let base = baseline.to_json();
+    let report = baseline.faults.as_ref().expect("plan armed");
+    assert!(report.injected > 0, "rate 0.15 over this run must inject something");
+    let ckpt_run = faulted_fleet()
+        .checkpoint_every(2)
+        .checkpoint_dir(&dir)
+        .run_checkpointed()
+        .unwrap();
+    assert_eq!(base, ckpt_run.to_json(), "writing checkpoints perturbed the fleet run");
+    let files = ckpts(&dir);
+    assert!(!files.is_empty(), "fleet run wrote no checkpoints");
+    for f in &files {
+        let resumed = faulted_fleet().resume_from(f).run_checkpointed().unwrap();
+        assert_eq!(base, resumed.to_json(), "fleet resume from {} diverged", f.display());
+        assert_eq!(baseline.tenants_digest(), resumed.tenants_digest());
+    }
+    let _ = fs::remove_dir_all(&dir);
+}
+
+fn dynamic_spec() -> RunSpec {
+    RunSpec::for_model(Model::Dcgan)
+        .dynamic(DynamicKind::Moe, 0.6)
+        .detector(true)
+        .fast_pct(30)
+        .steps(8)
+}
+
+/// A dynamic (MoE) run with the online divergence detector armed:
+/// detector counters and the dynamic RNG substream must round-trip
+/// through every checkpoint.
+#[test]
+fn dynamic_detector_run_kill_at_every_boundary_matches_uninterrupted() {
+    let dir = tdir("dynamic");
+    let base = dynamic_spec().run().unwrap().to_json();
+    let ckpt_run = dynamic_spec()
+        .checkpoint_every(1)
+        .checkpoint_dir(&dir)
+        .run_checkpointed()
+        .unwrap()
+        .to_json();
+    assert_eq!(base, ckpt_run, "writing checkpoints perturbed the dynamic run");
+    let files = ckpts(&dir);
+    assert_eq!(files.len(), 8, "one checkpoint per dynamic step boundary");
+    for f in &files {
+        let resumed = dynamic_spec().resume_from(f).run_checkpointed().unwrap().to_json();
+        assert_eq!(base, resumed, "dynamic resume from {} diverged", f.display());
+    }
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// Resuming the same checkpoint twice is itself deterministic.
+#[test]
+fn resume_twice_is_deterministic() {
+    let dir = tdir("twice");
+    let spec = || RunSpec::for_model(Model::Dcgan).policy(PolicyKind::Lru).fast_pct(30).steps(8);
+    spec().checkpoint_every(4).checkpoint_dir(&dir).run_checkpointed().unwrap();
+    let mid = ckpts(&dir).into_iter().next().expect("a mid-run checkpoint");
+    let a = spec().resume_from(&mid).run_checkpointed().unwrap().to_json();
+    let b = spec().resume_from(&mid).run_checkpointed().unwrap().to_json();
+    assert_eq!(a, b, "two resumes from {} disagree", mid.display());
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// Corrupt or mismatched checkpoints surface as typed errors through
+/// the spec layer, one class at a time — never a panic.
+#[test]
+fn spec_layer_rejects_mismatched_and_corrupt_checkpoints_with_typed_errors() {
+    let dir = tdir("reject");
+    let spec = || RunSpec::for_model(Model::Dcgan).policy(PolicyKind::Lru).fast_pct(30).steps(4);
+    spec().checkpoint_every(2).checkpoint_dir(&dir).run_checkpointed().unwrap();
+    let solo = ckpts(&dir).into_iter().next().expect("a solo checkpoint");
+    load_checkpoint(&solo).expect("the file itself is well-formed");
+
+    // Wrong kind: a fleet spec refusing a solo checkpoint.
+    let err = FleetSpec::new().resume_from(&solo).run_checkpointed().unwrap_err();
+    assert!(
+        matches!(err, SimError::Checkpoint(CheckpointError::KindMismatch { .. })),
+        "fleet resume of a solo checkpoint: {err:?}"
+    );
+
+    // Wrong spec: same shape, different seed → fingerprint mismatch.
+    let err = spec().seed(99).resume_from(&solo).run_checkpointed().unwrap_err();
+    assert!(
+        matches!(err, SimError::Checkpoint(CheckpointError::SpecMismatch { .. })),
+        "different-seed resume: {err:?}"
+    );
+
+    // Truncated file.
+    let bytes = fs::read(&solo).unwrap();
+    let cut = dir.join("cut.ckpt");
+    fs::write(&cut, &bytes[..20]).unwrap();
+    let err = spec().resume_from(&cut).run_checkpointed().unwrap_err();
+    assert!(
+        matches!(err, SimError::Checkpoint(CheckpointError::Truncated)),
+        "truncated resume: {err:?}"
+    );
+
+    // Bit-flipped payload byte.
+    let mut flipped = bytes.clone();
+    let mid = flipped.len() - 10;
+    flipped[mid] ^= 0x40;
+    let flip = dir.join("flip.ckpt");
+    fs::write(&flip, &flipped).unwrap();
+    let err = spec().resume_from(&flip).run_checkpointed().unwrap_err();
+    assert!(
+        matches!(err, SimError::Checkpoint(CheckpointError::BadChecksum { .. })),
+        "bit-flipped resume: {err:?}"
+    );
+
+    // Missing file.
+    let err = spec().resume_from(dir.join("nope.ckpt")).run_checkpointed().unwrap_err();
+    assert!(matches!(err, SimError::Checkpoint(CheckpointError::Io(_))), "missing file: {err:?}");
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// Tiny deterministic LCG so the property trial set is stable run to
+/// run (no wall-clock or OS randomness in tests).
+struct Lcg(u64);
+
+impl Lcg {
+    fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        self.0 >> 33
+    }
+}
+
+/// Property: for random (steps, checkpoint interval, resume point)
+/// triples, resume ≡ uninterrupted.
+#[test]
+fn property_random_checkpoint_points_all_resume_identically() {
+    let mut rng = Lcg(0x5EED_CAFE);
+    let policies = [PolicyKind::Lru, PolicyKind::Ial, PolicyKind::StaticInterval(3)];
+    for trial in 0..4 {
+        let steps = 4 + (rng.next() % 6) as u32; // 4..=9
+        let every = 1 + rng.next() % 3; // 1..=3
+        let kind = policies[(rng.next() % policies.len() as u64) as usize];
+        let seed = rng.next();
+        let dir = tdir(&format!("prop-{trial}"));
+        let spec = || {
+            RunSpec::for_model(Model::Dcgan).policy(kind).fast_pct(30).steps(steps).seed(seed)
+        };
+        let base = spec().run().unwrap().to_json();
+        spec().checkpoint_every(every).checkpoint_dir(&dir).run_checkpointed().unwrap();
+        let files = ckpts(&dir);
+        assert!(!files.is_empty(), "trial {trial}: steps={steps} every={every} wrote nothing");
+        let pick = &files[(rng.next() % files.len() as u64) as usize];
+        let resumed = spec().resume_from(pick).run_checkpointed().unwrap().to_json();
+        assert_eq!(
+            base,
+            resumed,
+            "trial {trial}: steps={steps} every={every} resume from {} diverged",
+            pick.display()
+        );
+        let _ = fs::remove_dir_all(&dir);
+    }
+}
