@@ -1,0 +1,67 @@
+//! Bench: the self-healing stack — what the SLO watchdog costs when
+//! armed but quiet (round-bounded advances + the pre-run solo
+//! baselines), what an enforcing watchdog costs on top of a faulted
+//! fleet (violation scans, ladder mitigations, live evacuations), and
+//! what drain-on-warning adds when crashes are scheduled.
+//!
+//! Run: `cargo bench --bench self_healing`
+
+use sentinel_hm::api::{json, Admission, Autoscale, FaultSpec, FleetSpec, SloSpec};
+use sentinel_hm::util::bench::time_it;
+
+fn fleet(tenants: usize) -> FleetSpec {
+    FleetSpec::new()
+        .tenants(tenants)
+        .rate_per_s(2.0)
+        .machines(2)
+        .machine_fast_bytes(2 << 30)
+        .admission(Admission::Queue)
+        .autoscale(Autoscale::default())
+        .threads(1)
+        .seed(7)
+}
+
+fn main() {
+    // Warm the workload, trace, and solo-baseline caches so the numbers
+    // measure the watchdog and fault drivers, not graph construction.
+    fleet(16).slo(SloSpec::new().target_p99(1e9)).run().expect("warm-up fleet");
+
+    let mut summary = json::Obj::new().field_str("bench", "self_healing");
+
+    let spec = fleet(100);
+    let t = time_it(3, || spec.run().expect("plain fleet"));
+    t.report("fleet 100 jobs, no watchdog");
+    summary = summary.field_f64("fleet_100t_plain_ns", t.median_ns as f64);
+
+    // Armed but quiet: the unreachable target never trips, so this
+    // prices the round-bounded advance loop plus the violation scan.
+    let spec = fleet(100).slo(SloSpec::new().target_p99(1e9));
+    let t = time_it(3, || spec.run().expect("armed-but-quiet watchdog"));
+    t.report("fleet 100 jobs, watchdog armed but quiet (scan only)");
+    summary = summary.field_f64("fleet_100t_armed_quiet_ns", t.median_ns as f64);
+
+    // Enforcing under fire: transients + crashes with a tight target —
+    // the full loop of violations, ladder mitigations, evacuations and
+    // drains, plus the fault-free twin.
+    let spec = fleet(100)
+        .faults(FaultSpec::new().rate(0.05).crashes(true))
+        .slo(SloSpec::new().target_p99(1.5).window_events(2));
+    let t = time_it(3, || spec.run().expect("self-healing fleet"));
+    t.report("fleet 100 jobs, faulted + enforcing watchdog (heal + twin)");
+    summary = summary.field_f64("fleet_100t_self_healing_ns", t.median_ns as f64);
+
+    // Shape sanity: the enforcing run actually healed something.
+    let out = spec.run().expect("self-healing fleet");
+    let ledger = out.slo.expect("watchdog armed");
+    let report = out.faults.expect("plan armed");
+    assert!(report.injected > 0, "rate 0.05 over 100 jobs injects something");
+    assert!(ledger.violations > 0, "a 1.5x target under faults must trip");
+    summary = summary
+        .field_u64("slo_violations", ledger.violations)
+        .field_u64("mitigations", ledger.boosts + ledger.throttles + ledger.evacuations)
+        .field_u64("drains", ledger.drains)
+        .field_u64("retries", report.retries)
+        .field_u64("breaker_trips", report.breaker_trips);
+
+    println!("\n{}", summary.end());
+}

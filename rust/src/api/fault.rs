@@ -169,6 +169,10 @@ pub fn degradation_json(r: &DegradationReport) -> String {
         .field_u64("capacity_losses", r.capacity_losses)
         .field_u64("lane_stalls", r.lane_stalls)
         .field_u64("crashes", r.crashes)
+        .field_u64("timeouts", r.timeouts)
+        .field_u64("flaky_windows", r.flaky_windows)
+        .field_u64("retries", r.retries)
+        .field_u64("breaker_trips", r.breaker_trips)
         .field_u64("promote_pages_dropped", r.promote_pages_dropped)
         .field_u64("seal_invalidations", r.seal_invalidations)
         .field_u64("reseals", r.reseals)
@@ -231,9 +235,14 @@ mod tests {
         r.degradations = 2;
         r.crashes = 1;
         r.recovery_steps = vec![2, 4];
+        r.timeouts = 2;
+        r.retries = 5;
+        r.breaker_trips = 1;
         let j = degradation_json(&r);
         assert!(json::is_valid(&j), "{j}");
         assert!(j.contains("\"slowdown_vs_fault_free\":null"));
+        assert!(j.contains("\"retries\":5"));
+        assert!(j.contains("\"breaker_trips\":1"));
         assert!(j.contains("\"recovery_steps\":[2,4]"));
         r.slowdown_vs_fault_free = Some(1.25);
         let j2 = degradation_json(&r);

@@ -49,7 +49,8 @@ use crate::sim::checkpoint::{fnv64, KIND_FLEET};
 use crate::sim::cluster::ClusterTenant;
 use crate::sim::fault::{DegradationReport, FaultPlan};
 use crate::sim::fleet::{
-    run_fleet, run_fleet_ckpt, FleetArrival, FleetConfig, FleetMachineStats, UtilSample,
+    run_fleet, run_fleet_ckpt, FleetArrival, FleetConfig, FleetMachineStats, SloPolicy, UtilSample,
+    SLO_ROUND_STEPS,
 };
 use crate::sim::replay::CompiledTrace;
 use crate::sim::{Engine, Machine, TrainResult};
@@ -58,7 +59,7 @@ use crate::util::Rng;
 use crate::PAGE_SIZE;
 
 pub use crate::sim::cluster::Arbitration;
-pub use crate::sim::fleet::{Admission, Autoscale};
+pub use crate::sim::fleet::{Admission, Autoscale, SloReport};
 
 /// Every solo baseline runs this many steps, whatever the fleet job ran:
 /// steady-state throughput does not depend on the step count, and a
@@ -149,6 +150,8 @@ pub enum FleetError {
     /// The fault-injection request is malformed (message from the
     /// fault layer).
     BadFaults(String),
+    /// The SLO policy is malformed (message from [`SloSpec`]).
+    BadSlo(String),
     /// Crashes emptied the machine pool with work still waiting and no
     /// autoscaler was configured to regrow it.
     PoolExhausted {
@@ -188,6 +191,7 @@ impl std::fmt::Display for FleetError {
                  (pick a managed policy: sentinel, mi:<K>, ial, lru)"
             ),
             FleetError::BadFaults(m) => write!(f, "bad fault injection: {m}"),
+            FleetError::BadSlo(m) => write!(f, "bad slo policy: {m}"),
             FleetError::PoolExhausted { waiting_jobs } => write!(
                 f,
                 "crashes emptied the machine pool with {waiting_jobs} job(s) still waiting \
@@ -204,6 +208,94 @@ impl std::fmt::Display for FleetError {
 }
 
 impl std::error::Error for FleetError {}
+
+/// Declarative SLO policy for the fleet watchdog. Build with the
+/// fluent setters, arm with [`FleetSpec::slo`].
+///
+/// The watchdog evaluates the pool's rolling p99 slowdown-vs-solo
+/// every fleet round (solo baselines are computed up front through the
+/// same cache cluster runs use) and, while it exceeds the target,
+/// climbs a deterministic per-tenant mitigation ladder: boost the
+/// victim's share from free headroom, throttle its noisiest co-tenant,
+/// then — with evacuation enabled — live-migrate the victim to the
+/// least-loaded machine through the checkpoint layer's encode/decode
+/// overlays. Evacuation also arms drain-on-warning: a machine whose
+/// fault schedule holds a crash within `warn_steps` steps is drained
+/// before the crash lands.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SloSpec {
+    target_p99: f64,
+    window_events: u64,
+    evacuate: bool,
+    warn_steps: u64,
+}
+
+impl Default for SloSpec {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SloSpec {
+    /// Defaults: target p99 slowdown 2.0×, mitigation window 8 fleet
+    /// rounds, evacuation on, crash warning 8 machine steps.
+    pub fn new() -> Self {
+        SloSpec {
+            target_p99: 2.0,
+            window_events: 8,
+            evacuate: true,
+            warn_steps: SLO_ROUND_STEPS * 2,
+        }
+    }
+
+    /// Mitigate while the pool's p99 slowdown-vs-solo exceeds this
+    /// (default: 2.0).
+    pub fn target_p99(mut self, target: f64) -> Self {
+        self.target_p99 = target;
+        self
+    }
+
+    /// Minimum fleet rounds between mitigations of one tenant — the
+    /// ladder's rate limit (default: 8; 0 is clamped to 1).
+    pub fn window_events(mut self, events: u64) -> Self {
+        self.window_events = events;
+        self
+    }
+
+    /// Allow live evacuation (the ladder's top rung) and
+    /// drain-on-warning ahead of scheduled crashes (default: on).
+    /// Disabled, the ladder tops out at throttling.
+    pub fn evacuate(mut self, evacuate: bool) -> Self {
+        self.evacuate = evacuate;
+        self
+    }
+
+    /// Drain a machine when a scheduled crash is at most this many
+    /// machine steps away (default: 8). Values of at least
+    /// [`SLO_ROUND_STEPS`] guarantee the drain beats the crash.
+    pub fn warn_steps(mut self, steps: u64) -> Self {
+        self.warn_steps = steps;
+        self
+    }
+
+    /// Reject non-finite or non-positive targets.
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.target_p99.is_finite() && self.target_p99 > 0.0) {
+            return Err(format!("target p99 slowdown must be positive, got {}", self.target_p99));
+        }
+        Ok(())
+    }
+
+    /// Lower to the sim-layer policy.
+    fn policy(&self) -> SloPolicy {
+        SloPolicy {
+            target_p99: self.target_p99,
+            window_events: self.window_events.max(1),
+            evacuate: self.evacuate,
+            warn_steps: self.warn_steps,
+        }
+    }
+}
 
 /// A declarative fleet-serving experiment. Build with the fluent
 /// setters, execute with [`FleetSpec::run`].
@@ -223,6 +315,7 @@ pub struct FleetSpec {
     threads: usize,
     jobs: Option<Vec<FleetJob>>,
     faults: Option<FaultSpec>,
+    slo: Option<SloSpec>,
     ckpt: CheckpointOpts,
 }
 
@@ -253,6 +346,7 @@ impl FleetSpec {
             threads: 0,
             jobs: None,
             faults: None,
+            slo: None,
             ckpt: CheckpointOpts::default(),
         }
     }
@@ -350,6 +444,17 @@ impl FleetSpec {
         self
     }
 
+    /// Arm the SLO watchdog: evaluate the pool's p99 slowdown-vs-solo
+    /// every round and mitigate violations up the
+    /// boost/throttle/evacuate ladder. Solo baselines for every
+    /// distinct (model, policy) are computed before the fleet runs —
+    /// through the same process-wide cache the slowdown reporting uses,
+    /// so the watchdog adds no extra solo simulations.
+    pub fn slo(mut self, slo: SloSpec) -> Self {
+        self.slo = Some(slo);
+        self
+    }
+
     /// Write a checkpoint every `n` fleet event rounds (default: off).
     /// `0` arms interrupt-only checkpointing once a directory is set
     /// with [`FleetSpec::checkpoint_dir`]. A killed sweep resumed from
@@ -383,7 +488,7 @@ impl FleetSpec {
     fn fingerprint(&self) -> u64 {
         fnv64(
             format!(
-                "fleet|{}|{}|{:?}|{:?}|{:?}|{:?}|{}|{}|{:?}|{:?}|{:?}|{:?}|{:?}",
+                "fleet|{}|{}|{:?}|{:?}|{:?}|{:?}|{}|{}|{:?}|{:?}|{:?}|{:?}|{:?}|{:?}",
                 self.seed,
                 self.tenants,
                 self.rate_per_s,
@@ -396,7 +501,8 @@ impl FleetSpec {
                 self.admission,
                 self.autoscale,
                 self.jobs,
-                self.faults
+                self.faults,
+                self.slo
             )
             .as_bytes(),
         )
@@ -444,6 +550,9 @@ impl FleetSpec {
         }
         if let Some(fs) = &self.faults {
             fs.validate().map_err(|e| FleetError::BadFaults(e.to_string()))?;
+        }
+        if let Some(s) = &self.slo {
+            s.validate().map_err(FleetError::BadSlo)?;
         }
         Ok(())
     }
@@ -578,6 +687,67 @@ impl FleetSpec {
             comp_of.push(idx);
         }
 
+        // One solo baseline per distinct (model, policy), at canonical
+        // length with a whole machine's fast tier — shared by the SLO
+        // watchdog (pre-run) and the slowdown reporting (post-run)
+        // through the same process-wide cache cluster runs fill.
+        let solo_for = |model: Model, kind: PolicyKind| -> (TrainResult, u32) {
+            let key: SoloKey =
+                (model, self.seed, format!("{kind:?}"), SOLO_STEPS, self.machine_fast_bytes);
+            let w = Arc::clone(&workloads[&model]);
+            solo_baseline(key, || {
+                let spec = kind.machine_spec(&w.graph, &w.trace, self.machine_fast_bytes);
+                let cfg = kind.engine_config(SOLO_STEPS);
+                let comp = CompiledTrace::compile(
+                    &w.graph,
+                    &w.trace,
+                    spec.compute_gflops,
+                    cfg.profiling_fault_ns,
+                );
+                let mut machine = Machine::new(spec);
+                let mut policy = kind.construct(&w.graph, &w.trace, spec);
+                let engine = Engine::new(cfg);
+                let r = engine.run_compiled(&w.graph, &comp, &mut machine, policy.as_mut());
+                let warmup = match policy.as_any().downcast_ref::<SentinelPolicy>() {
+                    Some(p) => p.tuning_steps(),
+                    None => kind.default_warmup(),
+                };
+                (r, warmup)
+            })
+        };
+
+        // With the SLO watchdog armed, every job's slowdown baseline
+        // (mean solo step time) is computed up front and rides its
+        // arrival into the sim layer; without it the field stays 0.0
+        // ("untracked") and the run is bit-identical to earlier builds.
+        let solo_step_of: HashMap<u64, f64> = match &self.slo {
+            None => HashMap::new(),
+            Some(_) => {
+                let mut keys: Vec<(Model, PolicyKind)> = Vec::new();
+                for j in &jobs {
+                    if !keys.iter().any(|(m, k)| *m == j.model && *k == j.policy) {
+                        keys.push((j.model, j.policy));
+                    }
+                }
+                let solos: Vec<(TrainResult, u32)> = par_map(
+                    &keys,
+                    default_threads().min(keys.len().max(1)),
+                    |&(model, kind)| solo_for(model, kind),
+                );
+                jobs.iter()
+                    .map(|j| {
+                        // Total by construction: every job's key was
+                        // inserted above.
+                        let i = keys
+                            .iter()
+                            .position(|(m, k)| *m == j.model && *k == j.policy)
+                            .unwrap_or(0);
+                        (j.id, solos[i].0.total_time_ns / f64::from(SOLO_STEPS))
+                    })
+                    .collect()
+            }
+        };
+
         // Arrivals build is a closure because a faulted run needs two
         // identical offer streams: the faulted one and its fault-free
         // twin (run_fleet consumes its arrivals).
@@ -599,6 +769,7 @@ impl FleetSpec {
                         demand_bytes: demand.max(PAGE_SIZE),
                         peak_bytes: peak,
                         priority,
+                        solo_step_ns: solo_step_of.get(&j.id).copied().unwrap_or(0.0),
                         build: Box::new(move |share| {
                             let spec = kind.machine_spec(&w.graph, &w.trace, share);
                             ClusterTenant {
@@ -626,6 +797,9 @@ impl FleetSpec {
                     autoscale: self.autoscale,
                     threads,
                     faults: plan,
+                    // The twin is the clean makespan baseline: no
+                    // faults, no watchdog.
+                    slo: None,
                 },
             )
         };
@@ -647,6 +821,7 @@ impl FleetSpec {
                 autoscale: self.autoscale,
                 threads,
                 faults: fault_plan,
+                slo: self.slo.as_ref().map(SloSpec::policy),
             },
             resume.as_deref(),
             ctl.as_ref(),
@@ -679,33 +854,7 @@ impl FleetSpec {
         }
         let solos: Vec<(TrainResult, u32)> =
             par_map(&solo_keys, default_threads().min(solo_keys.len().max(1)), |&(model, kind)| {
-                let key: SoloKey = (
-                    model,
-                    self.seed,
-                    format!("{kind:?}"),
-                    SOLO_STEPS,
-                    self.machine_fast_bytes,
-                );
-                let w = Arc::clone(&workloads[&model]);
-                solo_baseline(key, || {
-                    let spec = kind.machine_spec(&w.graph, &w.trace, self.machine_fast_bytes);
-                    let cfg = kind.engine_config(SOLO_STEPS);
-                    let comp = CompiledTrace::compile(
-                        &w.graph,
-                        &w.trace,
-                        spec.compute_gflops,
-                        cfg.profiling_fault_ns,
-                    );
-                    let mut machine = Machine::new(spec);
-                    let mut policy = kind.construct(&w.graph, &w.trace, spec);
-                    let engine = Engine::new(cfg);
-                    let r = engine.run_compiled(&w.graph, &comp, &mut machine, policy.as_mut());
-                    let warmup = match policy.as_any().downcast_ref::<SentinelPolicy>() {
-                        Some(p) => p.tuning_steps(),
-                        None => kind.default_warmup(),
-                    };
-                    (r, warmup)
-                })
+                solo_for(model, kind)
             });
         // A missing baseline is an internal invariant violation (every
         // completed job's key was collected above) — but the fleet
@@ -803,6 +952,7 @@ impl FleetSpec {
             peak_fast_utilization: used_peak,
             mean_fast_utilization: used_mean,
             faults: fault_report,
+            slo: sim.slo,
             tenants,
             machines: sim.machines,
             samples: sim.samples,
@@ -921,6 +1071,10 @@ pub struct FleetOutcome {
     /// exactly when the spec armed faults (fault-free outcomes
     /// serialize byte-identically to builds without the fault layer).
     pub faults: Option<DegradationReport>,
+    /// SLO watchdog mitigation ledger — present exactly when the spec
+    /// armed an [`SloSpec`] (watchdog-free outcomes serialize
+    /// byte-identically to builds without the watchdog).
+    pub slo: Option<SloReport>,
     /// Every completed tenant, sorted by job id.
     pub tenants: Vec<FleetTenantSummary>,
     /// Per-machine lifetime stats, pool order.
@@ -959,6 +1113,11 @@ impl FleetOutcome {
             // stays byte-stable.
             if self.faults.is_some() {
                 row = row.field_bool("crashed", m.crashed);
+            }
+            // Same contract for the watchdog: drain state only exists
+            // when an SLO policy was armed.
+            if self.slo.is_some() {
+                row = row.field_bool("drained", m.drained);
             }
             let rendered = row.end();
             machines = machines.push_raw(&rendered);
@@ -1007,6 +1166,16 @@ impl FleetOutcome {
             .field_u64("tenants_digest", self.tenants_digest());
         if let Some(r) = &self.faults {
             obj = obj.field_raw("faults", &degradation_json(r));
+        }
+        if let Some(s) = &self.slo {
+            let ledger = Obj::new()
+                .field_u64("violations", s.violations)
+                .field_u64("boosts", s.boosts)
+                .field_u64("throttles", s.throttles)
+                .field_u64("evacuations", s.evacuations)
+                .field_u64("drains", s.drains)
+                .end();
+            obj = obj.field_raw("slo", &ledger);
         }
         obj.field_raw("machines", &machines.end())
             .field_raw("samples", &samples.end())
@@ -1093,6 +1262,23 @@ impl FleetOutcome {
             if let Some(s) = r.slowdown_vs_fault_free {
                 t.row(vec!["slowdown vs fault-free".into(), format!("{s:.3}x")]);
             }
+            t.row(vec![
+                "transient faults".into(),
+                format!(
+                    "{} timeout / {} flaky / {} retries / {} trips",
+                    r.timeouts, r.flaky_windows, r.retries, r.breaker_trips
+                ),
+            ]);
+        }
+        if let Some(s) = &self.slo {
+            t.row(vec!["slo violations".into(), s.violations.to_string()]);
+            t.row(vec![
+                "slo mitigations".into(),
+                format!(
+                    "{} boost / {} throttle / {} evac / {} drain",
+                    s.boosts, s.throttles, s.evacuations, s.drains
+                ),
+            ]);
         }
         t
     }
@@ -1215,5 +1401,45 @@ mod tests {
         let pj = plain.to_json();
         assert!(!pj.contains("\"faults\""));
         assert!(!pj.contains("\"crashed\""));
+    }
+
+    #[test]
+    fn slo_armed_fleet_reports_ledger_and_serializes() {
+        let base = FleetSpec::new()
+            .tenants(5)
+            .rate_per_s(2.0)
+            .machines(2)
+            .machine_fast_bytes(Model::Dcgan.peak_memory_target() / 2)
+            .admission(Admission::Queue)
+            .seed(13);
+        let plain = base.clone().run().unwrap();
+        assert!(plain.slo.is_none());
+        // An unreachable target arms the watchdog without tripping it:
+        // the ledger is present with all zeros and the tenant table is
+        // bit-identical to the unarmed run.
+        let quiet = base.clone().slo(SloSpec::new().target_p99(1e9)).run().unwrap();
+        let ledger = quiet.slo.as_ref().expect("armed watchdog must report");
+        assert_eq!(ledger.violations, 0);
+        assert_eq!(quiet.tenants_digest(), plain.tenants_digest());
+        let qj = quiet.to_json();
+        assert!(json::is_valid(&qj), "{qj}");
+        assert!(qj.contains("\"slo\""));
+        assert!(qj.contains("\"drained\""));
+        assert!(quiet.summary_table().render().contains("slo violations"));
+        // A tight target forces violations and mitigation activity
+        // (window 1 lets the ladder climb every round).
+        let tight = base.slo(SloSpec::new().target_p99(1.0).window_events(1)).run().unwrap();
+        let s = tight.slo.as_ref().unwrap();
+        assert!(s.violations > 0);
+        assert!(s.boosts + s.throttles + s.evacuations > 0);
+        // Watchdog-free JSON carries no SLO fields at all.
+        let pj = plain.to_json();
+        assert!(!pj.contains("\"slo\""));
+        assert!(!pj.contains("\"drained\""));
+        // Bad policies are rejected up front.
+        assert!(matches!(
+            FleetSpec::new().slo(SloSpec::new().target_p99(0.0)).validate(),
+            Err(FleetError::BadSlo(_))
+        ));
     }
 }

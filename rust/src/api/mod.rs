@@ -35,7 +35,12 @@
 //!   losses, migration-lane stalls and (fleet-only) machine crashes on
 //!   any of the above, and every outcome carries a
 //!   [`crate::sim::DegradationReport`] quantifying slowdown, seal
-//!   damage, and recovery time.
+//!   damage, and recovery time. Transient faults (migration timeouts,
+//!   flaky lanes) self-heal through retry-with-backoff and per-lane
+//!   circuit breakers; an [`SloSpec`] on a [`FleetSpec`] additionally
+//!   arms the SLO watchdog, which walks a deterministic mitigation
+//!   ladder (boost → throttle → live evacuation) and drains machines
+//!   ahead of scheduled crashes.
 //! * [`checkpoint`] — checkpoint/restore: `checkpoint_every` /
 //!   `resume_from` on [`RunSpec`], [`ClusterSpec`] and [`FleetSpec`]
 //!   snapshot the complete simulation state at step boundaries into
@@ -95,7 +100,7 @@ pub use fault::{
 };
 pub use fleet::{
     Admission, Autoscale, FleetError, FleetJob, FleetOutcome, FleetSpec, FleetTenantSummary,
-    JobClass,
+    JobClass, SloReport, SloSpec,
 };
 pub use outcome::{DynamicsReport, ProfileSummary, RunOutcome};
 pub use policy::PolicyKind;

@@ -29,7 +29,7 @@
 
 use crate::api::{
     default_threads, par_map, run_batch, shared_workload, Admission, Arbitration, Autoscale,
-    ClusterSpec, FaultSpec, FleetSpec, PolicyKind, RunSpec, TenantSpec,
+    ClusterSpec, FaultSpec, FleetSpec, PolicyKind, RunSpec, SloSpec, TenantSpec,
 };
 use crate::coordinator::sentinel::SentinelConfig;
 use crate::dnn::zoo::Model;
@@ -408,7 +408,8 @@ pub fn fig13_variants(steps: u32) -> Vec<(String, u64, u64)> {
 /// across [`default_threads`] workers like every other multi-run
 /// figure (the workload and solo-baseline caches are already
 /// concurrency-safe); rows come back in grid order regardless of
-/// scheduling.
+/// scheduling. A cell whose cluster run fails reports the error in its
+/// row instead of panicking — one bad cell never kills the sweep.
 pub fn contention_table(counts: &[usize], pcts: &[u32], steps: u32) -> Table {
     let cells: Vec<(usize, u32, Arbitration)> = counts
         .iter()
@@ -428,7 +429,7 @@ pub fn contention_table(counts: &[usize], pcts: &[u32], steps: u32) -> Table {
             let priority = if i == 0 { 1 } else { 0 };
             cs = cs.tenant(TenantSpec::for_model(model).priority(priority));
         }
-        cs.run().expect("contention sweep cluster")
+        cs.run()
     };
     let outs = par_map(&cells, default_threads(), run_cell);
     let mut t = Table::new(vec![
@@ -440,14 +441,24 @@ pub fn contention_table(counts: &[usize], pcts: &[u32], steps: u32) -> Table {
         "hi-prio slowdown",
     ]);
     for ((n, pct, arb), out) in cells.iter().zip(&outs) {
-        t.row(vec![
-            n.to_string(),
-            format!("{pct}%"),
-            arb.name().to_string(),
-            format!("{:.3}", out.mean_slowdown()),
-            format!("{:.3}", out.max_slowdown()),
-            format!("{:.3}", out.tenants[0].slowdown_vs_solo),
-        ]);
+        match out {
+            Ok(out) => t.row(vec![
+                n.to_string(),
+                format!("{pct}%"),
+                arb.name().to_string(),
+                format!("{:.3}", out.mean_slowdown()),
+                format!("{:.3}", out.max_slowdown()),
+                format!("{:.3}", out.tenants[0].slowdown_vs_solo),
+            ]),
+            Err(e) => t.row(vec![
+                n.to_string(),
+                format!("{pct}%"),
+                arb.name().to_string(),
+                "-".into(),
+                "-".into(),
+                format!("{e}"),
+            ]),
+        }
     }
     t
 }
@@ -466,7 +477,8 @@ pub fn contention_table(counts: &[usize], pcts: &[u32], steps: u32) -> Table {
 ///
 /// Grid cells are independent fleet simulations and fan out across
 /// [`default_threads`] workers; each cell runs its own machine pool
-/// serially (`threads(1)`) so the pools don't nest.
+/// serially (`threads(1)`) so the pools don't nest. A cell whose fleet
+/// run fails reports the error in its row instead of panicking.
 pub fn fleet_churn_table(rates: &[f64], admissions: &[Admission], tenants: usize) -> Table {
     let cells: Vec<(f64, Admission)> = rates
         .iter()
@@ -482,7 +494,6 @@ pub fn fleet_churn_table(rates: &[f64], admissions: &[Admission], tenants: usize
             .threads(1)
             .seed(seed())
             .run()
-            .expect("fleet churn sweep")
     };
     let outs = par_map(&cells, default_threads(), run_cell);
     let mut t = Table::new(vec![
@@ -497,17 +508,30 @@ pub fn fleet_churn_table(rates: &[f64], admissions: &[Admission], tenants: usize
         "seal thrash",
     ]);
     for ((rate, admission), out) in cells.iter().zip(&outs) {
-        t.row(vec![
-            format!("{rate:.2}"),
-            admission.name().to_string(),
-            out.completed.to_string(),
-            out.rejected.to_string(),
-            out.queued_jobs.to_string(),
-            format!("{:.3}", out.p50_slowdown),
-            format!("{:.3}", out.p99_slowdown),
-            format!("{:.1}%", out.peak_fast_utilization * 100.0),
-            out.seal_invalidations.to_string(),
-        ]);
+        match out {
+            Ok(out) => t.row(vec![
+                format!("{rate:.2}"),
+                admission.name().to_string(),
+                out.completed.to_string(),
+                out.rejected.to_string(),
+                out.queued_jobs.to_string(),
+                format!("{:.3}", out.p50_slowdown),
+                format!("{:.3}", out.p99_slowdown),
+                format!("{:.1}%", out.peak_fast_utilization * 100.0),
+                out.seal_invalidations.to_string(),
+            ]),
+            Err(e) => t.row(vec![
+                format!("{rate:.2}"),
+                admission.name().to_string(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                format!("{e}"),
+            ]),
+        }
     }
     t
 }
@@ -585,6 +609,90 @@ pub fn degradation_table(fault_rates: &[f64], admissions: &[Admission], tenants:
                 format!("{rate:.3}"),
                 admission.name().to_string(),
                 "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                format!("{e}"),
+            ]),
+        }
+    }
+    t
+}
+
+/// Self-healing sweep: the degradation scenario (crashes and
+/// transients on, autoscaled pool) under each fault rate three ways —
+/// watchdog off (the baseline), watchdog armed (boost/throttle only),
+/// and watchdog armed with live evacuation and drain-on-warning. One
+/// row per (fault rate × mode): jobs completed, SLO violations, the
+/// mitigation ladder histogram, transient retries and breaker trips,
+/// p99 slowdown vs solo, and the makespan slowdown against the cell's
+/// own fault-free twin — what the ladder buys back under fire.
+///
+/// Regenerate with `sentinel figure sh` (see EXPERIMENTS.md §SLO &
+/// self-healing for the expected shape). Grid cells are independent
+/// fleet simulations and fan out across [`default_threads`] workers
+/// (`threads(1)` per cell so the pools don't nest); a failed cell
+/// reports its error in the row instead of panicking.
+pub fn self_healing_table(fault_rates: &[f64], tenants: usize) -> Table {
+    const MODES: [&str; 3] = ["off", "slo", "slo+evac"];
+    let cells: Vec<(f64, &str)> = fault_rates
+        .iter()
+        .flat_map(|&r| MODES.iter().map(move |&m| (r, m)))
+        .collect();
+    let run_cell = |&(rate, mode): &(f64, &str)| {
+        let mut spec = FleetSpec::new()
+            .tenants(tenants)
+            .rate_per_s(0.8)
+            .machines(2)
+            .machine_fast_bytes(2 << 30)
+            .admission(Admission::Queue)
+            .autoscale(Autoscale::default())
+            .threads(1)
+            .seed(seed())
+            .faults(FaultSpec::new().rate(rate).crashes(true));
+        if mode != "off" {
+            spec = spec.slo(SloSpec::new().target_p99(2.0).evacuate(mode == "slo+evac"));
+        }
+        spec.run()
+    };
+    let outs = par_map(&cells, default_threads(), run_cell);
+    let mut t = Table::new(vec![
+        "fault rate",
+        "watchdog",
+        "done",
+        "violations",
+        "boost/throttle/evac/drain",
+        "retries",
+        "breaker trips",
+        "p99 slowdown",
+        "vs fault-free",
+    ]);
+    for ((rate, mode), out) in cells.iter().zip(&outs) {
+        match out {
+            Ok(out) => {
+                let r = out.faults.clone().unwrap_or_default();
+                let s = out.slo.unwrap_or_default();
+                t.row(vec![
+                    format!("{rate:.3}"),
+                    (*mode).to_string(),
+                    out.completed.to_string(),
+                    s.violations.to_string(),
+                    format!("{}/{}/{}/{}", s.boosts, s.throttles, s.evacuations, s.drains),
+                    r.retries.to_string(),
+                    r.breaker_trips.to_string(),
+                    format!("{:.3}", out.p99_slowdown),
+                    match r.slowdown_vs_fault_free {
+                        Some(s) => format!("{s:.3}x"),
+                        None => "-".into(),
+                    },
+                ]);
+            }
+            Err(e) => t.row(vec![
+                format!("{rate:.3}"),
+                (*mode).to_string(),
                 "-".into(),
                 "-".into(),
                 "-".into(),
@@ -739,6 +847,12 @@ mod tests {
     fn degradation_table_has_one_row_per_grid_cell() {
         let t = degradation_table(&[0.0, 0.05], &[Admission::Queue], 4);
         assert_eq!(t.rows().len(), 2, "fault rates × admissions");
+    }
+
+    #[test]
+    fn self_healing_table_has_one_row_per_grid_cell() {
+        let t = self_healing_table(&[0.05], 4);
+        assert_eq!(t.rows().len(), 3, "fault rates × watchdog modes");
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //! sentinel compare [--steps N]             # Fig 10 + Tables 4/5
 //! sentinel figure <id|all>                 # regenerate a paper figure/table
 //! sentinel faults [opts]                   # fleet run under injected faults
+//! sentinel slo [opts]                      # self-healing fleet: faults + SLO watchdog
 //! sentinel e2e [--steps N] [--artifacts D] # real training via PJRT artifacts
 //! sentinel models                          # list model names
 //! ```
@@ -23,7 +24,7 @@ use std::process::ExitCode;
 
 use sentinel_hm::api::{
     json, parse_tenant_list, Admission, Autoscale, ClusterSpec, FaultSpec, FleetSpec, PolicyKind,
-    RunSpec, SimError, DEFAULT_FAULT_RATE,
+    RunSpec, SimError, SloSpec, DEFAULT_FAULT_RATE,
 };
 use sentinel_hm::dnn::zoo::{model_names, Model};
 use sentinel_hm::dnn::DynamicKind;
@@ -77,6 +78,7 @@ fn main() -> ExitCode {
         "cluster" => cmd_cluster(&args),
         "fleet" => cmd_fleet(&args),
         "faults" => cmd_faults(&args),
+        "slo" => cmd_slo(&args),
         "compare" => cmd_compare(&args).map_err(CliError::Msg),
         "figure" => cmd_figure(&args).map_err(CliError::Msg),
         "e2e" => cmd_e2e(&args).map_err(CliError::Msg),
@@ -139,6 +141,26 @@ fn apply_ckpt_flags<S>(
 /// The checkpoint flags every simulating command accepts.
 const CKPT_FLAGS: [&str; 3] = ["checkpoint-every", "checkpoint-dir", "resume"];
 
+/// Apply the shared SLO flags on `fleet`/`faults`: `--slo-p99 X` arms
+/// the watchdog with that target, and `--evac` opts the mitigation
+/// ladder into live evacuation and drain-on-warning (off by default on
+/// these commands; `sentinel slo` flips the default).
+fn apply_slo_flags(opts: &Opts, spec: FleetSpec) -> Result<FleetSpec, String> {
+    match opts.get("slo-p99") {
+        None => {
+            if opts.contains_key("evac") {
+                return Err("--evac only applies with --slo-p99 (an armed watchdog)".into());
+            }
+            Ok(spec)
+        }
+        Some(v) => {
+            let p99: f64 = v.parse().map_err(|_| format!("--slo-p99 wants a number, got '{v}'"))?;
+            let slo = SloSpec::new().target_p99(p99).evacuate(opts.contains_key("evac"));
+            Ok(spec.slo(slo))
+        }
+    }
+}
+
 fn print_usage() {
     eprintln!(
         "sentinel — runtime data management on heterogeneous memory (paper reproduction)\n\
@@ -154,15 +176,19 @@ fn print_usage() {
            sentinel fleet [--tenants 200] [--rate 0.4] [--amplitude 0.5] [--period 600] [--training-frac 0.35]\n\
                           [--machines 2] [--fast-mb 4096] [--arb static|proportional|priority]\n\
                           [--admission reject|queue|spill] [--autoscale] [--max-machines 64]\n\
-                          [--threads N] [--seed S] [--json]\n\
+                          [--slo-p99 X] [--evac] [--threads N] [--seed S] [--json]\n\
            sentinel faults [--tenants 32] [--rate 1.0] [--machines 2] [--fast-mb 4096]\n\
                            [--arb static|proportional|priority] [--admission reject|queue|spill]\n\
                            [--fault-rate {DEFAULT_FAULT_RATE}] [--fault-seed S] [--horizon N] [--no-crashes]\n\
-                           [--fixed-pool] [--max-machines 64] [--threads N] [--seed S] [--json]\n\
-           (train/dynamic/cluster/fleet/faults also take [--checkpoint-every N] [--checkpoint-dir D] [--resume F]:\n\
+                           [--slo-p99 X] [--evac] [--fixed-pool] [--max-machines 64] [--threads N] [--seed S] [--json]\n\
+           sentinel slo [--tenants 24] [--rate 1.0] [--machines 2] [--fast-mb 4096]\n\
+                        [--arb static|proportional|priority] [--admission reject|queue|spill]\n\
+                        [--fault-rate {DEFAULT_FAULT_RATE}] [--fault-seed S] [--slo-p99 2.0] [--slo-window 8]\n\
+                        [--warn N] [--no-evac] [--no-crashes] [--max-machines 64] [--threads N] [--seed S] [--json]\n\
+           (train/dynamic/cluster/fleet/faults/slo also take [--checkpoint-every N] [--checkpoint-dir D] [--resume F]:\n\
             periodic checkpoints + a final one on Ctrl-C; a resumed run matches the uninterrupted one bit for bit)\n\
            sentinel compare [--steps 14] [--json]\n\
-           sentinel figure <1|2|3|4|7|8|10|11|12|13|t1|t4|t5|ct|fleet|dg|rp|all> [--steps N] [--fast-mb N] [--json]\n\
+           sentinel figure <1|2|3|4|7|8|10|11|12|13|t1|t4|t5|ct|fleet|dg|rp|sh|all> [--steps N] [--fast-mb N] [--json]\n\
            sentinel e2e [--steps 300] [--artifacts artifacts] [--lr 0.05]   (needs the `pjrt` feature)\n\
            sentinel models [--json]\n\
          \n\
@@ -607,13 +633,14 @@ fn cmd_fleet(args: &[String]) -> Result<(), CliError> {
             "fast-mb",
             "arb",
             "admission",
+            "slo-p99",
             "threads",
             "seed",
             CKPT_FLAGS[0],
             CKPT_FLAGS[1],
             CKPT_FLAGS[2],
         ],
-        &["json", "autoscale"],
+        &["json", "autoscale", "evac"],
     )?;
     let mut spec = FleetSpec::new()
         .tenants(opt_u64(&opts, "tenants", 200)? as usize)
@@ -637,6 +664,7 @@ fn cmd_fleet(args: &[String]) -> Result<(), CliError> {
     } else if opts.contains_key("max-machines") {
         return Err("--max-machines only applies with --autoscale".into());
     }
+    spec = apply_slo_flags(&opts, spec)?;
     if let Some(seed) = opts.get("seed") {
         spec = spec.seed(seed.parse().map_err(|_| "--seed wants a number".to_string())?);
     }
@@ -686,11 +714,12 @@ fn cmd_faults(args: &[String]) -> Result<(), CliError> {
             "fault-rate",
             "fault-seed",
             "horizon",
+            "slo-p99",
             CKPT_FLAGS[0],
             CKPT_FLAGS[1],
             CKPT_FLAGS[2],
         ],
-        &["json", "fixed-pool", "no-crashes"],
+        &["json", "fixed-pool", "no-crashes", "evac"],
     )?;
     let mut faults = FaultSpec::new()
         .rate(opt_f64(&opts, "fault-rate", DEFAULT_FAULT_RATE)?)
@@ -728,6 +757,7 @@ fn cmd_faults(args: &[String]) -> Result<(), CliError> {
             ..Default::default()
         });
     }
+    spec = apply_slo_flags(&opts, spec)?;
     if let Some(seed) = opts.get("seed") {
         spec = spec.seed(seed.parse().map_err(|_| "--seed wants a number".to_string())?);
     }
@@ -751,6 +781,103 @@ fn cmd_faults(args: &[String]) -> Result<(), CliError> {
         out.machines_initial,
         fmt_bytes(out.machine_fast_bytes),
         out.admission.name(),
+    );
+    out.summary_table().print();
+    Ok(())
+}
+
+/// `sentinel slo`: the canonical self-healing scenario — transient and
+/// crash faults armed on an autoscaled pool, with the SLO watchdog
+/// enforcing a p99 slowdown target through its mitigation ladder
+/// (boost → throttle → live evacuation) and draining machines ahead of
+/// scheduled crashes.
+fn cmd_slo(args: &[String]) -> Result<(), CliError> {
+    let opts = parse_opts(
+        "slo",
+        &args[1..],
+        &[
+            "tenants",
+            "rate",
+            "machines",
+            "max-machines",
+            "fast-mb",
+            "arb",
+            "admission",
+            "threads",
+            "seed",
+            "fault-rate",
+            "fault-seed",
+            "slo-p99",
+            "slo-window",
+            "warn",
+            CKPT_FLAGS[0],
+            CKPT_FLAGS[1],
+            CKPT_FLAGS[2],
+        ],
+        &["json", "no-evac", "no-crashes"],
+    )?;
+    let mut faults = FaultSpec::new()
+        .rate(opt_f64(&opts, "fault-rate", DEFAULT_FAULT_RATE)?)
+        .crashes(!opts.contains_key("no-crashes"));
+    if let Some(s) = opts.get("fault-seed") {
+        faults = faults.seed(s.parse().map_err(|_| "--fault-seed wants a number".to_string())?);
+    }
+    let mut slo = SloSpec::new()
+        .target_p99(opt_f64(&opts, "slo-p99", 2.0)?)
+        .window_events(opt_u64(&opts, "slo-window", 8)?)
+        .evacuate(!opts.contains_key("no-evac"));
+    if let Some(w) = opts.get("warn") {
+        slo = slo.warn_steps(w.parse().map_err(|_| "--warn wants a number".to_string())?);
+    }
+    let mut spec = FleetSpec::new()
+        .tenants(opt_u64(&opts, "tenants", 24)? as usize)
+        .rate_per_s(opt_f64(&opts, "rate", 1.0)?)
+        .machines(opt_u64(&opts, "machines", 2)? as usize)
+        .machine_fast_bytes(opt_u64(&opts, "fast-mb", 4096)? << 20)
+        .threads(opt_u64(&opts, "threads", 0)? as usize)
+        .faults(faults)
+        .slo(slo)
+        // Crashes permanently remove machines, so the pool autoscales
+        // (like `sentinel faults` does by default).
+        .autoscale(Autoscale {
+            max_machines: opt_u64(&opts, "max-machines", 64)? as usize,
+            ..Default::default()
+        });
+    if let Some(a) = opts.get("arb") {
+        spec = spec.arbitration(a.parse().map_err(|e| format!("{e}"))?);
+    }
+    if let Some(a) = opts.get("admission") {
+        spec = spec.admission(a.parse().map_err(|e| format!("{e}"))?);
+    }
+    if let Some(seed) = opts.get("seed") {
+        spec = spec.seed(seed.parse().map_err(|_| "--seed wants a number".to_string())?);
+    }
+    let spec = apply_ckpt_flags(
+        &opts,
+        spec,
+        FleetSpec::checkpoint_every,
+        FleetSpec::checkpoint_dir,
+        FleetSpec::resume_from,
+    )?;
+    let out = spec.run_checkpointed().map_err(cli_sim_err)?;
+    if want_json(&opts) {
+        println!("{}", out.to_json());
+        return Ok(());
+    }
+    let ledger = out.slo.unwrap_or_default();
+    let report = out.faults.clone().unwrap_or_default();
+    println!(
+        "slo: {} violations ({} boost / {} throttle / {} evac / {} drain) | \
+         {} faults across {} jobs | {} machines x {} fast",
+        ledger.violations,
+        ledger.boosts,
+        ledger.throttles,
+        ledger.evacuations,
+        ledger.drains,
+        report.injected,
+        out.jobs_offered,
+        out.machines_initial,
+        fmt_bytes(out.machine_fast_bytes),
     );
     out.summary_table().print();
     Ok(())
@@ -887,6 +1014,14 @@ fn figure_sections(id: &str, steps: u32, fast_bytes: u64) -> Result<Vec<(String,
                 .into(),
             figures::repeatability_table(&[0.0, 0.1, 0.25, 0.5], 40),
         )],
+        // Beyond the paper: self-healing sweep — fault rate × watchdog
+        // mode (off / armed / armed+evacuation), transients and crashes
+        // on, showing what the mitigation ladder buys.
+        "sh" => vec![(
+            "Self-healing — fault rate × watchdog mode (crashes on, autoscaled pool, 24 jobs)"
+                .into(),
+            figures::self_healing_table(&[0.02, 0.08], 24),
+        )],
         other => return Err(format!("unknown figure '{other}'")),
     };
     Ok(sections)
@@ -902,11 +1037,11 @@ fn cmd_figure(args: &[String]) -> Result<(), String> {
     let steps = opt_u64(&opts, "steps", u64::from(figures::RUN_STEPS))? as u32;
     let fast = opt_u64(&opts, "fast-mb", 1024)? << 20;
     // "7" covers Fig 8 and "10" covers Table 4 (shared sweeps). "ct",
-    // "fleet", "dg" and "rp" (the beyond-paper contention, churn,
-    // fault and repeatability sweeps) are deliberately NOT in "all":
-    // "all" regenerates the paper's artifacts, and those grids are the
-    // most expensive figures — run `sentinel figure ct|fleet|dg|rp`
-    // explicitly.
+    // "fleet", "dg", "rp" and "sh" (the beyond-paper contention, churn,
+    // fault, repeatability and self-healing sweeps) are deliberately
+    // NOT in "all": "all" regenerates the paper's artifacts, and those
+    // grids are the most expensive figures — run
+    // `sentinel figure ct|fleet|dg|rp|sh` explicitly.
     let ids: Vec<&str> = if id == "all" {
         vec!["1", "2", "3", "4", "t1", "7", "10", "t5", "11", "12", "13"]
     } else {

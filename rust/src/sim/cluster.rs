@@ -62,6 +62,7 @@ use crate::sim::device::Tier;
 use crate::sim::engine::{replay_layer, EngineConfig, Policy, StepStats, TrainResult};
 use crate::sim::fault::{DegradationReport, FaultAction, FaultInjector, FaultPlan, RecoveryTracker};
 use crate::sim::machine::Machine;
+use crate::sim::migration::CircuitBreaker;
 use crate::sim::replay::CompiledTrace;
 use crate::sim::schedule::{Sealer, StepRecorder};
 use crate::PAGE_SIZE;
@@ -600,6 +601,16 @@ impl ActiveTenant {
         self.step
     }
 
+    /// Mean simulated time per completed step so far, crash carries
+    /// included — the SLO watchdog's slowdown numerator. `None` before
+    /// the first completed step (no signal yet).
+    pub(crate) fn mean_step_ns(&self) -> Option<f64> {
+        if self.step == 0 {
+            return None;
+        }
+        Some((self.carry_time_ns + self.machine.now_ns()) / f64::from(self.step))
+    }
+
     /// Total steps this tenant was asked to run.
     pub(crate) fn steps_total(&self) -> u32 {
         self.config.steps
@@ -804,6 +815,31 @@ impl ActiveTenant {
     }
 }
 
+/// An open [`FaultKind::FlakyLane`] window on one machine: per-step
+/// outcomes were pre-drawn into `fail_mask` at plan time, so replaying
+/// the window is pure table lookup — no RNG on the hot path, and the
+/// outcome sequence is identical regardless of worker count.
+///
+/// [`FaultKind::FlakyLane`]: crate::sim::fault::FaultKind::FlakyLane
+#[derive(Clone, Copy)]
+struct FlakyWindow {
+    start: u64,
+    until: u64,
+    fail_mask: u64,
+    /// Recovery-ledger key: the window's entry stays blocked until the
+    /// window closes, so its recovery clock cannot be stopped by a
+    /// re-seal that happens *during* the window.
+    key: u64,
+}
+
+/// Deterministic exponential backoff for a timed-out promotion batch:
+/// `1, 2, 4, 8, 16, 16, …` machine steps, plus one pre-drawn jitter bit
+/// per attempt (seeded at plan time — no RNG here, so the retry
+/// schedule is bit-identical across runs and worker counts).
+fn backoff_steps(attempt: u32, jitter: u64) -> u64 {
+    (1u64 << (attempt.saturating_sub(1)).min(4)) + ((jitter >> attempt.min(63)) & 1)
+}
+
 /// One machine's fault state: the event cursor for its slice of the
 /// [`FaultPlan`], the per-fault recovery stopwatch, and the accounting
 /// that becomes a [`DegradationReport`].
@@ -814,13 +850,39 @@ impl ActiveTenant {
 /// wall-clock, which is what makes faulted runs bit-deterministic
 /// across worker counts.
 ///
+/// The transient kinds add a self-healing loop on the same clock: a
+/// [`FaultKind::MigrationTimeout`] cancels the in-flight promotion
+/// batch and gates the lane for a [`backoff_steps`] retry delay; an
+/// open [`FlakyWindow`] feeds its pre-drawn per-step outcomes into the
+/// machine's [`CircuitBreaker`], which gates promotions after
+/// consecutive failures and reopens via a half-open probe. Whenever the
+/// combined gate (breaker open OR backoff pending) flips, every
+/// resident tenant's promotion lane is blocked/unblocked and its seal
+/// invalidated — recovery rides the ordinary
+/// `fast_share_changed → invalidate → re-seal` path.
+///
 /// `pub(crate)`: owned by [`run_cluster_faulted`] here and per
 /// `FleetMachine` in `sim::fleet`.
+///
+/// [`FaultKind::MigrationTimeout`]: crate::sim::fault::FaultKind::MigrationTimeout
 pub(crate) struct MachineFaults {
     injector: FaultInjector,
     tracker: RecoveryTracker,
     pub(crate) report: DegradationReport,
     steps: u64,
+    /// One breaker per physical machine (not per tenant): the flaky
+    /// lane is machine-level hardware, so all residents share its
+    /// state.
+    breaker: CircuitBreaker,
+    /// Step at which the timed-out promotion batch may be retried
+    /// (`Some` while a backoff is pending — the lane is gated).
+    timeout_release_at: Option<u64>,
+    /// Consecutive timeout count feeding the exponential backoff;
+    /// reset on release.
+    timeout_attempts: u32,
+    /// Recovery-ledger keys of timeout events still in backoff.
+    timeout_keys: Vec<u64>,
+    flaky: Option<FlakyWindow>,
     /// Scratch buffer reused across polls (no per-step allocation).
     actions: Vec<FaultAction>,
 }
@@ -832,15 +894,31 @@ impl MachineFaults {
             tracker: RecoveryTracker::default(),
             report: DegradationReport::default(),
             steps: 0,
+            breaker: CircuitBreaker::new(),
+            timeout_release_at: None,
+            timeout_attempts: 0,
+            timeout_keys: Vec::new(),
+            flaky: None,
             actions: Vec::new(),
         }
     }
 
-    /// True once every scheduled event fired and no degradation window
-    /// remains open (the property tests' "after the last fault"
-    /// anchor).
+    /// True once every scheduled event fired and no fault window —
+    /// degradation, flaky lane, or timeout backoff — remains open (the
+    /// property tests' "after the last fault" anchor).
     pub(crate) fn exhausted(&self) -> bool {
-        self.injector.exhausted()
+        self.injector.exhausted() && self.flaky.is_none() && self.timeout_release_at.is_none()
+    }
+
+    /// Machine step clock (cumulative completed tenant steps).
+    pub(crate) fn step_count(&self) -> u64 {
+        self.steps
+    }
+
+    /// Step of the next scheduled crash still to fire, if any — the
+    /// fleet's drain-on-warning watchdog evacuates ahead of it.
+    pub(crate) fn next_crash_at(&self) -> Option<u64> {
+        self.injector.next_crash_at()
     }
 
     /// A tenant on this machine completed a step: advance the step
@@ -923,6 +1001,36 @@ impl MachineFaults {
                     }
                     self.tracker.fired(self.steps);
                 }
+                FaultAction::TimeoutPromotions { jitter } => {
+                    // The in-flight promotion batch timed out: drop it
+                    // and sit out a deterministic exponential backoff
+                    // before the lane reopens (the policy re-requests
+                    // the pages then — that re-request is the retry).
+                    self.report.injected += 1;
+                    self.report.timeouts += 1;
+                    for t in tenants.iter_mut().filter(|t| !t.done) {
+                        self.report.promote_pages_dropped += t.machine.cancel_all_promotions();
+                    }
+                    self.timeout_attempts += 1;
+                    self.timeout_release_at =
+                        Some(self.steps + backoff_steps(self.timeout_attempts, jitter));
+                    // Blocked in the ledger: a re-seal during the
+                    // backoff (running from slow memory) must not stop
+                    // this event's recovery clock.
+                    let key = self.tracker.fired_blocked(self.steps);
+                    self.timeout_keys.push(key);
+                }
+                FaultAction::OpenFlakyLane { duration_steps, fail_mask } => {
+                    self.report.injected += 1;
+                    self.report.flaky_windows += 1;
+                    let key = self.tracker.fired_blocked(self.steps);
+                    self.flaky = Some(FlakyWindow {
+                        start: self.steps,
+                        until: self.steps + u64::from(duration_steps),
+                        fail_mask,
+                        key,
+                    });
+                }
                 FaultAction::Crash => {
                     self.report.injected += 1;
                     self.report.crashes += 1;
@@ -931,9 +1039,84 @@ impl MachineFaults {
             }
         }
         self.actions = actions;
+        // Transient self-healing, on the same step clock the injector
+        // fires on. Order matters: release the timeout backoff first
+        // (its clock was set in an earlier step), then play this step's
+        // flaky outcome, then let a cooled-down breaker half-open and
+        // probe — all before the gate edge below, so a single step can
+        // both close a window and reopen the lane.
+        if let Some(at) = self.timeout_release_at {
+            if self.steps >= at {
+                // Backoff served: the retry goes through (the reopened
+                // lane accepts the policy's next promotion request).
+                self.timeout_release_at = None;
+                self.timeout_attempts = 0;
+                self.report.retries += 1;
+                for key in self.timeout_keys.drain(..) {
+                    self.tracker.unblock(key);
+                }
+            }
+        }
+        if let Some(fw) = self.flaky {
+            if self.steps >= fw.until {
+                // Window over: the lane is healthy again. A breaker
+                // mid-count forgets its failures; an open breaker still
+                // waits for its half-open probe below.
+                self.breaker.record_success();
+                self.tracker.unblock(fw.key);
+                self.flaky = None;
+            } else {
+                let bit = (fw.fail_mask >> (self.steps - fw.start).min(63)) & 1;
+                if bit == 1 {
+                    // This step's pre-drawn outcome: the lane flaked.
+                    // Whatever was queued is lost (the affected tenant
+                    // re-plans, as under `DropPromotions`), and one
+                    // more consecutive failure is charged to the
+                    // breaker.
+                    for t in tenants.iter_mut().filter(|t| !t.done) {
+                        let dropped = t.machine.cancel_all_promotions();
+                        if dropped > 0 {
+                            self.report.promote_pages_dropped += dropped;
+                            if t.is_sealed() {
+                                self.report.seal_invalidations += 1;
+                            }
+                            t.fault_disrupt();
+                        }
+                    }
+                    if self.breaker.record_failure(self.steps) {
+                        self.report.breaker_trips += 1;
+                    }
+                } else {
+                    self.breaker.record_success();
+                }
+            }
+        }
+        if self.flaky.is_none() && self.breaker.poll(self.steps) {
+            // Half-open probe against a lane with no open flaky window:
+            // the probe succeeds and the breaker closes. (During a
+            // window the probe's fate is the step's pre-drawn bit,
+            // handled above.)
+            self.breaker.record_success();
+        }
+        // The combined promotion gate: breaker open or backoff pending.
+        // Flips are edges — each resident tenant is blocked/unblocked
+        // once, with the usual disrupt-and-re-seal, and tenants that
+        // join a gated machine later are caught by the next step's
+        // comparison.
+        let desired = self.timeout_release_at.is_some() || !self.breaker.allows_promotions();
+        for t in tenants.iter_mut().filter(|t| !t.done) {
+            if t.machine.promotions_blocked() != desired {
+                if t.is_sealed() {
+                    self.report.seal_invalidations += 1;
+                }
+                t.machine.set_promotions_blocked(desired);
+                t.fault_disrupt();
+            }
+        }
         // The recovery clock stops at the first step where every
         // surviving tenant holds a sealed schedule again — proof the
-        // whole machine re-converged.
+        // whole machine re-converged. Window-blocked entries (flaky,
+        // timeout backoff) are exempt until their windows close.
         if self.tracker.open_count() > 0 {
             let any_running = tenants.iter().any(|t| !t.done);
             if any_running && tenants.iter().all(|t| t.done || t.is_sealed()) {
@@ -961,14 +1144,58 @@ impl MachineFaults {
         self.tracker.encode(e);
         self.report.encode(e);
         e.u64(self.steps);
+        self.breaker.encode(e);
+        e.opt_u64(self.timeout_release_at);
+        e.u32(self.timeout_attempts);
+        e.len(self.timeout_keys.len());
+        for &key in &self.timeout_keys {
+            e.u64(key);
+        }
+        match &self.flaky {
+            Some(fw) => {
+                e.bool(true);
+                e.u64(fw.start);
+                e.u64(fw.until);
+                e.u64(fw.fail_mask);
+                e.u64(fw.key);
+            }
+            None => e.bool(false),
+        }
     }
 
     pub(crate) fn decode(d: &mut Dec<'_>) -> Result<MachineFaults, CheckpointError> {
+        let injector = FaultInjector::decode(d)?;
+        let tracker = RecoveryTracker::decode(d)?;
+        let report = DegradationReport::decode(d)?;
+        let steps = d.u64()?;
+        let breaker = CircuitBreaker::decode(d)?;
+        let timeout_release_at = d.opt_u64()?;
+        let timeout_attempts = d.u32()?;
+        let n = d.len()?;
+        let mut timeout_keys = Vec::with_capacity(n);
+        for _ in 0..n {
+            timeout_keys.push(d.u64()?);
+        }
+        let flaky = if d.bool()? {
+            Some(FlakyWindow {
+                start: d.u64()?,
+                until: d.u64()?,
+                fail_mask: d.u64()?,
+                key: d.u64()?,
+            })
+        } else {
+            None
+        };
         Ok(MachineFaults {
-            injector: FaultInjector::decode(d)?,
-            tracker: RecoveryTracker::decode(d)?,
-            report: DegradationReport::decode(d)?,
-            steps: d.u64()?,
+            injector,
+            tracker,
+            report,
+            steps,
+            breaker,
+            timeout_release_at,
+            timeout_attempts,
+            timeout_keys,
+            flaky,
             actions: Vec::new(),
         })
     }
@@ -1370,6 +1597,76 @@ mod tests {
         );
         // The machine ends the run healthy: the window closed.
         assert!(report.max_recovery_steps() >= 1);
+    }
+
+    #[test]
+    fn migration_timeout_backs_off_retries_and_reseals() {
+        use crate::sim::fault::{FaultKind, FaultPlan};
+        let w = shared_workload(Model::Dcgan, 5);
+        let kind = PolicyKind::Lru;
+        let cfg = kind.engine_config(16);
+        let spec = kind.machine_spec(&w.graph, &w.trace, 1);
+        let compiled = Arc::new(CompiledTrace::compile(
+            &w.graph,
+            &w.trace,
+            spec.compute_gflops,
+            cfg.profiling_fault_ns,
+        ));
+        let share = Model::Dcgan.peak_memory_target() / 10;
+        let mk = || vec![tenant(&w, &compiled, kind, share, 0, 16)];
+        // Jitter 0: attempt 1 backs off exactly 1 step, so the lane is
+        // gated for step 2 only and the retry fires at step 3.
+        let plan = FaultPlan::new().push(0, 2, FaultKind::MigrationTimeout { jitter: 0 });
+        let (faulted, report) =
+            run_cluster_faulted(mk(), Arbitration::StaticPartition, Some(&plan));
+        let report = report.expect("report present");
+        assert_eq!(report.injected, 1);
+        assert_eq!(report.timeouts, 1);
+        assert_eq!(report.retries, 1, "the backed-off batch must be retried");
+        assert_eq!(report.breaker_trips, 0, "a lone timeout never trips the breaker");
+        assert_eq!(faulted[0].result.steps.len(), 16, "tenant still completes");
+        assert_eq!(report.reseals, 1, "the gated tenant re-seals after the retry");
+        assert_eq!(report.recovery_steps.len(), 1);
+        assert!(report.recovery_steps[0] >= 1, "recovery spans at least the backoff");
+    }
+
+    #[test]
+    fn flaky_lane_trips_breaker_then_half_open_probe_heals() {
+        use crate::sim::fault::{FaultKind, FaultPlan};
+        let w = shared_workload(Model::Dcgan, 5);
+        let kind = PolicyKind::Lru;
+        let cfg = kind.engine_config(20);
+        let spec = kind.machine_spec(&w.graph, &w.trace, 1);
+        let compiled = Arc::new(CompiledTrace::compile(
+            &w.graph,
+            &w.trace,
+            spec.compute_gflops,
+            cfg.profiling_fault_ns,
+        ));
+        let share = Model::Dcgan.peak_memory_target() / 10;
+        let mk = || vec![tenant(&w, &compiled, kind, share, 0, 20)];
+        // Six consecutive pre-drawn failures: the breaker trips on the
+        // third, stays open through the window, and the post-window
+        // half-open probe closes it again.
+        let plan = FaultPlan::new().push(
+            0,
+            2,
+            FaultKind::FlakyLane { duration_steps: 6, fail_mask: 0b11_1111 },
+        );
+        let (faulted, report) =
+            run_cluster_faulted(mk(), Arbitration::StaticPartition, Some(&plan));
+        let report = report.expect("report present");
+        assert_eq!(report.injected, 1);
+        assert_eq!(report.flaky_windows, 1);
+        assert_eq!(report.breaker_trips, 1, "3 consecutive failures = one trip");
+        assert_eq!(faulted[0].result.steps.len(), 20, "tenant still completes");
+        assert_eq!(report.reseals, 1, "the machine re-converges after the window");
+        assert_eq!(report.recovery_steps.len(), 1);
+        assert!(
+            report.recovery_steps[0] >= 6,
+            "a window-blocked recovery cannot close before the window does ({})",
+            report.recovery_steps[0]
+        );
     }
 
     #[test]

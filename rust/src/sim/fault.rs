@@ -72,6 +72,29 @@ pub enum FaultKind {
     /// Machine crash (fleet-level only): the machine retires and every
     /// resident tenant is displaced back through admission.
     Crash,
+    /// Transient migration timeout: every in-flight promotion batch
+    /// times out and promotions stay parked until a deterministic
+    /// exponential-backoff retry succeeds. `jitter` is pre-drawn at plan
+    /// construction (one bit per retry attempt), so the backoff schedule
+    /// is fixed by the seed, not by anything the run does.
+    MigrationTimeout {
+        /// Pre-drawn jitter bits; attempt `k` adds bit `k` of this word
+        /// to its backoff delay.
+        jitter: u64,
+    },
+    /// Transient flaky promotion lane: for `duration_steps` machine
+    /// steps, each step's link-health outcome is bit `i` of the
+    /// pre-drawn `fail_mask` (1 = the lane drops everything in flight
+    /// that step). Consecutive failures trip the lane's circuit breaker
+    /// ([`crate::sim::migration::CircuitBreaker`]).
+    FlakyLane {
+        /// Window length on the machine's step clock (≤ 64; outcomes
+        /// beyond bit 63 repeat the last bit).
+        duration_steps: u32,
+        /// Pre-drawn per-step outcomes: bit `i` decides step
+        /// `window_start + i`.
+        fail_mask: u64,
+    },
 }
 
 impl FaultKind {
@@ -82,6 +105,8 @@ impl FaultKind {
             FaultKind::FastCapacityLoss { .. } => "capacity",
             FaultKind::LaneStall => "stall",
             FaultKind::Crash => "crash",
+            FaultKind::MigrationTimeout { .. } => "timeout",
+            FaultKind::FlakyLane { .. } => "flaky",
         }
     }
 
@@ -98,6 +123,15 @@ impl FaultKind {
             }
             FaultKind::LaneStall => e.u8(2),
             FaultKind::Crash => e.u8(3),
+            FaultKind::MigrationTimeout { jitter } => {
+                e.u8(4);
+                e.u64(jitter);
+            }
+            FaultKind::FlakyLane { duration_steps, fail_mask } => {
+                e.u8(5);
+                e.u32(duration_steps);
+                e.u64(fail_mask);
+            }
         }
     }
 
@@ -110,6 +144,11 @@ impl FaultKind {
             1 => FaultKind::FastCapacityLoss { fraction: d.f64()? },
             2 => FaultKind::LaneStall,
             3 => FaultKind::Crash,
+            4 => FaultKind::MigrationTimeout { jitter: d.u64()? },
+            5 => FaultKind::FlakyLane {
+                duration_steps: d.u32()?,
+                fail_mask: d.u64()?,
+            },
             _ => return Err(CheckpointError::Malformed("unknown fault kind tag")),
         })
     }
@@ -198,9 +237,12 @@ impl FaultPlan {
     ///
     /// Draws come from the dedicated [`FAULT_STREAM`] substream of
     /// `seed`, so the plan never perturbs arrival or workload draws.
-    /// After a bandwidth-degradation event the draw cursor skips past
-    /// the degradation window, so windows never overlap and a machine
-    /// carries at most one active degradation at a time.
+    /// After a bandwidth-degradation or flaky-lane event the draw
+    /// cursor skips past that event's window, so same-kind windows
+    /// never overlap and a machine carries at most one active
+    /// degradation and one active flaky window at a time. (Windows of
+    /// *different* kinds may still overlap — the keyed
+    /// [`RecoveryTracker`] attributes recovery per event.)
     pub fn draw(
         seed: u64,
         machines: usize,
@@ -214,7 +256,7 @@ impl FaultPlan {
             let mut step = 1u64;
             while step < horizon_steps {
                 if rng.chance(rate_per_step) {
-                    let roll = rng.gen_range(if include_crashes { 4 } else { 3 });
+                    let roll = rng.gen_range(if include_crashes { 6 } else { 5 });
                     let kind = match roll {
                         0 => {
                             let factor = 1.5 + rng.f64() * 6.5;
@@ -224,6 +266,13 @@ impl FaultPlan {
                         }
                         1 => FaultKind::FastCapacityLoss { fraction: 0.05 + rng.f64() * 0.20 },
                         2 => FaultKind::LaneStall,
+                        3 => FaultKind::MigrationTimeout { jitter: rng.next_u64() },
+                        4 => {
+                            let duration_steps = rng.range_inclusive(2, 8) as u32;
+                            let fail_mask = rng.next_u64();
+                            step += duration_steps as u64;
+                            FaultKind::FlakyLane { duration_steps, fail_mask }
+                        }
                         _ => FaultKind::Crash,
                     };
                     events.push(FaultEvent { machine, at_step: step, kind });
@@ -274,6 +323,21 @@ pub enum FaultAction {
     DropPromotions,
     /// Retire the machine and displace its tenants (fleet-level).
     Crash,
+    /// Time out every in-flight promotion batch and park promotions
+    /// until the backoff retry (driven by the machine driver) succeeds.
+    TimeoutPromotions {
+        /// Pre-drawn jitter bits for the exponential backoff schedule.
+        jitter: u64,
+    },
+    /// Open a flaky-lane window: per-step outcomes from `fail_mask`
+    /// feed the promote lane's circuit breaker.
+    OpenFlakyLane {
+        /// Window length on the machine's step clock.
+        duration_steps: u32,
+        /// Pre-drawn per-step outcomes (bit `i` decides step
+        /// `window_start + i`; 1 = failure).
+        fail_mask: u64,
+    },
 }
 
 /// Per-machine event cursor: walks one machine's slice of a
@@ -314,6 +378,12 @@ impl FaultInjector {
                 }
                 FaultKind::LaneStall => out.push(FaultAction::DropPromotions),
                 FaultKind::Crash => out.push(FaultAction::Crash),
+                FaultKind::MigrationTimeout { jitter } => {
+                    out.push(FaultAction::TimeoutPromotions { jitter });
+                }
+                FaultKind::FlakyLane { duration_steps, fail_mask } => {
+                    out.push(FaultAction::OpenFlakyLane { duration_steps, fail_mask });
+                }
             }
         }
     }
@@ -327,6 +397,16 @@ impl FaultInjector {
     /// Events not yet delivered.
     pub fn remaining(&self) -> usize {
         self.events.len() - self.next
+    }
+
+    /// The step of the next undelivered [`FaultKind::Crash`], if any —
+    /// the SLO watchdog's drain-on-warning hook peeks at this to
+    /// evacuate tenants ahead of a scheduled crash.
+    pub fn next_crash_at(&self) -> Option<u64> {
+        self.events[self.next..]
+            .iter()
+            .find(|e| matches!(e.kind, FaultKind::Crash))
+            .map(|e| e.at_step)
     }
 
     /// Serialize the cursor: the machine's event slice, the delivery
@@ -354,14 +434,29 @@ impl FaultInjector {
     }
 }
 
-/// Per-fault recovery stopwatch: a fault *fires* at some machine step;
-/// it is *recovered* at the first later step where every surviving
-/// affected tenant holds a sealed schedule again (proof of
-/// re-convergence). Faults that never see a full re-seal close when the
-/// run ends, with the steps they waited.
+/// One entry in the recovery ledger: which event (by key), when it
+/// fired, and whether it is still *blocked* — its fault window
+/// (degradation, flaky lane, timeout backoff) is still open, so even a
+/// full re-seal cannot close it yet.
+#[derive(Clone, Copy, Debug)]
+struct OpenRecovery {
+    key: u64,
+    fired_at: u64,
+    blocked: bool,
+}
+
+/// Per-fault recovery stopwatch, keyed per event: a fault *fires* at
+/// some machine step; it is *recovered* at the first later step where
+/// its window has closed **and** every surviving affected tenant holds
+/// a sealed schedule again (proof of re-convergence). Keying matters
+/// when windows overlap: a second event firing before the first
+/// recovers must accumulate its own recovery clock, not be closed by
+/// whichever re-seal lands first. Faults that never see a full re-seal
+/// close when the run ends, with the steps they waited.
 #[derive(Clone, Debug, Default)]
 pub struct RecoveryTracker {
-    open: Vec<u64>,
+    next_key: u64,
+    open: Vec<OpenRecovery>,
     /// Closed recovery times (machine steps from fault to full re-seal
     /// or run end), in fault order.
     pub recovery_steps: Vec<u64>,
@@ -371,25 +466,60 @@ pub struct RecoveryTracker {
 }
 
 impl RecoveryTracker {
-    /// A fault fired at machine step `step`.
-    pub fn fired(&mut self, step: u64) {
-        self.open.push(step);
+    fn push(&mut self, step: u64, blocked: bool) -> u64 {
+        let key = self.next_key;
+        self.next_key += 1;
+        self.open.push(OpenRecovery { key, fired_at: step, blocked });
+        key
     }
 
-    /// Every surviving affected tenant is sealed again at `step`: close
-    /// all open recoveries as genuine re-seals.
-    pub fn recovered(&mut self, step: u64) {
-        self.reseals += self.open.len() as u64;
-        for fired in self.open.drain(..) {
-            self.recovery_steps.push(step.saturating_sub(fired));
+    /// An instantaneous fault fired at machine step `step`: its
+    /// recovery closes at the next full re-seal. Returns the event's
+    /// ledger key.
+    pub fn fired(&mut self, step: u64) -> u64 {
+        self.push(step, false)
+    }
+
+    /// A *windowed* fault fired at machine step `step`: its recovery
+    /// stays open through any re-seal until [`RecoveryTracker::unblock`]
+    /// is called with the returned key (window closed), and only a
+    /// re-seal after that closes it.
+    pub fn fired_blocked(&mut self, step: u64) -> u64 {
+        self.push(step, true)
+    }
+
+    /// The window of the event with ledger key `key` has closed; the
+    /// next full re-seal may now close its recovery. Unknown or
+    /// already-closed keys are ignored.
+    pub fn unblock(&mut self, key: u64) {
+        for o in &mut self.open {
+            if o.key == key {
+                o.blocked = false;
+            }
         }
     }
 
+    /// Every surviving affected tenant is sealed again at `step`: close
+    /// every open recovery whose window has ended as a genuine re-seal.
+    /// Blocked entries (window still open) keep accumulating.
+    pub fn recovered(&mut self, step: u64) {
+        let mut kept = Vec::with_capacity(self.open.len());
+        for o in self.open.drain(..) {
+            if o.blocked {
+                kept.push(o);
+            } else {
+                self.reseals += 1;
+                self.recovery_steps.push(step.saturating_sub(o.fired_at));
+            }
+        }
+        self.open = kept;
+    }
+
     /// The run ended at machine step `step` with recoveries still open:
-    /// close them without counting a re-seal.
+    /// close them all (blocked or not) without counting a re-seal.
     pub fn finish(&mut self, step: u64) {
-        for fired in self.open.drain(..) {
-            self.recovery_steps.push(step.saturating_sub(fired));
+        for o in self.open.drain(..) {
+            self.recovery_steps.push(step.saturating_sub(o.fired_at));
         }
     }
 
@@ -399,9 +529,12 @@ impl RecoveryTracker {
     }
 
     pub(crate) fn encode(&self, e: &mut Enc) {
+        e.u64(self.next_key);
         e.len(self.open.len());
-        for &s in &self.open {
-            e.u64(s);
+        for o in &self.open {
+            e.u64(o.key);
+            e.u64(o.fired_at);
+            e.bool(o.blocked);
         }
         e.len(self.recovery_steps.len());
         for &s in &self.recovery_steps {
@@ -411,10 +544,15 @@ impl RecoveryTracker {
     }
 
     pub(crate) fn decode(d: &mut Dec<'_>) -> Result<RecoveryTracker, CheckpointError> {
+        let next_key = d.u64()?;
         let n = d.len()?;
         let mut open = Vec::with_capacity(n);
         for _ in 0..n {
-            open.push(d.u64()?);
+            open.push(OpenRecovery {
+                key: d.u64()?,
+                fired_at: d.u64()?,
+                blocked: d.bool()?,
+            });
         }
         let n = d.len()?;
         let mut recovery_steps = Vec::with_capacity(n);
@@ -422,6 +560,7 @@ impl RecoveryTracker {
             recovery_steps.push(d.u64()?);
         }
         Ok(RecoveryTracker {
+            next_key,
             open,
             recovery_steps,
             reseals: d.u64()?,
@@ -446,7 +585,17 @@ pub struct DegradationReport {
     pub lane_stalls: u64,
     /// Machine crashes (fleet-level).
     pub crashes: u64,
-    /// In-flight promotion pages dropped by lane stalls.
+    /// Transient migration timeouts injected.
+    pub timeouts: u64,
+    /// Flaky-lane windows opened.
+    pub flaky_windows: u64,
+    /// Backoff retries that released parked promotions (one per
+    /// migration timeout that ran its backoff to a successful retry).
+    pub retries: u64,
+    /// Promote-lane circuit-breaker trips (closed → open transitions).
+    pub breaker_trips: u64,
+    /// In-flight promotion pages dropped by lane stalls, timeouts and
+    /// flaky-lane failures.
     pub promote_pages_dropped: u64,
     /// Sealed schedules invalidated *by fault application* (a tenant
     /// holding a seal when the fault hit). Arbitration-driven
@@ -472,6 +621,10 @@ impl DegradationReport {
         self.capacity_losses += other.capacity_losses;
         self.lane_stalls += other.lane_stalls;
         self.crashes += other.crashes;
+        self.timeouts += other.timeouts;
+        self.flaky_windows += other.flaky_windows;
+        self.retries += other.retries;
+        self.breaker_trips += other.breaker_trips;
         self.promote_pages_dropped += other.promote_pages_dropped;
         self.seal_invalidations += other.seal_invalidations;
         self.reseals += other.reseals;
@@ -498,6 +651,10 @@ impl DegradationReport {
         e.u64(self.capacity_losses);
         e.u64(self.lane_stalls);
         e.u64(self.crashes);
+        e.u64(self.timeouts);
+        e.u64(self.flaky_windows);
+        e.u64(self.retries);
+        e.u64(self.breaker_trips);
         e.u64(self.promote_pages_dropped);
         e.u64(self.seal_invalidations);
         e.u64(self.reseals);
@@ -515,6 +672,10 @@ impl DegradationReport {
         let capacity_losses = d.u64()?;
         let lane_stalls = d.u64()?;
         let crashes = d.u64()?;
+        let timeouts = d.u64()?;
+        let flaky_windows = d.u64()?;
+        let retries = d.u64()?;
+        let breaker_trips = d.u64()?;
         let promote_pages_dropped = d.u64()?;
         let seal_invalidations = d.u64()?;
         let reseals = d.u64()?;
@@ -529,6 +690,10 @@ impl DegradationReport {
             capacity_losses,
             lane_stalls,
             crashes,
+            timeouts,
+            flaky_windows,
+            retries,
+            breaker_trips,
             promote_pages_dropped,
             seal_invalidations,
             reseals,
@@ -633,6 +798,86 @@ mod tests {
         t.finish(24);
         assert_eq!(t.recovery_steps, vec![5, 3, 4]);
         assert_eq!(t.reseals, 2);
+    }
+
+    #[test]
+    fn recovery_tracker_keys_overlapping_windows_per_event() {
+        // A windowed fault (A) is still open when an instantaneous
+        // fault (B) fires and the tenants re-seal: that re-seal may
+        // close B only. A keeps accumulating until its window ends
+        // (unblock) *and* a later re-seal lands — per-event
+        // attribution, not close-all-at-first-reseal.
+        let mut t = RecoveryTracker::default();
+        let a = t.fired_blocked(10);
+        let _b = t.fired(12);
+        t.recovered(15);
+        assert_eq!(t.recovery_steps, vec![3], "only B closed at the first re-seal");
+        assert_eq!(t.reseals, 1);
+        assert_eq!(t.open_count(), 1, "A survives the re-seal while its window is open");
+        // A re-seal before the window ends still cannot close A.
+        t.recovered(16);
+        assert_eq!(t.open_count(), 1);
+        t.unblock(a);
+        t.recovered(18);
+        assert_eq!(t.recovery_steps, vec![3, 8], "A closed on its own clock");
+        assert_eq!(t.reseals, 2);
+        assert_eq!(t.open_count(), 0);
+        // Unblocking an unknown or already-closed key is a no-op.
+        t.unblock(a);
+        t.unblock(999);
+        assert_eq!(t.open_count(), 0);
+    }
+
+    #[test]
+    fn draw_includes_transient_kinds_and_skips_their_windows() {
+        let plan = FaultPlan::draw(11, 8, 4000, 0.08, false);
+        let timeouts = plan
+            .events()
+            .iter()
+            .filter(|e| matches!(e.kind, FaultKind::MigrationTimeout { .. }))
+            .count();
+        let flaky = plan
+            .events()
+            .iter()
+            .filter(|e| matches!(e.kind, FaultKind::FlakyLane { .. }))
+            .count();
+        assert!(timeouts > 0, "rate 0.08 over 32000 machine-steps draws timeouts");
+        assert!(flaky > 0, "rate 0.08 over 32000 machine-steps draws flaky windows");
+        // Flaky windows on one machine never overlap (the draw cursor
+        // skips them), mirroring the degradation-window guarantee.
+        for m in 0..8 {
+            let mut last_end = 0u64;
+            for e in plan.events().iter().filter(|e| e.machine == m) {
+                if let FaultKind::FlakyLane { duration_steps, .. } = e.kind {
+                    assert!(e.at_step >= last_end, "machine {m}: overlapping flaky windows");
+                    last_end = e.at_step + duration_steps as u64;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn injector_delivers_transients_and_peeks_next_crash() {
+        let plan = FaultPlan::new()
+            .push(0, 2, FaultKind::MigrationTimeout { jitter: 0b101 })
+            .push(0, 5, FaultKind::FlakyLane { duration_steps: 3, fail_mask: 0b011 })
+            .push(0, 9, FaultKind::Crash);
+        let mut inj = plan.injector_for(0);
+        assert_eq!(inj.next_crash_at(), Some(9));
+        let mut out = Vec::new();
+        inj.poll(2, &mut out);
+        assert_eq!(out, vec![FaultAction::TimeoutPromotions { jitter: 0b101 }]);
+        out.clear();
+        inj.poll(5, &mut out);
+        assert_eq!(
+            out,
+            vec![FaultAction::OpenFlakyLane { duration_steps: 3, fail_mask: 0b011 }]
+        );
+        assert_eq!(inj.next_crash_at(), Some(9), "crash still pending");
+        out.clear();
+        inj.poll(9, &mut out);
+        assert_eq!(out, vec![FaultAction::Crash]);
+        assert_eq!(inj.next_crash_at(), None, "delivered crashes stop peeking");
     }
 
     #[test]

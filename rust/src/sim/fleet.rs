@@ -197,8 +197,87 @@ pub struct FleetArrival {
     /// Scheduling priority (higher preempts lower under
     /// [`Arbitration::Priority`]).
     pub priority: u32,
+    /// Solo-run mean step time (ns) — the SLO watchdog's
+    /// slowdown-vs-solo baseline for this job. `0.0` (the fault-free
+    /// default) means "unknown" and exempts the job from SLO tracking.
+    pub solo_step_ns: f64,
     /// Build the tenant at its final admitted share.
     pub build: Box<dyn FnOnce(u64) -> ClusterTenant + Send>,
+}
+
+/// Completed tenant steps each machine may run per fleet round while
+/// the SLO watchdog is armed — the watchdog's observation granularity.
+/// A `warn_steps` of at least this many steps guarantees
+/// drain-on-warning beats the crash it warns about (a round can never
+/// jump a machine past the warning window).
+pub const SLO_ROUND_STEPS: u64 = 4;
+
+/// SLO enforcement policy for the fleet watchdog (sim-level twin of
+/// `api::fleet::SloSpec`).
+///
+/// Every fleet event round, the watchdog computes each live tenant's
+/// rolling slowdown-vs-solo (mean step time over
+/// [`FleetArrival::solo_step_ns`]) and the nearest-rank p99 across the
+/// pool. While the p99 exceeds `target_p99`, the worst offender climbs
+/// a deterministic mitigation ladder — boost its share from free
+/// headroom, then throttle its noisiest co-tenant, then (with
+/// `evacuate`) live-evacuate it to the least-loaded machine via the
+/// checkpoint layer's encode/decode overlays — rate-limited to one
+/// rung per `window_events` rounds per tenant. `evacuate` also arms
+/// drain-on-warning: a machine whose fault schedule holds a crash
+/// within `warn_steps` machine steps is drained (all residents
+/// re-offered) before the crash can take them down.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SloPolicy {
+    /// Mitigate while the pool's p99 slowdown-vs-solo exceeds this.
+    pub target_p99: f64,
+    /// Minimum fleet event rounds between mitigations of one tenant
+    /// (the ladder's rate limit).
+    pub window_events: u64,
+    /// Allow the ladder's top rung (live evacuation) and
+    /// drain-on-warning ahead of scheduled crashes.
+    pub evacuate: bool,
+    /// Drain a machine when a scheduled crash is at most this many
+    /// machine steps away.
+    pub warn_steps: u64,
+}
+
+/// What the SLO watchdog did over one fleet run — the mitigation
+/// ledger. Present in [`FleetSimResult`] exactly when
+/// [`FleetConfig::slo`] held a policy.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SloReport {
+    /// Event rounds where the pool's p99 slowdown exceeded the target.
+    pub violations: u64,
+    /// Ladder rung 0: victim share boosts from free headroom.
+    pub boosts: u64,
+    /// Ladder rung 1: noisiest-co-tenant throttles (share moved to the
+    /// victim).
+    pub throttles: u64,
+    /// Ladder rung 2: live evacuations to another machine.
+    pub evacuations: u64,
+    /// Tenants drained off machines ahead of scheduled crashes.
+    pub drains: u64,
+}
+
+impl SloReport {
+    fn encode(&self, e: &mut Enc) {
+        e.u64(self.violations);
+        e.u64(self.boosts);
+        e.u64(self.throttles);
+        e.u64(self.evacuations);
+        e.u64(self.drains);
+    }
+
+    fn decode(d: &mut Dec<'_>) -> Result<SloReport, CheckpointError> {
+        Ok(SloReport {
+            violations: d.u64()?,
+            boosts: d.u64()?,
+            throttles: d.u64()?,
+            evacuations: d.u64()?,
+            drains: d.u64()?,
+        })
+    }
 }
 
 /// Fleet-level configuration for [`run_fleet`].
@@ -221,6 +300,9 @@ pub struct FleetConfig {
     /// reads the plan's machine-`i` slice; machines the autoscaler
     /// grows read the slice at their pool index.
     pub faults: Option<FaultPlan>,
+    /// SLO watchdog policy; `None` (the default) disables the watchdog
+    /// and leaves the run bit-identical to a watchdog-free fleet.
+    pub slo: Option<SloPolicy>,
 }
 
 /// The machine pool emptied (every machine crashed or was retired)
@@ -286,6 +368,9 @@ pub struct FleetMachineStats {
     /// Whether a crash fault killed this machine (it also reads as
     /// `retired`; this distinguishes the cause).
     pub crashed: bool,
+    /// Whether the SLO watchdog drained this machine ahead of a
+    /// scheduled crash (also reads as `retired`).
+    pub drained: bool,
 }
 
 /// Fleet-wide fast-memory utilization at one event.
@@ -337,6 +422,10 @@ pub struct FleetSimResult {
     /// when [`FleetConfig::faults`] held a plan (even an empty one, so
     /// callers can tell "no faults occurred" from "faults were off").
     pub faults: Option<DegradationReport>,
+    /// SLO watchdog ledger — present exactly when [`FleetConfig::slo`]
+    /// held a policy (even one that never fired, so callers can tell
+    /// "no violations" from "watchdog off").
+    pub slo: Option<SloReport>,
 }
 
 /// Join-time metadata kept per resident, index-aligned with the
@@ -347,6 +436,15 @@ struct ResidentMeta {
     join_ns: f64,
     demand: u64,
     peak: u64,
+    /// Solo baseline for the SLO watchdog (0.0 = untracked).
+    solo_step_ns: f64,
+    /// The tenant's current mitigation-ladder rung (0 = boost next,
+    /// 1 = throttle next, 2 = evacuate next). Resets on rejoin —
+    /// a relocated tenant starts the ladder over in its new home.
+    slo_level: u8,
+    /// Fleet event round of the last mitigation (the ladder's
+    /// per-tenant rate limit).
+    last_mitigated_event: Option<u64>,
 }
 
 /// A job inside the admission machinery: either a fresh arrival (built
@@ -374,6 +472,9 @@ struct Offer {
     offered_ns: f64,
     demand_bytes: u64,
     peak_bytes: u64,
+    /// Carried so a displaced or evacuated tenant keeps its SLO
+    /// baseline across re-admission.
+    solo_step_ns: f64,
     kind: OfferKind,
 }
 
@@ -389,6 +490,7 @@ impl Offer {
         e.f64(self.offered_ns);
         e.u64(self.demand_bytes);
         e.u64(self.peak_bytes);
+        e.f64(self.solo_step_ns);
         match &self.kind {
             OfferKind::New(_) => e.u8(0),
             OfferKind::Resume(t) => {
@@ -408,6 +510,7 @@ impl Offer {
         let offered_ns = d.f64()?;
         let demand_bytes = d.u64()?;
         let peak_bytes = d.u64()?;
+        let solo_step_ns = d.f64()?;
         let kind = match d.u8()? {
             0 => OfferKind::New(
                 builds
@@ -423,7 +526,7 @@ impl Offer {
             }
             _ => return Err(CheckpointError::Malformed("unknown offer kind tag")),
         };
-        Ok(Offer { id, first_arrival_ns, offered_ns, demand_bytes, peak_bytes, kind })
+        Ok(Offer { id, first_arrival_ns, offered_ns, demand_bytes, peak_bytes, solo_step_ns, kind })
     }
 }
 
@@ -451,6 +554,10 @@ struct FleetMachine {
     /// A crash fault fired: the machine froze mid-round; the fleet
     /// driver retires it and displaces its residents.
     crashed: bool,
+    /// The SLO watchdog drained this machine ahead of a scheduled
+    /// crash (it also reads as `retired`; this distinguishes a
+    /// proactive drain from an autoscaler retirement).
+    drained: bool,
 }
 
 impl FleetMachine {
@@ -469,6 +576,7 @@ impl FleetMachine {
             retired: false,
             faults,
             crashed: false,
+            drained: false,
         }
     }
 
@@ -478,11 +586,18 @@ impl FleetMachine {
 
     /// Advance residents on the cluster layer's lowest-clock-first rule
     /// until every live clock reaches `horizon` (or, with
-    /// `stop_at_departure`, until the first tenant finishes). Returns
-    /// the departures, in finish order; their `machine` index is filled
-    /// in by the caller.
-    fn advance_until(&mut self, horizon: f64, stop_at_departure: bool) -> Vec<FleetDeparture> {
+    /// `stop_at_departure`, until the first tenant finishes; or until
+    /// `step_budget` tenant steps complete — the SLO watchdog's
+    /// observation window). Returns the departures, in finish order;
+    /// their `machine` index is filled in by the caller.
+    fn advance_until(
+        &mut self,
+        horizon: f64,
+        stop_at_departure: bool,
+        step_budget: u64,
+    ) -> Vec<FleetDeparture> {
         let mut out = Vec::new();
+        let mut steps_done = 0u64;
         loop {
             let mut pick = usize::MAX;
             let mut best = f64::INFINITY;
@@ -543,6 +658,14 @@ impl FleetMachine {
             if step_done && self.arbitration == Arbitration::Priority {
                 review_priority(&mut self.tenants, pick, self.quantum);
             }
+            if step_done {
+                steps_done += 1;
+                if steps_done >= step_budget {
+                    // Budget exhausted: hand control back to the fleet
+                    // driver so the SLO watchdog gets to observe.
+                    break;
+                }
+            }
         }
         out
     }
@@ -585,6 +708,9 @@ impl FleetMachine {
                 join_ns: now_ns,
                 demand: a.demand_bytes,
                 peak: a.peak_bytes,
+                solo_step_ns: a.solo_step_ns,
+                slo_level: 0,
+                last_mitigated_event: None,
             });
             self.tenants.push(active);
             self.tenants_served += 1;
@@ -607,6 +733,7 @@ impl FleetMachine {
             peak_committed_bytes: self.peak_committed_bytes,
             retired: self.retired,
             crashed: self.crashed,
+            drained: self.drained,
         }
     }
 
@@ -623,6 +750,7 @@ impl FleetMachine {
         e.u64(self.peak_committed_bytes);
         e.bool(self.retired);
         e.bool(self.crashed);
+        e.bool(self.drained);
         match &self.faults {
             Some(f) => {
                 e.bool(true);
@@ -637,6 +765,9 @@ impl FleetMachine {
             e.f64(m.join_ns);
             e.u64(m.demand);
             e.u64(m.peak);
+            e.f64(m.solo_step_ns);
+            e.u8(m.slo_level);
+            e.opt_u64(m.last_mitigated_event);
             e.u64(t.share);
             t.encode(e);
         }
@@ -657,6 +788,7 @@ impl FleetMachine {
         let peak_committed_bytes = d.u64()?;
         let retired = d.bool()?;
         let crashed = d.bool()?;
+        let drained = d.bool()?;
         let faults = if d.bool()? { Some(MachineFaults::decode(d)?) } else { None };
         if faults.is_some() != cfg_has_faults {
             // A checkpoint from a faulted run resumed with faults off
@@ -673,12 +805,24 @@ impl FleetMachine {
             let join_ns = d.f64()?;
             let demand = d.u64()?;
             let peak = d.u64()?;
+            let solo_step_ns = d.f64()?;
+            let slo_level = d.u8()?;
+            let last_mitigated_event = d.opt_u64()?;
             let share = d.u64()?;
             let build = builds
                 .remove(&id)
                 .ok_or(CheckpointError::Malformed("checkpoint references an unknown job id"))?;
             tenants.push(ActiveTenant::restore(build(share), d)?);
-            meta.push(ResidentMeta { id, arrival_ns, join_ns, demand, peak });
+            meta.push(ResidentMeta {
+                id,
+                arrival_ns,
+                join_ns,
+                demand,
+                peak,
+                solo_step_ns,
+                slo_level,
+                last_mitigated_event,
+            });
         }
         Ok(FleetMachine {
             fast_total,
@@ -694,6 +838,7 @@ impl FleetMachine {
             retired,
             faults,
             crashed,
+            drained,
         })
     }
 }
@@ -783,6 +928,7 @@ struct FleetDriverState {
     fleet_now: f64,
     fleet_events: u64,
     tenants_displaced: u64,
+    slo_report: SloReport,
 }
 
 /// Serialize the driver state at an event-round boundary (between
@@ -807,6 +953,7 @@ fn encode_fleet_state(
     fleet_now: f64,
     fleet_events: u64,
     tenants_displaced: u64,
+    slo_report: &SloReport,
 ) -> Vec<u8> {
     let mut e = Enc::new();
     e.f64(fleet_now);
@@ -856,6 +1003,7 @@ fn encode_fleet_state(
     e.u32(grow_streak);
     e.u32(shrink_streak);
     e.u64(tenants_displaced);
+    slo_report.encode(&mut e);
     e.finish()
 }
 
@@ -938,6 +1086,7 @@ fn decode_fleet_state(
     let grow_streak = d.u32()?;
     let shrink_streak = d.u32()?;
     let tenants_displaced = d.u64()?;
+    let slo_report = SloReport::decode(&mut d)?;
     d.done()?;
     Ok(FleetDriverState {
         machines,
@@ -957,6 +1106,7 @@ fn decode_fleet_state(
         fleet_now,
         fleet_events,
         tenants_displaced,
+        slo_report,
     })
 }
 
@@ -994,6 +1144,7 @@ pub(crate) fn run_fleet_ckpt(
                         offered_ns: a.arrival_ns,
                         demand_bytes: a.demand_bytes,
                         peak_bytes: a.peak_bytes,
+                        solo_step_ns: a.solo_step_ns,
                         kind: OfferKind::New(a.build),
                     })
                     .collect(),
@@ -1012,6 +1163,7 @@ pub(crate) fn run_fleet_ckpt(
                 fleet_now: 0.0,
                 fleet_events: 0,
                 tenants_displaced: 0,
+                slo_report: SloReport::default(),
             }
         }
     };
@@ -1033,6 +1185,7 @@ pub(crate) fn run_fleet_ckpt(
         mut fleet_now,
         mut fleet_events,
         mut tenants_displaced,
+        mut slo_report,
     } = st;
 
     loop {
@@ -1065,8 +1218,15 @@ pub(crate) fn run_fleet_ckpt(
         //    free up.
         let horizon = pending.front().map_or(f64::INFINITY, |a| a.offered_ns);
         let tail = pending.is_empty() && !queue.is_empty();
-        let mut departures: Vec<Vec<FleetDeparture>> =
-            par_map_mut(&mut machines, threads, |m| m.advance_until(horizon, tail));
+        // With the SLO watchdog armed, rounds are additionally bounded
+        // to SLO_ROUND_STEPS completed tenant steps per machine so the
+        // watchdog observes live tenants between rounds instead of
+        // waking only at arrivals. The bound changes round *structure*
+        // (fleet_events, samples), never per-machine step interleaving.
+        let step_budget = if cfg.slo.is_some() { SLO_ROUND_STEPS } else { u64::MAX };
+        let mut departures: Vec<Vec<FleetDeparture>> = par_map_mut(&mut machines, threads, |m| {
+            m.advance_until(horizon, tail, step_budget)
+        });
         for (mi, deps) in departures.iter_mut().enumerate() {
             for d in deps.iter_mut() {
                 d.machine = mi;
@@ -1120,12 +1280,164 @@ pub(crate) fn run_fleet_ckpt(
                     offered_ns: fleet_now,
                     demand_bytes: meta.demand,
                     peak_bytes: meta.peak,
+                    solo_step_ns: meta.solo_step_ns,
                     kind: OfferKind::Resume(Box::new(t)),
                 });
             }
         }
         for o in displaced.into_iter().rev() {
             pending.push_front(o);
+        }
+
+        // 2c. SLO watchdog — runs single-threaded between rounds, in
+        //     machine order, so every decision is deterministic for any
+        //     worker count.
+        if let Some(slo) = cfg.slo {
+            // Rolling p99 slowdown-vs-solo across every tracked live
+            // tenant (nearest-rank, like the API layer's percentile).
+            let mut slowdowns: Vec<f64> = Vec::new();
+            for m in machines.iter().filter(|m| !m.retired) {
+                for (k, t) in m.tenants.iter().enumerate() {
+                    if m.meta[k].solo_step_ns > 0.0 {
+                        if let Some(mean) = t.mean_step_ns() {
+                            slowdowns.push(mean / m.meta[k].solo_step_ns);
+                        }
+                    }
+                }
+            }
+            if !slowdowns.is_empty() {
+                slowdowns.sort_by(f64::total_cmp);
+                let rank =
+                    ((slowdowns.len() as f64 * 0.99).ceil() as usize).clamp(1, slowdowns.len());
+                if slowdowns[rank - 1] > slo.target_p99 {
+                    slo_report.violations += 1;
+                    // Worst offender above target that is off its rate
+                    // limit; strict `>` breaks ties to the lowest
+                    // machine then tenant index.
+                    let mut worst: Option<(usize, usize, f64)> = None;
+                    for (mi, m) in machines.iter().enumerate() {
+                        if m.retired {
+                            continue;
+                        }
+                        for (k, t) in m.tenants.iter().enumerate() {
+                            let meta = &m.meta[k];
+                            if meta.solo_step_ns <= 0.0 {
+                                continue;
+                            }
+                            let Some(mean) = t.mean_step_ns() else { continue };
+                            let s = mean / meta.solo_step_ns;
+                            if s <= slo.target_p99 {
+                                continue;
+                            }
+                            let eligible = meta.last_mitigated_event.map_or(true, |e| {
+                                fleet_events.saturating_sub(e) >= slo.window_events.max(1)
+                            });
+                            if eligible && worst.map_or(true, |(_, _, ws)| s > ws) {
+                                worst = Some((mi, k, s));
+                            }
+                        }
+                    }
+                    if let Some((mi, k, _)) = worst {
+                        machines[mi].meta[k].last_mitigated_event = Some(fleet_events);
+                        match machines[mi].meta[k].slo_level {
+                            0 => {
+                                // Rung 0: boost the victim's share from
+                                // unarbitrated headroom (shares can sum
+                                // below fast_total after departures).
+                                let m = &mut machines[mi];
+                                let q = m.quantum;
+                                let shares: u64 = m.tenants.iter().map(|t| t.share).sum();
+                                if m.fast_total.saturating_sub(shares) >= q {
+                                    let grown = m.tenants[k].share + q;
+                                    m.tenants[k].resize_share(grown);
+                                    slo_report.boosts += 1;
+                                }
+                                m.meta[k].slo_level = 1;
+                            }
+                            _ => {
+                                let evacuate_now =
+                                    slo.evacuate && machines[mi].meta[k].slo_level >= 2;
+                                if evacuate_now {
+                                    // Rung 2: live-evacuate the victim to
+                                    // the machine with the most free
+                                    // admission capacity (its full state
+                                    // rides the Resume overlay, exactly
+                                    // like a crash displacement — but the
+                                    // move is planned, not forced).
+                                    let t = machines[mi].tenants.remove(k);
+                                    let meta = machines[mi].meta.remove(k);
+                                    machines[mi].committed =
+                                        machines[mi].committed.saturating_sub(meta.demand);
+                                    let offer = Offer {
+                                        id: meta.id,
+                                        first_arrival_ns: meta.arrival_ns,
+                                        offered_ns: fleet_now,
+                                        demand_bytes: meta.demand,
+                                        peak_bytes: meta.peak,
+                                        solo_step_ns: meta.solo_step_ns,
+                                        kind: OfferKind::Resume(Box::new(t)),
+                                    };
+                                    let mut target: Option<(usize, u64)> = None;
+                                    for (j, m) in machines.iter().enumerate() {
+                                        if j == mi || m.retired {
+                                            continue;
+                                        }
+                                        let free = m.free_bytes();
+                                        if free >= offer.demand_bytes
+                                            && target.map_or(true, |(_, bf)| free > bf)
+                                        {
+                                            target = Some((j, free));
+                                        }
+                                    }
+                                    slo_report.evacuations += 1;
+                                    match target {
+                                        Some((ti, _)) => {
+                                            machines[ti].committed += offer.demand_bytes;
+                                            machines[ti].peak_committed_bytes = machines[ti]
+                                                .peak_committed_bytes
+                                                .max(machines[ti].committed);
+                                            machines[ti].join_batch(fleet_now, vec![offer]);
+                                        }
+                                        // Nowhere better to go: fall back
+                                        // through ordinary admission.
+                                        None => pending.push_front(offer),
+                                    }
+                                } else {
+                                    // Rung 1: throttle the noisiest
+                                    // co-tenant (largest share still
+                                    // above its starvation floor) and
+                                    // hand the reclaimed quantum to the
+                                    // victim.
+                                    let m = &mut machines[mi];
+                                    let q = m.quantum;
+                                    let mut donor: Option<usize> = None;
+                                    for (j, t) in m.tenants.iter().enumerate() {
+                                        if j == k
+                                            || t.done
+                                            || t.share.saturating_sub(q) < t.floor
+                                        {
+                                            continue;
+                                        }
+                                        if donor.map_or(true, |d| t.share > m.tenants[d].share) {
+                                            donor = Some(j);
+                                        }
+                                    }
+                                    if let Some(j) = donor {
+                                        let shrunk = m.tenants[j].share - q;
+                                        m.tenants[j].resize_share(shrunk);
+                                        let grown = m.tenants[k].share + q;
+                                        m.tenants[k].resize_share(grown);
+                                        slo_report.throttles += 1;
+                                    }
+                                    // Without evacuation the ladder tops
+                                    // out here and keeps throttling.
+                                    m.meta[k].slo_level = if slo.evacuate { 2 } else { 1 };
+                                }
+                            }
+                        }
+                    }
+                }
+            }
         }
 
         // 3. Autoscale on sustained pool pressure (committed demand
@@ -1247,6 +1559,52 @@ pub(crate) fn run_fleet_ckpt(
             }
         }
 
+        // 6b. Drain-on-warning: a machine whose fault schedule holds a
+        //     crash within `warn_steps` machine steps is evacuated and
+        //     retired *before* the crash fires — its residents re-enter
+        //     admission (next round) as live Resume offers instead of
+        //     crash casualties. Checked after the joins so a tenant
+        //     placed onto a doomed machine this round drains before a
+        //     single step runs there; an averted crash never fires (the
+        //     retired machine completes no more steps).
+        if let Some(slo) = cfg.slo {
+            if slo.evacuate {
+                let mut drained: Vec<Offer> = Vec::new();
+                for m in machines.iter_mut() {
+                    if m.retired || m.tenants.is_empty() {
+                        continue;
+                    }
+                    let crash_near = m.faults.as_ref().is_some_and(|f| {
+                        f.next_crash_at()
+                            .is_some_and(|at| at.saturating_sub(f.step_count()) <= slo.warn_steps)
+                    });
+                    if !crash_near {
+                        continue;
+                    }
+                    m.retired = true;
+                    m.drained = true;
+                    m.committed = 0;
+                    let tenants = std::mem::take(&mut m.tenants);
+                    let metas = std::mem::take(&mut m.meta);
+                    slo_report.drains += tenants.len() as u64;
+                    for (t, meta) in tenants.into_iter().zip(metas) {
+                        drained.push(Offer {
+                            id: meta.id,
+                            first_arrival_ns: meta.arrival_ns,
+                            offered_ns: fleet_now,
+                            demand_bytes: meta.demand,
+                            peak_bytes: meta.peak,
+                            solo_step_ns: meta.solo_step_ns,
+                            kind: OfferKind::Resume(Box::new(t)),
+                        });
+                    }
+                }
+                for o in drained.into_iter().rev() {
+                    pending.push_front(o);
+                }
+            }
+        }
+
         // 7. Utilization sample at this event.
         let mut cap = 0u64;
         let mut committed = 0u64;
@@ -1293,6 +1651,7 @@ pub(crate) fn run_fleet_ckpt(
                     fleet_now,
                     fleet_events,
                     tenants_displaced,
+                    &slo_report,
                 )
             })?;
         }
@@ -1329,6 +1688,7 @@ pub(crate) fn run_fleet_ckpt(
         makespan_ns,
         fleet_events,
         faults,
+        slo: cfg.slo.map(|_| slo_report),
     }))
 }
 
@@ -1363,6 +1723,7 @@ mod tests {
             demand_bytes: demand,
             peak_bytes: peak,
             priority,
+            solo_step_ns: 0.0,
             build: Box::new(move |share| {
                 let spec = kind.machine_spec(&w.graph, &w.trace, share);
                 ClusterTenant {
@@ -1400,6 +1761,7 @@ mod tests {
             autoscale: None,
             threads: 1,
             faults: None,
+            slo: None,
         }
     }
 
@@ -1498,6 +1860,7 @@ mod tests {
             autoscale: None,
             threads: 1,
             faults: None,
+            slo: None,
         };
         let r = run_fleet(jobs, cfg).expect("pool intact");
         assert_eq!(r.completed.len(), 2);
@@ -1614,5 +1977,120 @@ mod tests {
             }
             _ => panic!("both runs carry fault reports"),
         }
+    }
+
+    #[test]
+    fn dormant_slo_policy_leaves_tenant_results_bit_identical() {
+        // An armed watchdog that never fires must not perturb the
+        // simulation: the step budget changes round structure, never
+        // per-machine interleaving.
+        let kind = PolicyKind::Lru;
+        let (w, compiled) = dcgan_parts(kind, 4);
+        let fast = Model::Dcgan.peak_memory_target() / 8;
+        let run = |slo: Option<SloPolicy>| {
+            let jobs: Vec<FleetArrival> = (0..3)
+                .map(|i| {
+                    let mut a = arrival(i, 0.0, &w, &compiled, kind, fast / 2, fast, 4, 0);
+                    // Huge baseline: slowdown ~0, never violates.
+                    a.solo_step_ns = 1.0e18;
+                    a
+                })
+                .collect();
+            let mut cfg = config(2, fast, Admission::Queue);
+            cfg.slo = slo;
+            run_fleet(jobs, cfg).expect("pool intact")
+        };
+        let base = run(None);
+        let armed = run(Some(SloPolicy {
+            target_p99: 1.0e9,
+            window_events: 1,
+            evacuate: true,
+            warn_steps: 8,
+        }));
+        assert!(base.slo.is_none(), "watchdog off: no ledger");
+        let ledger = armed.slo.expect("watchdog armed: ledger present");
+        assert_eq!(ledger, SloReport::default(), "nothing fired: {ledger:?}");
+        assert_eq!(base.completed.len(), armed.completed.len());
+        for (x, y) in base.completed.iter().zip(&armed.completed) {
+            assert_eq!(x.tenant_id, y.tenant_id);
+            assert_eq!(x.machine, y.machine);
+            assert_eq!(x.finish_ns.to_bits(), y.finish_ns.to_bits());
+            assert_eq!(
+                x.result.result.total_time_ns.to_bits(),
+                y.result.result.total_time_ns.to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn slo_watchdog_climbs_ladder_and_evacuates_the_victim() {
+        let kind = PolicyKind::Lru;
+        let (w, compiled) = dcgan_parts(kind, 8);
+        let fast = Model::Dcgan.peak_memory_target() / 8;
+        // Placement: job 0 (60% demand) takes machine 0; jobs 1 and 2
+        // (30% each) co-locate on machine 1. Job 1's solo baseline is
+        // absurdly low, so its slowdown violates any target and the
+        // watchdog climbs its ladder — boost (no headroom under static
+        // partition, so the rung is dry), throttle the co-tenant, then
+        // live evacuation to machine 0 (40% free fits 30% demand).
+        let jobs = vec![
+            arrival(0, 0.0, &w, &compiled, kind, fast * 6 / 10, fast, 8, 0),
+            {
+                let mut a = arrival(1, 0.0, &w, &compiled, kind, fast * 3 / 10, fast, 8, 0);
+                a.solo_step_ns = 1.0;
+                a
+            },
+            arrival(2, 0.0, &w, &compiled, kind, fast * 3 / 10, fast, 8, 0),
+        ];
+        let mut cfg = config(2, fast, Admission::Queue);
+        cfg.slo = Some(SloPolicy {
+            target_p99: 2.0,
+            window_events: 1,
+            evacuate: true,
+            warn_steps: 4,
+        });
+        let r = run_fleet(jobs, cfg).expect("pool intact");
+        assert_eq!(r.completed.len(), 3, "every job completes");
+        for d in &r.completed {
+            assert_eq!(d.result.result.steps.len(), 8, "job {} ran every step", d.tenant_id);
+        }
+        let ledger = r.slo.expect("ledger present");
+        assert!(ledger.violations >= 3, "p99 stayed above target: {ledger:?}");
+        assert!(ledger.throttles >= 1, "rung 1 throttled the co-tenant: {ledger:?}");
+        assert!(ledger.evacuations >= 1, "rung 2 moved the victim: {ledger:?}");
+        assert_eq!(ledger.drains, 0, "no crash scheduled, nothing to drain");
+    }
+
+    #[test]
+    fn slo_drain_on_warning_averts_a_scheduled_crash() {
+        use crate::sim::fault::{FaultKind, FaultPlan};
+        let kind = PolicyKind::Lru;
+        let (w, compiled) = dcgan_parts(kind, 6);
+        let fast = Model::Dcgan.peak_memory_target() / 8;
+        let jobs = vec![
+            arrival(0, 0.0, &w, &compiled, kind, fast / 2, fast, 6, 0),
+            arrival(1, 0.0, &w, &compiled, kind, fast / 2, fast, 6, 0),
+        ];
+        let mut cfg = config(2, fast, Admission::Queue);
+        cfg.faults = Some(FaultPlan::new().push(0, 4, FaultKind::Crash));
+        cfg.slo = Some(SloPolicy {
+            target_p99: 1.0e9,
+            window_events: 4,
+            evacuate: true,
+            warn_steps: 8,
+        });
+        let r = run_fleet(jobs, cfg).expect("pool intact");
+        assert_eq!(r.completed.len(), 2);
+        for d in &r.completed {
+            assert_eq!(d.result.result.steps.len(), 6, "job {} ran every step", d.tenant_id);
+            assert_eq!(d.machine, 1, "both jobs finished on the surviving machine");
+        }
+        let ledger = r.slo.expect("ledger present");
+        assert_eq!(ledger.drains, 1, "machine 0's resident drained off before the crash");
+        assert_eq!(ledger.violations, 0, "untracked jobs: the p99 path stayed quiet");
+        let report = r.faults.as_ref().expect("plan configured");
+        assert_eq!(report.crashes, 0, "the warned crash never fired");
+        assert_eq!(report.tenants_displaced, 0, "the drain was proactive, not crash fallout");
+        assert!(r.machines[0].drained && r.machines[0].retired && !r.machines[0].crashed);
     }
 }

@@ -69,6 +69,11 @@ pub struct SteadySnapshot {
     /// healthy machine, so fault-free snapshots are unchanged; a
     /// degraded machine can never seal across a factor change.
     bw_degradation_bits: u64,
+    /// Promotion-gate flag (fault layer: open circuit breaker or a
+    /// timeout backoff in flight). `false` on a healthy machine, so
+    /// fault-free snapshots are unchanged; a machine can never seal
+    /// across a gate flip.
+    promotions_blocked: bool,
 }
 
 /// The simulated machine.
@@ -112,6 +117,12 @@ pub struct Machine {
     /// layer: NVM thermal/wear throttling). `1.0` = healthy; see
     /// [`Machine::set_bandwidth_degradation`].
     bw_degradation: f64,
+    /// When set (fault layer: lane circuit breaker open, or a timed-out
+    /// promotion batch in backoff), [`Machine::request_promote`] drops
+    /// requests on the floor — the tenant runs from slow memory until
+    /// the gate reopens. Demotions stay live so capacity pressure can
+    /// still drain.
+    promotions_blocked: bool,
     /// True iff both migration lanes have empty queues. `exec` skips
     /// the whole queue machinery while this holds (a clock bump plus
     /// two credit ticks) — the idle-lane fast path that makes
@@ -127,6 +138,7 @@ impl Machine {
             inv_bw_fast: 1.0 / spec.fast.bandwidth_gbps,
             inv_bw_slow: 1.0 / spec.slow.bandwidth_gbps,
             bw_degradation: 1.0,
+            promotions_blocked: false,
             spec,
             base_ns: 0.0,
             local_ns: 0.0,
@@ -207,6 +219,7 @@ impl Machine {
             lane_in: self.lane_in.snapshot(),
             lane_out: self.lane_out.snapshot(),
             bw_degradation_bits: self.bw_degradation.to_bits(),
+            promotions_blocked: self.promotions_blocked,
         }
     }
 
@@ -253,6 +266,22 @@ impl Machine {
     /// Current bandwidth-degradation factor (`1.0` = healthy).
     pub fn bandwidth_degradation(&self) -> f64 {
         self.bw_degradation
+    }
+
+    /// Gate or reopen the promotion lane (fault layer: open circuit
+    /// breaker, or a timed-out batch sitting out its backoff). While
+    /// blocked, [`Machine::request_promote`] silently drops requests —
+    /// graceful degradation to slow-memory execution. Callers that flip
+    /// the gate mid-run must also invalidate any sealed schedule, for
+    /// the same reason as [`Machine::set_bandwidth_degradation`]: the
+    /// seal's fixed-point proof pinned the old promotion behaviour.
+    pub fn set_promotions_blocked(&mut self, blocked: bool) {
+        self.promotions_blocked = blocked;
+    }
+
+    /// Is the promotion lane currently gated shut? (`false` = healthy.)
+    pub fn promotions_blocked(&self) -> bool {
+        self.promotions_blocked
     }
 
     /// Objects currently holding pages in fast memory, as
@@ -356,8 +385,13 @@ impl Machine {
     }
 
     /// Queue promotion of up to `pages` of `obj` slow→fast. The request is
-    /// clamped to what's actually in slow memory right now.
+    /// clamped to what's actually in slow memory right now. Dropped on
+    /// the floor while the promotion gate is shut (see
+    /// [`Machine::set_promotions_blocked`]).
     pub fn request_promote(&mut self, obj: ObjectId, pages: u64) {
+        if self.promotions_blocked {
+            return;
+        }
         let r = self.residency(obj);
         if !r.alive {
             return;
@@ -519,6 +553,7 @@ impl Machine {
     pub(crate) fn encode(&self, e: &mut Enc) {
         self.spec.encode(e);
         e.f64(self.bw_degradation);
+        e.bool(self.promotions_blocked);
         e.f64(self.base_ns);
         e.f64(self.local_ns);
         e.len(self.res.len());
@@ -544,6 +579,7 @@ impl Machine {
         let factor = d.f64()?;
         let mut m = Machine::new(spec);
         m.set_bandwidth_degradation(factor);
+        m.promotions_blocked = d.bool()?;
         m.base_ns = d.f64()?;
         m.local_ns = d.f64()?;
         let n = d.len()?;
@@ -610,6 +646,7 @@ impl SteadySnapshot {
         self.lane_in.encode(e);
         self.lane_out.encode(e);
         e.u64(self.bw_degradation_bits);
+        e.bool(self.promotions_blocked);
     }
 
     pub(crate) fn decode(d: &mut Dec<'_>) -> Result<SteadySnapshot, CheckpointError> {
@@ -626,6 +663,7 @@ impl SteadySnapshot {
             lane_in: LaneSnapshot::decode(d)?,
             lane_out: LaneSnapshot::decode(d)?,
             bw_degradation_bits: d.u64()?,
+            promotions_blocked: d.bool()?,
         })
     }
 }
@@ -912,6 +950,43 @@ mod tests {
         a.set_bandwidth_degradation(2.0);
         assert_ne!(a.steady_snapshot(), b.steady_snapshot());
         a.set_bandwidth_degradation(1.0);
+        assert_eq!(a.steady_snapshot(), b.steady_snapshot());
+    }
+
+    #[test]
+    fn blocked_promotion_gate_drops_requests_until_reopened() {
+        // Breaker-open semantics: while the gate is shut, promotion
+        // requests vanish — zero promote-lane traffic — and demotions
+        // stay live. Reopening restores normal service.
+        let mut m = machine_1gb();
+        m.alloc(ObjectId(0), 64, Tier::Slow);
+        m.alloc(ObjectId(1), 8, Tier::Fast);
+        m.set_promotions_blocked(true);
+        assert!(m.promotions_blocked());
+        m.request_promote(ObjectId(0), 64);
+        assert_eq!(m.pending_in_pages(), 0);
+        m.exec(1000.0 * m.ns_per_page());
+        assert_eq!(m.stats.pages_in, 0);
+        assert_eq!(m.residency(ObjectId(0)).pages_fast, 0);
+        // Demotion is unaffected by the promotion gate.
+        m.request_demote(ObjectId(1), 8);
+        m.exec(100.0 * m.ns_per_page());
+        assert_eq!(m.residency(ObjectId(1)).pages_fast, 0);
+        // Half-open probe succeeded: gate reopens, promotions flow.
+        m.set_promotions_blocked(false);
+        m.request_promote(ObjectId(0), 64);
+        m.exec(1000.0 * m.ns_per_page());
+        assert_eq!(m.residency(ObjectId(0)).pages_fast, 64);
+    }
+
+    #[test]
+    fn promotion_gate_is_visible_in_steady_snapshot() {
+        let mut a = machine_1gb();
+        let b = machine_1gb();
+        assert_eq!(a.steady_snapshot(), b.steady_snapshot());
+        a.set_promotions_blocked(true);
+        assert_ne!(a.steady_snapshot(), b.steady_snapshot());
+        a.set_promotions_blocked(false);
         assert_eq!(a.steady_snapshot(), b.steady_snapshot());
     }
 

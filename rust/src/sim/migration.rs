@@ -79,6 +79,150 @@ impl LaneSnapshot {
     }
 }
 
+/// Consecutive promote-lane failures that open the circuit breaker.
+pub const BREAKER_TRIP_THRESHOLD: u32 = 3;
+
+/// Machine steps an open breaker waits before half-opening for a probe.
+pub const BREAKER_COOLDOWN_STEPS: u64 = 4;
+
+/// Circuit-breaker state (see [`CircuitBreaker`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Healthy: promotions flow; consecutive failures are counted.
+    Closed,
+    /// Tripped: promotions are refused until the cooldown elapses.
+    Open,
+    /// Probing: promotions flow again; the next observed outcome
+    /// decides — success closes the breaker, failure re-opens it.
+    HalfOpen,
+}
+
+/// A circuit breaker for the promote lane: after
+/// [`BREAKER_TRIP_THRESHOLD`] *consecutive* failures the breaker opens
+/// and the machine stops issuing promotions (tenants fall back to
+/// slow-memory execution — graceful degradation, not data loss). After
+/// [`BREAKER_COOLDOWN_STEPS`] machine steps it half-opens; one
+/// successful probe closes it, one failure re-opens it for another
+/// cooldown.
+///
+/// The breaker itself is time-agnostic: the fault driver
+/// (`sim/cluster.rs` [`MachineFaults`]) feeds it pre-drawn per-step
+/// outcomes from [`FaultKind::FlakyLane`] windows and polls it on the
+/// machine's deterministic step clock, so every transition is
+/// bit-reproducible across worker counts.
+///
+/// [`MachineFaults`]: crate::sim::cluster::MachineFaults
+/// [`FaultKind::FlakyLane`]: crate::sim::fault::FaultKind::FlakyLane
+#[derive(Clone, Debug)]
+pub struct CircuitBreaker {
+    state: BreakerState,
+    consecutive_failures: u32,
+    /// Step at which an open breaker half-opens (meaningful only while
+    /// `state == Open`).
+    probe_at: u64,
+}
+
+impl Default for CircuitBreaker {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CircuitBreaker {
+    /// A closed (healthy) breaker.
+    pub fn new() -> Self {
+        CircuitBreaker {
+            state: BreakerState::Closed,
+            consecutive_failures: 0,
+            probe_at: 0,
+        }
+    }
+
+    /// Current state.
+    pub fn state(&self) -> BreakerState {
+        self.state
+    }
+
+    /// Whether the machine may issue promotions: closed and half-open
+    /// (probe traffic) allow them, open refuses them.
+    pub fn allows_promotions(&self) -> bool {
+        self.state != BreakerState::Open
+    }
+
+    /// Record one lane failure at machine step `step`. Returns `true`
+    /// iff this failure *tripped* the breaker (a transition into
+    /// `Open`) — from `Closed` after the threshold's worth of
+    /// consecutive failures, or from a failed `HalfOpen` probe.
+    pub fn record_failure(&mut self, step: u64) -> bool {
+        match self.state {
+            BreakerState::Closed => {
+                self.consecutive_failures += 1;
+                if self.consecutive_failures >= BREAKER_TRIP_THRESHOLD {
+                    self.state = BreakerState::Open;
+                    self.consecutive_failures = 0;
+                    self.probe_at = step + BREAKER_COOLDOWN_STEPS;
+                    return true;
+                }
+                false
+            }
+            BreakerState::HalfOpen => {
+                self.state = BreakerState::Open;
+                self.probe_at = step + BREAKER_COOLDOWN_STEPS;
+                true
+            }
+            BreakerState::Open => false,
+        }
+    }
+
+    /// Record one lane success: resets the failure streak; closes the
+    /// breaker when half-open (the probe landed). Ignored while open.
+    pub fn record_success(&mut self) {
+        match self.state {
+            BreakerState::Closed => self.consecutive_failures = 0,
+            BreakerState::HalfOpen => {
+                self.state = BreakerState::Closed;
+                self.consecutive_failures = 0;
+            }
+            BreakerState::Open => {}
+        }
+    }
+
+    /// Advance the breaker's clock to machine step `step`. Returns
+    /// `true` iff the breaker transitioned `Open` → `HalfOpen` (the
+    /// cooldown elapsed and a probe may now flow).
+    pub fn poll(&mut self, step: u64) -> bool {
+        if self.state == BreakerState::Open && step >= self.probe_at {
+            self.state = BreakerState::HalfOpen;
+            return true;
+        }
+        false
+    }
+
+    pub(crate) fn encode(&self, e: &mut Enc) {
+        e.u8(match self.state {
+            BreakerState::Closed => 0,
+            BreakerState::Open => 1,
+            BreakerState::HalfOpen => 2,
+        });
+        e.u32(self.consecutive_failures);
+        e.u64(self.probe_at);
+    }
+
+    pub(crate) fn decode(d: &mut Dec<'_>) -> Result<CircuitBreaker, CheckpointError> {
+        let state = match d.u8()? {
+            0 => BreakerState::Closed,
+            1 => BreakerState::Open,
+            2 => BreakerState::HalfOpen,
+            _ => return Err(CheckpointError::Malformed("unknown breaker state tag")),
+        };
+        Ok(CircuitBreaker {
+            state,
+            consecutive_failures: d.u32()?,
+            probe_at: d.u64()?,
+        })
+    }
+}
+
 /// A migration lane: FIFO of requests plus accumulated bandwidth credit.
 #[derive(Clone, Debug)]
 pub struct Lane {
@@ -440,5 +584,48 @@ mod tests {
         assert!(lane.stalled);
         lane.cancel(ObjectId(1));
         assert!(!lane.stalled, "empty lane cannot be stalled");
+    }
+
+    #[test]
+    fn breaker_trips_only_on_consecutive_failures() {
+        let mut b = CircuitBreaker::new();
+        assert!(b.allows_promotions());
+        // A success in the middle resets the streak.
+        assert!(!b.record_failure(1));
+        assert!(!b.record_failure(2));
+        b.record_success();
+        assert!(!b.record_failure(3));
+        assert!(!b.record_failure(4));
+        assert_eq!(b.state(), BreakerState::Closed);
+        // The third consecutive failure trips it.
+        assert!(b.record_failure(5));
+        assert_eq!(b.state(), BreakerState::Open);
+        assert!(!b.allows_promotions(), "open breaker refuses promotions");
+        // Further failures while open are not new trips.
+        assert!(!b.record_failure(6));
+    }
+
+    #[test]
+    fn breaker_half_opens_after_cooldown_and_probe_decides() {
+        let mut b = CircuitBreaker::new();
+        for s in 0..BREAKER_TRIP_THRESHOLD as u64 {
+            b.record_failure(10 + s);
+        }
+        let tripped_at = 10 + BREAKER_TRIP_THRESHOLD as u64 - 1;
+        assert_eq!(b.state(), BreakerState::Open);
+        // Cooldown not yet elapsed: still open.
+        assert!(!b.poll(tripped_at + BREAKER_COOLDOWN_STEPS - 1));
+        assert!(b.poll(tripped_at + BREAKER_COOLDOWN_STEPS));
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        assert!(b.allows_promotions(), "half-open lets the probe through");
+        // A failed probe re-opens (and counts as a trip).
+        let reopen_step = tripped_at + BREAKER_COOLDOWN_STEPS;
+        assert!(b.record_failure(reopen_step));
+        assert_eq!(b.state(), BreakerState::Open);
+        assert!(b.poll(reopen_step + BREAKER_COOLDOWN_STEPS));
+        // A successful probe closes it for good.
+        b.record_success();
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert!(b.allows_promotions());
     }
 }

@@ -41,11 +41,11 @@ pub use fault::{
 };
 pub use fleet::{
     run_fleet, Admission, Autoscale, FleetArrival, FleetConfig, FleetDeparture, FleetMachineStats,
-    FleetSimResult, ParseAdmissionError, PoolExhausted, UtilSample,
+    FleetSimResult, ParseAdmissionError, PoolExhausted, SloPolicy, SloReport, UtilSample,
 };
 pub use device::{DeviceSpec, MachineSpec, Tier};
 pub use engine::{DivergenceStats, Engine, EngineConfig, Policy, StepStats, TrainResult};
 pub use machine::{Machine, Residency, SteadySnapshot};
-pub use migration::{Direction, Lane, LaneSnapshot, MoveRequest};
+pub use migration::{BreakerState, CircuitBreaker, Direction, Lane, LaneSnapshot, MoveRequest};
 pub use replay::{CompiledLayer, CompiledOp, CompiledOpKind, CompiledTrace};
 pub use schedule::{CompiledSchedule, Sealer, StepRecord, StepRecorder};

@@ -210,6 +210,7 @@ fn arrival(
         demand_bytes: demand,
         peak_bytes: peak,
         priority: 0,
+        solo_step_ns: 0.0,
         build: Box::new(move |share| {
             let spec = kind.machine_spec(&w.graph, &w.trace, share);
             ClusterTenant {
@@ -259,6 +260,7 @@ fn crash_displaced_tenant_resumes_and_completes_every_step() {
             autoscale: None,
             threads: 1,
             faults: Some(FaultPlan::new().push(0, 2, FaultKind::Crash)),
+            slo: None,
         },
     )
     .expect("machine 1 survives the crash");

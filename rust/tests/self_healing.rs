@@ -1,0 +1,471 @@
+//! Self-healing fleet invariants: transient faults, retry/backoff, the
+//! promote-lane circuit breaker, and the SLO watchdog.
+//!
+//! * **Dormant bit-identity**: a transient plan whose events never fire
+//!   (scheduled past the run's horizon) leaves the fleet bit-identical
+//!   to an unfaulted run — arming the machinery costs nothing until an
+//!   event actually lands.
+//! * **Quiet watchdog**: an armed [`SloSpec`] with an unreachable
+//!   target reports an all-zero ledger and the same tenant digest as a
+//!   plain run; only the outcome JSON grows (the `slo` ledger and the
+//!   per-machine `drained` flag), by design.
+//! * **Determinism**: a fleet under transients + crashes *and* an
+//!   enforcing watchdog is bit-identical run to run and across worker
+//!   counts — every mitigation fires on per-machine step clocks.
+//! * **End-to-end healing**: a flaky lane trips the breaker, the
+//!   watchdog climbs its ladder (boost → throttle → live evacuation),
+//!   and every job still finishes every step.
+//! * **Resume equivalence**: a self-healing fleet killed at checkpoint
+//!   boundaries and resumed reproduces the uninterrupted outcome bit
+//!   for bit, ledger included.
+//! * **Breaker property**: random op sequences against a shadow model
+//!   of the documented state machine, plus the machine-level promotion
+//!   gate.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use sentinel_hm::api::{
+    json, shared_workload, Admission, Autoscale, FaultSpec, FleetSpec, PolicyKind, SloSpec,
+    Workload,
+};
+use sentinel_hm::dnn::zoo::Model;
+use sentinel_hm::mem::ObjectId;
+use sentinel_hm::sim::migration::{BREAKER_COOLDOWN_STEPS, BREAKER_TRIP_THRESHOLD};
+use sentinel_hm::sim::{
+    run_fleet, Arbitration, BreakerState, CircuitBreaker, ClusterTenant, CompiledTrace, FaultKind,
+    FaultPlan, FleetArrival, FleetConfig, FleetSimResult, Machine, SloPolicy, Tier,
+};
+
+/// A t=0 job offer with an optional solo baseline for SLO tracking.
+fn arrival(
+    id: u64,
+    w: &Arc<Workload>,
+    compiled: &Arc<CompiledTrace>,
+    kind: PolicyKind,
+    demand: u64,
+    peak: u64,
+    steps: u32,
+    solo_step_ns: f64,
+) -> FleetArrival {
+    let w = Arc::clone(w);
+    let compiled = Arc::clone(compiled);
+    FleetArrival {
+        id,
+        arrival_ns: 0.0,
+        demand_bytes: demand,
+        peak_bytes: peak,
+        priority: 0,
+        solo_step_ns,
+        build: Box::new(move |share| {
+            let spec = kind.machine_spec(&w.graph, &w.trace, share);
+            ClusterTenant {
+                policy: kind.construct(&w.graph, &w.trace, spec),
+                config: kind.engine_config(steps),
+                machine: Machine::new(spec),
+                priority: 0,
+                share,
+                workload: w,
+                compiled,
+            }
+        }),
+    }
+}
+
+fn dcgan_parts(kind: PolicyKind, steps: u32) -> (Arc<Workload>, Arc<CompiledTrace>) {
+    let w = shared_workload(Model::Dcgan, 5);
+    let cfg = kind.engine_config(steps);
+    let spec = kind.machine_spec(&w.graph, &w.trace, 1);
+    let compiled = Arc::new(CompiledTrace::compile(
+        &w.graph,
+        &w.trace,
+        spec.compute_gflops,
+        cfg.profiling_fault_ns,
+    ));
+    (w, compiled)
+}
+
+fn config(machines: usize, fast: u64, threads: usize) -> FleetConfig {
+    FleetConfig {
+        machines,
+        machine_fast_bytes: fast,
+        arbitration: Arbitration::StaticPartition,
+        admission: Admission::Queue,
+        autoscale: None,
+        threads,
+        faults: None,
+        slo: None,
+    }
+}
+
+/// Bitwise equality of the per-departure observables two runs share.
+fn assert_departures_identical(a: &FleetSimResult, b: &FleetSimResult, ctx: &str) {
+    assert_eq!(a.completed.len(), b.completed.len(), "{ctx}: departure count");
+    for (x, y) in a.completed.iter().zip(&b.completed) {
+        assert_eq!(x.tenant_id, y.tenant_id, "{ctx}: departure order");
+        assert_eq!(x.machine, y.machine, "{ctx}: job {} machine", x.tenant_id);
+        assert_eq!(
+            x.finish_ns.to_bits(),
+            y.finish_ns.to_bits(),
+            "{ctx}: job {} finish_ns {} vs {}",
+            x.tenant_id,
+            x.finish_ns,
+            y.finish_ns
+        );
+        assert_eq!(
+            x.result.result.total_time_ns.to_bits(),
+            y.result.result.total_time_ns.to_bits(),
+            "{ctx}: job {} total_time_ns",
+            x.tenant_id
+        );
+    }
+}
+
+/// A transient plan whose only event sits far past the run's horizon
+/// never fires — and an armed-but-dormant plan must leave every
+/// departure bit-identical to an unfaulted run, with an all-zero
+/// transient ledger in the report.
+#[test]
+fn dormant_transient_plan_leaves_fleet_bit_identical() {
+    let kind = PolicyKind::Lru;
+    let (w, compiled) = dcgan_parts(kind, 4);
+    let fast = Model::Dcgan.peak_memory_target() / 8;
+    let run = |faults: Option<FaultPlan>| {
+        let jobs: Vec<FleetArrival> = (0..3)
+            .map(|i| arrival(i, &w, &compiled, kind, fast / 2, fast, 4, 0.0))
+            .collect();
+        let mut cfg = config(2, fast, 1);
+        cfg.faults = faults;
+        run_fleet(jobs, cfg).expect("pool intact")
+    };
+    let base = run(None);
+    assert!(base.faults.is_none(), "unarmed runs carry no report");
+    let armed = run(Some(FaultPlan::new().push(
+        0,
+        100_000,
+        FaultKind::MigrationTimeout { jitter: 0 },
+    )));
+    let report = armed.faults.as_ref().expect("armed runs carry a report");
+    assert_eq!(report.injected, 0, "the horizon event never fired");
+    assert_eq!(report.timeouts, 0);
+    assert_eq!(report.flaky_windows, 0);
+    assert_eq!(report.retries, 0);
+    assert_eq!(report.breaker_trips, 0);
+    assert_departures_identical(&base, &armed, "dormant plan");
+}
+
+fn churn(threads: usize) -> FleetSpec {
+    FleetSpec::new()
+        .tenants(8)
+        .rate_per_s(2.0)
+        .machines(2)
+        .machine_fast_bytes(3 << 30)
+        .admission(Admission::Queue)
+        .autoscale(Autoscale::default())
+        .threads(threads)
+        .seed(17)
+}
+
+/// An armed watchdog with an unreachable target: the ledger is present
+/// and all zeros, the tenant digest matches the plain run (round
+/// bounding never changes per-machine interleaving), and only the JSON
+/// surface grows.
+#[test]
+fn quiet_watchdog_reports_zero_ledger_and_matches_plain_digest() {
+    let plain = churn(1).run().unwrap();
+    assert!(plain.slo.is_none(), "unarmed runs carry no ledger");
+    let plain_json = plain.to_json();
+    assert!(!plain_json.contains("\"slo\""));
+    assert!(!plain_json.contains("\"drained\""));
+
+    let quiet = churn(1).slo(SloSpec::new().target_p99(1.0e9)).run().unwrap();
+    let ledger = quiet.slo.expect("armed runs carry a ledger");
+    assert_eq!(ledger.violations, 0, "unreachable target: {ledger:?}");
+    assert_eq!(ledger.boosts + ledger.throttles + ledger.evacuations + ledger.drains, 0);
+    assert_eq!(quiet.tenants_digest(), plain.tenants_digest(), "watchdog perturbed tenants");
+    let quiet_json = quiet.to_json();
+    assert!(json::is_valid(&quiet_json), "{quiet_json}");
+    assert!(quiet_json.contains("\"slo\""));
+    assert!(quiet_json.contains("\"drained\""));
+}
+
+fn self_healing_churn(threads: usize) -> FleetSpec {
+    churn(threads)
+        .faults(FaultSpec::new().rate(0.15).crashes(true))
+        .slo(SloSpec::new().target_p99(1.5).window_events(2))
+}
+
+/// Same seed + same faulted spec + same enforcing watchdog ⇒
+/// bit-identical outcome JSON (mitigation ledger included) and tenant
+/// digest, run to run and for any worker count.
+#[test]
+fn self_healing_fleet_is_deterministic_across_runs_and_worker_counts() {
+    let baseline = self_healing_churn(1).run().unwrap();
+    let base_json = baseline.to_json();
+    assert!(json::is_valid(&base_json), "{base_json}");
+    let report = baseline.faults.as_ref().expect("plan armed");
+    assert!(
+        report.injected > 0,
+        "rate 0.15 over this run must inject something (got {base_json})"
+    );
+    baseline.slo.expect("watchdog armed: ledger present");
+    assert_eq!(
+        base_json,
+        self_healing_churn(1).run().unwrap().to_json(),
+        "re-run drifted"
+    );
+    for threads in [4, 8] {
+        let out = self_healing_churn(threads).run().unwrap();
+        assert_eq!(base_json, out.to_json(), "{threads} workers drifted");
+        assert_eq!(
+            baseline.tenants_digest(),
+            out.tenants_digest(),
+            "{threads} workers: tenant table drifted"
+        );
+    }
+}
+
+/// The full loop, end to end: a flaky promote lane on the co-tenanted
+/// machine trips the circuit breaker; the victim's slowdown violates
+/// the SLO; the watchdog climbs its ladder through throttling to a
+/// live evacuation; and every job still completes every step — on any
+/// worker count, bit for bit.
+#[test]
+fn self_healing_loop_heals_end_to_end() {
+    let kind = PolicyKind::Lru;
+    let steps = 12u32;
+    let (w, compiled) = dcgan_parts(kind, steps);
+    let fast = Model::Dcgan.peak_memory_target() / 8;
+    let run = |threads: usize| {
+        // Placement: job 0 (60% demand) takes machine 0; jobs 1 and 2
+        // (30% each) co-locate on machine 1 — the machine the flaky
+        // window opens on. Job 1's absurd solo baseline keeps its
+        // slowdown above any target, so the watchdog must act.
+        let jobs = vec![
+            arrival(0, &w, &compiled, kind, fast * 6 / 10, fast, steps, 0.0),
+            arrival(1, &w, &compiled, kind, fast * 3 / 10, fast, steps, 1.0),
+            arrival(2, &w, &compiled, kind, fast * 3 / 10, fast, steps, 0.0),
+        ];
+        let mut cfg = config(2, fast, threads);
+        cfg.faults = Some(FaultPlan::new().push(
+            1,
+            2,
+            FaultKind::FlakyLane { duration_steps: 6, fail_mask: 0b11_1111 },
+        ));
+        cfg.slo = Some(SloPolicy {
+            target_p99: 2.0,
+            window_events: 1,
+            evacuate: true,
+            warn_steps: 4,
+        });
+        run_fleet(jobs, cfg).expect("pool intact")
+    };
+    let r = run(1);
+    assert_eq!(r.completed.len(), 3, "every job completes");
+    for d in &r.completed {
+        assert_eq!(
+            d.result.result.steps.len(),
+            steps as usize,
+            "job {} ran every step through fault + mitigation",
+            d.tenant_id
+        );
+    }
+    let report = r.faults.as_ref().expect("plan armed");
+    assert_eq!(report.flaky_windows, 1, "the window opened");
+    assert_eq!(
+        report.breaker_trips, 1,
+        "six consecutive pre-drawn failures trip the breaker exactly once"
+    );
+    let ledger = r.slo.expect("ledger present");
+    assert!(ledger.violations >= 3, "the victim kept violating: {ledger:?}");
+    assert!(ledger.throttles >= 1, "rung 1 throttled the co-tenant: {ledger:?}");
+    assert!(ledger.evacuations >= 1, "rung 2 moved the victim: {ledger:?}");
+    // The same scenario on 4 workers: identical bits, identical ledger.
+    let r4 = run(4);
+    assert_departures_identical(&r, &r4, "4 workers");
+    assert_eq!(ledger, r4.slo.expect("ledger present"), "4 workers: ledger drifted");
+    assert_eq!(
+        report.breaker_trips,
+        r4.faults.as_ref().unwrap().breaker_trips,
+        "4 workers: breaker drifted"
+    );
+}
+
+/// Fresh per-test scratch directory under the system temp dir.
+fn tdir(tag: &str) -> PathBuf {
+    let d =
+        std::env::temp_dir().join(format!("sentinel-self-healing-{}-{}", tag, std::process::id()));
+    let _ = fs::remove_dir_all(&d);
+    fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// All checkpoint files in `dir`, sorted by progress.
+fn ckpts(dir: &Path) -> Vec<PathBuf> {
+    let mut v: Vec<PathBuf> = fs::read_dir(dir)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .filter(|p| p.extension().map_or(false, |x| x == "ckpt"))
+        .collect();
+    v.sort();
+    v
+}
+
+/// A self-healing fleet (transients, crashes, enforcing watchdog with
+/// evacuation) checkpointed every other event round: resuming from each
+/// checkpoint — including rounds after evacuations and drains —
+/// reproduces the uninterrupted outcome bit for bit, ledger included.
+#[test]
+fn self_healing_fleet_resume_matches_uninterrupted() {
+    let dir = tdir("resume");
+    let baseline = self_healing_churn(1).run().unwrap();
+    let base = baseline.to_json();
+    let ckpt_run = self_healing_churn(1)
+        .checkpoint_every(2)
+        .checkpoint_dir(&dir)
+        .run_checkpointed()
+        .unwrap();
+    assert_eq!(base, ckpt_run.to_json(), "writing checkpoints perturbed the run");
+    let files = ckpts(&dir);
+    assert!(!files.is_empty(), "fleet run wrote no checkpoints");
+    for f in &files {
+        let resumed = self_healing_churn(1).resume_from(f).run_checkpointed().unwrap();
+        assert_eq!(base, resumed.to_json(), "resume from {} diverged", f.display());
+        assert_eq!(baseline.tenants_digest(), resumed.tenants_digest());
+    }
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// Scripted walk through every documented breaker transition.
+#[test]
+fn breaker_walks_the_documented_state_machine() {
+    let mut b = CircuitBreaker::new();
+    assert_eq!(b.state(), BreakerState::Closed);
+    assert!(b.allows_promotions());
+    // One short of the threshold, then a success: the streak resets.
+    for step in 0..u64::from(BREAKER_TRIP_THRESHOLD - 1) {
+        assert!(!b.record_failure(step), "streak below threshold must not trip");
+    }
+    b.record_success();
+    // A full streak trips exactly on the threshold'th failure.
+    for step in 10..10 + u64::from(BREAKER_TRIP_THRESHOLD - 1) {
+        assert!(!b.record_failure(step));
+    }
+    let trip_step = 10 + u64::from(BREAKER_TRIP_THRESHOLD - 1);
+    assert!(b.record_failure(trip_step), "threshold'th consecutive failure trips");
+    assert_eq!(b.state(), BreakerState::Open);
+    assert!(!b.allows_promotions());
+    // Open: failures are ignored, polls before the cooldown do nothing.
+    assert!(!b.record_failure(trip_step + 1));
+    assert!(!b.poll(trip_step + BREAKER_COOLDOWN_STEPS - 1));
+    assert_eq!(b.state(), BreakerState::Open);
+    // Cooldown elapses: half-open, probe traffic flows.
+    assert!(b.poll(trip_step + BREAKER_COOLDOWN_STEPS));
+    assert_eq!(b.state(), BreakerState::HalfOpen);
+    assert!(b.allows_promotions());
+    // A failed probe re-opens immediately (single failure, no streak).
+    let reopen_step = trip_step + BREAKER_COOLDOWN_STEPS;
+    assert!(b.record_failure(reopen_step), "failed probe re-opens");
+    assert_eq!(b.state(), BreakerState::Open);
+    assert!(b.poll(reopen_step + BREAKER_COOLDOWN_STEPS));
+    // A landed probe closes the breaker for good.
+    b.record_success();
+    assert_eq!(b.state(), BreakerState::Closed);
+    assert!(b.allows_promotions());
+}
+
+/// Property: random op sequences against a shadow model of the
+/// documented state machine — the breaker and the model never disagree,
+/// and `allows_promotions` is always `state != Open`.
+#[test]
+fn breaker_matches_shadow_model_on_random_op_sequences() {
+    // Seeded LCG (same constants as the repo's other property tests).
+    let mut rng_state = 0x5E1F_CAFE_u64;
+    let mut rng = move || {
+        rng_state = rng_state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        rng_state >> 33
+    };
+    for _case in 0..64 {
+        let mut b = CircuitBreaker::new();
+        // Shadow model: (state, streak, probe_at).
+        let mut state = BreakerState::Closed;
+        let mut streak = 0u32;
+        let mut probe_at = 0u64;
+        let mut step = 0u64;
+        for _op in 0..200 {
+            step += rng() % 3;
+            match rng() % 3 {
+                0 => {
+                    let tripped = b.record_failure(step);
+                    let model_trip = match state {
+                        BreakerState::Closed => {
+                            streak += 1;
+                            if streak >= BREAKER_TRIP_THRESHOLD {
+                                state = BreakerState::Open;
+                                streak = 0;
+                                probe_at = step + BREAKER_COOLDOWN_STEPS;
+                                true
+                            } else {
+                                false
+                            }
+                        }
+                        BreakerState::HalfOpen => {
+                            state = BreakerState::Open;
+                            probe_at = step + BREAKER_COOLDOWN_STEPS;
+                            true
+                        }
+                        BreakerState::Open => false,
+                    };
+                    assert_eq!(tripped, model_trip, "trip mismatch at step {step}");
+                }
+                1 => {
+                    b.record_success();
+                    match state {
+                        BreakerState::Closed => streak = 0,
+                        BreakerState::HalfOpen => {
+                            state = BreakerState::Closed;
+                            streak = 0;
+                        }
+                        BreakerState::Open => {}
+                    }
+                }
+                _ => {
+                    let probed = b.poll(step);
+                    let model_probe = state == BreakerState::Open && step >= probe_at;
+                    if model_probe {
+                        state = BreakerState::HalfOpen;
+                    }
+                    assert_eq!(probed, model_probe, "poll mismatch at step {step}");
+                }
+            }
+            assert_eq!(b.state(), state, "state diverged at step {step}");
+            assert_eq!(
+                b.allows_promotions(),
+                state != BreakerState::Open,
+                "gate must mirror the state"
+            );
+        }
+    }
+}
+
+/// The machine-level promotion gate an open breaker drives: while shut,
+/// promotion requests are dropped on the floor (no promote-lane
+/// traffic); reopened, the same request queues pages again.
+#[test]
+fn promotion_gate_drops_requests_while_blocked() {
+    let kind = PolicyKind::Lru;
+    let w = shared_workload(Model::Dcgan, 5);
+    let spec = kind.machine_spec(&w.graph, &w.trace, Model::Dcgan.peak_memory_target() / 4);
+    let mut m = Machine::new(spec);
+    let obj = ObjectId(0);
+    m.alloc(obj, 8, Tier::Slow);
+    assert!(!m.promotions_blocked(), "machines start with the gate open");
+    m.set_promotions_blocked(true);
+    assert!(m.promotions_blocked());
+    m.request_promote(obj, 8);
+    assert_eq!(m.pending_in_pages(), 0, "a shut gate queues nothing");
+    m.set_promotions_blocked(false);
+    m.request_promote(obj, 8);
+    assert_eq!(m.pending_in_pages(), 8, "a reopened gate queues the retry");
+}

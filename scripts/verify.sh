@@ -83,6 +83,25 @@ else
   esac
 fi
 
+echo "== smoke: sentinel slo --tenants 8 --fault-rate 0.05 --json =="
+out="$(./target/release/sentinel slo --tenants 8 --fault-rate 0.05 --json)"
+if command -v python3 >/dev/null 2>&1; then
+  printf '%s' "$out" | python3 -c 'import json,sys
+o = json.load(sys.stdin)
+assert o["jobs_offered"] == 8, o
+assert "faults" in o, "armed run must carry a degradation report"
+s = o.get("slo")
+assert s is not None, "armed watchdog must carry a mitigation ledger"
+for k in ("violations", "boosts", "throttles", "evacuations", "drains"):
+    assert s[k] >= 0, s
+assert all("drained" in m for m in o["machines"]), o["machines"]'
+else
+  case "$out" in
+    "{"*"}") ;;
+    *) echo "slo --json did not emit a JSON object" >&2; exit 1 ;;
+  esac
+fi
+
 echo "== smoke: sentinel dynamic resnet32 --kind var-batch --variability 0.25 --json =="
 out="$(./target/release/sentinel dynamic resnet32 --kind var-batch --variability 0.25 --steps 12 --json)"
 if command -v python3 >/dev/null 2>&1; then
